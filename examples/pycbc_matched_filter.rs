@@ -1,0 +1,84 @@
+//! Gravitational-wave-style matched filtering (the paper's pyCBC
+//! motivation, Sec 1): find a chirp template buried in noise via
+//! frequency-domain correlation, with the forward/inverse FFTs running
+//! through the half-precision tcFFT artifacts.
+//!
+//!     cargo run --release --example pycbc_matched_filter
+//!
+//! Pipeline: template & strain -> fp16 FFT (device) -> cross-spectrum
+//! (host f32) -> fp16 inverse FFT (device) -> SNR peak = merger time.
+
+use tcfft::hp::C32;
+use tcfft::plan::{Direction, Plan};
+use tcfft::runtime::{PlanarBatch, Runtime};
+use tcfft::workload::{add_noise, chirp};
+
+const N: usize = 4096;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::load_default()?;
+    let fwd = Plan::fft1d(&rt.registry, N, 4)?;
+    let inv = Plan::fft1d_algo(&rt.registry, N, 4, "tc", Direction::Inverse)?;
+
+    // template: a clean chirp; strain: the same chirp injected at a
+    // known shift into noise, at a modest SNR
+    let template = chirp(N, 8.0, 96.0, 0.75);
+    let inject_at = 1234usize;
+    let mut strain = vec![C32::new(0.0, 0.0); N];
+    for (i, t) in template.iter().enumerate() {
+        let j = (i + inject_at) % N;
+        strain[j].re += 0.35 * t.re;
+        strain[j].im += 0.35 * t.im;
+    }
+    add_noise(&mut strain, 0.12, 99);
+
+    // device FFTs (batch the two signals together — one artifact call)
+    let mut batch = PlanarBatch::new(vec![2, N]);
+    for i in 0..N {
+        batch.re[i] = template[i].re;
+        batch.im[i] = template[i].im;
+        batch.re[N + i] = strain[i].re;
+        batch.im[N + i] = strain[i].im;
+    }
+    let spec = fwd.execute(&rt, batch)?;
+
+    // cross-spectrum: S(f) * conj(T(f)) (host f32, like pyCBC's weave)
+    let mut cross = PlanarBatch::new(vec![1, N]);
+    for i in 0..N {
+        let (tr, ti) = (spec.re[i], spec.im[i]);
+        let (sr, si) = (spec.re[N + i], spec.im[N + i]);
+        // s * conj(t)
+        cross.re[i] = sr * tr + si * ti;
+        cross.im[i] = si * tr - sr * ti;
+    }
+    // normalize so the fp16 inverse stays in range
+    let peak = cross
+        .re
+        .iter()
+        .chain(cross.im.iter())
+        .fold(0.0f32, |a, &b| a.max(b.abs()))
+        .max(1e-9);
+    for v in cross.re.iter_mut().chain(cross.im.iter_mut()) {
+        *v /= peak;
+    }
+
+    // inverse FFT -> time-domain correlation (SNR time series)
+    let corr = inv.execute(&rt, cross)?;
+    let snr: Vec<f32> = (0..N)
+        .map(|i| (corr.re[i] * corr.re[i] + corr.im[i] * corr.im[i]).sqrt())
+        .collect();
+    let (best_lag, best) = snr
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, &v)| (i, v))
+        .unwrap();
+    let mean = snr.iter().sum::<f32>() / N as f32;
+
+    println!("injected template at lag {inject_at}");
+    println!("matched filter peak at lag {best_lag} (SNR ratio {:.1})", best / mean);
+    anyhow::ensure!(best_lag == inject_at, "matched filter missed the injection");
+    anyhow::ensure!(best / mean > 5.0, "detection not significant");
+    println!("pycbc_matched_filter: OK — detection at the injected time");
+    Ok(())
+}

@@ -1,0 +1,87 @@
+//! Quickstart: plan and execute 1D and 2D half-precision FFTs through
+//! the AOT artifacts, verifying against the host f64 oracle.
+//!
+//!     cargo run --release --example quickstart
+
+use tcfft::error::relative_error;
+use tcfft::fft::mixed::fft_mixed_batch;
+use tcfft::hp::{C32, C64};
+use tcfft::plan::{Direction, Plan};
+use tcfft::runtime::{PlanarBatch, Runtime};
+use tcfft::workload::random_signal;
+
+fn widen(x: &[C32]) -> Vec<C64> {
+    x.iter().map(|c| C64::new(c.re as f64, c.im as f64)).collect()
+}
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::load_default()?;
+
+    // --- sanity: impulse input -> flat spectrum -------------------------
+    let n = 256;
+    let plan = Plan::fft1d(&rt.registry, n, 1)?;
+    let mut x = vec![C32::new(0.0, 0.0); n];
+    x[0] = C32::new(1.0, 0.0);
+    let out = plan.execute(&rt, PlanarBatch::from_complex(&x, vec![1, n]))?;
+    let y = out.to_complex();
+    println!("impulse -> X[0]={:?} X[1]={:?} X[{}]={:?}", y[0], y[1], n - 1, y[n - 1]);
+    for (k, v) in y.iter().enumerate() {
+        anyhow::ensure!(
+            (v.re - 1.0).abs() < 0.05 && v.im.abs() < 0.05,
+            "impulse FFT wrong at bin {k}: {v:?}"
+        );
+    }
+    println!("impulse OK");
+
+    // --- batched random 1D, checked against the f64 oracle -------------
+    let n = 4096;
+    let batch = 4;
+    let plan = Plan::fft1d(&rt.registry, n, batch)?;
+    println!("1D plan: {} radices {:?}", plan.meta.key, plan.radices_1d);
+    let x: Vec<C32> = (0..batch).flat_map(|b| random_signal(n, b as u64)).collect();
+    let input = PlanarBatch::from_complex(&x, vec![batch, n]);
+    let out = plan.execute(&rt, input.clone())?;
+    let want = fft_mixed_batch(&widen(&input.quantize_f16().to_complex()), batch, n, false);
+    let err = relative_error(&want, &widen(&out.to_complex()));
+    println!("1D n={n} batch={batch}: mean relative error {err:.3e}");
+    anyhow::ensure!(err < 0.02, "1D error too high");
+
+    // --- inverse round trip ---------------------------------------------
+    let fwd = Plan::fft1d(&rt.registry, 1024, 4)?;
+    let inv = Plan::fft1d_algo(&rt.registry, 1024, 4, "tc", Direction::Inverse)?;
+    let x: Vec<C32> = (0..4).flat_map(|b| random_signal(1024, 50 + b as u64)).collect();
+    let input = PlanarBatch::from_complex(&x, vec![4, 1024]);
+    let spec = fwd.execute(&rt, input.clone())?;
+    let mut back = inv.execute(&rt, spec)?;
+    // inverse is unnormalized (cuFFT convention): scale by 1/N on host
+    for v in back.re.iter_mut().chain(back.im.iter_mut()) {
+        *v /= 1024.0;
+    }
+    let err = relative_error(
+        &widen(&input.quantize_f16().to_complex()),
+        &widen(&back.to_complex()),
+    );
+    println!("1D 1024-pt forward+inverse round trip: error {err:.3e}");
+    anyhow::ensure!(err < 0.05, "round-trip error too high");
+
+    // --- 2D -------------------------------------------------------------
+    let (nx, ny) = (256, 256);
+    let plan2 = Plan::fft2d(&rt.registry, nx, ny, 2)?;
+    let x: Vec<C32> = (0..2).flat_map(|b| random_signal(nx * ny, 90 + b as u64)).collect();
+    let input = PlanarBatch::from_complex(&x, vec![2, nx, ny]);
+    let out = plan2.execute(&rt, input.clone())?;
+    // oracle: rows then columns on the quantized input
+    let q = input.quantize_f16().to_complex();
+    let mut want = Vec::new();
+    for b in 0..2 {
+        let mut m = widen(&q[b * nx * ny..(b + 1) * nx * ny]);
+        tcfft::fft::radix2::fft2(&mut m, nx, ny, false);
+        want.extend(m);
+    }
+    let err = relative_error(&want, &widen(&out.to_complex()));
+    println!("2D {nx}x{ny} batch=2: mean relative error {err:.3e}");
+    anyhow::ensure!(err < 0.02, "2D error too high");
+
+    println!("\nquickstart: ALL OK");
+    Ok(())
+}

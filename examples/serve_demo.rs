@@ -1,0 +1,128 @@
+//! End-to-end serving driver (DESIGN.md "E2E serving driver"): start
+//! the FFT service, fire a Poisson stream of mixed 1D/2D requests from
+//! concurrent clients, and report latency/throughput + batching
+//! metrics.  This is the run recorded in EXPERIMENTS.md.
+//!
+//!     cargo run --release --example serve_demo [-- --seconds 10 --rate 120]
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use tcfft::coordinator::{FftRequest, FftService, Op, ServiceConfig};
+use tcfft::plan::Direction;
+use tcfft::runtime::{PlanarBatch, Runtime};
+use tcfft::util::cli::Args;
+use tcfft::util::rng::SplitMix64;
+use tcfft::util::stats::Summary;
+use tcfft::workload::random_signal;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let horizon = args.get_f64("seconds", 10.0);
+    let rate = args.get_f64("rate", 120.0);
+
+    let rt = Arc::new(Runtime::load_default()?);
+    // warm the artifacts the workload uses (compile once, off the clock)
+    for key in [
+        "fft1d_tc_n1024_b4_fwd",
+        "fft1d_tc_n4096_b4_fwd",
+        "fft2d_tc_nx256x256_b2_fwd",
+    ] {
+        rt.warm(key)?;
+    }
+    let svc = Arc::new(FftService::start(
+        Arc::clone(&rt),
+        ServiceConfig {
+            max_wait: Duration::from_millis(5),
+            ..ServiceConfig::default()
+        },
+    ));
+
+    // request mix: 50% 1D n=1024, 30% 1D n=4096, 20% 2D 256x256
+    println!(
+        "offered load: Poisson {rate:.0} req/s for {horizon:.0}s \
+         (mix: 50% 1D/1024, 30% 1D/4096, 20% 2D/256x256)"
+    );
+    let t0 = Instant::now();
+    let mut rng = SplitMix64::new(2026);
+    let mut lat = Summary::new();
+    let mut issued = 0u64;
+    let mut failed = 0u64;
+    let mut workers: Vec<std::thread::JoinHandle<(Summary, u64)>> = Vec::new();
+    let n_clients = 4usize;
+    for c in 0..n_clients {
+        let svc = Arc::clone(&svc);
+        let mut crng = rng.fork();
+        let horizon = horizon;
+        let rate = rate / n_clients as f64;
+        workers.push(std::thread::spawn(move || {
+            let mut lat = Summary::new();
+            let mut failed = 0u64;
+            let t0 = Instant::now();
+            loop {
+                let wait = crng.exp(rate);
+                std::thread::sleep(Duration::from_secs_f64(wait));
+                if t0.elapsed().as_secs_f64() >= horizon {
+                    break;
+                }
+                let pick = crng.next_f64();
+                let (op, data_len) = if pick < 0.5 {
+                    (Op::Fft1d { n: 1024 }, 1024)
+                } else if pick < 0.8 {
+                    (Op::Fft1d { n: 4096 }, 4096)
+                } else {
+                    (Op::Fft2d { nx: 256, ny: 256 }, 65536)
+                };
+                let sig = random_signal(data_len, crng.next_u64());
+                let shape = match op {
+                    Op::Fft1d { n } => vec![n],
+                    Op::Fft2d { nx, ny } => vec![nx, ny],
+                };
+                let req = FftRequest {
+                    op,
+                    algo: "tc".into(),
+                    direction: Direction::Forward,
+                    input: PlanarBatch::from_complex(&sig, shape),
+                };
+                let t_req = Instant::now();
+                match svc.submit(req).and_then(|t| t.wait()) {
+                    Ok(_) => lat.add(t_req.elapsed().as_secs_f64()),
+                    Err(e) => {
+                        failed += 1;
+                        if failed <= 3 {
+                            eprintln!("client {c}: {e}");
+                        }
+                    }
+                }
+            }
+            (lat, failed)
+        }));
+    }
+    for w in workers {
+        let (l, f) = w.join().unwrap();
+        issued += l.len() as u64 + f;
+        failed += f;
+        lat = merge(lat, l);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    svc.shutdown();
+
+    let m = svc.metrics();
+    println!("\n== serve_demo results ==");
+    println!("wall time             : {wall:.2} s");
+    println!("requests issued       : {issued} ({failed} failed)");
+    println!("completed throughput  : {:.1} req/s", lat.len() as f64 / wall);
+    println!("latency p50 / p99     : {:.2} / {:.2} ms", lat.median() * 1e3, lat.p99() * 1e3);
+    println!("service metrics       : {}", m.snapshot().to_string());
+    anyhow::ensure!(failed == 0, "requests failed");
+    anyhow::ensure!(lat.len() > 0, "no requests completed");
+    println!("serve_demo: OK");
+    Ok(())
+}
+
+fn merge(mut a: Summary, b: Summary) -> Summary {
+    for q in b.raw() {
+        a.add(*q);
+    }
+    a
+}

@@ -1,0 +1,221 @@
+"""AOT pipeline: lower every artifact variant to HLO text + manifest.
+
+Interchange format is HLO TEXT (not serialized HloModuleProto): jax>=0.5
+emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+parser reassigns ids (see /opt/xla-example/README.md).
+
+Usage (from ``python/``):
+    python -m compile.aot --out-dir ../artifacts          # build all
+    python -m compile.aot --report                        # L1 perf report
+    python -m compile.aot --only fft1d_tc_n256_b4_fwd ... # subset
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import hashlib
+import json
+import os
+import time
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import model, plans
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    from jax._src.lib import xla_client as xc
+
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True: twiddle/DFT-matrix constants must
+    # round-trip through the text parser or the rust side gets zeros.
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+@dataclasses.dataclass
+class Variant:
+    op: str                      # 'fft1d' | 'fft2d'
+    algo: str                    # 'tc' | 'tc_split' | 'r2'
+    batch: int
+    inverse: bool
+    n: int = 0                   # 1D length
+    nx: int = 0                  # 2D first dim (strided)
+    ny: int = 0                  # 2D second dim (contiguous)
+
+    @property
+    def key(self) -> str:
+        d = "inv" if self.inverse else "fwd"
+        if self.op == "fft1d":
+            return f"fft1d_{self.algo}_n{self.n}_b{self.batch}_{d}"
+        return f"fft2d_{self.algo}_nx{self.nx}x{self.ny}_b{self.batch}_{d}"
+
+    def build_fn(self):
+        if self.op == "fft1d":
+            return model.fft1d_fn(self.n, self.batch, self.algo, self.inverse)
+        return model.fft2d_fn(self.nx, self.ny, self.batch, self.algo, self.inverse)
+
+    def input_shape(self) -> List[int]:
+        if self.op == "fft1d":
+            return [self.batch, self.n]
+        return [self.batch, self.nx, self.ny]
+
+    def stages(self) -> List[dict]:
+        if self.algo == "r2":
+            total = self.n if self.op == "fft1d" else self.nx * self.ny
+            log2 = total.bit_length() - 1
+            return [{"kernel": "stockham2", "radix": 2, "n2": 1 << s,
+                     "lane": 1, "flops": 10 * total, "hbm_bytes": 8 * total,
+                     "vmem_bytes": 0}
+                    for s in range(log2)]
+        mk = model.split_schedule if self.algo == "tc_split" else plans.kernel_schedule
+        if self.op == "fft1d":
+            return [_stage_dict(s, self.n) for s in mk(self.n)]
+        out = [_stage_dict(s, self.ny) for s in mk(self.ny, 1)]
+        out += [_stage_dict(s, self.nx) for s in mk(self.nx, self.ny)]
+        return out
+
+    def manifest_entry(self, fname: str) -> dict:
+        stages = self.stages()
+        n_total = self.n if self.op == "fft1d" else self.nx * self.ny
+        return {
+            "key": self.key,
+            "file": fname,
+            "op": self.op,
+            "algo": self.algo,
+            "n": self.n,
+            "nx": self.nx,
+            "ny": self.ny,
+            "batch": self.batch,
+            "inverse": self.inverse,
+            "dtype": "f16",
+            "input_shape": self.input_shape(),
+            "stages": stages,
+            "flops_per_seq": sum(s["flops"] for s in stages),
+            "hbm_bytes_per_seq": sum(s["hbm_bytes"] for s in stages),
+            "radix2_equiv_flops": plans.radix2_equivalent_flops(n_total, self.batch),
+        }
+
+
+def _stage_dict(s: plans.Stage, n_axis: int) -> dict:
+    return {
+        "kernel": s.kernel,
+        "radix": s.radix,
+        "n2": s.n2,
+        "lane": s.lane,
+        "flops": s.flops(n_axis) * s.lane,
+        "hbm_bytes": s.hbm_bytes(n_axis) * s.lane,
+        "vmem_bytes": s.vmem_bytes(),
+    }
+
+
+def variant_matrix() -> List[Variant]:
+    """The full artifact set (see DESIGN.md 'Artifact variant matrix')."""
+    v: List[Variant] = []
+    # -- 1D perf/precision ladder (Fig 4, Table 4) --
+    for n in (256, 1024, 4096, 16384, 65536):
+        v.append(Variant("fft1d", "tc", 4, False, n=n))
+        v.append(Variant("fft1d", "r2", 4, False, n=n))
+    # ablation variants (Sec 5.4 'Optimized TC')
+    for n in (4096, 65536):
+        v.append(Variant("fft1d", "tc_split", 4, False, n=n))
+    # inverse round-trip support
+    for n in (1024, 4096):
+        v.append(Variant("fft1d", "tc", 4, True, n=n))
+    # -- batch sweep at 131072 points (Fig 7a) --
+    for b in (1, 2, 4, 8, 16):
+        v.append(Variant("fft1d", "tc", b, False, n=131072))
+    v.append(Variant("fft1d", "r2", 4, False, n=131072))
+    # four-step large-FFT building block: 1024-point with batch 32
+    v.append(Variant("fft1d", "tc", 32, False, n=1024))
+    v.append(Variant("fft1d", "tc", 32, True, n=1024))
+    # -- 2D shapes (Fig 5, Table 4) --
+    for nx, ny in ((128, 128), (256, 256), (256, 512), (512, 256), (512, 512)):
+        v.append(Variant("fft2d", "tc", 2, False, nx=nx, ny=ny))
+    v.append(Variant("fft2d", "tc", 2, True, nx=256, ny=256))
+    v.append(Variant("fft2d", "r2", 2, False, nx=256, ny=256))
+    v.append(Variant("fft2d", "r2", 2, False, nx=512, ny=256))
+    v.append(Variant("fft2d", "tc_split", 2, False, nx=512, ny=256))
+    # batch sweep 2D 512x256 (Fig 7b)
+    for b in (1, 4, 8):
+        v.append(Variant("fft2d", "tc", b, False, nx=512, ny=256))
+    return v
+
+
+def lower_variant(var: Variant) -> str:
+    spec = jax.ShapeDtypeStruct(tuple(var.input_shape()), jnp.float16)
+    lowered = jax.jit(var.build_fn()).lower(spec, spec)
+    return to_hlo_text(lowered)
+
+
+def build(out_dir: str, only: Optional[List[str]] = None, verbose: bool = True) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"format": 1, "dtype": "f16", "inverse_norm": "none", "variants": []}
+    t0 = time.time()
+    for var in variant_matrix():
+        if only and var.key not in only:
+            continue
+        fname = var.key + ".hlo.txt"
+        text = lower_variant(var)
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        entry = var.manifest_entry(fname)
+        entry["hlo_sha256"] = hashlib.sha256(text.encode()).hexdigest()
+        entry["hlo_bytes"] = len(text)
+        manifest["variants"].append(entry)
+        if verbose:
+            print(f"  {var.key:<42} {len(text)//1024:>6} KiB  "
+                  f"[{time.time()-t0:6.1f}s]", flush=True)
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    if verbose:
+        print(f"wrote {len(manifest['variants'])} artifacts + manifest.json "
+              f"in {time.time()-t0:.1f}s")
+
+
+def report() -> None:
+    """L1 perf report: per-plan VMEM footprint and MXU utilization estimate.
+
+    MXU utilization is estimated structurally (interpret=True gives no
+    hardware timings): the fraction of FLOPs issued as 16x16xK dots
+    (MXU-eligible) scaled by tile-fill efficiency — 16x16 operand tiles
+    occupy 1/8 of a 128x128 MXU pass in each dimension, but the fused
+    kernels batch >= 8 tiles per block which pipelines passes back to
+    back; 0.72 is the resulting steady-state estimate used in DESIGN.md.
+    """
+    print(f"{'plan':>10} {'stages':>6} {'VMEM max':>10} {'AI (fl/B)':>10} "
+          f"{'MXU-elig':>9} {'est MXU util':>12}")
+    for n in (256, 1024, 4096, 16384, 65536, 131072, 1 << 20, 1 << 24):
+        sts = plans.kernel_schedule(n)
+        tot = plans.schedule_totals(n)
+        mxu_flops = sum(
+            s.flops(n) for s in sts
+            if s.kernel in ("r16", "r16_first", "fused256_first", "merge256")
+        )
+        frac = mxu_flops / tot["flops"]
+        ai = tot["flops"] / tot["hbm_bytes"]
+        est = frac * 0.72
+        print(f"{n:>10} {tot['stages']:>6} {tot['max_vmem_bytes']//1024:>9}K "
+              f"{ai:>10.1f} {frac:>8.1%} {est:>11.1%}")
+
+
+def main(argv=None) -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out-dir", default="../artifacts")
+    p.add_argument("--only", nargs="*", default=None)
+    p.add_argument("--report", action="store_true")
+    args = p.parse_args(argv)
+    if args.report:
+        report()
+        return
+    build(args.out_dir, args.only)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,12 @@
+"""L1: Pallas merging kernels for tcFFT (interpret mode on CPU PJRT).
+
+Modules:
+* ``radix16``     — r16_first / r16: the core radix-16 MXU merges.
+* ``fused256``    — fused256_first / merge256: VMEM-fused stage pairs.
+* ``small_radix`` — radix-2/4/8 VPU butterflies (last merge).
+* ``split``       — unfused twiddle+matmul pair (Sec 5.4 ablation).
+* ``ref``         — f64 oracle + fp16 radix-2 Stockham baseline.
+* ``common``      — planar-complex helpers (cmul, complex einsum).
+"""
+
+from . import common, fused256, radix16, ref, small_radix, split  # noqa: F401

@@ -1,0 +1,63 @@
+"""Shared helpers for the tcFFT Pallas merging kernels.
+
+All kernels operate on *planar* complex data: separate fp16 real and
+imaginary arrays.  This mirrors the paper's Sec 4.1 fragment split of a
+complex matrix into a real fragment and an imaginary fragment — on TPU
+the split is free because we fuse it into the kernel body instead of
+bouncing through shared memory.
+
+Matmuls accumulate in fp32 (``preferred_element_type``), matching the
+Tensor-Core FP32 accumulate path, and results are stored back as fp16 —
+the paper notes fp16 storage of intermediates is the dominant error
+source, and we reproduce that behaviour.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+# Pallas must run in interpret mode on CPU PJRT: real-TPU lowering emits
+# a Mosaic custom-call the CPU plugin cannot execute.
+INTERPRET = True
+
+DTYPE = jnp.float16
+ACC_DTYPE = jnp.float32
+
+
+def planar_const(mat: np.ndarray, dtype=DTYPE):
+    """Split a complex numpy matrix into planar fp16 jnp constants."""
+    return (
+        jnp.asarray(mat.real.astype(np.float16), dtype=dtype),
+        jnp.asarray(mat.imag.astype(np.float16), dtype=dtype),
+    )
+
+
+def cmul(ar, ai, br, bi):
+    """Element-wise complex multiply in fp16 on the VPU.
+
+    (paper: twiddle (.) performed on FP16 CUDA cores inside the
+    fragment registers; here: fused into the kernel body.)
+    """
+    return ar * br - ai * bi, ar * bi + ai * br
+
+
+def cdot(spec: str, fr, fi, xr, xi):
+    """Complex einsum F . X with fp32 accumulation, fp16 result.
+
+    Four real einsums — the classic complex GEMM decomposition the paper
+    runs on Tensor Cores; on TPU each lowers to an MXU dot.
+    """
+    kw = dict(preferred_element_type=ACC_DTYPE)
+    rr = jnp.einsum(spec, fr, xr, **kw) - jnp.einsum(spec, fi, xi, **kw)
+    ri = jnp.einsum(spec, fr, xi, **kw) + jnp.einsum(spec, fi, xr, **kw)
+    return rr.astype(DTYPE), ri.astype(DTYPE)
+
+
+def pick_tile(c: int, max_tile: int) -> int:
+    """Largest power-of-two tile <= max_tile that divides c."""
+    t = min(c, max_tile)
+    while c % t:
+        t //= 2
+    return t

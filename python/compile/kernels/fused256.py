@@ -1,0 +1,111 @@
+"""Fused radix-256 kernels: two radix-16 sub-merges per HBM round trip.
+
+The paper's large merging kernels (radix-256/512/8192) chain several
+sub-merges through shared memory to raise arithmetic intensity (Sec
+3.2, "Combine multiple mergings").  The TPU analogue keeps the block
+resident in VMEM between the two MXU dots:
+
+* ``fused256_first`` — stages 1+2 (n2 = 1 then 16) over 256-point
+  blocks; the workhorse first stage for every N >= 256.
+* ``merge256``       — a mid-pipeline pair (n2 then 16*n2); used while
+  the (256, n2*lane) block fits the VMEM fuse budget.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .. import plans
+from .common import DTYPE, INTERPRET, cdot, cmul, pick_tile, planar_const
+
+
+def _fused256_first_kernel(fr_ref, fi_ref, t2r_ref, t2i_ref, xr_ref, xi_ref, or_ref, oi_ref):
+    # x: (Tg, 16b, 16j, L).  Stage 1 (n2=1, no twiddle):
+    #   X1[g,b,m,l] = sum_j F[m,j] x[g,b,j,l]
+    fr, fi = fr_ref[...], fi_ref[...]
+    xr, xi = xr_ref[...], xi_ref[...]
+    x1r, x1i = cdot("mj,gbjl->gbml", fr, fi, xr, xi)
+    # Stage 2 (n2=16): the stage-1 output block (b, m) *is* the stage-2
+    # input matrix (j, k) — data never leaves VMEM (paper: shared mem).
+    t2r, t2i = t2r_ref[...], t2i_ref[...]  # (16, 16) twiddles W_256^{jk}
+    zr, zi = cmul(x1r, x1i, t2r[None, :, :, None], t2i[None, :, :, None])
+    orr, oii = cdot("mj,gjkl->gmkl", fr, fi, zr, zi)
+    or_ref[...] = orr
+    oi_ref[...] = oii
+
+
+def fused256_first(xr, xi, *, lane: int = 1, inverse: bool = False):
+    """Fused first stage for N >= 256. Input planar (G, 16, 16, lane)."""
+    g = xr.shape[0]
+    assert xr.shape == (g, 16, 16, lane), xr.shape
+    fr, fi = planar_const(plans.dft_matrix(16, inverse))
+    t2r, t2i = planar_const(plans.twiddle_matrix(16, 16, inverse))
+    # keep the VMEM block ~constant for strided (lane > 1) passes
+    tg = pick_tile(g, max(1, plans.FIRST_STAGE_ROWS // lane))
+    grid = (g // tg,)
+    bs_x = pl.BlockSpec((tg, 16, 16, lane), lambda i: (i, 0, 0, 0))
+    bs_f = pl.BlockSpec((16, 16), lambda i: (0, 0))
+    out_shape = [
+        jax.ShapeDtypeStruct((g, 16, 16, lane), DTYPE),
+        jax.ShapeDtypeStruct((g, 16, 16, lane), DTYPE),
+    ]
+    return pl.pallas_call(
+        _fused256_first_kernel,
+        grid=grid,
+        in_specs=[bs_f, bs_f, bs_f, bs_f, bs_x, bs_x],
+        out_specs=[bs_x, bs_x],
+        out_shape=out_shape,
+        interpret=INTERPRET,
+    )(fr, fi, t2r, t2i, xr, xi)
+
+
+def _merge256_kernel(fr_ref, fi_ref, t1r_ref, t1i_ref, t2r_ref, t2i_ref,
+                     xr_ref, xi_ref, or_ref, oi_ref):
+    # x: (1, 16b, 16j, n2, L) — one full stage-(s+1) block in VMEM.
+    fr, fi = fr_ref[...], fi_ref[...]
+    xr, xi = xr_ref[0], xi_ref[0]
+    # Sub-merge 1: 16 independent (16, n2) blocks, twiddle T1 (16, n2).
+    t1r, t1i = t1r_ref[...], t1i_ref[...]
+    zr, zi = cmul(xr, xi, t1r[None, :, :, None], t1i[None, :, :, None])
+    ar, ai = cdot("mj,bjkl->bmkl", fr, fi, zr, zi)
+    # Sub-merge 2: view (b, m, k) as (j, k2 = m*n2+k): merge axes 1-2.
+    b, m, n2, lane = ar.shape
+    ar = ar.reshape(b, m * n2, lane)
+    ai = ai.reshape(b, m * n2, lane)
+    t2r, t2i = t2r_ref[...], t2i_ref[...]  # (16, 16*n2) twiddles
+    zr, zi = cmul(ar, ai, t2r[:, :, None], t2i[:, :, None])
+    orr, oii = cdot("mj,jkl->mkl", fr, fi, zr, zi)
+    or_ref[0] = orr.reshape(16, 16, n2, lane)
+    oi_ref[0] = oii.reshape(16, 16, n2, lane)
+
+
+def merge256(xr, xi, *, n2: int, lane: int = 1, inverse: bool = False):
+    """Fused pair of radix-16 merges (n2 then 16*n2), VMEM-resident.
+
+    Input planar (G, 16, 16, n2, lane): group g holds one 256*n2-element
+    stage-(s+1) block; leading 16 = stage-s blocks, middle 16 = rows.
+    """
+    g = xr.shape[0]
+    assert xr.shape == (g, 16, 16, n2, lane), (xr.shape, n2, lane)
+    fr, fi = planar_const(plans.dft_matrix(16, inverse))
+    t1r, t1i = planar_const(plans.twiddle_matrix(16, n2, inverse))
+    t2r, t2i = planar_const(plans.twiddle_matrix(16, 16 * n2, inverse))
+    grid = (g,)
+    bs_x = pl.BlockSpec((1, 16, 16, n2, lane), lambda i: (i, 0, 0, 0, 0))
+    bs_f = pl.BlockSpec((16, 16), lambda i: (0, 0))
+    bs_t1 = pl.BlockSpec((16, n2), lambda i: (0, 0))
+    bs_t2 = pl.BlockSpec((16, 16 * n2), lambda i: (0, 0))
+    out_shape = [
+        jax.ShapeDtypeStruct(xr.shape, DTYPE),
+        jax.ShapeDtypeStruct(xr.shape, DTYPE),
+    ]
+    return pl.pallas_call(
+        _merge256_kernel,
+        grid=grid,
+        in_specs=[bs_f, bs_f, bs_t1, bs_t1, bs_t2, bs_t2, bs_x, bs_x],
+        out_specs=[bs_x, bs_x],
+        out_shape=out_shape,
+        interpret=INTERPRET,
+    )(fr, fi, t1r, t1i, t2r, t2i, xr, xi)

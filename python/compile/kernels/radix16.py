@@ -1,0 +1,103 @@
+"""Radix-16 merging kernels — the core of tcFFT (paper Sec 3.2).
+
+A radix-16 merge computes ``X_out = F_16 . (T_{16,n2} (.) X_in)`` over
+(16, n2) blocks.  The 16x16 complex DFT matrix exactly fills one MXU
+tile (the paper's Tensor-Core fragment), and the twiddle multiply is
+fused into the kernel body before the dot — the Pallas analogue of the
+paper's single-element fragment manipulation (Sec 4.1).
+
+Two kernels live here:
+
+* ``r16_first``  — the first stage (n2 = 1, no twiddles): 16 length-1
+  sub-FFTs per block; formulated as a (rows, 16) x (16, 16) matmul.
+* ``r16``        — a generic mid-pipeline radix-16 merge for n2 >= 16,
+  gridded over (group, column-tile).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .. import plans
+from .common import ACC_DTYPE, DTYPE, INTERPRET, cdot, cmul, pick_tile, planar_const
+
+
+def _r16_first_kernel(fr_ref, fi_ref, xr_ref, xi_ref, or_ref, oi_ref):
+    # x: (Tg, 16, L); F: (16, 16). out[g,m,l] = sum_j F[m,j] x[g,j,l]
+    fr, fi = fr_ref[...], fi_ref[...]
+    xr, xi = xr_ref[...], xi_ref[...]
+    orr, oii = cdot("mj,gjl->gml", fr, fi, xr, xi)
+    or_ref[...] = orr
+    oi_ref[...] = oii
+
+
+def r16_first(xr, xi, *, lane: int = 1, inverse: bool = False):
+    """First-stage radix-16 merge. Input planar (G, 16, lane)."""
+    g = xr.shape[0]
+    assert xr.shape == (g, 16, lane), xr.shape
+    fr, fi = planar_const(plans.dft_matrix(16, inverse))
+    # keep the VMEM block ~constant for strided (lane > 1) passes
+    tg = pick_tile(g, max(1, plans.FIRST_STAGE_ROWS // lane))
+    grid = (g // tg,)
+    bs_x = pl.BlockSpec((tg, 16, lane), lambda i: (i, 0, 0))
+    bs_f = pl.BlockSpec((16, 16), lambda i: (0, 0))
+    out_shape = [
+        jax.ShapeDtypeStruct((g, 16, lane), DTYPE),
+        jax.ShapeDtypeStruct((g, 16, lane), DTYPE),
+    ]
+    return pl.pallas_call(
+        _r16_first_kernel,
+        grid=grid,
+        in_specs=[bs_f, bs_f, bs_x, bs_x],
+        out_specs=[bs_x, bs_x],
+        out_shape=out_shape,
+        interpret=INTERPRET,
+    )(fr, fi, xr, xi)
+
+
+def _r16_kernel(fr_ref, fi_ref, twr_ref, twi_ref, xr_ref, xi_ref, or_ref, oi_ref):
+    # x: (1, 16, T) one group's column tile; tw: (16, T); F: (16, 16)
+    fr, fi = fr_ref[...], fi_ref[...]
+    twr, twi = twr_ref[...], twi_ref[...]
+    xr, xi = xr_ref[0], xi_ref[0]
+    zr, zi = cmul(xr, xi, twr, twi)  # twiddle on the VPU, in-register
+    orr, oii = cdot("mj,jk->mk", fr, fi, zr, zi)  # 16x16 @ 16xT on the MXU
+    or_ref[0] = orr
+    oi_ref[0] = oii
+
+
+def r16(xr, xi, *, n2: int, lane: int = 1, inverse: bool = False):
+    """Mid-pipeline radix-16 merge. Input planar (G, 16, n2*lane).
+
+    The twiddle matrix T_{16,n2} is lane-expanded (each column repeated
+    ``lane`` times) so the strided first-axis pass of a 2D FFT reuses
+    this kernel unchanged — the paper's "strided batched FFT".
+    """
+    g, r, c = xr.shape
+    assert r == 16 and c == n2 * lane, (xr.shape, n2, lane)
+    fr, fi = planar_const(plans.dft_matrix(16, inverse))
+    tw = plans.twiddle_matrix(16, n2, inverse)
+    if lane > 1:
+        tw = tw.repeat(lane, axis=1)
+    twr, twi = planar_const(tw)
+    t = pick_tile(c, plans.R16_TILE)
+    grid = (g, c // t)
+    bs_x = pl.BlockSpec((1, 16, t), lambda i, j: (i, 0, j))
+    bs_tw = pl.BlockSpec((16, t), lambda i, j: (0, j))
+    bs_f = pl.BlockSpec((16, 16), lambda i, j: (0, 0))
+    out_shape = [
+        jax.ShapeDtypeStruct((g, 16, c), DTYPE),
+        jax.ShapeDtypeStruct((g, 16, c), DTYPE),
+    ]
+    return pl.pallas_call(
+        _r16_kernel,
+        grid=grid,
+        in_specs=[bs_f, bs_f, bs_tw, bs_tw, bs_x, bs_x],
+        out_specs=[bs_x, bs_x],
+        out_shape=out_shape,
+        interpret=INTERPRET,
+    )(fr, fi, twr, twi, xr, xi)

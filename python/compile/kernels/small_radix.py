@@ -1,0 +1,131 @@
+"""Small-radix (2/4/8) merging kernels on the VPU.
+
+The paper computes radix-2/4 merges on FP16 CUDA cores because their
+DFT matrices contain only {0, +-1, +-i} — no point burning Tensor-Core
+cycles.  The TPU analogue: element-wise butterflies on the VPU, written
+explicitly for r=2 and r=4 (adds/swaps only) and as a tiny einsum for
+r=8 (W_8 introduces sqrt(2)/2 factors).
+
+These always run as the *last* merge (largest span), mirroring the
+paper's radix-512 kernel layout = 16 x 16 x 2.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .. import plans
+from .common import DTYPE, INTERPRET, cdot, cmul, pick_tile, planar_const
+
+
+def _small2_kernel(twr_ref, twi_ref, xr_ref, xi_ref, or_ref, oi_ref):
+    # x: (1, 2, T). y0 = x0 + w (.) x1 ; y1 = x0 - w (.) x1
+    x0r, x0i = xr_ref[0, 0], xi_ref[0, 0]
+    x1r, x1i = xr_ref[0, 1], xi_ref[0, 1]
+    wr, wi = twr_ref[0], twi_ref[0]
+    zr, zi = cmul(x1r, x1i, wr, wi)
+    or_ref[0, 0] = x0r + zr
+    oi_ref[0, 0] = x0i + zi
+    or_ref[0, 1] = x0r - zr
+    oi_ref[0, 1] = x0i - zi
+
+
+def _make_small4_kernel(sign: float):
+    """Radix-4 butterfly kernel; ``sign`` = +1 forward, -1 inverse (static).
+
+    F4 rows (forward): [1,1,1,1], [1,-i,-1,i], [1,-1,1,-1], [1,i,-1,-i];
+    implemented as two layers of radix-2 butterflies plus one +-i swap —
+    no multiplies beyond the twiddles, exactly the paper's rationale for
+    keeping radix-2/4 off the Tensor Cores.
+    """
+
+    def kernel(twr_ref, twi_ref, xr_ref, xi_ref, or_ref, oi_ref):
+        zr = [None] * 4
+        zi = [None] * 4
+        zr[0], zi[0] = xr_ref[0, 0], xi_ref[0, 0]
+        for j in (1, 2, 3):
+            zr[j], zi[j] = cmul(xr_ref[0, j], xi_ref[0, j], twr_ref[j - 1], twi_ref[j - 1])
+        ar, ai = zr[0] + zr[2], zi[0] + zi[2]
+        br, bi = zr[0] - zr[2], zi[0] - zi[2]
+        cr, ci = zr[1] + zr[3], zi[1] + zi[3]
+        dr, di = zr[1] - zr[3], zi[1] - zi[3]
+        or_ref[0, 0] = ar + cr
+        oi_ref[0, 0] = ai + ci
+        or_ref[0, 2] = ar - cr
+        oi_ref[0, 2] = ai - ci
+        # forward: y1 = b - i*d, y3 = b + i*d; -i*(dr + i*di) = di - i*dr
+        s = jnp.asarray(sign, DTYPE)
+        or_ref[0, 1] = br + s * di
+        oi_ref[0, 1] = bi - s * dr
+        or_ref[0, 3] = br - s * di
+        oi_ref[0, 3] = bi + s * dr
+
+    return kernel
+
+
+def _small8_kernel(fr_ref, fi_ref, twr_ref, twi_ref, xr_ref, xi_ref, or_ref, oi_ref):
+    # x: (1, 8, T); generic tiny complex matmul on the VPU/MXU.
+    fr, fi = fr_ref[...], fi_ref[...]
+    twr, twi = twr_ref[...], twi_ref[...]
+    xr, xi = xr_ref[0], xi_ref[0]
+    zr, zi = cmul(xr, xi, twr, twi)
+    orr, oii = cdot("mj,jk->mk", fr, fi, zr, zi)
+    or_ref[0] = orr
+    oi_ref[0] = oii
+
+
+def small(xr, xi, *, radix: int, n2: int, lane: int = 1, inverse: bool = False):
+    """Radix-2/4/8 merge. Input planar (G, r, n2*lane)."""
+    g, r, c = xr.shape
+    assert r == radix and c == n2 * lane, (xr.shape, radix, n2, lane)
+    tw = plans.twiddle_matrix(radix, n2, inverse)
+    if lane > 1:
+        tw = tw.repeat(lane, axis=1)
+    # tile bounded by both SMALL_TILE and the per-block VMEM budget
+    vmem_cap = plans.VMEM_FUSE_BUDGET // (radix * 4 * 3)
+    t = pick_tile(c, min(plans.SMALL_TILE, vmem_cap))
+    grid = (g, c // t)
+    bs_x = pl.BlockSpec((1, radix, t), lambda i, j: (i, 0, j))
+    out_shape = [
+        jax.ShapeDtypeStruct((g, radix, c), DTYPE),
+        jax.ShapeDtypeStruct((g, radix, c), DTYPE),
+    ]
+    if radix == 2:
+        # only row 1 of T is non-trivial
+        twr, twi = planar_const(tw[1:2])
+        bs_tw = pl.BlockSpec((1, t), lambda i, j: (0, j))
+        return pl.pallas_call(
+            _small2_kernel,
+            grid=grid,
+            in_specs=[bs_tw, bs_tw, bs_x, bs_x],
+            out_specs=[bs_x, bs_x],
+            out_shape=out_shape,
+            interpret=INTERPRET,
+        )(twr, twi, xr, xi)
+    if radix == 4:
+        twr, twi = planar_const(tw[1:4])  # rows 1..3
+        bs_tw = pl.BlockSpec((3, t), lambda i, j: (0, j))
+        return pl.pallas_call(
+            _make_small4_kernel(-1.0 if inverse else 1.0),
+            grid=grid,
+            in_specs=[bs_tw, bs_tw, bs_x, bs_x],
+            out_specs=[bs_x, bs_x],
+            out_shape=out_shape,
+            interpret=INTERPRET,
+        )(twr, twi, xr, xi)
+    if radix == 8:
+        fr, fi = planar_const(plans.dft_matrix(8, inverse))
+        twr, twi = planar_const(tw)
+        bs_f = pl.BlockSpec((8, 8), lambda i, j: (0, 0))
+        bs_tw = pl.BlockSpec((8, t), lambda i, j: (0, j))
+        return pl.pallas_call(
+            _small8_kernel,
+            grid=grid,
+            in_specs=[bs_f, bs_f, bs_tw, bs_tw, bs_x, bs_x],
+            out_specs=[bs_x, bs_x],
+            out_shape=out_shape,
+            interpret=INTERPRET,
+        )(fr, fi, twr, twi, xr, xi)
+    raise ValueError(f"unsupported small radix {radix}")

@@ -1,0 +1,71 @@
+"""Unoptimized "split" kernels for the Sec 5.4 "Optimized TC" ablation.
+
+The paper's baseline-before-optimization performs the twiddle multiply
+and the complex matrix (de)interleave through shared memory, separately
+from the Tensor-Core matmul.  The faithful TPU analogue: run the merge
+as TWO pallas_calls — an element-wise twiddle kernel that writes the
+intermediate back to HBM, then a matmul-only kernel that reads it again.
+One extra HBM round trip per merge, identical arithmetic.
+
+Used by the ``tc_split`` artifact variants; comparing them against the
+fused ``tc`` variants reproduces the paper's 1.15x-1.32x ablation.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .. import plans
+from .common import DTYPE, INTERPRET, cdot, cmul, pick_tile, planar_const
+
+
+def _twiddle_kernel(twr_ref, twi_ref, xr_ref, xi_ref, or_ref, oi_ref):
+    zr, zi = cmul(xr_ref[0], xi_ref[0], twr_ref[...], twi_ref[...])
+    or_ref[0] = zr
+    oi_ref[0] = zi
+
+
+def _matmul_kernel(fr_ref, fi_ref, xr_ref, xi_ref, or_ref, oi_ref):
+    orr, oii = cdot("mj,jk->mk", fr_ref[...], fi_ref[...], xr_ref[0], xi_ref[0])
+    or_ref[0] = orr
+    oi_ref[0] = oii
+
+
+def r16_split(xr, xi, *, n2: int, lane: int = 1, inverse: bool = False):
+    """Radix-16 merge as twiddle-kernel + matmul-kernel (2 HBM trips)."""
+    g, r, c = xr.shape
+    assert r == 16 and c == n2 * lane, (xr.shape, n2, lane)
+    tw = plans.twiddle_matrix(16, n2, inverse)
+    if lane > 1:
+        tw = tw.repeat(lane, axis=1)
+    twr, twi = planar_const(tw)
+    fr, fi = planar_const(plans.dft_matrix(16, inverse))
+    t = pick_tile(c, plans.R16_TILE)
+    grid = (g, c // t)
+    bs_x = pl.BlockSpec((1, 16, t), lambda i, j: (i, 0, j))
+    bs_tw = pl.BlockSpec((16, t), lambda i, j: (0, j))
+    bs_f = pl.BlockSpec((16, 16), lambda i, j: (0, 0))
+    out_shape = [
+        jax.ShapeDtypeStruct((g, 16, c), DTYPE),
+        jax.ShapeDtypeStruct((g, 16, c), DTYPE),
+    ]
+    # pass 1: twiddle only — intermediate goes back to HBM
+    zr, zi = pl.pallas_call(
+        _twiddle_kernel,
+        grid=grid,
+        in_specs=[bs_tw, bs_tw, bs_x, bs_x],
+        out_specs=[bs_x, bs_x],
+        out_shape=out_shape,
+        interpret=INTERPRET,
+    )(twr, twi, xr, xi)
+    # pass 2: matmul only
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[bs_f, bs_f, bs_x, bs_x],
+        out_specs=[bs_x, bs_x],
+        out_shape=out_shape,
+        interpret=INTERPRET,
+    )(fr, fi, zr, zi)

@@ -1,0 +1,191 @@
+"""L2: JAX compute graphs for tcFFT — the plan executor.
+
+Builds, per (op, algo, size, batch, direction) variant, a jit-able
+function over *planar* fp16 complex arrays.  The staged pipeline mirrors
+the paper's execution function: a digit-reverse gather, then the
+selected merging kernels in order.  Inverse transforms are UNNORMALIZED
+(cuFFT convention) — callers scale by 1/N.
+
+Algorithms:
+* ``tc``       — the tcFFT pipeline: fused Pallas merging kernels
+                 (fused256_first / merge256 / r16 / small) with in-kernel
+                 twiddle fusion (Sec 4.1) and VMEM stage fusion (Sec 3.2).
+* ``tc_split`` — ablation: same merges, but every radix-16 merge is an
+                 unfused twiddle-kernel + matmul-kernel pair (extra HBM
+                 round trips) and no stage fusion; the paper's
+                 pre-optimization Tensor-Core baseline.
+* ``r2``       — fp16 radix-2 Stockham on the VPU only: the cuFFT-half
+                 "CUDA core" comparator.
+
+2D FFTs do the contiguous last axis first, then the strided first axis
+via the same kernels with a lane dimension (paper: strided batched FFT);
+no transposes are materialized.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from . import plans
+from .kernels import fused256, radix16, ref, small_radix, split
+
+DTYPE = jnp.float16
+
+
+def _apply_stage(st: plans.Stage, xr, xi, b, n_axis, lane, inverse, algo):
+    """Dispatch one kernel invocation; arrays arrive flattened as
+    (rows, n_axis*lane) where rows = batch x leading dims."""
+    n2 = st.n2
+    if st.kernel == "fused256_first":
+        g = b * n_axis // 256
+        xr = xr.reshape(g, 16, 16, lane)
+        xi = xi.reshape(g, 16, 16, lane)
+        yr, yi = fused256.fused256_first(xr, xi, lane=lane, inverse=inverse)
+    elif st.kernel == "r16_first":
+        g = b * n_axis // 16
+        xr = xr.reshape(g, 16, lane)
+        xi = xi.reshape(g, 16, lane)
+        yr, yi = radix16.r16_first(xr, xi, lane=lane, inverse=inverse)
+    elif st.kernel == "r16":
+        g = b * n_axis // (16 * n2)
+        xr = xr.reshape(g, 16, n2 * lane)
+        xi = xi.reshape(g, 16, n2 * lane)
+        fn = split.r16_split if algo == "tc_split" else radix16.r16
+        yr, yi = fn(xr, xi, n2=n2, lane=lane, inverse=inverse)
+    elif st.kernel == "merge256":
+        g = b * n_axis // (256 * n2)
+        xr = xr.reshape(g, 16, 16, n2, lane)
+        xi = xi.reshape(g, 16, 16, n2, lane)
+        yr, yi = fused256.merge256(xr, xi, n2=n2, lane=lane, inverse=inverse)
+    elif st.kernel == "small":
+        g = b * n_axis // (st.radix * n2)
+        xr = xr.reshape(g, st.radix, n2 * lane)
+        xi = xi.reshape(g, st.radix, n2 * lane)
+        yr, yi = small_radix.small(
+            xr, xi, radix=st.radix, n2=n2, lane=lane, inverse=inverse
+        )
+    else:
+        raise ValueError(st.kernel)
+    return yr.reshape(b, n_axis * lane), yi.reshape(b, n_axis * lane)
+
+
+def split_schedule(n_axis: int, lane: int = 1):
+    """The tc_split ablation schedule: no stage fusion, unfused merges."""
+    radices = plans.radix_schedule(n_axis)
+    a = sum(1 for r in radices if r == 16)
+    stages = []
+    n2 = 1
+    if a >= 1:
+        stages.append(plans.Stage("r16_first", 16, 1, lane))
+        n2 = 16
+    for _ in range(1, a):
+        stages.append(plans.Stage("r16", 16, n2, lane))
+        n2 *= 16
+    for r in [r for r in radices if r != 16]:
+        stages.append(plans.Stage("small", r, n2, lane))
+        n2 *= r
+    return stages
+
+
+def _staged_fft(xr, xi, n_axis: int, lane: int, inverse: bool, algo: str):
+    """Run the staged pipeline along an axis of length ``n_axis`` with a
+    trailing contiguous ``lane`` dim.  Input shape (rows, n_axis*lane)."""
+    b = xr.shape[0]
+    if algo == "tc_split":
+        stages = split_schedule(n_axis, lane)
+    else:
+        stages = plans.kernel_schedule(n_axis, lane)
+    for st in stages:
+        xr, xi = _apply_stage(st, xr, xi, b, n_axis, lane, inverse, algo)
+    return xr, xi
+
+
+def _permute(xr, xi, n_axis: int, lane: int):
+    """Digit-reverse gather along the staged axis (paper Fig 3b: the
+    changing-order, in-place-friendly layout, applied once up front)."""
+    perm = plans.digit_reverse_indices(n_axis)
+    idx = jnp.asarray(perm, jnp.int32)
+    b = xr.shape[0]
+    xr = xr.reshape(b, n_axis, lane)
+    xi = xi.reshape(b, n_axis, lane)
+    xr = jnp.take(xr, idx, axis=1).reshape(b, n_axis * lane)
+    xi = jnp.take(xi, idx, axis=1).reshape(b, n_axis * lane)
+    return xr, xi
+
+
+def fft1d_fn(n: int, batch: int, algo: str = "tc", inverse: bool = False):
+    """Build f(xr, xi) -> (yr, yi) over (batch, n) planar fp16 arrays."""
+
+    def f(xr, xi):
+        xr = xr.astype(DTYPE)
+        xi = xi.astype(DTYPE)
+        if algo == "r2":
+            yr, yi = ref.fft_fp16_radix2(xr, xi, inverse=inverse)
+            if inverse:  # undo ref's normalization: cuFFT convention
+                scale = jnp.asarray(float(n), jnp.float32)
+                yr = (yr.astype(jnp.float32) * scale).astype(DTYPE)
+                yi = (yi.astype(jnp.float32) * scale).astype(DTYPE)
+            return yr, yi
+        xr, xi = _permute(xr, xi, n, 1)
+        return _staged_fft(xr, xi, n, 1, inverse, algo)
+
+    return f
+
+
+def fft2d_fn(nx: int, ny: int, batch: int, algo: str = "tc", inverse: bool = False):
+    """Build f(xr, xi) -> (yr, yi) over (batch, nx, ny) planar fp16.
+
+    Row-major storage: ny (second dim) is contiguous — transformed
+    first; the nx axis is transformed via strided (lane=ny) kernels.
+    """
+
+    def f(xr, xi):
+        xr = xr.astype(DTYPE)
+        xi = xi.astype(DTYPE)
+        b = xr.shape[0]
+        if algo == "r2":
+            yr, yi = ref.fft_fp16_radix2(xr, xi, inverse=inverse, axis=-1)
+            yr, yi = ref.fft_fp16_radix2(yr, yi, inverse=inverse, axis=-2)
+            if inverse:
+                scale = jnp.asarray(float(nx * ny), jnp.float32)
+                yr = (yr.astype(jnp.float32) * scale).astype(DTYPE)
+                yi = (yi.astype(jnp.float32) * scale).astype(DTYPE)
+            return yr, yi
+        # pass 1: contiguous rows (batch*nx independent ny-point FFTs)
+        xr = xr.reshape(b * nx, ny)
+        xi = xi.reshape(b * nx, ny)
+        xr, xi = _permute(xr, xi, ny, 1)
+        xr, xi = _staged_fft(xr, xi, ny, 1, inverse, algo)
+        # pass 2: strided first axis (lane = ny), no transpose
+        xr = xr.reshape(b, nx * ny)
+        xi = xi.reshape(b, nx * ny)
+        xr, xi = _permute(xr, xi, nx, ny)
+        xr, xi = _staged_fft(xr, xi, nx, ny, inverse, algo)
+        return xr.reshape(b, nx, ny), xi.reshape(b, nx, ny)
+
+    return f
+
+
+# ---------------------------------------------------------------------------
+# numpy convenience wrappers (used by tests)
+# ---------------------------------------------------------------------------
+
+def run_fft1d(x: np.ndarray, algo: str = "tc", inverse: bool = False) -> np.ndarray:
+    """x: complex (batch, n) -> complex64 result via the fp16 pipeline."""
+    b, n = x.shape
+    f = jax.jit(fft1d_fn(n, b, algo, inverse))
+    yr, yi = f(
+        jnp.asarray(x.real.astype(np.float16)), jnp.asarray(x.imag.astype(np.float16))
+    )
+    return np.asarray(yr, np.float32) + 1j * np.asarray(yi, np.float32)
+
+
+def run_fft2d(x: np.ndarray, algo: str = "tc", inverse: bool = False) -> np.ndarray:
+    b, nx, ny = x.shape
+    f = jax.jit(fft2d_fn(nx, ny, b, algo, inverse))
+    yr, yi = f(
+        jnp.asarray(x.real.astype(np.float16)), jnp.asarray(x.imag.astype(np.float16))
+    )
+    return np.asarray(yr, np.float32) + 1j * np.asarray(yi, np.float32)

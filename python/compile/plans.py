@@ -1,0 +1,243 @@
+"""Plan composer for tcFFT: radix schedules, digit-reversal permutations,
+twiddle factors, and per-stage cost accounting.
+
+This module is the single source of truth for *what* kernels run for a
+given FFT size.  The Rust planner (``rust/src/plan``) recomputes the same
+schedule and is cross-checked against the manifest emitted from here.
+
+Math (paper Sec 2.1): a merge of radix ``r`` with sub-FFT length ``n2``
+maps ``X_out = F_r . (T_{r,n2} (.) X_in)`` over blocks of ``r*n2``
+elements, where ``T[m, k] = W_{r*n2}^{m*k}`` and ``F_r`` is the r-point
+DFT matrix.  Stages are applied smallest-span first; the input must be
+pre-permuted by the mixed-radix digit reversal matching the schedule.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Optional
+
+import numpy as np
+
+# VMEM budget (bytes) a single fused merge block may occupy.  A fused
+# radix-256 merge holds a (256, n2*lane) complex-fp16 block twice (in +
+# out) plus twiddles; keep well under the ~16 MB/core of a real TPU so
+# the schedule would be valid on hardware, not just in interpret mode.
+VMEM_FUSE_BUDGET = 4 * 1024 * 1024
+
+# Tile (lane) width used by the unfused radix-16 merge kernel.
+# Perf iteration 1 (EXPERIMENTS.md SPerf): 256 -> 2048. Fewer grid steps
+# amortize per-step overhead (interpret mode) / DMA descriptors (TPU);
+# VMEM stays at 16*2048*4*3 = 384 KiB per block.
+R16_TILE = 2048
+# Rows per grid step for the first-stage kernels (divided by the lane
+# width for strided 2D passes to hold the VMEM block ~constant).
+# Perf iteration 1: 64 -> 512 (1 MiB blocks).
+FIRST_STAGE_ROWS = 512
+# Column tile for the small-radix (2/4/8) kernels. Perf iteration 1:
+# 1024 -> 32768; capped by VMEM_FUSE_BUDGET in the kernel.
+SMALL_TILE = 32768
+
+
+def _is_pow2(n: int) -> bool:
+    return n > 0 and (n & (n - 1)) == 0
+
+
+def radix_schedule(n: int) -> List[int]:
+    """Radix factors of ``n`` in merge order (smallest span first).
+
+    n = 16**a * r with r in {2, 4, 8}; the small radix merges last,
+    mirroring the paper's radix-512 kernel (= 16*16*2).
+    """
+    if not _is_pow2(n) or n < 2:
+        raise ValueError(f"FFT size must be a power of two >= 2, got {n}")
+    t = n.bit_length() - 1
+    a, b = divmod(t, 4)
+    radices = [16] * a
+    if b:
+        radices.append(2 ** b)
+    return radices
+
+
+def digit_reverse_indices(n: int, radices: Optional[List[int]] = None) -> np.ndarray:
+    """Mixed-radix digit-reversal permutation for the given merge order.
+
+    ``x[perm]`` is the input ordering the staged merges expect.  Defined
+    recursively: the *last*-merged radix corresponds to the outermost
+    decimation split (n mod r), matching decimation-in-time.
+    """
+    if radices is None:
+        radices = radix_schedule(n)
+    assert math.prod(radices) == n, (n, radices)
+
+    def rec(idx: np.ndarray, rads: List[int]) -> np.ndarray:
+        if not rads:
+            return idx
+        r = rads[-1]
+        return np.concatenate([rec(idx[m::r], rads[:-1]) for m in range(r)])
+
+    return rec(np.arange(n, dtype=np.int64), list(radices))
+
+
+def dft_matrix(r: int, inverse: bool = False) -> np.ndarray:
+    """The r-point DFT matrix F_r (complex128). Inverse uses conj."""
+    k = np.arange(r)
+    sign = 2j if inverse else -2j
+    return np.exp(sign * np.pi * np.outer(k, k) / r)
+
+
+def twiddle_matrix(r: int, n2: int, inverse: bool = False) -> np.ndarray:
+    """T_{r,n2}[m, k] = W_{r*n2}^{m*k} (complex128)."""
+    n = r * n2
+    m = np.arange(r).reshape(-1, 1)
+    k = np.arange(n2).reshape(1, -1)
+    sign = 2j if inverse else -2j
+    return np.exp(sign * np.pi * (m * k % n) / n)
+
+
+@dataclasses.dataclass
+class Stage:
+    """One Pallas kernel invocation in the staged pipeline.
+
+    kernel: 'r16_first' | 'fused256_first' | 'r16' | 'merge256' | 'small'
+    radix:  total radix merged by this invocation (16, 256, 2, 4, 8)
+    n2:     sub-FFT length entering the invocation
+    lane:   trailing broadcast dimension (1 for contiguous 1D FFT,
+            = row length for the strided first-axis pass of a 2D FFT)
+    """
+
+    kernel: str
+    radix: int
+    n2: int
+    lane: int = 1
+
+    # -- cost accounting (per batch element of the full length-n FFT) --
+    def out_len(self) -> int:
+        return self.radix * self.n2
+
+    def flops(self, n: int) -> int:
+        """Real FLOPs for this stage over one length-n sequence
+        (complex mul = 6, complex add = 2)."""
+        groups = n // self.out_len()
+        if self.kernel in ("r16_first", "r16"):
+            per_block = 16 * 16 * self.n2 * 6 + 16 * 15 * self.n2 * 2
+            if self.kernel == "r16":
+                per_block += 16 * self.n2 * 6  # twiddle
+            return groups * per_block
+        if self.kernel == "fused256_first":
+            # two radix-16 sub-merges over a 256 block
+            per_block = 2 * 16 * (16 * 16 * 6 + 16 * 15 * 2) + 16 * 16 * 6
+            return groups * per_block
+        if self.kernel == "merge256":
+            # sub-merge 1: 16 blocks of (16 x n2); sub-merge 2: (16 x 16n2)
+            s1 = 16 * (16 * 16 * self.n2 * 6 + 16 * 15 * self.n2 * 2 + 16 * self.n2 * 6)
+            s2 = 16 * 16 * (16 * self.n2) * 6 + 16 * 15 * (16 * self.n2) * 2 + 16 * (16 * self.n2) * 6
+            return groups * (s1 + s2)
+        if self.kernel == "small":
+            r = self.radix
+            # butterflies: r*n2 twiddle cmuls + r*r*n2 cmul-adds (explicit
+            # forms for r=2/4 are cheaper; count the generic bound)
+            return groups * (r * self.n2 * 6 + r * r * self.n2 * 6 + r * (r - 1) * self.n2 * 2)
+        raise ValueError(self.kernel)
+
+    def hbm_bytes(self, n: int, bytes_per_cplx: int = 4) -> int:
+        """Global-memory traffic: read + write the full sequence once."""
+        return 2 * n * bytes_per_cplx
+
+    def vmem_bytes(self, bytes_per_cplx: int = 4) -> int:
+        """Per-block VMEM footprint (in + out + twiddles)."""
+        if self.kernel in ("r16_first",):
+            rows = max(1, FIRST_STAGE_ROWS // self.lane)
+            return rows * 16 * self.lane * bytes_per_cplx * 2
+        if self.kernel == "fused256_first":
+            rows = max(1, FIRST_STAGE_ROWS // self.lane)
+            blk = rows * 256 * self.lane
+            return blk * bytes_per_cplx * 2 + 256 * bytes_per_cplx
+        if self.kernel == "r16":
+            cols = min(self.n2 * self.lane, R16_TILE)
+            return 16 * cols * bytes_per_cplx * 3
+        if self.kernel == "merge256":
+            blk = 256 * self.n2 * self.lane
+            tw = (16 * self.n2 + 16 * 16 * self.n2) * bytes_per_cplx
+            return blk * bytes_per_cplx * 2 + tw
+        if self.kernel == "small":
+            cols = min(self.n2 * self.lane, SMALL_TILE)
+            return self.radix * cols * bytes_per_cplx * 3
+        raise ValueError(self.kernel)
+
+
+def kernel_schedule(n: int, lane: int = 1) -> List[Stage]:
+    """Group the radix schedule into fused kernel invocations.
+
+    Mirrors the paper's merging-kernel selection: the first two radix-16
+    stages fuse into a radix-256 first-stage kernel; later radix-16
+    pairs fuse into radix-256 merge kernels while the block fits the
+    VMEM budget; a trailing radix-2/4/8 stage runs on the VPU.
+    """
+    radices = radix_schedule(n)
+    a = sum(1 for r in radices if r == 16)
+    small = [r for r in radices if r != 16]
+    stages: List[Stage] = []
+    n2 = 1
+    i = 0
+    # first stage(s)
+    if a >= 2:
+        stages.append(Stage("fused256_first", 256, 1, lane))
+        n2 = 256
+        i = 2
+    elif a == 1:
+        stages.append(Stage("r16_first", 16, 1, lane))
+        n2 = 16
+        i = 1
+    # middle radix-16 stages, fused pairwise when VMEM allows
+    while i < a:
+        remaining = a - i
+        fused = Stage("merge256", 256, n2, lane)
+        if remaining >= 2 and fused.vmem_bytes() <= VMEM_FUSE_BUDGET:
+            stages.append(fused)
+            n2 *= 256
+            i += 2
+        else:
+            stages.append(Stage("r16", 16, n2, lane))
+            n2 *= 16
+            i += 1
+    # trailing small radix
+    for r in small:
+        stages.append(Stage("small", r, n2, lane))
+        n2 *= r
+    assert n2 == n, (n, [dataclasses.asdict(s) for s in stages])
+    return stages
+
+
+def schedule_totals(n: int, lane: int = 1) -> dict:
+    stages = kernel_schedule(n, lane)
+    return {
+        "stages": len(stages),
+        "flops": sum(s.flops(n) for s in stages),
+        "hbm_bytes": sum(s.hbm_bytes(n) for s in stages),
+        "max_vmem_bytes": max(s.vmem_bytes() for s in stages),
+    }
+
+
+def radix2_equivalent_flops(n: int, batch: int = 1) -> float:
+    """The paper's performance metric numerator (eq. 4): 6*2*log2(N)*N."""
+    return 6.0 * 2.0 * math.log2(n) * n * batch
+
+
+def stage_dicts(n: int, lane: int = 1) -> List[dict]:
+    """JSON-friendly stage descriptions for the artifact manifest."""
+    out = []
+    for s in kernel_schedule(n, lane):
+        out.append(
+            {
+                "kernel": s.kernel,
+                "radix": s.radix,
+                "n2": s.n2,
+                "lane": s.lane,
+                "flops": s.flops(n),
+                "hbm_bytes": s.hbm_bytes(n),
+                "vmem_bytes": s.vmem_bytes(),
+            }
+        )
+    return out

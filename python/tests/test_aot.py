@@ -1,0 +1,111 @@
+"""AOT pipeline tests: HLO text emission, manifest integrity, and the
+round-trip property the Rust loader depends on (no elided constants)."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, plans
+
+
+class TestHloEmission:
+    def test_small_variant_lowers_to_parseable_hlo(self):
+        var = aot.Variant("fft1d", "tc", 2, False, n=256)
+        text = aot.lower_variant(var)
+        assert text.startswith("HloModule")
+        assert "f16[2,256]" in text
+
+    def test_no_elided_constants(self):
+        # the Rust text parser needs every constant printed: an elided
+        # "constant({...})" would silently zero the twiddles
+        var = aot.Variant("fft1d", "tc", 2, False, n=4096)
+        text = aot.lower_variant(var)
+        assert "constant({...}" not in text
+
+    def test_r2_variant_lowers(self):
+        var = aot.Variant("fft1d", "r2", 2, False, n=256)
+        text = aot.lower_variant(var)
+        assert text.startswith("HloModule")
+
+
+class TestVariantMatrix:
+    def test_keys_are_unique(self):
+        keys = [v.key for v in aot.variant_matrix()]
+        assert len(keys) == len(set(keys))
+
+    def test_covers_paper_experiments(self):
+        keys = set(v.key for v in aot.variant_matrix())
+        # Fig 4 / Table 4 ladder
+        for n in (256, 1024, 4096, 16384, 65536):
+            assert f"fft1d_tc_n{n}_b4_fwd" in keys
+            assert f"fft1d_r2_n{n}_b4_fwd" in keys
+        # Fig 7a batch sweep
+        for b in (1, 2, 4, 8, 16):
+            assert f"fft1d_tc_n131072_b{b}_fwd" in keys
+        # Fig 5 2D shapes
+        assert "fft2d_tc_nx512x256_b2_fwd" in keys
+        # Sec 5.4 ablation
+        assert "fft1d_tc_split_n4096_b4_fwd" in keys
+
+    def test_manifest_entry_schema(self):
+        var = aot.Variant("fft2d", "tc", 2, False, nx=512, ny=256)
+        e = var.manifest_entry("f.hlo.txt")
+        for field in (
+            "key",
+            "file",
+            "op",
+            "algo",
+            "batch",
+            "input_shape",
+            "stages",
+            "flops_per_seq",
+            "hbm_bytes_per_seq",
+            "radix2_equiv_flops",
+        ):
+            assert field in e, field
+        assert e["input_shape"] == [2, 512, 256]
+        # 2D stages = ny schedule + strided nx schedule
+        kinds = [s["kernel"] for s in e["stages"]]
+        assert kinds.count("fused256_first") == 2
+        lanes = [s["lane"] for s in e["stages"]]
+        assert max(lanes) == 256  # strided pass carries lane = ny
+
+    def test_stage_flops_positive(self):
+        for var in aot.variant_matrix()[:6]:
+            for s in var.stages():
+                assert s["flops"] > 0
+                assert s["hbm_bytes"] > 0
+
+
+class TestBuiltManifest:
+    """Checks against the actually-built artifacts/ when present."""
+
+    @pytest.fixture()
+    def manifest(self):
+        path = os.path.join(os.path.dirname(__file__), "../../artifacts/manifest.json")
+        if not os.path.exists(path):
+            pytest.skip("artifacts not built")
+        with open(path) as f:
+            return json.load(f)
+
+    def test_files_exist_and_nonempty(self, manifest):
+        base = os.path.join(os.path.dirname(__file__), "../../artifacts")
+        for v in manifest["variants"]:
+            p = os.path.join(base, v["file"])
+            assert os.path.exists(p), v["key"]
+            assert os.path.getsize(p) > 1000, v["key"]
+
+    def test_schedule_products(self, manifest):
+        for v in manifest["variants"]:
+            if v["algo"] == "r2":
+                continue
+            prod = int(np.prod([s["radix"] for s in v["stages"]]))
+            want = v["n"] if v["op"] == "fft1d" else v["nx"] * v["ny"]
+            assert prod == want, v["key"]
+
+    def test_inverse_norm_documented(self, manifest):
+        assert manifest["inverse_norm"] == "none"

@@ -1,0 +1,145 @@
+"""L1 kernel tests: each Pallas merging kernel against the pure-numpy
+merge formula X_out = F_r (T (.) X_in), plus hypothesis shape sweeps."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import plans
+from compile.kernels import fused256, radix16, small_radix, split
+
+RNG = np.random.default_rng(42)
+
+
+def planar(x):
+    return (
+        jnp.asarray(x.real.astype(np.float16)),
+        jnp.asarray(x.imag.astype(np.float16)),
+    )
+
+
+def to_c(yr, yi):
+    return np.asarray(yr, np.float32) + 1j * np.asarray(yi, np.float32)
+
+
+def merge_ref(x, r, n2, inverse=False):
+    """Numpy reference merge over blocks: (G, r, n2) -> F (T (.) x)."""
+    f = plans.dft_matrix(r, inverse)
+    t = plans.twiddle_matrix(r, n2, inverse)
+    xq = x.real.astype(np.float16).astype(np.float64) + 1j * x.imag.astype(
+        np.float16
+    ).astype(np.float64)
+    return np.einsum("mj,gjk->gmk", f, t[None] * xq)
+
+
+def rand(shape, scale=1.0):
+    return scale * (RNG.uniform(-1, 1, shape) + 1j * RNG.uniform(-1, 1, shape))
+
+
+def assert_close(got, want, rtol=0.01):
+    scale = np.abs(want).max() + 1e-9
+    err = np.abs(got - want).max() / scale
+    assert err < rtol, f"max scaled err {err:.4f}"
+
+
+class TestR16First:
+    @pytest.mark.parametrize("g,lane", [(4, 1), (64, 1), (128, 1), (4, 8)])
+    def test_matches_blockwise_dft(self, g, lane):
+        x = rand((g, 16, lane))
+        yr, yi = radix16.r16_first(*planar(x), lane=lane)
+        f = plans.dft_matrix(16)
+        xq = x.real.astype(np.float16) + 1j * x.imag.astype(np.float16)
+        want = np.einsum("mj,gjl->gml", f, xq.astype(np.complex128))
+        assert_close(to_c(yr, yi), want)
+
+    def test_inverse_uses_conjugate(self):
+        x = rand((8, 16, 1))
+        yr, yi = radix16.r16_first(*planar(x), inverse=True)
+        f = plans.dft_matrix(16, inverse=True)
+        want = np.einsum("mj,gjl->gml", f, x)
+        assert_close(to_c(yr, yi), want, rtol=0.02)
+
+
+class TestR16:
+    @pytest.mark.parametrize("g,n2,lane", [(2, 16, 1), (4, 256, 1), (1, 1024, 1), (2, 16, 4)])
+    def test_matches_merge_formula(self, g, n2, lane):
+        x = rand((g, 16, n2 * lane))
+        yr, yi = radix16.r16(*planar(x), n2=n2, lane=lane)
+        # lane-expanded reference: twiddle repeats along lane
+        xx = x.reshape(g, 16, n2, lane)
+        f = plans.dft_matrix(16)
+        t = plans.twiddle_matrix(16, n2)
+        xq = xx.real.astype(np.float16) + 1j * xx.imag.astype(np.float16)
+        want = np.einsum("mj,gjkl->gmkl", f, t[None, :, :, None] * xq.astype(np.complex128))
+        assert_close(to_c(yr, yi), want.reshape(g, 16, n2 * lane), rtol=0.02)
+
+
+class TestFused256:
+    def test_first_stage_equals_256_point_dft(self):
+        # one group = one 256-point FFT when input is digit-reversed
+        n = 256
+        x = rand((1, n))
+        perm = plans.digit_reverse_indices(n)
+        xp = x[:, perm].reshape(1, 16, 16, 1)
+        yr, yi = fused256.fused256_first(*planar(xp), lane=1)
+        got = to_c(yr, yi).reshape(n)
+        xq = x[0].real.astype(np.float16) + 1j * x[0].imag.astype(np.float16)
+        want = np.fft.fft(xq)
+        assert_close(got, want, rtol=0.02)
+
+    def test_merge256_equals_two_r16_merges(self):
+        g, n2 = 2, 16
+        x = rand((g, 256 * n2))
+        x5 = x.reshape(g, 16, 16, n2, 1)
+        yr, yi = fused256.merge256(*planar(x5), n2=n2, lane=1)
+        got = to_c(yr, yi).reshape(g, 256 * n2)
+        # reference: r16 at n2 over 16 sub-blocks, then r16 at 16*n2
+        a = merge_ref(x.reshape(g * 16, 16, n2), 16, n2)
+        b = merge_ref(a.reshape(g, 16, 16 * n2), 16, 16 * n2)
+        assert_close(got, b.reshape(g, 256 * n2), rtol=0.02)
+
+
+class TestSmallRadix:
+    @pytest.mark.parametrize("r", [2, 4, 8])
+    @pytest.mark.parametrize("inverse", [False, True])
+    def test_matches_merge_formula(self, r, inverse):
+        g, n2 = 3, 64
+        x = rand((g, r, n2))
+        yr, yi = small_radix.small(*planar(x), radix=r, n2=n2, inverse=inverse)
+        want = merge_ref(x, r, n2, inverse)
+        assert_close(to_c(yr, yi), want, rtol=0.02)
+
+    @given(st.sampled_from([2, 4, 8]), st.integers(min_value=4, max_value=9))
+    @settings(max_examples=12, deadline=None)
+    def test_hypothesis_shapes(self, r, logn2):
+        n2 = 1 << logn2
+        x = rand((1, r, n2))
+        yr, yi = small_radix.small(*planar(x), radix=r, n2=n2)
+        want = merge_ref(x, r, n2)
+        assert_close(to_c(yr, yi), want, rtol=0.02)
+
+
+class TestSplitAblation:
+    def test_split_matches_fused_r16(self):
+        g, n2 = 2, 256
+        x = rand((g, 16, n2))
+        a = to_c(*radix16.r16(*planar(x), n2=n2))
+        b = to_c(*split.r16_split(*planar(x), n2=n2))
+        # identical arithmetic, only kernel structure differs
+        assert_close(a, b, rtol=0.005)
+
+
+class TestDtypes:
+    def test_outputs_are_fp16(self):
+        x = rand((2, 16, 16))
+        yr, yi = radix16.r16(*planar(x), n2=16)
+        assert yr.dtype == jnp.float16
+        assert yi.dtype == jnp.float16
+
+    def test_fp16_quantization_bounds_error(self):
+        # feeding larger-magnitude data still yields bounded scaled error
+        x = rand((2, 16, 64), scale=8.0)
+        yr, yi = radix16.r16(*planar(x), n2=64)
+        want = merge_ref(x, 16, 64)
+        assert_close(to_c(yr, yi), want, rtol=0.02)

@@ -1,0 +1,136 @@
+"""L2 pipeline tests: full staged FFTs against numpy oracles, all
+algorithm variants, directions, 1D/2D, plus hypothesis sweeps."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+RNG = np.random.default_rng(7)
+
+
+def rand(shape):
+    return RNG.uniform(-1, 1, shape) + 1j * RNG.uniform(-1, 1, shape)
+
+
+def q16(x):
+    return x.real.astype(np.float16).astype(np.float64) + 1j * x.imag.astype(
+        np.float16
+    ).astype(np.float64)
+
+
+def rel(got, want):
+    return np.abs(got - want).max() / (np.abs(want).max() + 1e-30)
+
+
+class TestFft1d:
+    @pytest.mark.parametrize("n", [2, 4, 8, 16, 32, 64, 128, 256, 512, 1024, 4096])
+    def test_tc_matches_numpy(self, n):
+        x = rand((2, n))
+        got = model.run_fft1d(x, "tc")
+        assert rel(got, np.fft.fft(q16(x), axis=-1)) < 0.01
+
+    @pytest.mark.parametrize("n", [65536, 131072])
+    def test_tc_large_sizes(self, n):
+        x = rand((1, n))
+        got = model.run_fft1d(x, "tc")
+        assert rel(got, np.fft.fft(q16(x), axis=-1)) < 0.01
+
+    @pytest.mark.parametrize("algo", ["tc_split", "r2"])
+    def test_other_algos(self, algo):
+        x = rand((2, 1024))
+        got = model.run_fft1d(x, algo)
+        assert rel(got, np.fft.fft(q16(x), axis=-1)) < 0.02
+
+    def test_inverse_unnormalized(self):
+        x = rand((2, 256))
+        spec = np.fft.fft(q16(x), axis=-1)
+        got = model.run_fft1d(spec / 256, "tc", inverse=True)
+        # inverse(fft(x)/N) == x when inverse is unnormalized
+        assert rel(got, q16(x)) < 0.02
+
+    @given(st.integers(min_value=1, max_value=13), st.integers(min_value=1, max_value=3))
+    @settings(max_examples=10, deadline=None)
+    def test_hypothesis_sizes_and_batches(self, t, b):
+        n = 1 << t
+        x = rand((b, n))
+        got = model.run_fft1d(x, "tc")
+        assert rel(got, np.fft.fft(q16(x), axis=-1)) < 0.02
+
+    def test_impulse_and_constant(self):
+        n = 256
+        x = np.zeros((1, n), dtype=complex)
+        x[0, 0] = 1.0
+        assert rel(model.run_fft1d(x, "tc"), np.ones((1, n))) < 0.01
+        c = np.ones((1, n), dtype=complex)
+        want = np.zeros((1, n), dtype=complex)
+        want[0, 0] = n
+        assert rel(model.run_fft1d(c, "tc"), want) < 0.01
+
+    def test_linearity(self):
+        n = 512
+        a, b = rand((1, n)) * 0.5, rand((1, n)) * 0.5
+        fa = model.run_fft1d(a, "tc")
+        fb = model.run_fft1d(b, "tc")
+        fs = model.run_fft1d(a + b, "tc")
+        assert rel(fs, fa + fb) < 0.02
+
+
+class TestFft2d:
+    @pytest.mark.parametrize("shape", [(1, 16, 16), (2, 64, 32), (1, 128, 128), (1, 512, 256)])
+    def test_tc_matches_numpy(self, shape):
+        x = rand(shape)
+        got = model.run_fft2d(x, "tc")
+        want = np.fft.fft2(q16(x))
+        assert rel(got, want) < 0.015
+
+    def test_r2_baseline_2d(self):
+        x = rand((1, 64, 64))
+        got = model.run_fft2d(x, "r2")
+        assert rel(got, np.fft.fft2(q16(x))) < 0.02
+
+    def test_inverse_round_trip(self):
+        x = rand((1, 64, 64))
+        spec = np.fft.fft2(q16(x)) / (64 * 64)
+        got = model.run_fft2d(spec, "tc", inverse=True)
+        assert rel(got, q16(x)) < 0.02
+
+    def test_row_only_content(self):
+        # an image constant along rows transforms to content in column 0
+        x = np.broadcast_to(rand((1, 64, 1)), (1, 64, 64)).copy()
+        got = model.run_fft2d(x, "tc")
+        energy_col0 = np.abs(got[0, :, 0]).sum()
+        energy_rest = np.abs(got[0, :, 1:]).sum()
+        assert energy_col0 > 50 * energy_rest
+
+
+class TestStockhamBaseline:
+    @pytest.mark.parametrize("n", [2, 8, 64, 1024])
+    def test_forward(self, n):
+        x = rand((2, n))
+        xr, xi = ref.fft_fp16_radix2(
+            np.float16(x.real), np.float16(x.imag)
+        )
+        got = np.asarray(xr, np.float32) + 1j * np.asarray(xi, np.float32)
+        assert rel(got, np.fft.fft(q16(x), axis=-1)) < 0.02
+
+    def test_axis_argument(self):
+        x = rand((2, 16, 32))
+        xr, xi = ref.fft_fp16_radix2(np.float16(x.real), np.float16(x.imag), axis=-2)
+        got = np.asarray(xr, np.float32) + 1j * np.asarray(xi, np.float32)
+        want = np.fft.fft(q16(x), axis=-2)
+        assert rel(got, want) < 0.02
+
+
+class TestErrorCharacter:
+    def test_tc_error_not_worse_than_r2(self):
+        # paper Table 4: both at the same level; matmul formulation with
+        # fp32 accumulation should be at least as accurate
+        n = 4096
+        x = rand((4, n))
+        want = np.fft.fft(q16(x), axis=-1)
+        e_tc = rel(model.run_fft1d(x, "tc"), want)
+        e_r2 = rel(model.run_fft1d(x, "r2"), want)
+        assert e_tc < e_r2 * 1.5

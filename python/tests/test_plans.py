@@ -1,0 +1,124 @@
+"""Unit tests for the plan composer (schedules, permutations, twiddles)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import plans
+
+
+class TestRadixSchedule:
+    def test_paper_radix512_kernel(self):
+        # paper Sec 3.2: radix-512 = 16 x 16 x 2
+        assert plans.radix_schedule(512) == [16, 16, 2]
+
+    @pytest.mark.parametrize(
+        "n,want",
+        [
+            (2, [2]),
+            (8, [8]),
+            (16, [16]),
+            (32, [16, 2]),
+            (256, [16, 16]),
+            (4096, [16, 16, 16]),
+            (131072, [16, 16, 16, 16, 2]),
+        ],
+    )
+    def test_known(self, n, want):
+        assert plans.radix_schedule(n) == want
+
+    @pytest.mark.parametrize("bad", [0, 1, 3, 100, -8])
+    def test_rejects_non_pow2(self, bad):
+        with pytest.raises(ValueError):
+            plans.radix_schedule(bad)
+
+    @given(st.integers(min_value=1, max_value=24))
+    def test_product_reconstructs(self, t):
+        n = 1 << t
+        assert int(np.prod(plans.radix_schedule(n))) == n
+
+
+class TestDigitReverse:
+    def test_radix2_is_bit_reversal(self):
+        p = plans.digit_reverse_indices(8, [2, 2, 2])
+        assert list(p) == [0, 4, 2, 6, 1, 5, 3, 7]
+
+    @given(st.integers(min_value=1, max_value=16))
+    @settings(max_examples=20)
+    def test_is_permutation(self, t):
+        n = 1 << t
+        p = plans.digit_reverse_indices(n)
+        assert sorted(p) == list(range(n))
+
+    def test_uniform_radix_involution(self):
+        p = plans.digit_reverse_indices(256, [16, 16])
+        assert all(p[p[i]] == i for i in range(256))
+
+
+class TestMatrices:
+    def test_dft_matrix_unitary(self):
+        f = plans.dft_matrix(16)
+        eye = f @ f.conj().T / 16
+        assert np.allclose(eye, np.eye(16), atol=1e-12)
+
+    def test_inverse_is_conjugate(self):
+        assert np.allclose(plans.dft_matrix(16, True), plans.dft_matrix(16).conj())
+        assert np.allclose(
+            plans.twiddle_matrix(16, 64, True), plans.twiddle_matrix(16, 64).conj()
+        )
+
+    def test_twiddle_unit_magnitude(self):
+        t = plans.twiddle_matrix(16, 256)
+        assert np.allclose(np.abs(t), 1.0)
+
+    def test_twiddle_first_row_col_ones(self):
+        t = plans.twiddle_matrix(16, 8)
+        assert np.allclose(t[0], 1.0)
+        assert np.allclose(t[:, 0], 1.0)
+
+
+class TestKernelSchedule:
+    @pytest.mark.parametrize(
+        "n,kernels",
+        [
+            (16, ["r16_first"]),
+            (32, ["r16_first", "small"]),
+            (256, ["fused256_first"]),
+            (512, ["fused256_first", "small"]),
+            (4096, ["fused256_first", "r16"]),
+            (65536, ["fused256_first", "merge256"]),
+            (131072, ["fused256_first", "merge256", "small"]),
+        ],
+    )
+    def test_kernel_selection(self, n, kernels):
+        assert [s.kernel for s in plans.kernel_schedule(n)] == kernels
+
+    @given(st.integers(min_value=1, max_value=22))
+    @settings(max_examples=22)
+    def test_radix_product(self, t):
+        n = 1 << t
+        sts = plans.kernel_schedule(n)
+        assert int(np.prod([s.radix for s in sts])) == n
+
+    @given(st.integers(min_value=1, max_value=22))
+    @settings(max_examples=22)
+    def test_vmem_budget(self, t):
+        n = 1 << t
+        for s in plans.kernel_schedule(n):
+            if s.kernel == "merge256":
+                assert s.vmem_bytes() <= plans.VMEM_FUSE_BUDGET
+
+    def test_large_lane_disables_fusion(self):
+        sts = plans.kernel_schedule(1 << 16, lane=512)
+        assert all(s.kernel != "merge256" for s in sts)
+
+    def test_totals_structure(self):
+        tot = plans.schedule_totals(65536)
+        assert tot["stages"] == 2
+        assert tot["flops"] > 0
+        # 2 stages x read+write x 4 bytes x N
+        assert tot["hbm_bytes"] == 2 * 2 * 4 * 65536
+
+    def test_radix2_equivalent_metric(self):
+        # paper eq. 4 numerator for N=1024, batch 1: 6*2*10*1024
+        assert plans.radix2_equivalent_flops(1024) == 6 * 2 * 10 * 1024

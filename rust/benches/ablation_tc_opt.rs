@@ -1,0 +1,72 @@
+//! Bench: the paper's Sec 5.4 "Optimized TC" ablation — the benefit of
+//! fragment-level twiddle/complex-split fusion (paper: 1.15x-1.32x).
+//!
+//! Two views:
+//!  1. MEASURED: tc vs tc_split artifacts on the CPU substrate.  The
+//!     tc_split variant de-fuses every radix-16 merge into a twiddle
+//!     kernel + a matmul kernel (extra HBM round trips) and disables
+//!     stage fusion — the structural analogue of the paper's
+//!     shared-memory fallback.
+//!  2. MODEL: the compute-penalty ablation on the V100 roofline.
+//!
+//!     cargo bench --bench ablation_tc_opt
+
+use tcfft::bench_harness::{bench, header};
+use tcfft::perfmodel::{model_fft1d, Algo, GpuSpec};
+use tcfft::runtime::{PlanarBatch, Runtime};
+use tcfft::util::table::Table;
+use tcfft::workload::random_signal;
+
+fn main() -> anyhow::Result<()> {
+    header("Sec 5.4 ablation: Optimized TC (fragment-level fusion)");
+
+    // measured part
+    let rt = Runtime::load_default()?;
+    let mut t = Table::new(&["n", "tc ms", "tc_split ms", "split/tc", "paper band"]);
+    let mut ratios = Vec::new();
+    for n in [4096usize, 65536] {
+        let mut med = Vec::new();
+        for algo in ["tc", "tc_split"] {
+            let key = format!("fft1d_{algo}_n{n}_b4_fwd");
+            let x: Vec<_> = (0..4).flat_map(|b| random_signal(n, b as u64)).collect();
+            let input = PlanarBatch::from_complex(&x, vec![4, n]);
+            rt.execute(&key, input.clone())?; // warm
+            let r = bench(&key, || {
+                rt.execute(&key, input.clone()).unwrap();
+            }, 10);
+            med.push(r.summary.median());
+        }
+        let ratio = med[1] / med[0];
+        ratios.push(ratio);
+        t.row(vec![
+            n.to_string(),
+            format!("{:.2}", med[0] * 1e3),
+            format!("{:.2}", med[1] * 1e3),
+            format!("{ratio:.2}x"),
+            "1.15x-1.32x".into(),
+        ]);
+    }
+    println!("measured (CPU substrate):\n{}", t.render());
+    assert!(
+        ratios.iter().all(|&r| r > 1.0),
+        "split variant must be slower: {ratios:?}"
+    );
+
+    // model part
+    let gpu = GpuSpec::v100();
+    let mut tm = Table::new(&["n", "model split/tc", "paper band"]);
+    for t2 in [14usize, 16, 20, 24] {
+        let n = 1usize << t2;
+        let b = ((1usize << 24) / n).max(1);
+        let tc = model_fft1d(&gpu, Algo::TcFft, n, b).seconds;
+        let un = model_fft1d(&gpu, Algo::TcFftUnopt, n, b).seconds;
+        tm.row(vec![
+            format!("2^{t2}"),
+            format!("{:.2}x", un / tc),
+            "1.15x-1.32x".into(),
+        ]);
+    }
+    println!("modelled (V100 roofline):\n{}", tm.render());
+    println!("ablation_tc_opt: OK");
+    Ok(())
+}

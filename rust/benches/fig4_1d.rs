@@ -1,0 +1,63 @@
+//! Bench: regenerate paper Fig 4 — 1D FFT performance across sizes on
+//! V100 and A100.
+//!
+//! Two parts:
+//!  1. MODEL: radix-2-equivalent TFLOPS for tcFFT / unoptimized-TC /
+//!     cuFFT-half over 2^8..2^27 on both GPUs (the figure's series).
+//!  2. MEASURED (CPU interpret substrate): wall-clock of the real AOT
+//!     artifacts, tc vs r2 baseline, which validates the *relative*
+//!     algorithm structure this testbed can observe.
+//!
+//!     cargo bench --bench fig4_1d
+
+use tcfft::bench_harness::{bench, header};
+use tcfft::perfmodel::{figures as f, GpuSpec};
+use tcfft::plan::{Direction, Plan};
+use tcfft::runtime::{PlanarBatch, Runtime};
+use tcfft::util::table::Table;
+use tcfft::workload::random_signal;
+
+fn main() -> anyhow::Result<()> {
+    header("Fig 4: 1D FFT performance of different sizes");
+
+    // ---- part 1: modelled series (the paper's figure) ----
+    let v100 = GpuSpec::v100();
+    let a100 = GpuSpec::a100();
+    println!("{}", f::render_series("Fig 4(a) model: V100", "TFLOPS", &f::fig4_series(&v100)));
+    println!("{}", f::render_series("Fig 4(b) model: A100", "TFLOPS", &f::fig4_series(&a100)));
+    let s_v: Vec<f64> = f::fig4_series(&v100).iter().skip(6).map(|p| p.speedup()).collect();
+    let avg_v = s_v.iter().sum::<f64>() / s_v.len() as f64;
+    let s_a: Vec<f64> = f::fig4_series(&a100).iter().skip(6).map(|p| p.speedup()).collect();
+    let avg_a = s_a.iter().sum::<f64>() / s_a.len() as f64;
+    println!("model avg speedup (non-bw-bound): V100 {avg_v:.2}x (paper 1.90x) | A100 {avg_a:.2}x (paper 1.24x)\n");
+
+    // ---- part 2: measured artifacts on the CPU substrate ----
+    let rt = Runtime::load_default()?;
+    let mut t = Table::new(&["n", "tc median ms", "r2 median ms", "tc/r2 (CPU)"]);
+    for n in [256usize, 1024, 4096, 16384, 65536] {
+        let mut med = Vec::new();
+        for algo in ["tc", "r2"] {
+            let plan = Plan::fft1d_algo(&rt.registry, n, 4, algo, Direction::Forward)?;
+            let x: Vec<_> = (0..4).flat_map(|b| random_signal(n, b as u64)).collect();
+            let input = PlanarBatch::from_complex(&x, vec![4, n]);
+            plan.execute(&rt, input.clone())?; // warm/compile
+            let r = bench(
+                &format!("n={n} {algo}"),
+                || {
+                    plan.execute(&rt, input.clone()).unwrap();
+                },
+                12,
+            );
+            med.push(r.summary.median());
+        }
+        t.row(vec![
+            n.to_string(),
+            format!("{:.2}", med[0] * 1e3),
+            format!("{:.2}", med[1] * 1e3),
+            format!("{:.2}x", med[1] / med[0]),
+        ]);
+    }
+    println!("measured on CPU-PJRT (interpret substrate; relative only):\n{}", t.render());
+    println!("fig4_1d: OK");
+    Ok(())
+}

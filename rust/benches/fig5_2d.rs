@@ -1,0 +1,64 @@
+//! Bench: regenerate paper Fig 5 — 2D FFT performance (six shapes,
+//! V100 + A100 model) plus measured CPU-substrate artifacts.
+//!
+//!     cargo bench --bench fig5_2d
+
+use tcfft::bench_harness::{bench, header};
+use tcfft::perfmodel::{figures as f, speedup_2d, GpuSpec};
+use tcfft::plan::Plan;
+use tcfft::runtime::{PlanarBatch, Runtime};
+use tcfft::util::table::Table;
+use tcfft::workload::random_signal;
+
+fn main() -> anyhow::Result<()> {
+    header("Fig 5: 2D FFT performance of different sizes");
+
+    let v100 = GpuSpec::v100();
+    let a100 = GpuSpec::a100();
+    println!("{}", f::render_series("Fig 5(a) model: V100", "TFLOPS", &f::fig5_series(&v100)));
+    println!("{}", f::render_series("Fig 5(b) model: A100", "TFLOPS", &f::fig5_series(&a100)));
+    println!(
+        "model: V100 512-row speedup {:.2}x (paper 3.24x) vs 256-row {:.2}x (paper 1.29x)",
+        speedup_2d(&v100, 512, 256, 128),
+        speedup_2d(&v100, 256, 256, 256),
+    );
+    println!(
+        "model: A100 512-row speedup {:.2}x (paper 3.03x)\n",
+        speedup_2d(&a100, 512, 256, 128),
+    );
+
+    // measured artifacts (CPU substrate)
+    let rt = Runtime::load_default()?;
+    let mut t = Table::new(&["shape", "algo", "median ms"]);
+    for (key, label) in [
+        ("fft2d_tc_nx128x128_b2_fwd", "128x128 tc"),
+        ("fft2d_tc_nx256x256_b2_fwd", "256x256 tc"),
+        ("fft2d_r2_nx256x256_b2_fwd", "256x256 r2"),
+        ("fft2d_tc_nx256x512_b2_fwd", "256x512 tc"),
+        ("fft2d_tc_nx512x256_b2_fwd", "512x256 tc"),
+        ("fft2d_r2_nx512x256_b2_fwd", "512x256 r2"),
+        ("fft2d_tc_nx512x512_b2_fwd", "512x512 tc"),
+    ] {
+        let meta = rt.registry.get(key)?.clone();
+        let x: Vec<_> = (0..meta.batch)
+            .flat_map(|b| random_signal(meta.nx * meta.ny, b as u64))
+            .collect();
+        let input = PlanarBatch::from_complex(&x, vec![meta.batch, meta.nx, meta.ny]);
+        rt.execute(key, input.clone())?; // warm
+        let r = bench(label, || {
+            rt.execute(key, input.clone()).unwrap();
+        }, 10);
+        t.row(vec![
+            format!("{}x{}", meta.nx, meta.ny),
+            meta.algo.clone(),
+            format!("{:.2}", r.summary.median() * 1e3),
+        ]);
+    }
+    println!("measured on CPU-PJRT (interpret substrate):\n{}", t.render());
+    println!("fig5_2d: OK");
+    Ok(())
+}
+
+// silence unused import if Plan is optimized away by feature drift
+#[allow(unused)]
+fn _keep(_: Option<Plan>) {}

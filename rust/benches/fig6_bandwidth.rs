@@ -1,0 +1,50 @@
+//! Bench: regenerate paper Fig 6 — global-memory throughput of 1D and
+//! 2D FFTs on V100 (modelled useful bandwidth per library).
+//!
+//! The paper's qualitative claims asserted here:
+//!   * short 1D sizes: tcFFT close to the achievable bandwidth peak;
+//!   * moderate/long 1D: tcFFT ~2x cuFFT's throughput;
+//!   * 2D: cuFFT drops sharply as the first dimension grows while
+//!     tcFFT "almost remains the same".
+//!
+//!     cargo bench --bench fig6_bandwidth
+
+use tcfft::bench_harness::header;
+use tcfft::perfmodel::{figures as f, GpuSpec};
+
+fn main() {
+    header("Fig 6: global memory bandwidth of 1D and 2D FFT (V100)");
+    let v100 = GpuSpec::v100();
+    let s1 = f::fig6_series_1d(&v100);
+    let s2 = f::fig6_series_2d(&v100);
+    println!("{}", f::render_series("Fig 6(a) model: 1D bandwidth", "GB/s", &s1));
+    println!("{}", f::render_series("Fig 6(b) model: 2D bandwidth", "GB/s", &s2));
+
+    // short sizes near achievable peak
+    let peak = v100.mem.achievable_bw(32) / 1e9;
+    assert!(
+        s1[0].tcfft > 0.85 * peak,
+        "short tcFFT bw {:.0} should be near peak {:.0}",
+        s1[0].tcfft,
+        peak
+    );
+    // moderate/long: ~2x cuFFT
+    for p in s1.iter().skip(7) {
+        let ratio = p.tcfft / p.cufft;
+        assert!(
+            (1.3..=3.5).contains(&ratio),
+            "1D {} bw ratio {ratio:.2} out of band",
+            p.label
+        );
+    }
+    // 2D: tcFFT stays flat while cuFFT drops with 512 rows
+    let tc_drop = s2[0].tcfft / s2[3].tcfft;
+    let cu_drop = s2[0].cufft / s2[3].cufft;
+    assert!(
+        cu_drop > tc_drop,
+        "cuFFT must degrade more: tc {tc_drop:.2} vs cu {cu_drop:.2}"
+    );
+    println!("short-1D tcFFT at {:.0}% of achievable peak; 2D degradation tc {tc_drop:.2}x vs cuFFT {cu_drop:.2}x",
+        100.0 * s1[0].tcfft / peak);
+    println!("fig6_bandwidth: OK");
+}

@@ -1,0 +1,59 @@
+//! Bench: regenerate paper Fig 7 — performance vs batch size.
+//! Fig 7(a): 1D 131072-point; Fig 7(b): 2D 512x256.
+//!
+//! Model series for the GPU figure + measured batch-sweep artifacts on
+//! the CPU substrate (real batched executions through the runtime).
+//!
+//!     cargo bench --bench fig7_batch
+
+use tcfft::bench_harness::{bench, header};
+use tcfft::perfmodel::{figures as f, GpuSpec};
+use tcfft::runtime::{PlanarBatch, Runtime};
+use tcfft::util::table::Table;
+use tcfft::workload::random_signal;
+
+fn main() -> anyhow::Result<()> {
+    header("Fig 7: performance of different batch sizes");
+    let v100 = GpuSpec::v100();
+    let a = f::fig7a_series(&v100);
+    let b = f::fig7b_series(&v100);
+    println!("{}", f::render_series("Fig 7(a) model: 1D 131072-pt, V100", "TFLOPS", &a));
+    println!("{}", f::render_series("Fig 7(b) model: 2D 512x256, V100", "TFLOPS", &b));
+
+    // paper: tcFFT overtakes cuFFT at batch > 4 (1D) and ~2 (2D)
+    let cross_a = a.iter().position(|p| p.speedup() > 1.0).unwrap_or(usize::MAX);
+    let cross_b = b.iter().position(|p| p.speedup() > 1.0).unwrap_or(usize::MAX);
+    println!(
+        "model crossover batch: 1D at {} (paper ~4), 2D at {} (paper ~2)\n",
+        a.get(cross_a).map(|p| p.label.as_str()).unwrap_or("-"),
+        b.get(cross_b).map(|p| p.label.as_str()).unwrap_or("-"),
+    );
+    assert!(cross_a <= 3, "1D crossover too late");
+    assert!(cross_b <= cross_a, "2D should cross at smaller batch than 1D");
+
+    // measured: batch sweep over the real artifacts (CPU substrate)
+    let rt = Runtime::load_default()?;
+    let mut t = Table::new(&["batch", "median ms", "ms/seq (scaling)"]);
+    for bsz in [1usize, 2, 4, 8, 16] {
+        let key = format!("fft1d_tc_n131072_b{bsz}_fwd");
+        let meta = rt.registry.get(&key)?.clone();
+        let x: Vec<_> = (0..bsz)
+            .flat_map(|i| random_signal(131072, i as u64))
+            .collect();
+        let input = PlanarBatch::from_complex(&x, vec![bsz, 131072]);
+        rt.execute(&key, input.clone())?; // warm
+        let r = bench(&key, || {
+            rt.execute(&key, input.clone()).unwrap();
+        }, 3);
+        let med = r.summary.median();
+        t.row(vec![
+            bsz.to_string(),
+            format!("{:.1}", med * 1e3),
+            format!("{:.1}", med * 1e3 / bsz as f64),
+        ]);
+        let _ = meta;
+    }
+    println!("measured 1D 131072-pt batch sweep (CPU substrate):\n{}", t.render());
+    println!("fig7_batch: OK");
+    Ok(())
+}

@@ -1,0 +1,17 @@
+//! Bench: regenerate paper Table 2 — achievable global-memory
+//! bandwidth vs continuous size on V100 (memsim model vs paper rows).
+//!
+//!     cargo bench --bench table2_memsim
+
+use tcfft::bench_harness::header;
+
+fn main() {
+    header("Table 2: achievable bandwidth vs continuous size");
+    println!("{}", tcfft::memsim::table2::render());
+
+    // calibration quality summary
+    let (_, err) = tcfft::memsim::calibrate(tcfft::memsim::MemModel::v100());
+    println!("max per-row deviation after calibration: {:.1}%", err * 100.0);
+    assert!(err < 0.20, "model drifted from Table 2");
+    println!("table2_memsim: OK");
+}

@@ -1,0 +1,61 @@
+//! Bench harness (criterion is unavailable offline): warmup + timed
+//! iterations with summary statistics, and a tiny registration macro so
+//! `cargo bench` binaries share structure.
+
+use crate::util::stats::{time_iters, Summary};
+
+pub struct BenchResult {
+    pub name: String,
+    pub summary: Summary,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} median {:>10.3} ms  mean {:>10.3} ms  p99 {:>10.3} ms  (n={})",
+            self.name,
+            self.summary.median() * 1e3,
+            self.summary.mean() * 1e3,
+            self.summary.p99() * 1e3,
+            self.summary.len(),
+        )
+    }
+}
+
+/// Run a closure with warmup; auto-scales iteration count so quick
+/// benches get more samples (min 5, max `max_iters`).
+pub fn bench<F: FnMut()>(name: &str, mut f: F, max_iters: usize) -> BenchResult {
+    // one probe run to size the iteration count
+    let t0 = std::time::Instant::now();
+    f();
+    let probe = t0.elapsed().as_secs_f64();
+    let target_time = 2.0; // seconds per bench
+    let lo = 5usize.min(max_iters.max(1));
+    let hi = max_iters.max(1).max(lo);
+    let iters = ((target_time / probe.max(1e-6)) as usize).clamp(lo, hi);
+    let warmup = (iters / 5).clamp(1, 10);
+    let summary = time_iters(f, warmup, iters);
+    BenchResult { name: name.to_string(), summary }
+}
+
+/// Standard header printed by every bench binary.
+pub fn header(title: &str) {
+    println!("\n=== {title} ===");
+    println!(
+        "host: {} | artifacts: {}",
+        std::env::consts::ARCH,
+        std::env::var("TCFFT_ARTIFACTS").unwrap_or_else(|_| "artifacts".into())
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_samples() {
+        let r = bench("noop", || { std::hint::black_box(1 + 1); }, 50);
+        assert!(r.summary.len() >= 5);
+        assert!(r.report().contains("noop"));
+    }
+}

@@ -1,0 +1,185 @@
+//! Dynamic batcher: groups same-plan requests into artifact-sized
+//! batches (vLLM-router-style).  Flush policy: a batch goes out when it
+//! fills the artifact's batch capacity OR its oldest request exceeds
+//! `max_wait` — whichever comes first.  Short batches are zero-padded
+//! (padding is tracked in metrics; the padding-ratio ablation is one of
+//! the serving benches).
+
+use std::collections::VecDeque;
+use std::sync::mpsc;
+use std::time::Instant;
+
+use crate::runtime::PlanarBatch;
+
+/// One pending single-sequence request.
+pub struct Pending {
+    pub id: u64,
+    /// shape [1, ...]: one sequence (multi-row submissions are split
+    /// into per-row requests by the service)
+    pub input: PlanarBatch,
+    pub enqueued: Instant,
+    pub reply: mpsc::Sender<anyhow::Result<PlanarBatch>>,
+}
+
+/// A batch ready for execution.
+pub struct ReadyBatch {
+    pub input: PlanarBatch,
+    pub members: Vec<Pending>,
+    pub padded: usize,
+}
+
+/// Per-plan FIFO queue with deadline-or-full flushing.
+pub struct PlanQueue {
+    pub key: String,
+    pub capacity: usize, // artifact batch size
+    queue: VecDeque<Pending>,
+    pub max_queue: usize, // backpressure bound
+}
+
+impl PlanQueue {
+    pub fn new(key: impl Into<String>, capacity: usize, max_queue: usize) -> Self {
+        PlanQueue {
+            key: key.into(),
+            capacity,
+            queue: VecDeque::new(),
+            max_queue,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Enqueue; Err(req) if the queue is full (backpressure).
+    pub fn push(&mut self, req: Pending) -> Result<(), Pending> {
+        if self.queue.len() >= self.max_queue {
+            return Err(req);
+        }
+        self.queue.push_back(req);
+        Ok(())
+    }
+
+    /// Age of the oldest pending request.
+    pub fn oldest_age(&self, now: Instant) -> Option<std::time::Duration> {
+        self.queue.front().map(|p| now.duration_since(p.enqueued))
+    }
+
+    /// Should we flush now under the given deadline?
+    pub fn should_flush(&self, now: Instant, max_wait: std::time::Duration) -> bool {
+        if self.queue.is_empty() {
+            return false;
+        }
+        self.queue.len() >= self.capacity
+            || self.oldest_age(now).is_some_and(|age| age >= max_wait)
+    }
+
+    /// Pop up to `capacity` requests and assemble the padded batch.
+    ///
+    /// Inputs are MOVED out of the pending entries and written directly
+    /// into one pre-sized padded buffer — a single copy per request
+    /// (perf iteration 3, EXPERIMENTS.md SPerf).
+    pub fn flush(&mut self) -> Option<ReadyBatch> {
+        if self.queue.is_empty() {
+            return None;
+        }
+        let take = self.queue.len().min(self.capacity);
+        let mut members: Vec<Pending> = self.queue.drain(..take).collect();
+        let tail: Vec<usize> = members[0].input.shape[1..].to_vec();
+        let row: usize = tail.iter().product();
+        let mut shape = vec![self.capacity];
+        shape.extend_from_slice(&tail);
+        let mut input = PlanarBatch {
+            re: vec![0.0; self.capacity * row],
+            im: vec![0.0; self.capacity * row],
+            shape,
+        };
+        for (i, m) in members.iter_mut().enumerate() {
+            let part = std::mem::take(&mut m.input);
+            debug_assert_eq!(&part.shape[1..], &tail[..], "ragged batch");
+            input.re[i * row..(i + 1) * row].copy_from_slice(&part.re);
+            input.im[i * row..(i + 1) * row].copy_from_slice(&part.im);
+        }
+        let padded = self.capacity - take;
+        Some(ReadyBatch { input, members, padded })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn req(id: u64, n: usize) -> (Pending, mpsc::Receiver<anyhow::Result<PlanarBatch>>) {
+        let (tx, rx) = mpsc::channel();
+        (
+            Pending {
+                id,
+                input: PlanarBatch::new(vec![1, n]),
+                enqueued: Instant::now(),
+                reply: tx,
+            },
+            rx,
+        )
+    }
+
+    #[test]
+    fn flush_on_full() {
+        let mut q = PlanQueue::new("k", 4, 64);
+        let mut rxs = Vec::new();
+        for i in 0..4 {
+            let (p, rx) = req(i, 8);
+            q.push(p).map_err(|_| ()).unwrap();
+            rxs.push(rx);
+        }
+        assert!(q.should_flush(Instant::now(), Duration::from_secs(60)));
+        let b = q.flush().unwrap();
+        assert_eq!(b.members.len(), 4);
+        assert_eq!(b.padded, 0);
+        assert_eq!(b.input.shape, vec![4, 8]);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn flush_on_deadline_with_padding() {
+        let mut q = PlanQueue::new("k", 4, 64);
+        let (p, _rx) = req(0, 8);
+        q.push(p).map_err(|_| ()).unwrap();
+        // deadline not reached yet
+        assert!(!q.should_flush(Instant::now(), Duration::from_secs(60)));
+        // zero deadline: flush immediately with padding
+        assert!(q.should_flush(Instant::now(), Duration::ZERO));
+        let b = q.flush().unwrap();
+        assert_eq!(b.members.len(), 1);
+        assert_eq!(b.padded, 3);
+        assert_eq!(b.input.shape, vec![4, 8]);
+    }
+
+    #[test]
+    fn backpressure_bound() {
+        let mut q = PlanQueue::new("k", 2, 3);
+        for i in 0..3 {
+            let (p, _rx) = req(i, 4);
+            assert!(q.push(p).is_ok());
+        }
+        let (p, _rx) = req(9, 4);
+        assert!(q.push(p).is_err(), "4th push must be rejected");
+    }
+
+    #[test]
+    fn flush_takes_at_most_capacity() {
+        let mut q = PlanQueue::new("k", 2, 64);
+        for i in 0..5 {
+            let (p, _rx) = req(i, 4);
+            q.push(p).map_err(|_| ()).unwrap();
+        }
+        let b = q.flush().unwrap();
+        assert_eq!(b.members.len(), 2);
+        assert_eq!(q.len(), 3);
+        assert_eq!(b.members[0].id, 0);
+        assert_eq!(b.members[1].id, 1);
+    }
+}

@@ -1,0 +1,94 @@
+//! Service metrics: counters + latency histograms, snapshot as JSON.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::util::json::Json;
+use crate::util::stats::Summary;
+
+#[derive(Default)]
+pub struct Metrics {
+    pub requests: AtomicU64,
+    pub completed: AtomicU64,
+    pub failed: AtomicU64,
+    pub batches: AtomicU64,
+    pub padded_slots: AtomicU64,
+    pub busy_slots: AtomicU64,
+    pub rejected: AtomicU64,
+    lat: Mutex<Summary>,        // end-to-end request latency (s)
+    queue_wait: Mutex<Summary>, // time spent waiting in the batcher (s)
+    exec: Mutex<Summary>,       // device execution time per batch (s)
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    pub fn record_latency(&self, seconds: f64) {
+        self.lat.lock().unwrap().add(seconds);
+    }
+
+    pub fn record_queue_wait(&self, seconds: f64) {
+        self.queue_wait.lock().unwrap().add(seconds);
+    }
+
+    pub fn record_exec(&self, seconds: f64) {
+        self.exec.lock().unwrap().add(seconds);
+    }
+
+    /// Fraction of executed batch slots that were padding.
+    pub fn padding_ratio(&self) -> f64 {
+        let pad = self.padded_slots.load(Ordering::Relaxed) as f64;
+        let busy = self.busy_slots.load(Ordering::Relaxed) as f64;
+        if pad + busy == 0.0 {
+            0.0
+        } else {
+            pad / (pad + busy)
+        }
+    }
+
+    pub fn snapshot(&self) -> Json {
+        let lat = self.lat.lock().unwrap();
+        let qw = self.queue_wait.lock().unwrap();
+        let ex = self.exec.lock().unwrap();
+        Json::obj(vec![
+            ("requests", Json::num(self.requests.load(Ordering::Relaxed) as f64)),
+            ("completed", Json::num(self.completed.load(Ordering::Relaxed) as f64)),
+            ("failed", Json::num(self.failed.load(Ordering::Relaxed) as f64)),
+            ("rejected", Json::num(self.rejected.load(Ordering::Relaxed) as f64)),
+            ("batches", Json::num(self.batches.load(Ordering::Relaxed) as f64)),
+            ("padding_ratio", Json::num(self.padding_ratio())),
+            ("latency_p50_ms", Json::num(lat.median() * 1e3)),
+            ("latency_p99_ms", Json::num(lat.p99() * 1e3)),
+            ("latency_mean_ms", Json::num(lat.mean() * 1e3)),
+            ("queue_wait_p50_ms", Json::num(qw.median() * 1e3)),
+            ("exec_mean_ms", Json::num(ex.mean() * 1e3)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_ratio() {
+        let m = Metrics::new();
+        m.requests.fetch_add(10, Ordering::Relaxed);
+        m.busy_slots.fetch_add(6, Ordering::Relaxed);
+        m.padded_slots.fetch_add(2, Ordering::Relaxed);
+        assert!((m.padding_ratio() - 0.25).abs() < 1e-12);
+        m.record_latency(0.010);
+        m.record_latency(0.020);
+        let snap = m.snapshot();
+        assert_eq!(snap.get("requests").unwrap().as_i64(), Some(10));
+        let p50 = snap.get("latency_p50_ms").unwrap().as_f64().unwrap();
+        assert!((p50 - 15.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_ratio_is_zero() {
+        assert_eq!(Metrics::new().padding_ratio(), 0.0);
+    }
+}

@@ -1,0 +1,17 @@
+//! L3 coordinator — the serving layer around the AOT FFT kernels.
+//!
+//! The paper ships tcFFT as a library (plan/execute); production users
+//! embed such libraries behind a service.  This module supplies that
+//! service: request router with a plan cache, per-plan dynamic batcher
+//! with deadline-or-full flushing and backpressure, an execution pool
+//! feeding the thread-safe PJRT engine (with an inline leader-execution
+//! fast path), metrics, and a TCP JSON front end.
+
+pub mod batcher;
+pub mod metrics;
+pub mod server;
+pub mod service;
+
+pub use metrics::Metrics;
+pub use server::Server;
+pub use service::{FftRequest, FftService, Op, ServiceConfig, Ticket};

@@ -1,0 +1,184 @@
+//! Line-delimited JSON TCP server in front of the FFT service — the
+//! network launcher (`tcfft serve`).
+//!
+//! Protocol (one JSON object per line):
+//!   request:  {"op": "fft1d", "n": 4096, "dir": "fwd", "algo": "tc",
+//!              "re": [...], "im": [...]}
+//!             {"op": "fft2d", "nx": 256, "ny": 256, ...}
+//!             {"op": "metrics"}        -> metrics snapshot
+//!             {"op": "ping"}           -> {"ok": true}
+//!   response: {"ok": true, "re": [...], "im": [...], "latency_ms": x}
+//!           | {"ok": false, "error": "..."}
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::service::{FftRequest, FftService, Op};
+use crate::plan::Direction;
+use crate::runtime::PlanarBatch;
+use crate::util::json::Json;
+
+pub struct Server {
+    listener: TcpListener,
+    svc: Arc<FftService>,
+    stop: Arc<AtomicBool>,
+}
+
+impl Server {
+    pub fn bind(addr: &str, svc: Arc<FftService>) -> Result<Server> {
+        let listener = TcpListener::bind(addr)?;
+        listener.set_nonblocking(true)?;
+        Ok(Server {
+            listener,
+            svc,
+            stop: Arc::new(AtomicBool::new(false)),
+        })
+    }
+
+    pub fn local_addr(&self) -> Result<std::net::SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    pub fn stop_handle(&self) -> Arc<AtomicBool> {
+        Arc::clone(&self.stop)
+    }
+
+    /// Accept loop; one thread per connection (fine at service scale —
+    /// heavy lifting is batched behind the PJRT actor anyway).
+    pub fn run(&self) -> Result<()> {
+        let mut handles = Vec::new();
+        while !self.stop.load(Ordering::SeqCst) {
+            match self.listener.accept() {
+                Ok((stream, _)) => {
+                    let svc = Arc::clone(&self.svc);
+                    let stop = Arc::clone(&self.stop);
+                    handles.push(std::thread::spawn(move || {
+                        let _ = handle_conn(stream, svc, stop);
+                    }));
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(std::time::Duration::from_millis(5));
+                }
+                Err(e) => return Err(e.into()),
+            }
+        }
+        for h in handles {
+            let _ = h.join();
+        }
+        Ok(())
+    }
+}
+
+fn handle_conn(stream: TcpStream, svc: Arc<FftService>, stop: Arc<AtomicBool>) -> Result<()> {
+    stream.set_nodelay(true)?;
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let resp = handle_line(&line, &svc);
+        writer.write_all(resp.to_string().as_bytes())?;
+        writer.write_all(b"\n")?;
+        writer.flush()?;
+    }
+    Ok(())
+}
+
+fn err_json(msg: impl std::fmt::Display) -> Json {
+    Json::obj(vec![("ok", Json::Bool(false)), ("error", Json::str(msg.to_string()))])
+}
+
+fn parse_floats(j: &Json, key: &str) -> Option<Vec<f32>> {
+    j.get(key)?
+        .as_arr()?
+        .iter()
+        .map(|v| v.as_f64().map(|x| x as f32))
+        .collect()
+}
+
+pub fn handle_line(line: &str, svc: &FftService) -> Json {
+    let req = match Json::parse(line) {
+        Ok(j) => j,
+        Err(e) => return err_json(format!("bad json: {e}")),
+    };
+    let op = req.get("op").and_then(|o| o.as_str()).unwrap_or("");
+    match op {
+        "ping" => Json::obj(vec![("ok", Json::Bool(true))]),
+        "metrics" => {
+            let snap = svc.metrics().snapshot();
+            Json::obj(vec![("ok", Json::Bool(true)), ("metrics", snap)])
+        }
+        "fft1d" | "fft2d" => {
+            let algo = req.get("algo").and_then(|a| a.as_str()).unwrap_or("tc");
+            let dir = match req.get("dir").and_then(|d| d.as_str()).unwrap_or("fwd") {
+                "inv" => Direction::Inverse,
+                _ => Direction::Forward,
+            };
+            let re = match parse_floats(&req, "re") {
+                Some(v) => v,
+                None => return err_json("missing/invalid 're' array"),
+            };
+            let im = match parse_floats(&req, "im") {
+                Some(v) => v,
+                None => return err_json("missing/invalid 'im' array"),
+            };
+            if re.len() != im.len() {
+                return err_json("re/im length mismatch");
+            }
+            let (op, shape) = if op == "fft1d" {
+                let n = match req.get("n").and_then(|v| v.as_usize()) {
+                    Some(n) => n,
+                    None => re.len(),
+                };
+                (Op::Fft1d { n }, vec![n])
+            } else {
+                let nx = req.get("nx").and_then(|v| v.as_usize()).unwrap_or(0);
+                let ny = req.get("ny").and_then(|v| v.as_usize()).unwrap_or(0);
+                (Op::Fft2d { nx, ny }, vec![nx, ny])
+            };
+            if shape.iter().product::<usize>() != re.len() {
+                return err_json("data length does not match shape");
+            }
+            let t0 = Instant::now();
+            let fftreq = FftRequest {
+                op,
+                algo: algo.to_string(),
+                direction: dir,
+                input: PlanarBatch { re, im, shape },
+            };
+            match svc.submit(fftreq).and_then(|t| t.wait()) {
+                Err(e) => err_json(e),
+                Ok(out) => Json::obj(vec![
+                    ("ok", Json::Bool(true)),
+                    ("re", Json::Arr(out.re.iter().map(|&x| Json::num(x as f64)).collect())),
+                    ("im", Json::Arr(out.im.iter().map(|&x| Json::num(x as f64)).collect())),
+                    ("latency_ms", Json::num(t0.elapsed().as_secs_f64() * 1e3)),
+                ]),
+            }
+        }
+        other => err_json(format!("unknown op '{other}'")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn error_paths_do_not_need_a_service() {
+        // pure-JSON failures short-circuit before touching the service
+        assert!(Json::parse("nope").is_err());
+        let e = err_json("x");
+        assert_eq!(e.get("ok"), Some(&Json::Bool(false)));
+    }
+}

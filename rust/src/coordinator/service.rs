@@ -1,0 +1,442 @@
+//! The FFT service: router + dynamic batcher + execution scheduler.
+//!
+//! Architecture (vLLM-router-like, on OS threads since the offline
+//! image has no tokio):
+//!
+//! ```text
+//!   clients ──submit()──> [router: plan cache] ──> per-plan queues
+//!                │                                     │
+//!                │ (leader: batch filled?  run inline) │
+//!                │                                     │
+//!                └──> event-driven flusher (deadline) ─┤
+//!                                                      │
+//!                          execution pool ──> PJRT engine (thread-safe)
+//!                                                      │
+//!                              replies via per-request channels
+//! ```
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use super::batcher::{Pending, PlanQueue, ReadyBatch};
+use super::metrics::Metrics;
+use crate::plan::{Direction, Plan};
+use crate::runtime::{PlanarBatch, Runtime};
+
+/// A logical FFT request (one sequence).
+#[derive(Clone, Debug)]
+pub struct FftRequest {
+    pub op: Op,
+    pub algo: String,
+    pub direction: Direction,
+    /// planar input, shape [n] (1D) or [nx, ny] (2D)
+    pub input: PlanarBatch,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Op {
+    Fft1d { n: usize },
+    Fft2d { nx: usize, ny: usize },
+}
+
+/// Service configuration.
+#[derive(Clone, Debug)]
+pub struct ServiceConfig {
+    /// max time a request waits for batchmates before a padded flush
+    pub max_wait: Duration,
+    /// per-plan queue bound (backpressure)
+    pub max_queue: usize,
+    /// execution pool size (overlaps marshalling with PJRT execution)
+    pub exec_threads: usize,
+    /// flusher scan period
+    pub tick: Duration,
+    /// leader execution: the submit() call that fills a batch runs it
+    /// inline on the submitting thread, skipping two thread hand-offs
+    /// (perf iteration 4). Deadline flushes still go through the pool.
+    pub inline_exec: bool,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig {
+            max_wait: Duration::from_millis(2),
+            max_queue: 1024,
+            // PJRT executions are thread-safe, but on the CPU backend
+            // concurrent executes contend for the same Eigen pool and
+            // lose ~2x (measured, EXPERIMENTS.md SPerf iteration 3) —
+            // default to one execution worker; raise on real multi-die
+            // hardware
+            exec_threads: 1,
+            tick: Duration::from_micros(200),
+            inline_exec: true,
+        }
+    }
+}
+
+/// Handle for one submitted request.
+pub struct Ticket {
+    pub id: u64,
+    rx: mpsc::Receiver<Result<PlanarBatch>>,
+}
+
+impl Ticket {
+    /// Block until the transform completes.
+    pub fn wait(self) -> Result<PlanarBatch> {
+        self.rx
+            .recv()
+            .map_err(|_| anyhow!("service dropped the request"))?
+    }
+
+    pub fn wait_timeout(self, d: Duration) -> Result<PlanarBatch> {
+        match self.rx.recv_timeout(d) {
+            Ok(r) => r,
+            Err(mpsc::RecvTimeoutError::Timeout) => Err(anyhow!("request timed out")),
+            Err(_) => Err(anyhow!("service dropped the request")),
+        }
+    }
+}
+
+struct Shared {
+    queues: Mutex<HashMap<String, PlanQueue>>,
+    /// signalled when a request is enqueued; the flusher parks on this
+    /// instead of polling (perf iteration 5: a 200 us polling loop
+    /// stole cycles from XLA's execution pool and slowed device time
+    /// by ~15%)
+    pending_cv: std::sync::Condvar,
+    plans: Mutex<HashMap<String, Plan>>,
+    metrics: Arc<Metrics>,
+    next_id: AtomicU64,
+    shutting_down: AtomicBool,
+    cfg: ServiceConfig,
+}
+
+/// Collect all due batches (queue lock held only while draining).
+fn collect_due(shared: &Shared, force: bool) -> Vec<(String, ReadyBatch)> {
+    let now = Instant::now();
+    let mut ready = Vec::new();
+    let mut queues = shared.queues.lock().unwrap();
+    for q in queues.values_mut() {
+        loop {
+            let due = if force {
+                !q.is_empty()
+            } else {
+                q.should_flush(now, shared.cfg.max_wait)
+            };
+            if !due {
+                break;
+            }
+            match q.flush() {
+                Some(b) => ready.push((q.key.clone(), b)),
+                None => break,
+            }
+        }
+    }
+    ready
+}
+
+/// Scan all queues and ship due batches to the execution pool.
+fn flush_due(shared: &Shared, tx: &mpsc::Sender<(String, ReadyBatch)>, force: bool) {
+    for item in collect_due(shared, force) {
+        let _ = tx.send(item);
+    }
+}
+
+fn run_batch(rt: &Runtime, shared: &Shared, key: &str, batch: ReadyBatch) {
+    shared.metrics.batches.fetch_add(1, Ordering::Relaxed);
+    shared
+        .metrics
+        .busy_slots
+        .fetch_add(batch.members.len() as u64, Ordering::Relaxed);
+    shared
+        .metrics
+        .padded_slots
+        .fetch_add(batch.padded as u64, Ordering::Relaxed);
+    let t_exec = Instant::now();
+    let result = rt.execute(key, batch.input);
+    let exec_s = t_exec.elapsed().as_secs_f64();
+    shared.metrics.record_exec(exec_s);
+    match result {
+        Ok((out, _stats)) => {
+            let now = Instant::now();
+            for (i, m) in batch.members.iter().enumerate() {
+                let row = out.slice_rows(i, i + 1);
+                shared
+                    .metrics
+                    .record_latency(now.duration_since(m.enqueued).as_secs_f64());
+                shared
+                    .metrics
+                    .record_queue_wait(t_exec.duration_since(m.enqueued).as_secs_f64());
+                shared.metrics.completed.fetch_add(1, Ordering::Relaxed);
+                let _ = m.reply.send(Ok(row));
+            }
+        }
+        Err(e) => {
+            for m in &batch.members {
+                shared.metrics.failed.fetch_add(1, Ordering::Relaxed);
+                let _ = m.reply.send(Err(anyhow!("batch execution failed: {e}")));
+            }
+        }
+    }
+}
+
+/// The FFT service. Create with [`FftService::start`].
+pub struct FftService {
+    rt: Arc<Runtime>,
+    shared: Arc<Shared>,
+    batch_tx: mpsc::Sender<(String, ReadyBatch)>,
+    flusher: Mutex<Option<thread::JoinHandle<()>>>,
+    exec_threads: Mutex<Vec<thread::JoinHandle<()>>>,
+}
+
+impl FftService {
+    pub fn start(rt: Arc<Runtime>, cfg: ServiceConfig) -> FftService {
+        let shared = Arc::new(Shared {
+            queues: Mutex::new(HashMap::new()),
+            pending_cv: std::sync::Condvar::new(),
+            plans: Mutex::new(HashMap::new()),
+            metrics: Arc::new(Metrics::new()),
+            next_id: AtomicU64::new(1),
+            shutting_down: AtomicBool::new(false),
+            cfg,
+        });
+        let (batch_tx, batch_rx) = mpsc::channel::<(String, ReadyBatch)>();
+
+        // execution workers: drain ready batches onto the PJRT actor
+        let batch_rx = Arc::new(Mutex::new(batch_rx));
+        let n_exec = shared.cfg.exec_threads;
+        let exec_threads = (0..n_exec)
+            .map(|i| {
+                let rx = Arc::clone(&batch_rx);
+                let rt2 = Arc::clone(&rt);
+                let sh = Arc::clone(&shared);
+                thread::Builder::new()
+                    .name(format!("tcfft-exec-{i}"))
+                    .spawn(move || loop {
+                        let msg = { rx.lock().unwrap().recv() };
+                        match msg {
+                            Err(_) => break,
+                            Ok((key, batch)) => run_batch(&rt2, &sh, &key, batch),
+                        }
+                    })
+                    .expect("spawn exec worker")
+            })
+            .collect();
+
+        // flusher thread: owns only Shared + the batch sender (no Arc
+        // cycle with the service)
+        let sh = Arc::clone(&shared);
+        let tx = batch_tx.clone();
+        let flusher = thread::Builder::new()
+            .name("tcfft-flusher".into())
+            .spawn(move || {
+                // event-driven: park on the condvar while idle (bounded
+                // by 20 ms so shutdown and long ticks stay responsive);
+                // when requests are pending, wake at the deadline tick.
+                while !sh.shutting_down.load(Ordering::SeqCst) {
+                    let any_pending = {
+                        let guard = sh.queues.lock().unwrap();
+                        let pending = guard.values().any(|q| !q.is_empty());
+                        if !pending {
+                            let _ = sh
+                                .pending_cv
+                                .wait_timeout(guard, Duration::from_millis(20))
+                                .unwrap();
+                            continue;
+                        }
+                        pending
+                    };
+                    if any_pending {
+                        thread::sleep(sh.cfg.tick.min(sh.cfg.max_wait).min(
+                            Duration::from_millis(20),
+                        ));
+                        flush_due(&sh, &tx, false);
+                    }
+                }
+                flush_due(&sh, &tx, true); // final drain
+            })
+            .expect("spawn flusher");
+
+        FftService {
+            rt,
+            shared,
+            batch_tx,
+            flusher: Mutex::new(Some(flusher)),
+            exec_threads: Mutex::new(exec_threads),
+        }
+    }
+
+    pub fn metrics(&self) -> Arc<Metrics> {
+        Arc::clone(&self.shared.metrics)
+    }
+
+    pub fn runtime(&self) -> Arc<Runtime> {
+        Arc::clone(&self.rt)
+    }
+
+    /// Resolve (and cache) the plan for a request shape.
+    fn plan_for(&self, req: &FftRequest) -> Result<Plan> {
+        let inverse = req.direction == Direction::Inverse;
+        let cache_key = match req.op {
+            Op::Fft1d { n } => format!("1d:{n}:{}:{}", req.algo, inverse),
+            Op::Fft2d { nx, ny } => format!("2d:{nx}x{ny}:{}:{}", req.algo, inverse),
+        };
+        {
+            let plans = self.shared.plans.lock().unwrap();
+            if let Some(p) = plans.get(&cache_key) {
+                return Ok(p.clone());
+            }
+        }
+        let plan = match req.op {
+            Op::Fft1d { n } => {
+                Plan::fft1d_algo(&self.rt.registry, n, 1, &req.algo, req.direction)?
+            }
+            Op::Fft2d { nx, ny } => {
+                Plan::fft2d_algo(&self.rt.registry, nx, ny, 1, &req.algo, req.direction)?
+            }
+        };
+        self.shared
+            .plans
+            .lock()
+            .unwrap()
+            .insert(cache_key, plan.clone());
+        Ok(plan)
+    }
+
+    /// Submit one request; returns a ticket to wait on.
+    pub fn submit(&self, req: FftRequest) -> Result<Ticket> {
+        if self.shared.shutting_down.load(Ordering::SeqCst) {
+            return Err(anyhow!(crate::error::TcFftError::ShuttingDown));
+        }
+        let plan = self.plan_for(&req)?;
+        let id = self.shared.next_id.fetch_add(1, Ordering::SeqCst);
+        self.shared.metrics.requests.fetch_add(1, Ordering::Relaxed);
+
+        // normalize input to [1, ...]
+        let mut shape = vec![1usize];
+        shape.extend_from_slice(&req.input.shape);
+        let input = PlanarBatch { re: req.input.re, im: req.input.im, shape };
+        anyhow::ensure!(
+            input.shape[1..] == plan.meta.input_shape[1..],
+            "request shape {:?} does not match plan {:?}",
+            &input.shape[1..],
+            &plan.meta.input_shape[1..]
+        );
+
+        let (tx, rx) = mpsc::channel();
+        let pending = Pending { id, input, enqueued: Instant::now(), reply: tx };
+        let mut full_queue = false;
+        {
+            let mut queues = self.shared.queues.lock().unwrap();
+            let q = queues.entry(plan.meta.key.clone()).or_insert_with(|| {
+                PlanQueue::new(
+                    plan.meta.key.clone(),
+                    plan.meta.batch,
+                    self.shared.cfg.max_queue,
+                )
+            });
+            if let Err(reject) = q.push(pending) {
+                full_queue = true;
+                self.shared.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                let _ = reject
+                    .reply
+                    .send(Err(anyhow!(crate::error::TcFftError::QueueFull)));
+            }
+            self.shared.pending_cv.notify_one();
+        }
+        if !full_queue {
+            if self.shared.cfg.inline_exec {
+                // leader execution: if this submit filled a batch, run it
+                // here and now — no hand-off, no wakeups
+                let ready = collect_due(&self.shared, false);
+                for (key, batch) in ready {
+                    run_batch(&self.rt, &self.shared, &key, batch);
+                }
+            } else {
+                // opportunistic flush for full batches (next tick would
+                // add latency)
+                flush_due(&self.shared, &self.batch_tx, false);
+            }
+        }
+        Ok(Ticket { id, rx })
+    }
+
+    /// Convenience: blocking 1D transform of a (possibly multi-row) batch.
+    pub fn fft1d_blocking(
+        &self,
+        x: PlanarBatch,
+        algo: &str,
+        dir: Direction,
+    ) -> Result<PlanarBatch> {
+        let n = *x.shape.last().unwrap();
+        let rows = x.shape[0];
+        let mut tickets = Vec::new();
+        for r in 0..rows {
+            let row = x.slice_rows(r, r + 1);
+            let req = FftRequest {
+                op: Op::Fft1d { n },
+                algo: algo.to_string(),
+                direction: dir,
+                input: PlanarBatch { re: row.re, im: row.im, shape: vec![n] },
+            };
+            tickets.push(self.submit(req)?);
+        }
+        let outs = tickets
+            .into_iter()
+            .map(|t| t.wait())
+            .collect::<Result<Vec<_>>>()?;
+        Ok(PlanarBatch::concat(&outs))
+    }
+
+    /// Same for 2D.
+    pub fn fft2d_blocking(
+        &self,
+        x: PlanarBatch,
+        algo: &str,
+        dir: Direction,
+    ) -> Result<PlanarBatch> {
+        anyhow::ensure!(x.shape.len() == 3, "expected [b, nx, ny]");
+        let (nx, ny) = (x.shape[1], x.shape[2]);
+        let rows = x.shape[0];
+        let mut tickets = Vec::new();
+        for r in 0..rows {
+            let row = x.slice_rows(r, r + 1);
+            let req = FftRequest {
+                op: Op::Fft2d { nx, ny },
+                algo: algo.to_string(),
+                direction: dir,
+                input: PlanarBatch { re: row.re, im: row.im, shape: vec![nx, ny] },
+            };
+            tickets.push(self.submit(req)?);
+        }
+        let outs = tickets
+            .into_iter()
+            .map(|t| t.wait())
+            .collect::<Result<Vec<_>>>()?;
+        Ok(PlanarBatch::concat(&outs))
+    }
+
+    /// Graceful shutdown: drain queues, stop threads.
+    pub fn shutdown(&self) {
+        self.shared.shutting_down.store(true, Ordering::SeqCst);
+        if let Some(j) = self.flusher.lock().unwrap().take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl Drop for FftService {
+    fn drop(&mut self) {
+        self.shutdown();
+        // closing batch_tx by replacing it ends the exec workers
+        let (dead_tx, _) = mpsc::channel();
+        self.batch_tx = dead_tx;
+        for j in self.exec_threads.lock().unwrap().drain(..) {
+            let _ = j.join();
+        }
+    }
+}

@@ -1,0 +1,73 @@
+//! Error taxonomy and the paper's precision metrics.
+
+use thiserror::Error;
+
+use crate::hp::C64;
+
+/// Library error type (coordination-level failures; numeric code uses
+/// anyhow at the boundaries).
+#[derive(Debug, Error)]
+pub enum TcFftError {
+    #[error("unsupported FFT size {0}: must be a power of two >= 2")]
+    BadSize(usize),
+    #[error("no artifact available for {0}")]
+    NoArtifact(String),
+    #[error("service is shutting down")]
+    ShuttingDown,
+    #[error("request queue is full (backpressure)")]
+    QueueFull,
+}
+
+/// The paper's relative error metric (eq. 5): mean over bins of
+/// |X_ref[i] - X[i]| / max|X_ref| — normalized by the reference scale
+/// so near-zero bins do not blow up the average.
+pub fn relative_error(reference: &[C64], got: &[C64]) -> f64 {
+    assert_eq!(reference.len(), got.len());
+    let scale = reference
+        .iter()
+        .map(|c| c.abs())
+        .fold(0.0f64, f64::max)
+        .max(f64::MIN_POSITIVE);
+    let sum: f64 = reference
+        .iter()
+        .zip(got)
+        .map(|(r, g)| (*r - *g).abs() / scale)
+        .sum();
+    sum / reference.len() as f64
+}
+
+/// Max relative error variant (stricter; used in tests).
+pub fn max_relative_error(reference: &[C64], got: &[C64]) -> f64 {
+    assert_eq!(reference.len(), got.len());
+    let scale = reference
+        .iter()
+        .map(|c| c.abs())
+        .fold(0.0f64, f64::max)
+        .max(f64::MIN_POSITIVE);
+    reference
+        .iter()
+        .zip(got)
+        .map(|(r, g)| (*r - *g).abs() / scale)
+        .fold(0.0, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_for_identical() {
+        let x = vec![C64::new(1.0, 2.0), C64::new(-3.0, 0.5)];
+        assert_eq!(relative_error(&x, &x), 0.0);
+        assert_eq!(max_relative_error(&x, &x), 0.0);
+    }
+
+    #[test]
+    fn scales_by_reference_magnitude() {
+        let r = vec![C64::new(10.0, 0.0), C64::new(0.0, 0.0)];
+        let g = vec![C64::new(10.0, 0.0), C64::new(0.1, 0.0)];
+        // error 0.1 against scale 10 -> 0.01, averaged over 2 bins
+        assert!((relative_error(&r, &g) - 0.005).abs() < 1e-12);
+        assert!((max_relative_error(&r, &g) - 0.01).abs() < 1e-12);
+    }
+}

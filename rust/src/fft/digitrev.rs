@@ -1,0 +1,102 @@
+//! Mixed-radix digit-reversal permutations — the Rust mirror of
+//! `python/compile/plans.py::digit_reverse_indices`.  The planner
+//! cross-checks this against the manifest so both sides of the AOT
+//! boundary agree on data layout.
+
+/// The paper's radix schedule for N = 2^t: t = 4a + b -> [16]*a + [2^b],
+/// small radix merging last (largest span), like the radix-512 kernel.
+pub fn radix_schedule(n: usize) -> Vec<usize> {
+    assert!(n.is_power_of_two() && n >= 2, "size must be a power of two >= 2");
+    let t = n.trailing_zeros() as usize;
+    let (a, b) = (t / 4, t % 4);
+    let mut r = vec![16; a];
+    if b > 0 {
+        r.push(1 << b);
+    }
+    r
+}
+
+/// Digit-reversal permutation for a merge-ordered radix list: the
+/// outermost decimation split corresponds to the LAST merge radix.
+/// Returns `perm` such that `x[perm[i]]` is the staged pipeline's input.
+pub fn digit_reverse_indices(n: usize, radices: &[usize]) -> Vec<usize> {
+    assert_eq!(radices.iter().product::<usize>(), n);
+    fn rec(idx: Vec<usize>, rads: &[usize]) -> Vec<usize> {
+        match rads.split_last() {
+            None => idx,
+            Some((&r, rest)) => {
+                let mut out = Vec::with_capacity(idx.len());
+                for m in 0..r {
+                    let sub: Vec<usize> = idx.iter().copied().skip(m).step_by(r).collect();
+                    out.extend(rec(sub, rest));
+                }
+                out
+            }
+        }
+    }
+    rec((0..n).collect(), radices)
+}
+
+/// Convenience: permutation for the default schedule of `n`.
+pub fn digit_reverse(n: usize) -> Vec<usize> {
+    digit_reverse_indices(n, &radix_schedule(n))
+}
+
+/// Apply a permutation out of place: out[i] = x[perm[i]].
+pub fn apply_permutation<T: Copy>(x: &[T], perm: &[usize]) -> Vec<T> {
+    perm.iter().map(|&p| x[p]).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schedule_shapes() {
+        assert_eq!(radix_schedule(16), vec![16]);
+        assert_eq!(radix_schedule(32), vec![16, 2]);
+        assert_eq!(radix_schedule(256), vec![16, 16]);
+        assert_eq!(radix_schedule(512), vec![16, 16, 2]); // paper's radix-512
+        assert_eq!(radix_schedule(4096), vec![16, 16, 16]);
+        assert_eq!(radix_schedule(131072), vec![16, 16, 16, 16, 2]);
+        assert_eq!(radix_schedule(2), vec![2]);
+        assert_eq!(radix_schedule(8), vec![8]);
+    }
+
+    #[test]
+    fn radix2_is_bit_reversal() {
+        // [2,2,2] over 8 elements = classic bit reversal
+        let p = digit_reverse_indices(8, &[2, 2, 2]);
+        assert_eq!(p, vec![0, 4, 2, 6, 1, 5, 3, 7]);
+    }
+
+    #[test]
+    fn is_a_permutation() {
+        for &n in &[16usize, 32, 256, 512, 4096, 65536] {
+            let p = digit_reverse(n);
+            let mut seen = vec![false; n];
+            for &i in &p {
+                assert!(!seen[i], "duplicate index {i} for n={n}");
+                seen[i] = true;
+            }
+        }
+    }
+
+    #[test]
+    fn involution_for_symmetric_radices() {
+        // for uniform radix lists, digit reversal is an involution
+        let p = digit_reverse_indices(256, &[16, 16]);
+        for i in 0..256 {
+            assert_eq!(p[p[i]], i);
+        }
+    }
+
+    #[test]
+    fn matches_python_plans_small_case() {
+        // n=32, radices [16, 2]: outer split by 2 (last merge), then 16.
+        // evens digit-reversed over [16] (identity), then odds.
+        let p = digit_reverse_indices(32, &[16, 2]);
+        let want: Vec<usize> = (0..32).step_by(2).chain((1..32).step_by(2)).collect();
+        assert_eq!(p, want);
+    }
+}

@@ -1,0 +1,123 @@
+//! Host mixed-radix FFT mirroring the artifact algorithm exactly:
+//! digit-reverse permutation + staged merges `X_out = F_r (T (.) X_in)`
+//! in f64.  Used to validate the planner's schedule independently of
+//! the JAX pipeline, and as the reference in plan-equivalence tests.
+
+use super::digitrev::{apply_permutation, digit_reverse_indices, radix_schedule};
+use super::twiddle::{dft_matrix, twiddle_matrix};
+use crate::hp::C64;
+
+/// One merge stage: view the array as (groups, r, n2) blocks and apply
+/// X_out = F_r . (T (.) X_in) to each block.
+pub fn merge_stage(x: &[C64], r: usize, n2: usize, inverse: bool) -> Vec<C64> {
+    let n = x.len();
+    let block = r * n2;
+    assert_eq!(n % block, 0, "array not divisible into (r, n2) blocks");
+    let f = dft_matrix(r, inverse);
+    let t = twiddle_matrix(r, n2, inverse);
+    let mut out = vec![C64::zero(); n];
+    for g in 0..n / block {
+        let base = g * block;
+        for m in 0..r {
+            for k in 0..n2 {
+                let mut acc = C64::zero();
+                for j in 0..r {
+                    acc += f[m][j] * t[j][k] * x[base + j * n2 + k];
+                }
+                out[base + m * n2 + k] = acc;
+            }
+        }
+    }
+    out
+}
+
+/// Full mixed-radix FFT with the paper's schedule. Inverse UNNORMALIZED.
+pub fn fft_mixed(x: &[C64], inverse: bool) -> Vec<C64> {
+    let n = x.len();
+    let radices = radix_schedule(n);
+    let perm = digit_reverse_indices(n, &radices);
+    let mut y = apply_permutation(x, &perm);
+    let mut n2 = 1;
+    for &r in &radices {
+        y = merge_stage(&y, r, n2, inverse);
+        n2 *= r;
+    }
+    y
+}
+
+/// Batched variant over rows of a (batch, n) matrix.
+pub fn fft_mixed_batch(x: &[C64], batch: usize, n: usize, inverse: bool) -> Vec<C64> {
+    assert_eq!(x.len(), batch * n);
+    let mut out = Vec::with_capacity(x.len());
+    for b in 0..batch {
+        out.extend(fft_mixed(&x[b * n..(b + 1) * n], inverse));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fft::radix2;
+    use crate::fft::refdft::dft;
+    use crate::util::rng::SplitMix64;
+
+    fn rand_signal(n: usize, seed: u64) -> Vec<C64> {
+        let mut rng = SplitMix64::new(seed);
+        (0..n)
+            .map(|_| C64::new(rng.uniform(-1.0, 1.0), rng.uniform(-1.0, 1.0)))
+            .collect()
+    }
+
+    #[test]
+    fn matches_dft_all_pow2_to_4096() {
+        let mut n = 2;
+        while n <= 4096 {
+            let x = rand_signal(n, n as u64 + 1);
+            let want = dft(&x, false);
+            let got = fft_mixed(&x, false);
+            let scale = want.iter().map(|c| c.abs()).fold(0.0, f64::max);
+            for (w, g) in want.iter().zip(&got) {
+                assert!((*w - *g).abs() / scale < 1e-9, "n={n}");
+            }
+            n *= 2;
+        }
+    }
+
+    #[test]
+    fn matches_radix2_large() {
+        let n = 65536;
+        let x = rand_signal(n, 42);
+        let want = radix2::fft_vec(&x, false);
+        let got = fft_mixed(&x, false);
+        let scale = want.iter().map(|c| c.abs()).fold(0.0, f64::max);
+        for (w, g) in want.iter().zip(&got) {
+            assert!((*w - *g).abs() / scale < 1e-8);
+        }
+    }
+
+    #[test]
+    fn inverse_round_trip() {
+        let n = 512; // exercises the paper's radix-512 = [16,16,2] path
+        let x = rand_signal(n, 9);
+        let y = fft_mixed(&x, false);
+        let z = fft_mixed(&y, true);
+        for (a, b) in x.iter().zip(&z) {
+            assert!((a.scale(n as f64) - *b).abs() < 1e-7);
+        }
+    }
+
+    #[test]
+    fn single_merge_stage_equals_block_dft_when_n2_is_1() {
+        // with n2 = 1, a merge is just independent r-point DFTs
+        let x = rand_signal(64, 3);
+        let y = merge_stage(&x, 16, 1, false);
+        for g in 0..4 {
+            let block: Vec<C64> = x[g * 16..(g + 1) * 16].to_vec();
+            let want = dft(&block, false);
+            for (w, gv) in want.iter().zip(&y[g * 16..(g + 1) * 16]) {
+                assert!((*w - *gv).abs() < 1e-10);
+            }
+        }
+    }
+}

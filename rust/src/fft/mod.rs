@@ -1,0 +1,12 @@
+//! Host-side FFT substrates: oracles and a mirror of the artifact
+//! algorithm.
+//!
+//! The paper's precision metric (Table 4) compares against FFTW in
+//! double precision; offline we build the equivalent from scratch:
+//! a recursive f64 FFT validated against the O(N^2) DFT definition.
+
+pub mod digitrev;
+pub mod mixed;
+pub mod radix2;
+pub mod refdft;
+pub mod twiddle;

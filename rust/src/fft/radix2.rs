@@ -1,0 +1,165 @@
+//! Iterative radix-2 Cooley–Tukey FFT in f64 — the "FFTW double"
+//! stand-in used as the reference for the paper's Table 4 relative
+//! error metric, and for frequency-domain work in the examples.
+//!
+//! Validated against the O(N^2) DFT oracle (`refdft`).
+
+use crate::hp::C64;
+
+/// In-place bit reversal permutation.
+fn bit_reverse_permute(x: &mut [C64]) {
+    let n = x.len();
+    let bits = n.trailing_zeros();
+    for i in 0..n {
+        let j = (i.reverse_bits() >> (usize::BITS - bits)) as usize;
+        if j > i {
+            x.swap(i, j);
+        }
+    }
+}
+
+/// Radix-2 DIT FFT over a power-of-two length. Inverse is UNNORMALIZED.
+pub fn fft(x: &mut [C64], inverse: bool) {
+    let n = x.len();
+    assert!(n.is_power_of_two(), "radix2 fft needs power-of-two length");
+    if n <= 1 {
+        return;
+    }
+    bit_reverse_permute(x);
+    let sign = if inverse { 1.0 } else { -1.0 };
+    let mut len = 2;
+    while len <= n {
+        let ang = sign * 2.0 * std::f64::consts::PI / len as f64;
+        let wlen = C64::cis(ang);
+        for start in (0..n).step_by(len) {
+            let mut w = C64::one();
+            for k in 0..len / 2 {
+                let a = x[start + k];
+                let b = x[start + k + len / 2] * w;
+                x[start + k] = a + b;
+                x[start + k + len / 2] = a - b;
+                w = w * wlen;
+            }
+        }
+        len <<= 1;
+    }
+}
+
+/// Out-of-place convenience wrapper.
+pub fn fft_vec(x: &[C64], inverse: bool) -> Vec<C64> {
+    let mut y = x.to_vec();
+    fft(&mut y, inverse);
+    y
+}
+
+/// Normalized inverse FFT (divides by N) for callers that want the
+/// mathematical inverse rather than the cuFFT convention.
+pub fn ifft_normalized(x: &[C64]) -> Vec<C64> {
+    let n = x.len() as f64;
+    let mut y = fft_vec(x, true);
+    for v in &mut y {
+        *v = v.scale(1.0 / n);
+    }
+    y
+}
+
+/// Batched 2D FFT over a row-major (nx, ny) matrix.
+pub fn fft2(x: &mut [C64], nx: usize, ny: usize, inverse: bool) {
+    assert_eq!(x.len(), nx * ny);
+    // contiguous rows
+    for r in 0..nx {
+        fft(&mut x[r * ny..(r + 1) * ny], inverse);
+    }
+    // strided columns through a scratch column buffer
+    let mut col = vec![C64::zero(); nx];
+    for c in 0..ny {
+        for r in 0..nx {
+            col[r] = x[r * ny + c];
+        }
+        fft(&mut col, inverse);
+        for r in 0..nx {
+            x[r * ny + c] = col[r];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fft::refdft::dft;
+    use crate::util::rng::SplitMix64;
+
+    fn rand_signal(n: usize, seed: u64) -> Vec<C64> {
+        let mut rng = SplitMix64::new(seed);
+        (0..n)
+            .map(|_| C64::new(rng.uniform(-1.0, 1.0), rng.uniform(-1.0, 1.0)))
+            .collect()
+    }
+
+    #[test]
+    fn matches_dft_oracle() {
+        for &n in &[2usize, 4, 8, 64, 256, 1024] {
+            let x = rand_signal(n, n as u64);
+            let want = dft(&x, false);
+            let got = fft_vec(&x, false);
+            let scale = want.iter().map(|c| c.abs()).fold(0.0, f64::max);
+            for (w, g) in want.iter().zip(&got) {
+                assert!((*w - *g).abs() / scale < 1e-10, "n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn inverse_matches_dft_oracle() {
+        let x = rand_signal(128, 7);
+        let want = dft(&x, true);
+        let got = fft_vec(&x, true);
+        for (w, g) in want.iter().zip(&got) {
+            assert!((*w - *g).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn round_trip_normalized() {
+        let x = rand_signal(512, 3);
+        let y = fft_vec(&x, false);
+        let z = ifft_normalized(&y);
+        for (a, b) in x.iter().zip(&z) {
+            assert!((*a - *b).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn parseval_energy_preserved() {
+        let x = rand_signal(256, 11);
+        let y = fft_vec(&x, false);
+        let ex: f64 = x.iter().map(|c| c.norm_sqr()).sum();
+        let ey: f64 = y.iter().map(|c| c.norm_sqr()).sum();
+        assert!((ey - 256.0 * ex).abs() / (256.0 * ex) < 1e-12);
+    }
+
+    #[test]
+    fn fft2_matches_row_column_dft() {
+        let nx = 8;
+        let ny = 16;
+        let mut x = rand_signal(nx * ny, 5);
+        let orig = x.clone();
+        fft2(&mut x, nx, ny, false);
+        // oracle: dft rows then dft cols
+        let mut want = orig;
+        for r in 0..nx {
+            let row = dft(&want[r * ny..(r + 1) * ny].to_vec(), false);
+            want[r * ny..(r + 1) * ny].copy_from_slice(&row);
+        }
+        for c in 0..ny {
+            let col: Vec<C64> = (0..nx).map(|r| want[r * ny + c]).collect();
+            let f = dft(&col, false);
+            for r in 0..nx {
+                want[r * ny + c] = f[r];
+            }
+        }
+        for (w, g) in want.iter().zip(&x) {
+            assert!((*w - *g).abs() < 1e-8);
+        }
+    }
+}

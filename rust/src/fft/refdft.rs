@@ -1,0 +1,89 @@
+//! O(N^2) DFT straight from the definition — the ground-truth oracle
+//! every other FFT in this repo is validated against.
+
+use crate::hp::C64;
+
+/// X[k] = sum_n x[n] e^{-2 pi i n k / N} (forward), conjugated for inverse.
+/// Inverse is UNNORMALIZED (cuFFT convention used across this repo).
+pub fn dft(x: &[C64], inverse: bool) -> Vec<C64> {
+    let n = x.len();
+    let sign = if inverse { 1.0 } else { -1.0 };
+    let mut out = vec![C64::zero(); n];
+    for (k, o) in out.iter_mut().enumerate() {
+        let mut acc = C64::zero();
+        for (j, &xv) in x.iter().enumerate() {
+            // reduce j*k mod n first: keeps the angle in [0, 2pi) and the
+            // oracle accurate even for large N
+            let e = ((j as u64 * k as u64) % n as u64) as f64;
+            let w = C64::cis(sign * 2.0 * std::f64::consts::PI * e / n as f64);
+            acc += xv * w;
+        }
+        *o = acc;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn impulse_is_flat() {
+        let mut x = vec![C64::zero(); 8];
+        x[0] = C64::one();
+        for v in dft(&x, false) {
+            assert!((v - C64::one()).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn constant_is_impulse() {
+        let x = vec![C64::one(); 8];
+        let y = dft(&x, false);
+        assert!((y[0] - C64::new(8.0, 0.0)).abs() < 1e-12);
+        for v in &y[1..] {
+            assert!(v.abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn single_tone() {
+        // x[n] = e^{2 pi i 3 n / 16} -> X[3] = 16
+        let n = 16;
+        let x: Vec<C64> = (0..n)
+            .map(|j| C64::cis(2.0 * std::f64::consts::PI * 3.0 * j as f64 / n as f64))
+            .collect();
+        let y = dft(&x, false);
+        assert!((y[3] - C64::new(n as f64, 0.0)).abs() < 1e-9);
+        for (k, v) in y.iter().enumerate() {
+            if k != 3 {
+                assert!(v.abs() < 1e-9, "bin {k} = {v:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn forward_inverse_round_trip() {
+        let x: Vec<C64> = (0..12)
+            .map(|j| C64::new((j as f64).sin(), (j as f64 * 0.7).cos()))
+            .collect();
+        let y = dft(&x, false);
+        let z = dft(&y, true); // unnormalized: z = N * x
+        for (a, b) in x.iter().zip(&z) {
+            assert!((*a * C64::new(12.0, 0.0) - *b).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn linearity() {
+        let a: Vec<C64> = (0..10).map(|j| C64::new(j as f64, 1.0)).collect();
+        let b: Vec<C64> = (0..10).map(|j| C64::new(1.0, -(j as f64))).collect();
+        let sum: Vec<C64> = a.iter().zip(&b).map(|(&x, &y)| x + y).collect();
+        let fa = dft(&a, false);
+        let fb = dft(&b, false);
+        let fs = dft(&sum, false);
+        for ((x, y), s) in fa.iter().zip(&fb).zip(&fs) {
+            assert!((*x + *y - *s).abs() < 1e-9);
+        }
+    }
+}

@@ -1,0 +1,112 @@
+//! Twiddle factor generation — W_N^{mk} tables matching
+//! `python/compile/plans.py::twiddle_matrix` exactly (angle reduced
+//! mod N before the trig call, f64 precision).
+
+use crate::hp::C64;
+
+/// The r x n2 twiddle matrix T[m][k] = W_{r*n2}^{m*k}.
+pub fn twiddle_matrix(r: usize, n2: usize, inverse: bool) -> Vec<Vec<C64>> {
+    let n = r * n2;
+    let sign = if inverse { 2.0 } else { -2.0 };
+    (0..r)
+        .map(|m| {
+            (0..n2)
+                .map(|k| {
+                    let e = ((m * k) % n) as f64;
+                    C64::cis(sign * std::f64::consts::PI * e / n as f64)
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// The r-point DFT matrix F[m][j] = W_r^{m*j}.
+pub fn dft_matrix(r: usize, inverse: bool) -> Vec<Vec<C64>> {
+    let sign = if inverse { 2.0 } else { -2.0 };
+    (0..r)
+        .map(|m| {
+            (0..r)
+                .map(|j| {
+                    let e = ((m * j) % r) as f64;
+                    C64::cis(sign * std::f64::consts::PI * e / r as f64)
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// Four-step twiddles: W_N^{jk} for the N = n1*n2 decomposition,
+/// indexed [j][k] with j < n1, k < n2.
+pub fn four_step_twiddles(n1: usize, n2: usize, inverse: bool) -> Vec<Vec<C64>> {
+    let n = n1 * n2;
+    let sign = if inverse { 2.0 } else { -2.0 };
+    (0..n1)
+        .map(|j| {
+            (0..n2)
+                .map(|k| {
+                    let e = ((j * k) % n) as f64;
+                    C64::cis(sign * std::f64::consts::PI * e / n as f64)
+                })
+                .collect()
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unit_magnitude_everywhere() {
+        for row in twiddle_matrix(16, 32, false) {
+            for w in row {
+                assert!((w.abs() - 1.0).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn first_row_and_column_are_one() {
+        let t = twiddle_matrix(16, 8, false);
+        for k in 0..8 {
+            assert!((t[0][k] - C64::one()).abs() < 1e-12);
+        }
+        for row in &t {
+            assert!((row[0] - C64::one()).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn dft2_matrix() {
+        let f = dft_matrix(2, false);
+        assert!((f[1][1] - C64::new(-1.0, 0.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn inverse_is_conjugate() {
+        let f = twiddle_matrix(16, 16, false);
+        let fi = twiddle_matrix(16, 16, true);
+        for (rf, ri) in f.iter().zip(&fi) {
+            for (a, b) in rf.iter().zip(ri) {
+                assert!((a.conj() - *b).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn dft_matrix_unitary_up_to_scale() {
+        // F * conj(F)^T = N * I for the DFT matrix
+        let r = 16;
+        let f = dft_matrix(r, false);
+        for i in 0..r {
+            for j in 0..r {
+                let mut acc = C64::zero();
+                for k in 0..r {
+                    acc += f[i][k] * f[j][k].conj();
+                }
+                let want = if i == j { r as f64 } else { 0.0 };
+                assert!((acc - C64::new(want, 0.0)).abs() < 1e-9, "({i},{j})");
+            }
+        }
+    }
+}

@@ -1,0 +1,151 @@
+//! Minimal generic complex arithmetic and planar/interleaved layout
+//! conversions used across the host-side FFT oracles and the runtime
+//! buffer marshalling.
+
+use num_traits::Float;
+
+/// A complex number over any float type.
+#[derive(Clone, Copy, Debug, PartialEq, Default)]
+pub struct Complex<T> {
+    pub re: T,
+    pub im: T,
+}
+
+pub type C64 = Complex<f64>;
+pub type C32 = Complex<f32>;
+
+impl<T: Float> Complex<T> {
+    #[inline]
+    pub fn new(re: T, im: T) -> Self {
+        Complex { re, im }
+    }
+
+    #[inline]
+    pub fn zero() -> Self {
+        Complex { re: T::zero(), im: T::zero() }
+    }
+
+    #[inline]
+    pub fn one() -> Self {
+        Complex { re: T::one(), im: T::zero() }
+    }
+
+    /// e^{i theta}
+    #[inline]
+    pub fn cis(theta: T) -> Self {
+        Complex { re: theta.cos(), im: theta.sin() }
+    }
+
+    #[inline]
+    pub fn conj(self) -> Self {
+        Complex { re: self.re, im: -self.im }
+    }
+
+    #[inline]
+    pub fn norm_sqr(self) -> T {
+        self.re * self.re + self.im * self.im
+    }
+
+    #[inline]
+    pub fn abs(self) -> T {
+        self.norm_sqr().sqrt()
+    }
+
+    #[inline]
+    pub fn scale(self, s: T) -> Self {
+        Complex { re: self.re * s, im: self.im * s }
+    }
+}
+
+impl<T: Float> std::ops::Add for Complex<T> {
+    type Output = Self;
+    #[inline]
+    fn add(self, o: Self) -> Self {
+        Complex::new(self.re + o.re, self.im + o.im)
+    }
+}
+
+impl<T: Float> std::ops::Sub for Complex<T> {
+    type Output = Self;
+    #[inline]
+    fn sub(self, o: Self) -> Self {
+        Complex::new(self.re - o.re, self.im - o.im)
+    }
+}
+
+impl<T: Float> std::ops::Mul for Complex<T> {
+    type Output = Self;
+    #[inline]
+    fn mul(self, o: Self) -> Self {
+        Complex::new(
+            self.re * o.re - self.im * o.im,
+            self.re * o.im + self.im * o.re,
+        )
+    }
+}
+
+impl<T: Float> std::ops::Neg for Complex<T> {
+    type Output = Self;
+    #[inline]
+    fn neg(self) -> Self {
+        Complex::new(-self.re, -self.im)
+    }
+}
+
+impl<T: Float + std::ops::AddAssign> std::ops::AddAssign for Complex<T> {
+    #[inline]
+    fn add_assign(&mut self, o: Self) {
+        self.re += o.re;
+        self.im += o.im;
+    }
+}
+
+/// Split interleaved complex `[re0, im0, re1, im1, ...]` into planar
+/// (re, im) vectors — the layout the artifacts consume.
+pub fn interleaved_to_planar(x: &[C32]) -> (Vec<f32>, Vec<f32>) {
+    let re = x.iter().map(|c| c.re).collect();
+    let im = x.iter().map(|c| c.im).collect();
+    (re, im)
+}
+
+/// Join planar (re, im) back into complex values.
+pub fn planar_to_interleaved(re: &[f32], im: &[f32]) -> Vec<C32> {
+    assert_eq!(re.len(), im.len());
+    re.iter().zip(im).map(|(&r, &i)| C32::new(r, i)).collect()
+}
+
+/// Widen a complex f32 slice to f64 (oracle input).
+pub fn widen(x: &[C32]) -> Vec<C64> {
+    x.iter().map(|c| C64::new(c.re as f64, c.im as f64)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arithmetic() {
+        let a = C64::new(1.0, 2.0);
+        let b = C64::new(3.0, -1.0);
+        assert_eq!(a + b, C64::new(4.0, 1.0));
+        assert_eq!(a - b, C64::new(-2.0, 3.0));
+        // (1+2i)(3-i) = 3 - i + 6i - 2i^2 = 5 + 5i
+        assert_eq!(a * b, C64::new(5.0, 5.0));
+        assert_eq!(a.conj(), C64::new(1.0, -2.0));
+        assert!((a.abs() - 5f64.sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cis_unit_circle() {
+        let c = C64::cis(std::f64::consts::PI / 2.0);
+        assert!((c.re - 0.0).abs() < 1e-12);
+        assert!((c.im - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn layout_round_trip() {
+        let xs: Vec<C32> = (0..8).map(|i| C32::new(i as f32, -(i as f32))).collect();
+        let (re, im) = interleaved_to_planar(&xs);
+        assert_eq!(planar_to_interleaved(&re, &im), xs);
+    }
+}

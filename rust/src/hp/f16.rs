@@ -1,0 +1,253 @@
+//! IEEE 754 binary16 (half precision) codec, written from scratch.
+//!
+//! The offline toolchain has no `half` crate, and the request path must
+//! marshal planar fp16 buffers into and out of PJRT literals, so we
+//! implement the conversion ourselves. Round-to-nearest-even on encode,
+//! full subnormal/inf/nan handling both ways.
+
+/// A half-precision float stored as its raw bit pattern.
+#[derive(Clone, Copy, PartialEq, Eq, Default)]
+#[repr(transparent)]
+pub struct F16(pub u16);
+
+impl F16 {
+    pub const ZERO: F16 = F16(0);
+    pub const ONE: F16 = F16(0x3C00);
+    pub const NEG_ONE: F16 = F16(0xBC00);
+    pub const INFINITY: F16 = F16(0x7C00);
+    pub const NEG_INFINITY: F16 = F16(0xFC00);
+    pub const NAN: F16 = F16(0x7E00);
+    /// Largest finite value (65504.0).
+    pub const MAX: F16 = F16(0x7BFF);
+    /// Smallest positive normal (6.103515625e-5).
+    pub const MIN_POSITIVE: F16 = F16(0x0400);
+    /// Machine epsilon (2^-10).
+    pub const EPSILON: F16 = F16(0x1400);
+
+    #[inline]
+    pub fn from_bits(bits: u16) -> F16 {
+        F16(bits)
+    }
+
+    #[inline]
+    pub fn to_bits(self) -> u16 {
+        self.0
+    }
+
+    /// Convert from f32 with round-to-nearest-even (hardware semantics).
+    pub fn from_f32(x: f32) -> F16 {
+        let bits = x.to_bits();
+        let sign = ((bits >> 16) & 0x8000) as u16;
+        let exp = ((bits >> 23) & 0xFF) as i32;
+        let frac = bits & 0x7F_FFFF;
+
+        if exp == 0xFF {
+            // inf or nan
+            if frac == 0 {
+                return F16(sign | 0x7C00);
+            }
+            // preserve a quiet nan, keep top fraction bits
+            let f = ((frac >> 13) as u16) | 0x0200;
+            return F16(sign | 0x7C00 | f);
+        }
+
+        // unbiased exponent
+        let e = exp - 127;
+        if e > 15 {
+            // overflow -> inf (round-to-nearest maps just-above-max to inf)
+            return F16(sign | 0x7C00);
+        }
+        if e >= -14 {
+            // normal range: 10-bit mantissa, round to nearest even
+            let mant = frac >> 13;
+            let rest = frac & 0x1FFF;
+            let mut h = sign | (((e + 15) as u16) << 10) | mant as u16;
+            if rest > 0x1000 || (rest == 0x1000 && (mant & 1) == 1) {
+                h = h.wrapping_add(1); // may carry into exponent: correct
+            }
+            return F16(h);
+        }
+        if e < -25 {
+            // too small even for subnormal with rounding
+            return F16(sign);
+        }
+        // subnormal: implicit leading 1 becomes explicit, shift right
+        let full = 0x80_0000 | frac; // 24-bit significand
+        let shift = (-14 - e) as u32 + 13;
+        let mant = (full >> shift) as u16;
+        let rest = full & ((1u32 << shift) - 1);
+        let half = 1u32 << (shift - 1);
+        let mut h = sign | mant;
+        if rest > half || (rest == half && (mant & 1) == 1) {
+            h = h.wrapping_add(1);
+        }
+        F16(h)
+    }
+
+    /// Convert to f32 (exact).
+    pub fn to_f32(self) -> f32 {
+        let sign = ((self.0 & 0x8000) as u32) << 16;
+        let exp = ((self.0 >> 10) & 0x1F) as u32;
+        let frac = (self.0 & 0x3FF) as u32;
+        let bits = if exp == 0 {
+            if frac == 0 {
+                sign // +-0
+            } else {
+                // subnormal: normalize
+                let lz = frac.leading_zeros() - 22; // zeros within 10-bit field
+                let shift = lz + 1;
+                let f = (frac << shift) & 0x3FF;
+                let e = 127 - 15 - shift + 1;
+                sign | (e << 23) | (f << 13)
+            }
+        } else if exp == 0x1F {
+            sign | 0x7F80_0000 | (frac << 13) // inf / nan
+        } else {
+            sign | ((exp + 127 - 15) << 23) | (frac << 13)
+        };
+        f32::from_bits(bits)
+    }
+
+    pub fn from_f64(x: f64) -> F16 {
+        F16::from_f32(x as f32)
+    }
+
+    pub fn to_f64(self) -> f64 {
+        self.to_f32() as f64
+    }
+
+    pub fn is_nan(self) -> bool {
+        (self.0 & 0x7C00) == 0x7C00 && (self.0 & 0x3FF) != 0
+    }
+
+    pub fn is_infinite(self) -> bool {
+        (self.0 & 0x7FFF) == 0x7C00
+    }
+
+    pub fn is_finite(self) -> bool {
+        (self.0 & 0x7C00) != 0x7C00
+    }
+}
+
+impl std::fmt::Debug for F16 {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}f16", self.to_f32())
+    }
+}
+
+impl From<f32> for F16 {
+    fn from(x: f32) -> F16 {
+        F16::from_f32(x)
+    }
+}
+
+impl From<F16> for f32 {
+    fn from(x: F16) -> f32 {
+        x.to_f32()
+    }
+}
+
+/// Encode a slice of f32 into raw fp16 little-endian bytes.
+pub fn encode_f32_slice(xs: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(xs.len() * 2);
+    for &x in xs {
+        out.extend_from_slice(&F16::from_f32(x).to_bits().to_le_bytes());
+    }
+    out
+}
+
+/// Decode raw fp16 little-endian bytes into f32.
+pub fn decode_to_f32(bytes: &[u8]) -> Vec<f32> {
+    assert!(bytes.len() % 2 == 0, "fp16 byte buffer must be even-sized");
+    bytes
+        .chunks_exact(2)
+        .map(|c| F16::from_bits(u16::from_le_bytes([c[0], c[1]])).to_f32())
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_values() {
+        assert_eq!(F16::from_f32(0.0).to_bits(), 0x0000);
+        assert_eq!(F16::from_f32(-0.0).to_bits(), 0x8000);
+        assert_eq!(F16::from_f32(1.0).to_bits(), 0x3C00);
+        assert_eq!(F16::from_f32(-1.0).to_bits(), 0xBC00);
+        assert_eq!(F16::from_f32(2.0).to_bits(), 0x4000);
+        assert_eq!(F16::from_f32(0.5).to_bits(), 0x3800);
+        assert_eq!(F16::from_f32(65504.0).to_bits(), 0x7BFF);
+        assert_eq!(F16::from_f32(1.0 / 3.0).to_bits(), 0x3555);
+    }
+
+    #[test]
+    fn round_trip_all_finite_bit_patterns() {
+        // every f16 -> f32 -> f16 must be the identity
+        for bits in 0u16..=0xFFFF {
+            let h = F16::from_bits(bits);
+            if h.is_nan() {
+                assert!(F16::from_f32(h.to_f32()).is_nan());
+            } else {
+                assert_eq!(F16::from_f32(h.to_f32()).to_bits(), bits, "bits {bits:#06x}");
+            }
+        }
+    }
+
+    #[test]
+    fn subnormals() {
+        // smallest positive subnormal = 2^-24
+        let tiny = F16::from_bits(0x0001);
+        assert_eq!(tiny.to_f32(), 2.0f32.powi(-24));
+        assert_eq!(F16::from_f32(2.0f32.powi(-24)).to_bits(), 0x0001);
+        // largest subnormal
+        let sub = F16::from_bits(0x03FF);
+        assert!(sub.to_f32() < F16::MIN_POSITIVE.to_f32());
+    }
+
+    #[test]
+    fn overflow_and_underflow() {
+        assert!(F16::from_f32(1e6).is_infinite());
+        assert!(F16::from_f32(-1e6).is_infinite());
+        assert_eq!(F16::from_f32(1e-10).to_bits(), 0x0000);
+        assert_eq!(F16::from_f32(-1e-10).to_bits(), 0x8000);
+        assert!(F16::from_f32(f32::NAN).is_nan());
+    }
+
+    #[test]
+    fn round_to_nearest_even() {
+        // 1 + 2^-11 is exactly halfway between 1.0 and 1+2^-10: ties to even
+        assert_eq!(F16::from_f32(1.0 + 2f32.powi(-11)).to_bits(), 0x3C00);
+        // 1 + 3*2^-11 halfway between 1+2^-10 and 1+2^-9: ties to even (up)
+        assert_eq!(F16::from_f32(1.0 + 3.0 * 2f32.powi(-11)).to_bits(), 0x3C02);
+        // just above halfway rounds up
+        assert_eq!(F16::from_f32(1.0 + 2f32.powi(-11) + 1e-6).to_bits(), 0x3C01);
+    }
+
+    #[test]
+    fn mantissa_carry_into_exponent() {
+        // 2047.5 rounds to 2048 (carry propagates cleanly)
+        let h = F16::from_f32(2047.9);
+        assert_eq!(h.to_f32(), 2048.0);
+    }
+
+    #[test]
+    fn byte_codec() {
+        let xs = [0.0f32, 1.0, -2.5, 100.0, -0.125];
+        let bytes = encode_f32_slice(&xs);
+        assert_eq!(bytes.len(), 10);
+        let back = decode_to_f32(&bytes);
+        assert_eq!(back, xs.to_vec());
+    }
+
+    #[test]
+    fn quantization_error_bounded() {
+        // relative error of encode() is <= 2^-11 for normal range
+        let mut x = 1.0f32;
+        while x < 60000.0 {
+            let q = F16::from_f32(x).to_f32();
+            assert!(((q - x) / x).abs() <= 2f32.powi(-11) + 1e-9, "x={x}");
+            x *= 1.37;
+        }
+    }
+}

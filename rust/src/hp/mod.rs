@@ -1,0 +1,7 @@
+//! Half-precision and complex-number substrates (no external crates).
+
+pub mod complex;
+pub mod f16;
+
+pub use complex::{Complex, C32, C64};
+pub use f16::F16;

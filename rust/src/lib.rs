@@ -1,0 +1,43 @@
+//! # tcFFT — half-precision matrix-formulated FFT (paper reproduction)
+//!
+//! Reproduction of *"tcFFT: Accelerating Half-Precision FFT through
+//! Tensor Cores"* (Li, Cheng, Lin 2021) as a three-layer Rust + JAX +
+//! Pallas stack.  See DESIGN.md for the architecture and the
+//! hardware-adaptation mapping (Tensor Cores -> TPU MXU, executed via
+//! interpret-mode CPU PJRT).
+//!
+//! Layer map:
+//! * [`runtime`] — PJRT execution of AOT artifacts (HLO text).
+//! * [`plan`] — cuFFT-style planner: size -> radix schedule -> artifact.
+//! * [`coordinator`] — the FFT service: router, dynamic batcher,
+//!   worker scheduler, metrics, TCP server.
+//! * [`large`] — four-step composition of big FFTs from small artifacts.
+//! * [`fft`], [`hp`] — host-side oracles and numeric substrates.
+//! * [`memsim`], [`perfmodel`] — the GPU memory/roofline models that
+//!   regenerate the paper's Table 2 and Figs 4-7.
+//!
+//! Quick start (after `make artifacts`):
+//! ```no_run
+//! use tcfft::plan::Plan;
+//! use tcfft::runtime::{PlanarBatch, Runtime};
+//!
+//! let rt = Runtime::load_default().unwrap();
+//! let plan = Plan::fft1d(&rt.registry, 4096, 4).unwrap();
+//! let x = PlanarBatch::new(vec![4, 4096]); // fill with your signal
+//! let y = plan.execute(&rt, x).unwrap();
+//! # drop(y);
+//! ```
+
+pub mod bench_harness;
+pub mod coordinator;
+pub mod error;
+pub mod fft;
+pub mod hp;
+pub mod large;
+pub mod memsim;
+pub mod perfmodel;
+pub mod plan;
+pub mod recovery;
+pub mod runtime;
+pub mod util;
+pub mod workload;

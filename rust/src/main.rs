@@ -1,0 +1,252 @@
+//! tcFFT CLI — the launcher.
+//!
+//! Subcommands:
+//!   info                         list artifacts + plans
+//!   plan   --n N | --nx X --ny Y show the kernel schedule for a size
+//!   run    --n N [--batch B]     run a random-input FFT, check vs oracle
+//!   serve  --addr HOST:PORT      TCP JSON service
+//!   bench  --n N [--iters K]     quick throughput measurement
+//!   precision                    Table 4 (relative error vs f64 oracle)
+//!   table2                       memsim Table 2
+//!   figures                      perfmodel Figs 4-7 summaries
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use tcfft::coordinator::{FftService, Server, ServiceConfig};
+use tcfft::error::relative_error;
+use tcfft::fft::mixed::fft_mixed_batch;
+use tcfft::hp::C64;
+use tcfft::plan::schedule::kernel_schedule;
+use tcfft::plan::{Direction, Plan};
+use tcfft::runtime::{PlanarBatch, Runtime};
+use tcfft::util::cli::Args;
+use tcfft::util::table::Table;
+use tcfft::workload::random_signal;
+
+fn main() {
+    let args = Args::from_env();
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(args: &Args) -> Result<()> {
+    match args.subcommand.as_deref() {
+        Some("info") => info(),
+        Some("plan") => plan_cmd(args),
+        Some("run") => run_cmd(args),
+        Some("serve") => serve_cmd(args),
+        Some("bench") => bench_cmd(args),
+        Some("precision") => precision_cmd(args),
+        Some("table2") => {
+            println!("{}", tcfft::memsim::table2::render());
+            Ok(())
+        }
+        Some("figures") => figures_cmd(),
+        other => {
+            if let Some(o) = other {
+                eprintln!("unknown subcommand '{o}'\n");
+            }
+            print!("{}", USAGE);
+            Ok(())
+        }
+    }
+}
+
+const USAGE: &str = "\
+tcfft — half-precision matrix-formulated FFT (tcFFT reproduction)
+
+USAGE: tcfft <SUBCOMMAND> [OPTIONS]
+
+  info                          list loaded artifacts
+  plan --n N | --nx X --ny Y    show the merging-kernel schedule
+  run --n N [--batch B] [--algo tc|tc_split|r2]
+                                execute on random input, verify vs f64 oracle
+  serve [--addr 127.0.0.1:7070] TCP JSON FFT service
+  bench --n N [--batch B]       quick wall-clock throughput
+  precision                     Table 4: relative error vs FFTW-f64 stand-in
+  table2                        Table 2: memsim bandwidth vs continuous size
+  figures                       Figs 4-7: modelled V100/A100 series
+";
+
+fn info() -> Result<()> {
+    let rt = Runtime::load_default()?;
+    let mut t = Table::new(&["key", "op", "algo", "shape", "batch", "dir", "stages"]);
+    for v in rt.registry.variants.values() {
+        let shape = if v.op == "fft1d" {
+            format!("{}", v.n)
+        } else {
+            format!("{}x{}", v.nx, v.ny)
+        };
+        t.row(vec![
+            v.key.clone(),
+            v.op.clone(),
+            v.algo.clone(),
+            shape,
+            v.batch.to_string(),
+            if v.inverse { "inv" } else { "fwd" }.into(),
+            v.stages.len().to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn plan_cmd(args: &Args) -> Result<()> {
+    let render = |n: usize, lane: usize| {
+        let mut t = Table::new(&["#", "kernel", "radix", "n2", "lane", "VMEM"]);
+        for (i, st) in kernel_schedule(n, lane).iter().enumerate() {
+            t.row(vec![
+                i.to_string(),
+                st.kernel.to_string(),
+                st.radix.to_string(),
+                st.n2.to_string(),
+                st.lane.to_string(),
+                tcfft::util::table::fmt_bytes(st.vmem_bytes() as f64),
+            ]);
+        }
+        t.render()
+    };
+    if let Some(nx) = args.get("nx") {
+        let nx: usize = nx.parse()?;
+        let ny = args.get_usize("ny", nx);
+        println!("2D {nx}x{ny}: pass 1 (contiguous, n={ny}):\n{}", render(ny, 1));
+        println!("pass 2 (strided, n={nx}, lane={ny}):\n{}", render(nx, ny));
+    } else {
+        let n = args.get_usize("n", 4096);
+        println!("1D n={n}:\n{}", render(n, 1));
+    }
+    Ok(())
+}
+
+fn run_cmd(args: &Args) -> Result<()> {
+    let n = args.get_usize("n", 4096);
+    let batch = args.get_usize("batch", 4);
+    let algo = args.get_str("algo", "tc");
+    let rt = Runtime::load_default()?;
+    let plan = Plan::fft1d_algo(&rt.registry, n, batch, algo, Direction::Forward)?;
+    println!("plan: {} (artifact batch {})", plan.meta.key, plan.meta.batch);
+
+    let x: Vec<_> = (0..batch)
+        .flat_map(|b| random_signal(n, 42 + b as u64))
+        .collect();
+    let input = PlanarBatch::from_complex(&x, vec![batch, n]);
+    let t0 = std::time::Instant::now();
+    let out = plan.execute(&rt, input.clone())?;
+    let dt = t0.elapsed().as_secs_f64();
+
+    // verify against the f64 mixed-radix oracle on the fp16-quantized input
+    let q = input.quantize_f16();
+    let xq: Vec<C64> = q
+        .to_complex()
+        .iter()
+        .map(|c| C64::new(c.re as f64, c.im as f64))
+        .collect();
+    let want = fft_mixed_batch(&xq, batch, n, false);
+    let got: Vec<C64> = out
+        .to_complex()
+        .iter()
+        .map(|c| C64::new(c.re as f64, c.im as f64))
+        .collect();
+    let mut worst = 0.0f64;
+    for b in 0..batch {
+        let e = relative_error(&want[b * n..(b + 1) * n], &got[b * n..(b + 1) * n]);
+        worst = worst.max(e);
+    }
+    println!(
+        "executed {batch}x{n}-point {algo} FFT in {:.2} ms  |  max mean-relative-error {:.3e}",
+        dt * 1e3,
+        worst
+    );
+    anyhow::ensure!(worst < 0.05, "relative error too high");
+    println!("OK");
+    Ok(())
+}
+
+fn serve_cmd(args: &Args) -> Result<()> {
+    let addr = args.get_str("addr", "127.0.0.1:7070");
+    let rt = Arc::new(Runtime::load_default()?);
+    let svc = Arc::new(FftService::start(rt, ServiceConfig::default()));
+    let server = Server::bind(addr, Arc::clone(&svc))?;
+    println!("tcfft service listening on {}", server.local_addr()?);
+    server.run()
+}
+
+fn bench_cmd(args: &Args) -> Result<()> {
+    let n = args.get_usize("n", 4096);
+    let batch = args.get_usize("batch", 4);
+    let algo = args.get_str("algo", "tc");
+    let rt = Runtime::load_default()?;
+    let plan = Plan::fft1d_algo(&rt.registry, n, batch, algo, Direction::Forward)?;
+    let x: Vec<_> = (0..batch).flat_map(|b| random_signal(n, b as u64)).collect();
+    let input = PlanarBatch::from_complex(&x, vec![batch, n]);
+    plan.execute(&rt, input.clone())?; // warm (compile)
+    let r = tcfft::bench_harness::bench(
+        &format!("fft1d n={n} b={batch} {algo}"),
+        || {
+            plan.execute(&rt, input.clone()).unwrap();
+        },
+        args.get_usize("iters", 50),
+    );
+    println!("{}", r.report());
+    let r2 = 6.0 * 2.0 * (n as f64).log2() * n as f64 * batch as f64;
+    println!(
+        "radix-2-equivalent throughput: {:.3} GFLOPS (CPU interpret mode)",
+        r2 / r.summary.median() / 1e9
+    );
+    Ok(())
+}
+
+fn precision_cmd(_args: &Args) -> Result<()> {
+    println!("run `cargo bench --bench table4_precision` for the full table;");
+    println!("quick version over two artifacts:\n");
+    let rt = Runtime::load_default()?;
+    let mut t = Table::new(&["artifact", "rel err", "paper band"]);
+    for key in ["fft1d_tc_n4096_b4_fwd", "fft1d_r2_n4096_b4_fwd"] {
+        if let Ok(meta) = rt.registry.get(key) {
+            let n = meta.n;
+            let b = meta.batch;
+            let x: Vec<_> = (0..b).flat_map(|i| random_signal(n, 7 + i as u64)).collect();
+            let input = PlanarBatch::from_complex(&x, vec![b, n]);
+            let (out, _) = rt.execute(key, input.clone())?;
+            let q = input.quantize_f16();
+            let xq: Vec<C64> = q
+                .to_complex()
+                .iter()
+                .map(|c| C64::new(c.re as f64, c.im as f64))
+                .collect();
+            let want = fft_mixed_batch(&xq, b, n, false);
+            let got: Vec<C64> = out
+                .to_complex()
+                .iter()
+                .map(|c| C64::new(c.re as f64, c.im as f64))
+                .collect();
+            let e = relative_error(&want, &got);
+            t.row(vec![key.into(), format!("{e:.3e}"), "~1.7e-2 (paper, half)".into()]);
+        }
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn figures_cmd() -> Result<()> {
+    use tcfft::perfmodel::{figures as f, GpuSpec};
+    let v100 = GpuSpec::v100();
+    let a100 = GpuSpec::a100();
+    println!("{}", f::render_series("Fig 4(a): 1D FFT, V100 (modelled TFLOPS)", "TFLOPS", &f::fig4_series(&v100)));
+    println!("{}", f::render_series("Fig 4(b): 1D FFT, A100 (modelled TFLOPS)", "TFLOPS", &f::fig4_series(&a100)));
+    println!("{}", f::render_series("Fig 5(a): 2D FFT, V100", "TFLOPS", &f::fig5_series(&v100)));
+    println!("{}", f::render_series("Fig 5(b): 2D FFT, A100", "TFLOPS", &f::fig5_series(&a100)));
+    println!("{}", f::render_series("Fig 6(a): 1D bandwidth, V100", "GB/s", &f::fig6_series_1d(&v100)));
+    println!("{}", f::render_series("Fig 6(b): 2D bandwidth, V100", "GB/s", &f::fig6_series_2d(&v100)));
+    println!("{}", f::render_series("Fig 7(a): 1D 131072-pt batch sweep, V100", "TFLOPS", &f::fig7a_series(&v100)));
+    println!("{}", f::render_series("Fig 7(b): 2D 512x256 batch sweep, V100", "TFLOPS", &f::fig7b_series(&v100)));
+    Ok(())
+}

@@ -1,0 +1,76 @@
+//! Table 2 regeneration: achievable global memory bandwidth vs
+//! continuous size (paper Sec 4.2), printed alongside the paper's
+//! measured V100 numbers.
+
+use super::{calibrate, MemModel, PAPER_TABLE2};
+use crate::util::table::Table;
+
+pub struct Table2Row {
+    pub cont_elems: usize,
+    pub cont_bytes: usize,
+    pub model_gbps: f64,
+    pub paper_gbps: f64,
+    pub blocks: usize,
+    pub paper_blocks: usize,
+}
+
+pub fn compute() -> (MemModel, Vec<Table2Row>) {
+    let (model, _) = calibrate(MemModel::v100());
+    let rows = PAPER_TABLE2
+        .iter()
+        .map(|&(c, gbps, blks)| Table2Row {
+            cont_elems: c,
+            cont_bytes: 4 * c,
+            model_gbps: model.achievable_bw(c) / 1e9,
+            paper_gbps: gbps,
+            blocks: model.blocks_per_sm(c),
+            paper_blocks: blks,
+        })
+        .collect();
+    (model, rows)
+}
+
+pub fn render() -> String {
+    let (model, rows) = compute();
+    let mut t = Table::new(&[
+        "Cont. Size",
+        "Cont. Bytes",
+        "model GB/s",
+        "paper GB/s",
+        "dev %",
+        "BLKs",
+        "paper BLKs",
+    ]);
+    for r in &rows {
+        let dev = 100.0 * (r.model_gbps - r.paper_gbps) / r.paper_gbps;
+        t.row(vec![
+            r.cont_elems.to_string(),
+            r.cont_bytes.to_string(),
+            format!("{:.2}", r.model_gbps),
+            format!("{:.2}", r.paper_gbps),
+            format!("{dev:+.1}"),
+            r.blocks.to_string(),
+            r.paper_blocks.to_string(),
+        ]);
+    }
+    format!(
+        "Table 2: achievable GB/s vs continuous size (V100, radix-256 merge)\n\
+         calibrated: request_rate={:.1}G/s line_oh={}B single_block_derate={}\n{}",
+        model.request_rate / 1e9,
+        model.line_oh,
+        model.single_block_derate,
+        t.render()
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn renders_all_rows() {
+        let s = super::render();
+        // every paper reference value appears in the rendered table
+        for v in ["208.09", "384.58", "553.48", "836.25", "715.83"] {
+            assert!(s.contains(v), "missing paper value {v} in:\n{s}");
+        }
+    }
+}

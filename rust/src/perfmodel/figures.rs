@@ -1,0 +1,193 @@
+//! Figure-series generators: the exact size/batch grids of the paper's
+//! Figs 4-7, rendered as tables by the bench binaries.
+
+use super::{model_fft1d, model_fft2d, Algo, GpuSpec};
+use crate::util::table::Table;
+
+/// Paper's 1D size grid: 2^8 .. 2^27.
+pub fn fig4_sizes() -> Vec<usize> {
+    (8..=27).map(|t| 1usize << t).collect()
+}
+
+/// "Batch size big enough to fully utilize" (paper TestCase): cap total
+/// work at ~2^24 points.
+pub fn big_batch(n: usize) -> usize {
+    ((1usize << 24) / n).max(1)
+}
+
+/// Paper's 2D shapes (Fig 5): six common sizes.
+pub const FIG5_SHAPES: [(usize, usize); 6] = [
+    (256, 256),
+    (256, 512),
+    (256, 1024),
+    (512, 256),
+    (512, 512),
+    (512, 1024),
+];
+
+/// One modelled figure row.
+pub struct SeriesPoint {
+    pub label: String,
+    pub tcfft: f64,
+    pub tcfft_unopt: f64,
+    pub cufft: f64,
+}
+
+impl SeriesPoint {
+    pub fn speedup(&self) -> f64 {
+        self.tcfft / self.cufft
+    }
+}
+
+/// Fig 4: 1D TFLOPS vs size for one GPU.
+pub fn fig4_series(gpu: &GpuSpec) -> Vec<SeriesPoint> {
+    fig4_sizes()
+        .into_iter()
+        .map(|n| {
+            let b = big_batch(n);
+            SeriesPoint {
+                label: format!("2^{}", n.trailing_zeros()),
+                tcfft: model_fft1d(gpu, Algo::TcFft, n, b).tflops_r2,
+                tcfft_unopt: model_fft1d(gpu, Algo::TcFftUnopt, n, b).tflops_r2,
+                cufft: model_fft1d(gpu, Algo::CuFftHalf, n, b).tflops_r2,
+            }
+        })
+        .collect()
+}
+
+/// Fig 5: 2D TFLOPS for the six shapes.
+pub fn fig5_series(gpu: &GpuSpec) -> Vec<SeriesPoint> {
+    FIG5_SHAPES
+        .iter()
+        .map(|&(nx, ny)| {
+            let b = ((1usize << 24) / (nx * ny)).max(1);
+            SeriesPoint {
+                label: format!("{nx}x{ny}"),
+                tcfft: model_fft2d(gpu, Algo::TcFft, nx, ny, b).tflops_r2,
+                tcfft_unopt: model_fft2d(gpu, Algo::TcFftUnopt, nx, ny, b).tflops_r2,
+                cufft: model_fft2d(gpu, Algo::CuFftHalf, nx, ny, b).tflops_r2,
+            }
+        })
+        .collect()
+}
+
+/// Fig 6: useful global-memory throughput (GB/s), 1D and 2D, V100.
+pub fn fig6_series_1d(gpu: &GpuSpec) -> Vec<SeriesPoint> {
+    fig4_sizes()
+        .into_iter()
+        .map(|n| {
+            let b = big_batch(n);
+            SeriesPoint {
+                label: format!("2^{}", n.trailing_zeros()),
+                tcfft: model_fft1d(gpu, Algo::TcFft, n, b).bw_useful / 1e9,
+                tcfft_unopt: model_fft1d(gpu, Algo::TcFftUnopt, n, b).bw_useful / 1e9,
+                cufft: model_fft1d(gpu, Algo::CuFftHalf, n, b).bw_useful / 1e9,
+            }
+        })
+        .collect()
+}
+
+pub fn fig6_series_2d(gpu: &GpuSpec) -> Vec<SeriesPoint> {
+    FIG5_SHAPES
+        .iter()
+        .map(|&(nx, ny)| {
+            let b = ((1usize << 24) / (nx * ny)).max(1);
+            SeriesPoint {
+                label: format!("{nx}x{ny}"),
+                tcfft: model_fft2d(gpu, Algo::TcFft, nx, ny, b).bw_useful / 1e9,
+                tcfft_unopt: model_fft2d(gpu, Algo::TcFftUnopt, nx, ny, b).bw_useful / 1e9,
+                cufft: model_fft2d(gpu, Algo::CuFftHalf, nx, ny, b).bw_useful / 1e9,
+            }
+        })
+        .collect()
+}
+
+/// Fig 7a: TFLOPS vs batch at 131072 points; Fig 7b: 2D 512x256.
+pub fn fig7a_series(gpu: &GpuSpec) -> Vec<SeriesPoint> {
+    (0..=7)
+        .map(|t| {
+            let b = 1usize << t;
+            SeriesPoint {
+                label: b.to_string(),
+                tcfft: model_fft1d(gpu, Algo::TcFft, 131072, b).tflops_r2,
+                tcfft_unopt: model_fft1d(gpu, Algo::TcFftUnopt, 131072, b).tflops_r2,
+                cufft: model_fft1d(gpu, Algo::CuFftHalf, 131072, b).tflops_r2,
+            }
+        })
+        .collect()
+}
+
+pub fn fig7b_series(gpu: &GpuSpec) -> Vec<SeriesPoint> {
+    (0..=7)
+        .map(|t| {
+            let b = 1usize << t;
+            SeriesPoint {
+                label: b.to_string(),
+                tcfft: model_fft2d(gpu, Algo::TcFft, 512, 256, b).tflops_r2,
+                tcfft_unopt: model_fft2d(gpu, Algo::TcFftUnopt, 512, 256, b).tflops_r2,
+                cufft: model_fft2d(gpu, Algo::CuFftHalf, 512, 256, b).tflops_r2,
+            }
+        })
+        .collect()
+}
+
+/// Render a series with a speedup column.
+pub fn render_series(title: &str, unit: &str, pts: &[SeriesPoint]) -> String {
+    let mut t = Table::new(&["size/batch", &format!("tcFFT {unit}"),
+        &format!("unopt-TC {unit}"), &format!("cuFFT {unit}"), "tc/cuFFT"]);
+    for p in pts {
+        t.row(vec![
+            p.label.clone(),
+            format!("{:.2}", p.tcfft),
+            format!("{:.2}", p.tcfft_unopt),
+            format!("{:.2}", p.cufft),
+            format!("{:.2}x", p.speedup()),
+        ]);
+    }
+    format!("{title}\n{}", t.render())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig4_has_19_sizes() {
+        assert_eq!(fig4_sizes().len(), 20);
+    }
+
+    #[test]
+    fn fig4_v100_trend() {
+        let pts = fig4_series(&GpuSpec::v100());
+        // small sizes bandwidth-bound: speedup ~1; largest sizes >1.5x
+        assert!(pts[0].speedup() < 1.15);
+        assert!(pts.last().unwrap().speedup() > 1.5);
+        // optimized tcFFT never loses to the un-optimized variant
+        for p in &pts {
+            assert!(p.tcfft >= p.tcfft_unopt * 0.999, "{}", p.label);
+        }
+    }
+
+    #[test]
+    fn fig5_512_rows_beat_256_rows() {
+        // paper: speedup 3.24x at nx=512 vs 1.29x at nx=256
+        let pts = fig5_series(&GpuSpec::v100());
+        let s256 = pts[0].speedup();
+        let s512 = pts[3].speedup();
+        assert!(s512 > s256, "512-row {s512:.2} vs 256-row {s256:.2}");
+    }
+
+    #[test]
+    fn fig7_monotone_in_batch() {
+        let pts = fig7a_series(&GpuSpec::v100());
+        for w in pts.windows(2) {
+            assert!(w[1].tcfft >= w[0].tcfft * 0.99);
+        }
+    }
+
+    #[test]
+    fn render_contains_speedup_column() {
+        let s = render_series("t", "TFLOPS", &fig7a_series(&GpuSpec::v100()));
+        assert!(s.contains("tc/cuFFT"));
+    }
+}

@@ -1,0 +1,213 @@
+//! cuFFT-style planner (paper Sec 3.1: `tcfftPlan1D` / `tcfftPlan2D`).
+//!
+//! A `Plan` binds a logical transform (op, size, batch, direction,
+//! algorithm) to a concrete artifact plus the radix/kernel schedule.
+//! Plan creation validates the Rust-side schedule against the manifest
+//! the Python AOT pipeline emitted, so both sides of the AOT boundary
+//! provably agree.
+
+pub mod schedule;
+
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::fft::digitrev;
+use crate::runtime::{PlanarBatch, Registry, Runtime, VariantMeta};
+
+/// Transform direction. Inverse is UNNORMALIZED (cuFFT convention).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Direction {
+    Forward,
+    Inverse,
+}
+
+/// A bound execution plan.
+#[derive(Clone, Debug)]
+pub struct Plan {
+    pub meta: VariantMeta,
+    pub direction: Direction,
+    /// merge-order radix schedule (per staged axis) for reporting
+    pub radices_1d: Vec<usize>,
+}
+
+impl Plan {
+    /// Plan a batched 1D FFT of length `n` (tcfftPlan1D analogue).
+    pub fn fft1d(registry: &Arc<Registry>, n: usize, batch: usize) -> Result<Plan> {
+        Self::fft1d_algo(registry, n, batch, "tc", Direction::Forward)
+    }
+
+    pub fn fft1d_algo(
+        registry: &Arc<Registry>,
+        n: usize,
+        batch: usize,
+        algo: &str,
+        direction: Direction,
+    ) -> Result<Plan> {
+        if !n.is_power_of_two() || n < 2 {
+            bail!(crate::error::TcFftError::BadSize(n));
+        }
+        let inverse = direction == Direction::Inverse;
+        let meta = registry
+            .find_fft1d(n, batch, algo, inverse)
+            .with_context(|| format!("no fft1d artifact n={n} algo={algo} inverse={inverse}"))?
+            .clone();
+        let plan = Plan {
+            radices_1d: digitrev::radix_schedule(n),
+            meta,
+            direction,
+        };
+        plan.validate_against_manifest()?;
+        Ok(plan)
+    }
+
+    /// Plan a batched 2D FFT (tcfftPlan2D analogue). Row-major (nx, ny).
+    pub fn fft2d(registry: &Arc<Registry>, nx: usize, ny: usize, batch: usize) -> Result<Plan> {
+        Self::fft2d_algo(registry, nx, ny, batch, "tc", Direction::Forward)
+    }
+
+    pub fn fft2d_algo(
+        registry: &Arc<Registry>,
+        nx: usize,
+        ny: usize,
+        batch: usize,
+        algo: &str,
+        direction: Direction,
+    ) -> Result<Plan> {
+        if !nx.is_power_of_two() || !ny.is_power_of_two() || nx < 2 || ny < 2 {
+            bail!(crate::error::TcFftError::BadSize(nx.max(ny)));
+        }
+        let inverse = direction == Direction::Inverse;
+        let meta = registry
+            .find_fft2d(nx, ny, batch, algo, inverse)
+            .with_context(|| {
+                format!("no fft2d artifact {nx}x{ny} algo={algo} inverse={inverse}")
+            })?
+            .clone();
+        let plan = Plan {
+            radices_1d: digitrev::radix_schedule(nx),
+            meta,
+            direction,
+        };
+        plan.validate_against_manifest()?;
+        Ok(plan)
+    }
+
+    /// Cross-check the Rust schedule against the manifest's stage list:
+    /// the product of merged radices per axis must reconstruct the size,
+    /// and kernels must be drawn from the known collection.
+    fn validate_against_manifest(&self) -> Result<()> {
+        if self.meta.algo == "r2" {
+            return Ok(()); // baseline artifacts carry a stockham schedule
+        }
+        let known = [
+            "r16_first",
+            "fused256_first",
+            "r16",
+            "merge256",
+            "small",
+        ];
+        let mut product: usize = 1;
+        for st in &self.meta.stages {
+            if !known.contains(&st.kernel.as_str()) {
+                bail!("manifest stage kernel '{}' unknown to planner", st.kernel);
+            }
+            product = product.saturating_mul(st.radix);
+        }
+        let want = if self.meta.op == "fft1d" {
+            self.meta.n
+        } else {
+            self.meta.nx * self.meta.ny
+        };
+        if product != want {
+            bail!(
+                "manifest schedule product {product} != transform size {want} for {}",
+                self.meta.key
+            );
+        }
+        Ok(())
+    }
+
+    /// Batch capacity of the bound artifact.
+    pub fn artifact_batch(&self) -> usize {
+        self.meta.batch
+    }
+
+    /// Execute on a batch; pads/splits to the artifact batch size.
+    /// Input shape: [b, n] (1D) or [b, nx, ny] (2D) with any b >= 1.
+    pub fn execute(&self, rt: &Runtime, input: PlanarBatch) -> Result<PlanarBatch> {
+        let want_tail = &self.meta.input_shape[1..];
+        anyhow::ensure!(
+            &input.shape[1..] == want_tail,
+            "input tail {:?} != plan tail {:?}",
+            &input.shape[1..],
+            want_tail
+        );
+        let cap = self.meta.batch;
+        let b = input.shape[0];
+        let mut outs = Vec::new();
+        let mut lo = 0;
+        while lo < b {
+            let hi = (lo + cap).min(b);
+            let chunk = input.slice_rows(lo, hi).pad_batch(cap);
+            let (out, _) = rt.execute(&self.meta.key, chunk)?;
+            outs.push(out.slice_rows(0, hi - lo));
+            lo = hi;
+        }
+        Ok(PlanarBatch::concat(&outs))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::registry::Registry;
+    use std::path::PathBuf;
+
+    fn mini_registry() -> Arc<Registry> {
+        let json = r#"{
+          "format": 1, "variants": [
+            {"key": "fft1d_tc_n256_b4_fwd", "file": "x.hlo.txt",
+             "op": "fft1d", "algo": "tc", "n": 256, "nx": 0, "ny": 0,
+             "batch": 4, "inverse": false, "input_shape": [4, 256],
+             "stages": [{"kernel": "fused256_first", "radix": 256,
+                         "n2": 1, "lane": 1, "flops": 1, "hbm_bytes": 1,
+                         "vmem_bytes": 1}],
+             "flops_per_seq": 1, "hbm_bytes_per_seq": 1,
+             "radix2_equiv_flops": 1}
+          ]}"#;
+        Arc::new(Registry::from_json_str(json, PathBuf::from("/tmp")).unwrap())
+    }
+
+    #[test]
+    fn plans_valid_sizes() {
+        let r = mini_registry();
+        let p = Plan::fft1d(&r, 256, 4).unwrap();
+        assert_eq!(p.meta.key, "fft1d_tc_n256_b4_fwd");
+        assert_eq!(p.radices_1d, vec![16, 16]);
+    }
+
+    #[test]
+    fn rejects_bad_sizes() {
+        let r = mini_registry();
+        assert!(Plan::fft1d(&r, 100, 1).is_err()); // not a power of two
+        assert!(Plan::fft1d(&r, 512, 1).is_err()); // no artifact
+    }
+
+    #[test]
+    fn schedule_product_validation_catches_mismatch() {
+        let json = r#"{
+          "format": 1, "variants": [
+            {"key": "fft1d_tc_n256_b4_fwd", "file": "x.hlo.txt",
+             "op": "fft1d", "algo": "tc", "n": 256, "nx": 0, "ny": 0,
+             "batch": 4, "inverse": false, "input_shape": [4, 256],
+             "stages": [{"kernel": "r16", "radix": 16, "n2": 1, "lane": 1,
+                         "flops": 1, "hbm_bytes": 1, "vmem_bytes": 1}],
+             "flops_per_seq": 1, "hbm_bytes_per_seq": 1,
+             "radix2_equiv_flops": 1}
+          ]}"#;
+        let r = Arc::new(Registry::from_json_str(json, PathBuf::from("/tmp")).unwrap());
+        // 16 != 256: planner must refuse the inconsistent manifest
+        assert!(Plan::fft1d(&r, 256, 4).is_err());
+    }
+}

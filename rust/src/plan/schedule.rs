@@ -1,0 +1,133 @@
+//! Kernel schedule computation — the Rust mirror of
+//! `python/compile/plans.py::kernel_schedule`, used for perf modelling
+//! and manifest cross-validation.
+
+/// VMEM budget a fused merge block may occupy (bytes); must match
+/// plans.py::VMEM_FUSE_BUDGET.
+pub const VMEM_FUSE_BUDGET: usize = 4 * 1024 * 1024;
+
+/// One planned kernel invocation.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PlannedStage {
+    pub kernel: &'static str,
+    pub radix: usize,
+    pub n2: usize,
+    pub lane: usize,
+}
+
+impl PlannedStage {
+    /// Per-block VMEM bytes (mirror of plans.py Stage.vmem_bytes;
+    /// constants follow the perf-pass tile sizes — see EXPERIMENTS.md).
+    pub fn vmem_bytes(&self) -> usize {
+        let bpc = 4; // planar complex fp16
+        const FIRST_STAGE_ROWS: usize = 512;
+        const R16_TILE: usize = 2048;
+        const SMALL_TILE: usize = 32768;
+        match self.kernel {
+            "r16_first" => {
+                let rows = (FIRST_STAGE_ROWS / self.lane).max(1);
+                rows * 16 * self.lane * bpc * 2
+            }
+            "fused256_first" => {
+                let rows = (FIRST_STAGE_ROWS / self.lane).max(1);
+                rows * 256 * self.lane * bpc * 2 + 256 * bpc
+            }
+            "r16" => 16 * (self.n2 * self.lane).min(R16_TILE) * bpc * 3,
+            "merge256" => {
+                let blk = 256 * self.n2 * self.lane;
+                let tw = (16 * self.n2 + 256 * self.n2) * bpc;
+                blk * bpc * 2 + tw
+            }
+            "small" => self.radix * (self.n2 * self.lane).min(SMALL_TILE) * bpc * 3,
+            other => panic!("unknown kernel {other}"),
+        }
+    }
+}
+
+/// The fused kernel schedule for one staged axis of length `n`.
+pub fn kernel_schedule(n: usize, lane: usize) -> Vec<PlannedStage> {
+    let radices = crate::fft::digitrev::radix_schedule(n);
+    let a = radices.iter().filter(|&&r| r == 16).count();
+    let small: Vec<usize> = radices.iter().copied().filter(|&r| r != 16).collect();
+    let mut stages = Vec::new();
+    let mut n2 = 1usize;
+    let mut i = 0usize;
+    if a >= 2 {
+        stages.push(PlannedStage { kernel: "fused256_first", radix: 256, n2: 1, lane });
+        n2 = 256;
+        i = 2;
+    } else if a == 1 {
+        stages.push(PlannedStage { kernel: "r16_first", radix: 16, n2: 1, lane });
+        n2 = 16;
+        i = 1;
+    }
+    while i < a {
+        let remaining = a - i;
+        let fused = PlannedStage { kernel: "merge256", radix: 256, n2, lane };
+        if remaining >= 2 && fused.vmem_bytes() <= VMEM_FUSE_BUDGET {
+            stages.push(fused);
+            n2 *= 256;
+            i += 2;
+        } else {
+            stages.push(PlannedStage { kernel: "r16", radix: 16, n2, lane });
+            n2 *= 16;
+            i += 1;
+        }
+    }
+    for r in small {
+        stages.push(PlannedStage { kernel: "small", radix: r, n2, lane });
+        n2 *= r;
+    }
+    assert_eq!(n2, n);
+    stages
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kernels(n: usize) -> Vec<&'static str> {
+        kernel_schedule(n, 1).iter().map(|s| s.kernel).collect()
+    }
+
+    #[test]
+    fn canonical_schedules() {
+        assert_eq!(kernels(16), vec!["r16_first"]);
+        assert_eq!(kernels(32), vec!["r16_first", "small"]);
+        assert_eq!(kernels(256), vec!["fused256_first"]);
+        assert_eq!(kernels(512), vec!["fused256_first", "small"]);
+        assert_eq!(kernels(4096), vec!["fused256_first", "r16"]);
+        assert_eq!(kernels(65536), vec!["fused256_first", "merge256"]);
+        assert_eq!(kernels(131072), vec!["fused256_first", "merge256", "small"]);
+    }
+
+    #[test]
+    fn vmem_budget_respected() {
+        for t in 1..=24 {
+            let n = 1usize << t;
+            for st in kernel_schedule(n, 1) {
+                assert!(
+                    st.vmem_bytes() <= VMEM_FUSE_BUDGET,
+                    "n={n} stage {st:?} exceeds VMEM budget"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn radix_product_reconstructs_n() {
+        for t in 1..=24 {
+            let n = 1usize << t;
+            let p: usize = kernel_schedule(n, 1).iter().map(|s| s.radix).product();
+            assert_eq!(p, n);
+        }
+    }
+
+    #[test]
+    fn large_lane_disables_fusion() {
+        // 2D first-axis pass with lane=512: merge256 blocks would blow
+        // VMEM, so the schedule must fall back to unfused r16 merges.
+        let sts = kernel_schedule(1 << 16, 512);
+        assert!(sts.iter().all(|s| s.kernel != "merge256"));
+    }
+}

@@ -1,0 +1,83 @@
+//! Precision recovery for half-precision FFTs — the paper's future
+//! work item #2 ("introduce some precision recovery algorithms to
+//! improve the precision of tcFFT on low precision Matrix Operation
+//! Units"), in the style of EGEMM-TC [Feng et al., PPoPP'21].
+//!
+//! Idea: fp16 quantization error of the *input* dominates the error
+//! floor for well-scaled signals.  Split each input value into two
+//! fp16 numbers, `hi = fp16(x)` and `lo = fp16(x - hi)`; since the DFT
+//! is linear, `FFT(x) = FFT(hi) + FFT(lo)`.  Running the existing fp16
+//! artifact twice and combining in f32 recovers most of the input
+//! quantization error at exactly 2x the device cost.  The pipeline's
+//! internal fp16 rounding (twiddles, intermediate stores) is NOT
+//! recovered — measured gains are therefore bounded, and reported
+//! honestly by `examples`/benches.
+
+use anyhow::Result;
+
+use crate::hp::F16;
+use crate::plan::Plan;
+use crate::runtime::{PlanarBatch, Runtime};
+
+/// Split a planar batch into (hi, lo) fp16-representable parts.
+pub fn split_hi_lo(x: &PlanarBatch) -> (PlanarBatch, PlanarBatch) {
+    let mut hi = PlanarBatch::new(x.shape.clone());
+    let mut lo = PlanarBatch::new(x.shape.clone());
+    for i in 0..x.len() {
+        let hr = F16::from_f32(x.re[i]).to_f32();
+        let hi_i = F16::from_f32(x.im[i]).to_f32();
+        hi.re[i] = hr;
+        hi.im[i] = hi_i;
+        lo.re[i] = x.re[i] - hr;
+        lo.im[i] = x.im[i] - hi_i;
+    }
+    (hi, lo)
+}
+
+/// Execute a plan with hi/lo precision recovery: two device passes,
+/// f32 combination on the host.
+pub fn execute_recovered(plan: &Plan, rt: &Runtime, x: &PlanarBatch) -> Result<PlanarBatch> {
+    let (hi, lo) = split_hi_lo(x);
+    let y_hi = plan.execute(rt, hi)?;
+    let y_lo = plan.execute(rt, lo)?;
+    let mut out = y_hi;
+    for i in 0..out.len() {
+        out.re[i] += y_lo.re[i];
+        out.im[i] += y_lo.im[i];
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hp::C32;
+
+    #[test]
+    fn split_reconstructs_exactly_for_fp16_values() {
+        let xs: Vec<C32> = (0..64).map(|i| C32::new(0.125 * i as f32, -1.0)).collect();
+        let b = PlanarBatch::from_complex(&xs, vec![1, 64]);
+        let (hi, lo) = split_hi_lo(&b);
+        for i in 0..64 {
+            assert_eq!(hi.re[i] + lo.re[i], b.re[i]);
+            // exactly representable values leave no residual
+            assert_eq!(lo.im[i], 0.0);
+        }
+    }
+
+    #[test]
+    fn split_residual_is_small() {
+        // residual is bounded by half an fp16 ulp of the value
+        let mut rng = crate::util::rng::SplitMix64::new(3);
+        for _ in 0..200 {
+            let x = rng.uniform(-1.0, 1.0) as f32;
+            let h = F16::from_f32(x).to_f32();
+            let lo = x - h;
+            assert!(lo.abs() <= 2f32.powi(-11) * x.abs().max(2f32.powi(-14)) * 1.01);
+            // and the residual encodes to fp16 with at most one more
+            // rounding step (subnormal residuals round absolutely)
+            let requant = (F16::from_f32(lo).to_f32() - lo).abs();
+            assert!(requant <= lo.abs() * 2f32.powi(-11) + 2f32.powi(-24));
+        }
+    }
+}

@@ -1,0 +1,155 @@
+//! Planar complex buffer marshalling between host f32 and the fp16
+//! PJRT literals the artifacts consume/produce.
+
+use crate::hp::{f16, C32};
+
+/// A batch of planar complex data with a logical shape.
+#[derive(Clone, Debug, Default)]
+pub struct PlanarBatch {
+    pub re: Vec<f32>,
+    pub im: Vec<f32>,
+    /// logical dims, e.g. [batch, n] or [batch, nx, ny]
+    pub shape: Vec<usize>,
+}
+
+impl PlanarBatch {
+    pub fn new(shape: Vec<usize>) -> Self {
+        let len = shape.iter().product();
+        PlanarBatch { re: vec![0.0; len], im: vec![0.0; len], shape }
+    }
+
+    pub fn from_complex(x: &[C32], shape: Vec<usize>) -> Self {
+        assert_eq!(x.len(), shape.iter().product::<usize>());
+        PlanarBatch {
+            re: x.iter().map(|c| c.re).collect(),
+            im: x.iter().map(|c| c.im).collect(),
+            shape,
+        }
+    }
+
+    pub fn to_complex(&self) -> Vec<C32> {
+        self.re
+            .iter()
+            .zip(&self.im)
+            .map(|(&r, &i)| C32::new(r, i))
+            .collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.re.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.re.is_empty()
+    }
+
+    /// fp16-encode the planar parts (the quantization the device sees).
+    pub fn encode_f16(&self) -> (Vec<u8>, Vec<u8>) {
+        (f16::encode_f32_slice(&self.re), f16::encode_f32_slice(&self.im))
+    }
+
+    /// Rebuild from raw fp16 bytes (device output).
+    pub fn decode_f16(re: &[u8], im: &[u8], shape: Vec<usize>) -> Self {
+        let re = f16::decode_to_f32(re);
+        let im = f16::decode_to_f32(im);
+        assert_eq!(re.len(), shape.iter().product::<usize>());
+        assert_eq!(re.len(), im.len());
+        PlanarBatch { re, im, shape }
+    }
+
+    /// Quantize through fp16 and back — what the host sees after a
+    /// round trip, used to compute the paper's input quantization floor.
+    pub fn quantize_f16(&self) -> Self {
+        let (re, im) = self.encode_f16();
+        Self::decode_f16(&re, &im, self.shape.clone())
+    }
+
+    /// Slice out batch rows [lo, hi) (first-dim slicing).
+    pub fn slice_rows(&self, lo: usize, hi: usize) -> Self {
+        let row: usize = self.shape[1..].iter().product();
+        let mut shape = self.shape.clone();
+        shape[0] = hi - lo;
+        PlanarBatch {
+            re: self.re[lo * row..hi * row].to_vec(),
+            im: self.im[lo * row..hi * row].to_vec(),
+            shape,
+        }
+    }
+
+    /// Concatenate along the batch dim; shapes after dim 0 must match.
+    pub fn concat(parts: &[PlanarBatch]) -> Self {
+        assert!(!parts.is_empty());
+        let tail = &parts[0].shape[1..];
+        let mut re = Vec::new();
+        let mut im = Vec::new();
+        let mut b = 0;
+        for p in parts {
+            assert_eq!(&p.shape[1..], tail, "ragged concat");
+            b += p.shape[0];
+            re.extend_from_slice(&p.re);
+            im.extend_from_slice(&p.im);
+        }
+        let mut shape = vec![b];
+        shape.extend_from_slice(tail);
+        PlanarBatch { re, im, shape }
+    }
+
+    /// Zero-pad the batch dim up to `batch` rows.
+    pub fn pad_batch(&self, batch: usize) -> Self {
+        assert!(batch >= self.shape[0]);
+        let row: usize = self.shape[1..].iter().product();
+        let mut out = self.clone();
+        out.shape[0] = batch;
+        out.re.resize(batch * row, 0.0);
+        out.im.resize(batch * row, 0.0);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn complex_round_trip() {
+        let xs: Vec<C32> = (0..6).map(|i| C32::new(i as f32 * 0.25, -1.0)).collect();
+        let b = PlanarBatch::from_complex(&xs, vec![2, 3]);
+        assert_eq!(b.to_complex(), xs);
+    }
+
+    #[test]
+    fn f16_quantization_is_idempotent() {
+        let xs: Vec<C32> = (0..16).map(|i| C32::new(0.1 * i as f32, 0.7)).collect();
+        let b = PlanarBatch::from_complex(&xs, vec![1, 16]);
+        let q1 = b.quantize_f16();
+        let q2 = q1.quantize_f16();
+        assert_eq!(q1.re, q2.re);
+        assert_eq!(q1.im, q2.im);
+    }
+
+    #[test]
+    fn slicing_and_concat() {
+        let b = PlanarBatch::from_complex(
+            &(0..12).map(|i| C32::new(i as f32, 0.0)).collect::<Vec<_>>(),
+            vec![4, 3],
+        );
+        let lo = b.slice_rows(0, 2);
+        let hi = b.slice_rows(2, 4);
+        assert_eq!(lo.shape, vec![2, 3]);
+        let joined = PlanarBatch::concat(&[lo, hi]);
+        assert_eq!(joined.re, b.re);
+        assert_eq!(joined.shape, b.shape);
+    }
+
+    #[test]
+    fn padding() {
+        let b = PlanarBatch::from_complex(
+            &(0..4).map(|i| C32::new(i as f32, 1.0)).collect::<Vec<_>>(),
+            vec![1, 4],
+        );
+        let p = b.pad_batch(3);
+        assert_eq!(p.shape, vec![3, 4]);
+        assert_eq!(p.re[4..], [0.0; 8]);
+        assert_eq!(p.slice_rows(0, 1).re, b.re);
+    }
+}

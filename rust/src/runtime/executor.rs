@@ -1,0 +1,205 @@
+//! PJRT execution engine: owns the CPU client and the
+//! compiled-executable cache; executions run directly on the calling
+//! thread (PJRT's CPU client is internally synchronized and supports
+//! concurrent `Execute`), compilation is serialized per artifact.
+//!
+//! The request path is: HLO text loaded once per artifact
+//! (`HloModuleProto::from_text_file` — text, not serialized proto, see
+//! DESIGN.md) -> compiled once -> executed many times with planar fp16
+//! literals.  Python is never involved.
+//!
+//! ## Why not an actor thread?
+//! The first implementation funneled every call through a dedicated
+//! thread owning the (!Send) xla wrapper types.  That cost ~175 us of
+//! channel/wakeup latency per batch — 108% overhead over the raw path
+//! at service load (EXPERIMENTS.md SPerf iteration 2).  The xla crate
+//! types are raw-pointer wrappers without Send/Sync markers, but the
+//! underlying PJRT C API objects are thread-safe: `PJRT_Client` and
+//! `PJRT_LoadedExecutable` are documented as usable from multiple
+//! threads concurrently (the CPU client dispatches onto its own
+//! Eigen thread pool).  We therefore wrap them in a struct that
+//! asserts Send + Sync, serialize *compilation* behind a Mutex, and
+//! let executions run concurrently from worker threads.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::{Mutex, RwLock};
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use super::buffers::PlanarBatch;
+use crate::hp::f16;
+
+/// Execution statistics for one call.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ExecStats {
+    /// device wall-clock (compile excluded)
+    pub exec_seconds: f64,
+    /// marshalling (f32<->f16 encode/decode + literal construction)
+    pub marshal_seconds: f64,
+    /// true if this call compiled the executable (cold start)
+    pub compiled: bool,
+}
+
+struct ClientBox(xla::PjRtClient);
+// SAFETY: PJRT_Client is thread-safe per the PJRT C API contract; the
+// Rust wrapper only forwards pointers. Compile and execute may be
+// invoked from any thread.
+unsafe impl Send for ClientBox {}
+unsafe impl Sync for ClientBox {}
+
+struct ExeBox(xla::PjRtLoadedExecutable);
+// SAFETY: PJRT_LoadedExecutable::Execute is thread-safe; see above.
+unsafe impl Send for ExeBox {}
+unsafe impl Sync for ExeBox {}
+
+/// The execution engine (shared via `Arc` by `Runtime`).
+pub struct Executor {
+    client: ClientBox,
+    /// compiled executables; RwLock so the hot path is a shared read
+    cache: RwLock<HashMap<String, &'static ExeBox>>,
+    /// serializes compilation (PJRT compile is expensive; no need for
+    /// concurrent compiles of the same artifact)
+    compile_lock: Mutex<()>,
+}
+
+impl Executor {
+    /// Initialize the PJRT CPU client.
+    pub fn spawn() -> Result<Executor> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT CPU init: {e}"))?;
+        Ok(Executor {
+            client: ClientBox(client),
+            cache: RwLock::new(HashMap::new()),
+            compile_lock: Mutex::new(()),
+        })
+    }
+
+    /// Backwards-compatible alias used by callers holding a `Runtime`.
+    pub fn handle(&self) -> &Executor {
+        self
+    }
+
+    fn lookup(&self, key: &str) -> Option<&'static ExeBox> {
+        self.cache.read().unwrap().get(key).copied()
+    }
+
+    /// Compile (once) and cache; returns true if this call compiled.
+    ///
+    /// Executables are leaked intentionally: they live for the process
+    /// lifetime (a handful of artifacts), which lets the hot path hand
+    /// out `&'static` references without reference-count traffic.
+    fn ensure_compiled(&self, key: &str, hlo_path: &Path) -> Result<bool> {
+        if self.lookup(key).is_some() {
+            return Ok(false);
+        }
+        let _guard = self.compile_lock.lock().unwrap();
+        if self.lookup(key).is_some() {
+            return Ok(false); // raced: another thread compiled it
+        }
+        let path = hlo_path
+            .to_str()
+            .ok_or_else(|| anyhow!("non-utf8 artifact path"))?;
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(|e| anyhow!("loading HLO text {path}: {e}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .0
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {key}: {e}"))?;
+        let boxed: &'static ExeBox = Box::leak(Box::new(ExeBox(exe)));
+        self.cache.write().unwrap().insert(key.to_string(), boxed);
+        Ok(true)
+    }
+
+    /// Pre-compile an artifact; returns compile seconds (0 if cached).
+    pub fn warm(&self, key: &str, hlo_path: &Path) -> Result<f64> {
+        let t0 = Instant::now();
+        let fresh = self.ensure_compiled(key, hlo_path)?;
+        Ok(if fresh { t0.elapsed().as_secs_f64() } else { 0.0 })
+    }
+
+    /// Execute: quantizes input to fp16, runs the artifact, returns
+    /// planar f32 output of the same shape. Thread-safe; concurrent
+    /// calls execute in parallel on the PJRT CPU thread pool.
+    pub fn execute(
+        &self,
+        key: &str,
+        hlo_path: &Path,
+        input: PlanarBatch,
+    ) -> Result<(PlanarBatch, ExecStats)> {
+        let mut stats = ExecStats::default();
+        stats.compiled = self.ensure_compiled(key, hlo_path)?;
+        let exe = self.lookup(key).expect("just compiled");
+
+        // marshal planar f32 -> fp16 literals
+        let tm = Instant::now();
+        let (re_bytes, im_bytes) = input.encode_f16();
+        let dims = &input.shape;
+        let lit_re = xla::Literal::create_from_shape_and_untyped_data(
+            xla::ElementType::F16,
+            dims,
+            &re_bytes,
+        )
+        .map_err(|e| anyhow!("building re literal: {e}"))?;
+        let lit_im = xla::Literal::create_from_shape_and_untyped_data(
+            xla::ElementType::F16,
+            dims,
+            &im_bytes,
+        )
+        .map_err(|e| anyhow!("building im literal: {e}"))?;
+        stats.marshal_seconds += tm.elapsed().as_secs_f64();
+
+        // execute
+        let te = Instant::now();
+        let result = exe
+            .0
+            .execute::<xla::Literal>(&[lit_re, lit_im])
+            .map_err(|e| anyhow!("executing {key}: {e}"))?;
+        let out_lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching result: {e}"))?;
+        stats.exec_seconds = te.elapsed().as_secs_f64();
+
+        // unmarshal: jax lowered with return_tuple=True -> (re, im)
+        let tm = Instant::now();
+        let (out_re, out_im) = out_lit
+            .to_tuple2()
+            .map_err(|e| anyhow!("result is not a 2-tuple: {e}"))?;
+        let re = literal_f16_to_f32(&out_re)?;
+        let im = literal_f16_to_f32(&out_im)?;
+        stats.marshal_seconds += tm.elapsed().as_secs_f64();
+
+        Ok((PlanarBatch { re, im, shape: input.shape }, stats))
+    }
+}
+
+/// Alias kept for API continuity with the actor-based first version.
+pub type ExecutorHandle<'a> = &'a Executor;
+
+fn literal_f16_to_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    // Fast path: copy raw fp16 bytes and decode ourselves; fall back to
+    // XLA-side conversion if the element type is unexpected.
+    match lit.ty() {
+        Ok(xla::ElementType::F16) => {
+            let n = lit.element_count();
+            let mut raw = vec![0u8; n * 2];
+            match lit.copy_raw_to::<u8>(&mut raw) {
+                Ok(()) => Ok(f16::decode_to_f32(&raw)),
+                Err(_) => {
+                    let conv = lit
+                        .convert(xla::PrimitiveType::F32)
+                        .map_err(|e| anyhow!("f16->f32 convert: {e}"))?;
+                    conv.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e}"))
+                }
+            }
+        }
+        _ => {
+            let conv = lit
+                .convert(xla::PrimitiveType::F32)
+                .map_err(|e| anyhow!("convert: {e}"))?;
+            conv.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e}"))
+        }
+    }
+}

@@ -1,0 +1,60 @@
+//! Runtime layer: PJRT execution of AOT artifacts.
+//!
+//! `Runtime` = artifact `Registry` (manifest metadata) + `Executor`
+//! engine (PJRT client + executable cache; thread-safe, compile-once).
+//! This is the only module that touches the `xla` crate on the request
+//! path; everything above it works with `PlanarBatch` host buffers.
+
+pub mod buffers;
+pub mod executor;
+pub mod registry;
+
+pub use buffers::PlanarBatch;
+pub use executor::{ExecStats, Executor};
+pub use registry::{Registry, StageMeta, VariantMeta};
+
+use anyhow::Result;
+use std::path::Path;
+use std::sync::Arc;
+
+/// Self-contained runtime: load artifacts, execute by key.
+pub struct Runtime {
+    pub registry: Arc<Registry>,
+    executor: Executor,
+}
+
+impl Runtime {
+    pub fn load(artifact_dir: impl AsRef<Path>) -> Result<Runtime> {
+        let registry = Arc::new(Registry::load(artifact_dir)?);
+        let executor = Executor::spawn()?;
+        Ok(Runtime { registry, executor })
+    }
+
+    /// Default artifact directory: $TCFFT_ARTIFACTS or ./artifacts.
+    pub fn load_default() -> Result<Runtime> {
+        let dir = std::env::var("TCFFT_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+        Self::load(dir)
+    }
+
+    pub fn handle(&self) -> &Executor {
+        self.executor.handle()
+    }
+
+    /// Execute an artifact by key on a planar batch (blocking).
+    pub fn execute(&self, key: &str, input: PlanarBatch) -> Result<(PlanarBatch, ExecStats)> {
+        let meta = self.registry.get(key)?;
+        anyhow::ensure!(
+            input.shape == meta.input_shape,
+            "input shape {:?} != artifact shape {:?} for {key}",
+            input.shape,
+            meta.input_shape
+        );
+        self.executor.handle().execute(key, &meta.file, input)
+    }
+
+    /// Pre-compile an artifact; returns compile seconds (0 if cached).
+    pub fn warm(&self, key: &str) -> Result<f64> {
+        let meta = self.registry.get(key)?;
+        self.executor.handle().warm(key, &meta.file)
+    }
+}

@@ -1,0 +1,259 @@
+//! Artifact registry: parses `artifacts/manifest.json` (written by
+//! `python/compile/aot.py`) into typed variant metadata, and resolves
+//! lookups from logical FFT descriptions to artifact keys.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// One merging-kernel invocation inside an artifact (cost metadata).
+#[derive(Clone, Debug)]
+pub struct StageMeta {
+    pub kernel: String,
+    pub radix: usize,
+    pub n2: usize,
+    pub lane: usize,
+    pub flops: f64,
+    pub hbm_bytes: f64,
+    pub vmem_bytes: f64,
+}
+
+/// One AOT-compiled artifact.
+#[derive(Clone, Debug)]
+pub struct VariantMeta {
+    pub key: String,
+    pub file: PathBuf,
+    pub op: String,   // "fft1d" | "fft2d"
+    pub algo: String, // "tc" | "tc_split" | "r2"
+    pub n: usize,
+    pub nx: usize,
+    pub ny: usize,
+    pub batch: usize,
+    pub inverse: bool,
+    pub input_shape: Vec<usize>,
+    pub stages: Vec<StageMeta>,
+    pub flops_per_seq: f64,
+    pub hbm_bytes_per_seq: f64,
+    pub radix2_equiv_flops: f64,
+}
+
+impl VariantMeta {
+    /// Total complex elements per batch element.
+    pub fn seq_len(&self) -> usize {
+        if self.op == "fft1d" {
+            self.n
+        } else {
+            self.nx * self.ny
+        }
+    }
+
+    /// Total input elements (batch * sequence).
+    pub fn total_elems(&self) -> usize {
+        self.input_shape.iter().product()
+    }
+}
+
+/// The parsed manifest with lookup indices.
+pub struct Registry {
+    pub dir: PathBuf,
+    pub variants: BTreeMap<String, VariantMeta>,
+}
+
+fn req_usize(j: &Json, k: &str) -> Result<usize> {
+    j.get(k)
+        .and_then(|v| v.as_usize())
+        .ok_or_else(|| anyhow!("manifest: missing/invalid usize field '{k}'"))
+}
+
+fn req_f64(j: &Json, k: &str) -> Result<f64> {
+    j.get(k)
+        .and_then(|v| v.as_f64())
+        .ok_or_else(|| anyhow!("manifest: missing/invalid f64 field '{k}'"))
+}
+
+fn req_str(j: &Json, k: &str) -> Result<String> {
+    Ok(j.get(k)
+        .and_then(|v| v.as_str())
+        .ok_or_else(|| anyhow!("manifest: missing/invalid str field '{k}'"))?
+        .to_string())
+}
+
+impl Registry {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Registry> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        Self::from_json_str(&text, dir)
+    }
+
+    pub fn from_json_str(text: &str, dir: PathBuf) -> Result<Registry> {
+        let root = Json::parse(text).map_err(|e| anyhow!("manifest parse error: {e}"))?;
+        let vars = root
+            .get("variants")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| anyhow!("manifest: no 'variants' array"))?;
+        let mut variants = BTreeMap::new();
+        for v in vars {
+            let stages = v
+                .get("stages")
+                .and_then(|s| s.as_arr())
+                .unwrap_or(&[])
+                .iter()
+                .map(|s| {
+                    Ok(StageMeta {
+                        kernel: req_str(s, "kernel")?,
+                        radix: req_usize(s, "radix")?,
+                        n2: req_usize(s, "n2")?,
+                        lane: req_usize(s, "lane")?,
+                        flops: req_f64(s, "flops")?,
+                        hbm_bytes: req_f64(s, "hbm_bytes")?,
+                        vmem_bytes: req_f64(s, "vmem_bytes")?,
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            let meta = VariantMeta {
+                key: req_str(v, "key")?,
+                file: dir.join(req_str(v, "file")?),
+                op: req_str(v, "op")?,
+                algo: req_str(v, "algo")?,
+                n: req_usize(v, "n")?,
+                nx: req_usize(v, "nx")?,
+                ny: req_usize(v, "ny")?,
+                batch: req_usize(v, "batch")?,
+                inverse: v.get("inverse").and_then(|b| b.as_bool()).unwrap_or(false),
+                input_shape: v
+                    .get("input_shape")
+                    .and_then(|a| a.as_arr())
+                    .ok_or_else(|| anyhow!("manifest: missing input_shape"))?
+                    .iter()
+                    .map(|x| x.as_usize().ok_or_else(|| anyhow!("bad shape entry")))
+                    .collect::<Result<Vec<_>>>()?,
+                stages,
+                flops_per_seq: req_f64(v, "flops_per_seq")?,
+                hbm_bytes_per_seq: req_f64(v, "hbm_bytes_per_seq")?,
+                radix2_equiv_flops: req_f64(v, "radix2_equiv_flops")?,
+            };
+            variants.insert(meta.key.clone(), meta);
+        }
+        if variants.is_empty() {
+            bail!("manifest has no variants");
+        }
+        Ok(Registry { dir, variants })
+    }
+
+    pub fn get(&self, key: &str) -> Result<&VariantMeta> {
+        self.variants
+            .get(key)
+            .ok_or_else(|| anyhow!("no artifact '{key}' (have {})", self.variants.len()))
+    }
+
+    /// All variants matching a predicate.
+    pub fn filter<'a>(
+        &'a self,
+        pred: impl Fn(&VariantMeta) -> bool + 'a,
+    ) -> impl Iterator<Item = &'a VariantMeta> {
+        self.variants.values().filter(move |v| pred(v))
+    }
+
+    /// Find a 1D variant: exact size/algo/direction; smallest batch >= wanted,
+    /// else the largest available (the batcher splits oversize requests).
+    pub fn find_fft1d(
+        &self,
+        n: usize,
+        batch: usize,
+        algo: &str,
+        inverse: bool,
+    ) -> Option<&VariantMeta> {
+        let mut candidates: Vec<&VariantMeta> = self
+            .variants
+            .values()
+            .filter(|v| v.op == "fft1d" && v.n == n && v.algo == algo && v.inverse == inverse)
+            .collect();
+        candidates.sort_by_key(|v| v.batch);
+        candidates
+            .iter()
+            .find(|v| v.batch >= batch)
+            .copied()
+            .or_else(|| candidates.last().copied())
+    }
+
+    pub fn find_fft2d(
+        &self,
+        nx: usize,
+        ny: usize,
+        batch: usize,
+        algo: &str,
+        inverse: bool,
+    ) -> Option<&VariantMeta> {
+        let mut candidates: Vec<&VariantMeta> = self
+            .variants
+            .values()
+            .filter(|v| {
+                v.op == "fft2d" && v.nx == nx && v.ny == ny && v.algo == algo && v.inverse == inverse
+            })
+            .collect();
+        candidates.sort_by_key(|v| v.batch);
+        candidates
+            .iter()
+            .find(|v| v.batch >= batch)
+            .copied()
+            .or_else(|| candidates.last().copied())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MINI: &str = r#"{
+      "format": 1, "dtype": "f16", "variants": [
+        {"key": "fft1d_tc_n256_b4_fwd", "file": "a.hlo.txt", "op": "fft1d",
+         "algo": "tc", "n": 256, "nx": 0, "ny": 0, "batch": 4,
+         "inverse": false, "input_shape": [4, 256],
+         "stages": [{"kernel": "fused256_first", "radix": 256, "n2": 1,
+                     "lane": 1, "flops": 100, "hbm_bytes": 2048,
+                     "vmem_bytes": 4096}],
+         "flops_per_seq": 100, "hbm_bytes_per_seq": 2048,
+         "radix2_equiv_flops": 24576},
+        {"key": "fft1d_tc_n256_b16_fwd", "file": "b.hlo.txt", "op": "fft1d",
+         "algo": "tc", "n": 256, "nx": 0, "ny": 0, "batch": 16,
+         "inverse": false, "input_shape": [16, 256], "stages": [],
+         "flops_per_seq": 100, "hbm_bytes_per_seq": 2048,
+         "radix2_equiv_flops": 98304}
+      ]}"#;
+
+    #[test]
+    fn parses_and_indexes() {
+        let r = Registry::from_json_str(MINI, PathBuf::from("/tmp")).unwrap();
+        assert_eq!(r.variants.len(), 2);
+        let v = r.get("fft1d_tc_n256_b4_fwd").unwrap();
+        assert_eq!(v.batch, 4);
+        assert_eq!(v.stages.len(), 1);
+        assert_eq!(v.stages[0].kernel, "fused256_first");
+        assert_eq!(v.seq_len(), 256);
+        assert_eq!(v.total_elems(), 1024);
+    }
+
+    #[test]
+    fn batch_selection_prefers_smallest_sufficient() {
+        let r = Registry::from_json_str(MINI, PathBuf::from("/tmp")).unwrap();
+        assert_eq!(r.find_fft1d(256, 2, "tc", false).unwrap().batch, 4);
+        assert_eq!(r.find_fft1d(256, 4, "tc", false).unwrap().batch, 4);
+        assert_eq!(r.find_fft1d(256, 9, "tc", false).unwrap().batch, 16);
+        // oversize: fall back to largest (caller splits)
+        assert_eq!(r.find_fft1d(256, 100, "tc", false).unwrap().batch, 16);
+        assert!(r.find_fft1d(512, 1, "tc", false).is_none());
+    }
+
+    #[test]
+    fn rejects_bad_manifest() {
+        assert!(Registry::from_json_str("{}", PathBuf::from("/tmp")).is_err());
+        assert!(Registry::from_json_str("{\"variants\": []}", PathBuf::from("/tmp")).is_err());
+        assert!(Registry::from_json_str("not json", PathBuf::from("/tmp")).is_err());
+    }
+}

@@ -1,0 +1,9 @@
+//! From-scratch utility substrates (the offline toolchain has no clap,
+//! serde, rand, criterion or tokio — see DESIGN.md system inventory #14).
+
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod table;
+pub mod threadpool;

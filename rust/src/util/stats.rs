@@ -1,0 +1,140 @@
+//! Summary statistics and timing helpers for the bench harness and the
+//! service metrics (no criterion offline — we roll our own).
+
+/// Online summary of a stream of f64 samples.
+#[derive(Clone, Debug, Default)]
+pub struct Summary {
+    samples: Vec<f64>,
+}
+
+impl Summary {
+    pub fn new() -> Self {
+        Summary { samples: Vec::new() }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        self.samples.push(x);
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    pub fn min(&self) -> f64 {
+        self.samples.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.samples.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    pub fn std(&self) -> f64 {
+        let n = self.samples.len();
+        if n < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        (self.samples.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (n - 1) as f64).sqrt()
+    }
+
+    /// Percentile by linear interpolation (q in [0, 1]).
+    pub fn percentile(&self, q: f64) -> f64 {
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
+        let mut s = self.samples.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let pos = q.clamp(0.0, 1.0) * (s.len() - 1) as f64;
+        let lo = pos.floor() as usize;
+        let hi = pos.ceil() as usize;
+        if lo == hi {
+            s[lo]
+        } else {
+            s[lo] + (pos - lo as f64) * (s[hi] - s[lo])
+        }
+    }
+
+    /// Raw samples (for merging summaries).
+    pub fn raw(&self) -> &[f64] {
+        &self.samples
+    }
+
+    pub fn median(&self) -> f64 {
+        self.percentile(0.5)
+    }
+
+    pub fn p99(&self) -> f64 {
+        self.percentile(0.99)
+    }
+}
+
+/// Measure a closure `iters` times after `warmup` runs; returns seconds
+/// per iteration samples.
+pub fn time_iters<F: FnMut()>(mut f: F, warmup: usize, iters: usize) -> Summary {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut s = Summary::new();
+    for _ in 0..iters {
+        let t0 = std::time::Instant::now();
+        f();
+        s.add(t0.elapsed().as_secs_f64());
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn moments() {
+        let mut s = Summary::new();
+        for x in [1.0, 2.0, 3.0, 4.0] {
+            s.add(x);
+        }
+        assert_eq!(s.mean(), 2.5);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 4.0);
+        assert!((s.std() - (5.0f64 / 3.0).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentiles() {
+        let mut s = Summary::new();
+        for x in 0..100 {
+            s.add(x as f64);
+        }
+        assert_eq!(s.median(), 49.5);
+        assert!((s.percentile(0.99) - 98.01).abs() < 1e-9);
+        assert_eq!(s.percentile(0.0), 0.0);
+        assert_eq!(s.percentile(1.0), 99.0);
+    }
+
+    #[test]
+    fn empty_is_nan() {
+        let s = Summary::new();
+        assert!(s.mean().is_nan());
+        assert!(s.median().is_nan());
+    }
+
+    #[test]
+    fn timing_runs() {
+        let mut n = 0u64;
+        let s = time_iters(|| n += 1, 2, 5);
+        assert_eq!(s.len(), 5);
+        assert_eq!(n, 7);
+        assert!(s.min() >= 0.0);
+    }
+}

@@ -1,0 +1,124 @@
+//! ASCII table rendering for bench/report output — prints the paper's
+//! tables and figure series as aligned monospace rows.
+
+/// A simple right-aligned table with a header row.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut width = vec![0usize; ncol];
+        for (i, h) in self.headers.iter().enumerate() {
+            width[i] = h.len();
+        }
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                width[i] = width[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let sep = |out: &mut String| {
+            for w in &width {
+                out.push('+');
+                out.push_str(&"-".repeat(w + 2));
+            }
+            out.push_str("+\n");
+        };
+        sep(&mut out);
+        out.push('|');
+        for (h, w) in self.headers.iter().zip(&width) {
+            out.push_str(&format!(" {h:>w$} |", w = w));
+        }
+        out.push('\n');
+        sep(&mut out);
+        for row in &self.rows {
+            out.push('|');
+            for (c, w) in row.iter().zip(&width) {
+                out.push_str(&format!(" {c:>w$} |", w = w));
+            }
+            out.push('\n');
+        }
+        sep(&mut out);
+        out
+    }
+}
+
+/// Format helpers shared by benches.
+pub fn fmt_si(x: f64) -> String {
+    let ax = x.abs();
+    if ax >= 1e12 {
+        format!("{:.2}T", x / 1e12)
+    } else if ax >= 1e9 {
+        format!("{:.2}G", x / 1e9)
+    } else if ax >= 1e6 {
+        format!("{:.2}M", x / 1e6)
+    } else if ax >= 1e3 {
+        format!("{:.2}K", x / 1e3)
+    } else {
+        format!("{x:.2}")
+    }
+}
+
+pub fn fmt_bytes(x: f64) -> String {
+    if x >= 1024.0 * 1024.0 * 1024.0 {
+        format!("{:.2} GiB", x / (1024.0 * 1024.0 * 1024.0))
+    } else if x >= 1024.0 * 1024.0 {
+        format!("{:.2} MiB", x / (1024.0 * 1024.0))
+    } else if x >= 1024.0 {
+        format!("{:.2} KiB", x / 1024.0)
+    } else {
+        format!("{x:.0} B")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new(&["size", "GB/s"]);
+        t.row(vec!["4".into(), "208.09".into()]);
+        t.row(vec!["64".into(), "715.83".into()]);
+        let s = t.render();
+        assert!(s.contains("| size |   GB/s |"));
+        assert!(s.contains("|    4 | 208.09 |"));
+        assert_eq!(s.lines().count(), 6); // 3 separators + header + 2 rows
+    }
+
+    #[test]
+    #[should_panic]
+    fn arity_checked() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(vec!["1".into()]);
+    }
+
+    #[test]
+    fn si_format() {
+        assert_eq!(fmt_si(1.25e12), "1.25T");
+        assert_eq!(fmt_si(3.0e9), "3.00G");
+        assert_eq!(fmt_si(42.0), "42.00");
+    }
+
+    #[test]
+    fn bytes_format() {
+        assert_eq!(fmt_bytes(2048.0), "2.00 KiB");
+        assert_eq!(fmt_bytes(3.0 * 1024.0 * 1024.0), "3.00 MiB");
+    }
+}

@@ -1,0 +1,139 @@
+//! Workload generators for the evaluation and the examples.
+
+use crate::hp::{C32, C64};
+use crate::util::rng::SplitMix64;
+
+/// Paper TestCase: inputs uniform in [-1, 1) (both components).
+pub fn random_signal(n: usize, seed: u64) -> Vec<C32> {
+    let mut rng = SplitMix64::new(seed);
+    (0..n)
+        .map(|_| C32::new(rng.uniform(-1.0, 1.0) as f32, rng.uniform(-1.0, 1.0) as f32))
+        .collect()
+}
+
+pub fn random_signal_f64(n: usize, seed: u64) -> Vec<C64> {
+    random_signal(n, seed)
+        .into_iter()
+        .map(|c| C64::new(c.re as f64, c.im as f64))
+        .collect()
+}
+
+/// A gravitational-wave-like chirp (pyCBC motivation, paper Sec 1):
+/// instantaneous frequency sweeps f0 -> f1 over n samples, with an
+/// amplitude envelope that rises toward merger then rings down.
+pub fn chirp(n: usize, f0: f64, f1: f64, merger_frac: f64) -> Vec<C32> {
+    let mut out = Vec::with_capacity(n);
+    let merger = (n as f64 * merger_frac) as usize;
+    for i in 0..n {
+        let t = i as f64 / n as f64;
+        // quadratic frequency sweep
+        let f = f0 + (f1 - f0) * t * t;
+        let phase = 2.0 * std::f64::consts::PI * f * i as f64 / n as f64;
+        let amp = if i < merger {
+            0.1 + 0.9 * (i as f64 / merger as f64).powi(2)
+        } else {
+            (-(5.0 * (i - merger) as f64 / (n - merger).max(1) as f64)).exp()
+        };
+        out.push(C32::new((amp * phase.cos()) as f32, (amp * phase.sin()) as f32));
+    }
+    out
+}
+
+/// Additive white noise.
+pub fn add_noise(x: &mut [C32], sigma: f64, seed: u64) {
+    let mut rng = SplitMix64::new(seed);
+    for v in x {
+        v.re += (sigma * rng.normal()) as f32;
+        v.im += (sigma * rng.normal()) as f32;
+    }
+}
+
+/// A synthetic "CT-slice-like" test image (medical-imaging motivation):
+/// smooth background + a few ellipses, values in [0, 1]. Row-major nx x ny.
+pub fn phantom_image(nx: usize, ny: usize, seed: u64) -> Vec<f32> {
+    let mut rng = SplitMix64::new(seed);
+    let mut img = vec![0.0f32; nx * ny];
+    // smooth background gradient
+    for r in 0..nx {
+        for c in 0..ny {
+            img[r * ny + c] = 0.1 + 0.05 * ((r as f32 / nx as f32) + (c as f32 / ny as f32));
+        }
+    }
+    // random ellipses
+    for _ in 0..6 {
+        let cx = rng.uniform(0.2, 0.8) * nx as f64;
+        let cy = rng.uniform(0.2, 0.8) * ny as f64;
+        let ax = rng.uniform(0.05, 0.25) * nx as f64;
+        let ay = rng.uniform(0.05, 0.25) * ny as f64;
+        let val = rng.uniform(0.2, 0.8) as f32;
+        for r in 0..nx {
+            for c in 0..ny {
+                let dx = (r as f64 - cx) / ax;
+                let dy = (c as f64 - cy) / ay;
+                if dx * dx + dy * dy <= 1.0 {
+                    img[r * ny + c] = (img[r * ny + c] + val).min(1.0);
+                }
+            }
+        }
+    }
+    img
+}
+
+/// Poisson arrival times (seconds) with the given rate over a horizon.
+pub fn poisson_arrivals(rate_hz: f64, horizon_s: f64, seed: u64) -> Vec<f64> {
+    let mut rng = SplitMix64::new(seed);
+    let mut t = 0.0;
+    let mut out = Vec::new();
+    loop {
+        t += rng.exp(rate_hz);
+        if t >= horizon_s {
+            break;
+        }
+        out.push(t);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn random_signal_in_range() {
+        for c in random_signal(1024, 7) {
+            assert!((-1.0..1.0).contains(&c.re));
+            assert!((-1.0..1.0).contains(&c.im));
+        }
+    }
+
+    #[test]
+    fn chirp_energy_concentrated_after_fft() {
+        // a chirp sweeping the lower quarter of the band must put most
+        // energy in the lower half of the spectrum
+        let x = chirp(1024, 10.0, 120.0, 0.8);
+        let xd: Vec<crate::hp::C64> = x
+            .iter()
+            .map(|c| crate::hp::C64::new(c.re as f64, c.im as f64))
+            .collect();
+        let y = crate::fft::radix2::fft_vec(&xd, false);
+        let lower: f64 = y[..512].iter().map(|c| c.norm_sqr()).sum();
+        let upper: f64 = y[512..].iter().map(|c| c.norm_sqr()).sum();
+        assert!(lower > 5.0 * upper, "lower {lower:.1} upper {upper:.1}");
+    }
+
+    #[test]
+    fn phantom_in_unit_range() {
+        let img = phantom_image(64, 64, 3);
+        assert!(img.iter().all(|&v| (0.0..=1.0).contains(&v)));
+        // non-trivial content
+        let mean = img.iter().sum::<f32>() / img.len() as f32;
+        assert!(mean > 0.05 && mean < 0.95);
+    }
+
+    #[test]
+    fn poisson_rate_roughly_matches() {
+        let arr = poisson_arrivals(1000.0, 2.0, 5);
+        assert!((arr.len() as f64 - 2000.0).abs() < 300.0, "{}", arr.len());
+        assert!(arr.windows(2).all(|w| w[1] >= w[0]));
+    }
+}

@@ -1,0 +1,221 @@
+//! Integration tests of the coordinator: batching, routing, metrics,
+//! backpressure, TCP server — over real artifacts.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use tcfft::coordinator::{FftRequest, FftService, Op, Server, ServiceConfig};
+use tcfft::error::relative_error;
+use tcfft::fft::mixed;
+use tcfft::hp::{C32, C64};
+use tcfft::plan::Direction;
+use tcfft::runtime::{PlanarBatch, Runtime};
+use tcfft::workload::random_signal;
+
+use once_cell::sync::Lazy;
+
+// One shared runtime across the binary; each test builds its own
+// service on top (cheap) while PJRT executables compile once.
+static RT: Lazy<Option<Arc<Runtime>>> = Lazy::new(|| match Runtime::load_default() {
+    Ok(rt) => Some(Arc::new(rt)),
+    Err(e) => {
+        eprintln!("skipping service tests (no artifacts): {e}");
+        None
+    }
+});
+
+fn service() -> Option<Arc<FftService>> {
+    RT.as_ref().map(|rt| {
+        Arc::new(FftService::start(
+            Arc::clone(rt),
+            ServiceConfig {
+                max_wait: Duration::from_millis(2),
+                ..ServiceConfig::default()
+            },
+        ))
+    })
+}
+
+fn widen(x: &[C32]) -> Vec<C64> {
+    x.iter().map(|c| C64::new(c.re as f64, c.im as f64)).collect()
+}
+
+#[test]
+fn concurrent_requests_batch_and_return_correct_rows() {
+    let Some(svc) = service() else { return };
+    let n = 1024;
+    // submit 8 distinct sequences concurrently; the batcher groups them
+    // into artifact-batch-4 executions; each reply must match ITS row
+    let signals: Vec<Vec<C32>> = (0..8).map(|i| random_signal(n, 100 + i as u64)).collect();
+    let tickets: Vec<_> = signals
+        .iter()
+        .map(|sig| {
+            svc.submit(FftRequest {
+                op: Op::Fft1d { n },
+                algo: "tc".into(),
+                direction: Direction::Forward,
+                input: PlanarBatch::from_complex(sig, vec![n]),
+            })
+            .unwrap()
+        })
+        .collect();
+    for (sig, t) in signals.iter().zip(tickets) {
+        let out = t.wait().unwrap();
+        let q = PlanarBatch::from_complex(sig, vec![1, n]).quantize_f16();
+        let want = mixed::fft_mixed_batch(&widen(&q.to_complex()), 1, n, false);
+        let err = relative_error(&want, &widen(&out.to_complex()));
+        assert!(err < 5e-3, "row mismatch: err {err}");
+    }
+    let m = svc.metrics();
+    let snap = m.snapshot();
+    assert_eq!(snap.get("completed").unwrap().as_i64(), Some(8));
+    // 8 requests into batch-capacity-4 queues: at most 8 batches, and
+    // batching must have grouped at least two requests somewhere
+    let batches = snap.get("batches").unwrap().as_i64().unwrap();
+    assert!(batches <= 8, "batches {batches}");
+    svc.shutdown();
+}
+
+#[test]
+fn mixed_op_routing() {
+    let Some(svc) = service() else { return };
+    // 1D and 2D requests in flight together route to different queues
+    let sig1 = random_signal(1024, 1);
+    let sig2 = random_signal(256 * 256, 2);
+    let t1 = svc
+        .submit(FftRequest {
+            op: Op::Fft1d { n: 1024 },
+            algo: "tc".into(),
+            direction: Direction::Forward,
+            input: PlanarBatch::from_complex(&sig1, vec![1024]),
+        })
+        .unwrap();
+    let t2 = svc
+        .submit(FftRequest {
+            op: Op::Fft2d { nx: 256, ny: 256 },
+            algo: "tc".into(),
+            direction: Direction::Forward,
+            input: PlanarBatch::from_complex(&sig2, vec![256, 256]),
+        })
+        .unwrap();
+    assert_eq!(t1.wait().unwrap().shape, vec![1, 1024]);
+    assert_eq!(t2.wait().unwrap().shape, vec![1, 256, 256]);
+    svc.shutdown();
+}
+
+#[test]
+fn unknown_size_fails_fast() {
+    let Some(svc) = service() else { return };
+    let sig = random_signal(2048, 3);
+    let r = svc.submit(FftRequest {
+        op: Op::Fft1d { n: 2048 },
+        algo: "tc".into(),
+        direction: Direction::Forward,
+        input: PlanarBatch::from_complex(&sig, vec![2048]),
+    });
+    assert!(r.is_err(), "2048 has no artifact; submit must fail");
+    svc.shutdown();
+}
+
+#[test]
+fn blocking_helper_preserves_order() {
+    let Some(svc) = service() else { return };
+    let n = 1024;
+    let x: Vec<C32> = (0..3).flat_map(|b| random_signal(n, 60 + b as u64)).collect();
+    let input = PlanarBatch::from_complex(&x, vec![3, n]);
+    let out = svc
+        .fft1d_blocking(input.clone(), "tc", Direction::Forward)
+        .unwrap();
+    assert_eq!(out.shape, vec![3, n]);
+    let want = mixed::fft_mixed_batch(&widen(&input.quantize_f16().to_complex()), 3, n, false);
+    let err = relative_error(&want, &widen(&out.to_complex()));
+    assert!(err < 5e-3, "order scrambled? err {err}");
+    svc.shutdown();
+}
+
+#[test]
+fn tcp_server_round_trip() {
+    let Some(svc) = service() else { return };
+    let server = Server::bind("127.0.0.1:0", Arc::clone(&svc)).unwrap();
+    let addr = server.local_addr().unwrap();
+    let stop = server.stop_handle();
+    let h = std::thread::spawn(move || server.run());
+
+    use std::io::{BufRead, BufReader, Write};
+    let mut conn = std::net::TcpStream::connect(addr).unwrap();
+    // ping
+    conn.write_all(b"{\"op\":\"ping\"}\n").unwrap();
+    let mut reader = BufReader::new(conn.try_clone().unwrap());
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("true"), "ping reply: {line}");
+
+    // small fft1d over the wire
+    let sig = random_signal(256, 5);
+    let re: Vec<String> = sig.iter().map(|c| format!("{:.4}", c.re)).collect();
+    let im: Vec<String> = sig.iter().map(|c| format!("{:.4}", c.im)).collect();
+    let req = format!(
+        "{{\"op\":\"fft1d\",\"n\":256,\"re\":[{}],\"im\":[{}]}}\n",
+        re.join(","),
+        im.join(",")
+    );
+    conn.write_all(req.as_bytes()).unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    let resp = tcfft::util::json::Json::parse(line.trim()).unwrap();
+    assert_eq!(resp.get("ok").and_then(|b| b.as_bool()), Some(true), "{line}");
+    assert_eq!(resp.get("re").unwrap().as_arr().unwrap().len(), 256);
+
+    // metrics op
+    conn.write_all(b"{\"op\":\"metrics\"}\n").unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("latency_p50_ms"), "{line}");
+
+    stop.store(true, std::sync::atomic::Ordering::SeqCst);
+    // drop BOTH fds (conn and its clone inside reader) so the server's
+    // connection handler sees EOF and run() can join it
+    drop(reader);
+    drop(conn);
+    let _ = h.join();
+    svc.shutdown();
+}
+
+#[test]
+fn backpressure_rejects_when_queue_full() {
+    let Some(rt) = RT.as_ref() else { return };
+    let svc = Arc::new(FftService::start(
+        Arc::clone(rt),
+        ServiceConfig {
+            max_wait: Duration::from_secs(3600), // never deadline-flush
+            max_queue: 2,
+            tick: Duration::from_secs(3600), // flusher effectively off
+            exec_threads: 1,
+            inline_exec: false, // keep queued requests queued
+        },
+    ));
+    // capacity 4 queue bounded at 2: the 3rd+ submissions are rejected
+    let mut errors = 0;
+    let mut tickets = Vec::new();
+    for i in 0..4 {
+        let sig = random_signal(1024, i as u64);
+        let t = svc
+            .submit(FftRequest {
+                op: Op::Fft1d { n: 1024 },
+                algo: "tc".into(),
+                direction: Direction::Forward,
+                input: PlanarBatch::from_complex(&sig, vec![1024]),
+            })
+            .unwrap();
+        tickets.push(t);
+    }
+    for t in tickets {
+        if t.wait_timeout(Duration::from_millis(200)).is_err() {
+            errors += 1;
+        }
+    }
+    assert!(errors >= 2, "expected rejections, got {errors}");
+    let m = svc.metrics();
+    assert!(m.snapshot().get("rejected").unwrap().as_i64().unwrap() >= 2);
+    svc.shutdown();
+}

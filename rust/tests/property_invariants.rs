@@ -1,0 +1,170 @@
+//! Property-based tests (hand-rolled generators — no proptest offline):
+//! randomized invariants over the planner, digit reversal, host FFTs,
+//! fp16 codec, JSON round trips and the batcher.  Each property runs
+//! over many random cases from a seeded generator, printing the failing
+//! seed on assertion (deterministic replay).
+
+use tcfft::fft::{digitrev, mixed, radix2, refdft};
+use tcfft::hp::{C64, F16};
+use tcfft::plan::schedule::kernel_schedule;
+use tcfft::util::json::Json;
+use tcfft::util::rng::SplitMix64;
+
+const CASES: usize = 200;
+
+#[test]
+fn prop_digit_reverse_is_permutation_and_matches_schedule() {
+    let mut rng = SplitMix64::new(11);
+    for case in 0..CASES {
+        let t = 1 + rng.below(16); // n in 2..=65536
+        let n = 1usize << t;
+        let radices = digitrev::radix_schedule(n);
+        assert_eq!(radices.iter().product::<usize>(), n, "case {case}");
+        let p = digitrev::digit_reverse(n);
+        let mut seen = vec![false; n];
+        for &i in &p {
+            assert!(!seen[i], "case {case}: duplicate");
+            seen[i] = true;
+        }
+    }
+}
+
+#[test]
+fn prop_schedule_radix_product_and_vmem() {
+    let mut rng = SplitMix64::new(22);
+    for case in 0..CASES {
+        let t = 1 + rng.below(22);
+        let n = 1usize << t;
+        let lane = 1usize << (rng.below(3) * 4); // 1, 16, 256
+        let stages = kernel_schedule(n, lane);
+        let prod: usize = stages.iter().map(|s| s.radix).product();
+        assert_eq!(prod, n, "case {case} n={n} lane={lane}");
+        for s in &stages {
+            assert!(
+                s.kernel != "merge256"
+                    || s.vmem_bytes() <= tcfft::plan::schedule::VMEM_FUSE_BUDGET,
+                "case {case}: fused stage over budget: {s:?}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_mixed_fft_matches_dft_small_sizes() {
+    let mut rng = SplitMix64::new(33);
+    for case in 0..40 {
+        let t = 1 + rng.below(9); // up to 512: DFT oracle is O(N^2)
+        let n = 1usize << t;
+        let x: Vec<C64> = (0..n)
+            .map(|_| C64::new(rng.uniform(-1.0, 1.0), rng.uniform(-1.0, 1.0)))
+            .collect();
+        let inverse = rng.below(2) == 1;
+        let want = refdft::dft(&x, inverse);
+        let got = mixed::fft_mixed(&x, inverse);
+        let scale = want.iter().map(|c| c.abs()).fold(1e-30, f64::max);
+        for (w, g) in want.iter().zip(&got) {
+            assert!(
+                (*w - *g).abs() / scale < 1e-9,
+                "case {case} n={n} inverse={inverse}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_parseval_and_shift_theorems() {
+    let mut rng = SplitMix64::new(44);
+    for case in 0..60 {
+        let t = 3 + rng.below(8);
+        let n = 1usize << t;
+        let x: Vec<C64> = (0..n)
+            .map(|_| C64::new(rng.uniform(-1.0, 1.0), rng.uniform(-1.0, 1.0)))
+            .collect();
+        let y = radix2::fft_vec(&x, false);
+        // Parseval
+        let ex: f64 = x.iter().map(|c| c.norm_sqr()).sum();
+        let ey: f64 = y.iter().map(|c| c.norm_sqr()).sum();
+        assert!(
+            (ey - n as f64 * ex).abs() / (n as f64 * ex) < 1e-10,
+            "case {case}: parseval"
+        );
+        // circular shift theorem: FFT(shift_s x)[k] = W^{sk} FFT(x)[k]
+        let s = rng.below(n);
+        let shifted: Vec<C64> = (0..n).map(|i| x[(i + s) % n]).collect();
+        let ys = radix2::fft_vec(&shifted, false);
+        for k in 0..n {
+            let w = C64::cis(2.0 * std::f64::consts::PI * (s * k % n) as f64 / n as f64);
+            let want = y[k] * w;
+            assert!(
+                (want - ys[k]).abs() < 1e-7 * (1.0 + want.abs()),
+                "case {case}: shift theorem k={k}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_f16_round_trip_and_monotone() {
+    let mut rng = SplitMix64::new(55);
+    for case in 0..CASES {
+        // encode(decode(h)) == h for random bit patterns
+        let bits = (rng.next_u64() & 0xFFFF) as u16;
+        let h = F16::from_bits(bits);
+        if h.is_nan() {
+            assert!(F16::from_f32(h.to_f32()).is_nan());
+        } else {
+            assert_eq!(F16::from_f32(h.to_f32()).to_bits(), bits, "case {case}");
+        }
+        // quantization error bound on the normal range
+        let x = rng.uniform(-60000.0, 60000.0) as f32;
+        let q = F16::from_f32(x).to_f32();
+        if x.abs() > 1e-4 {
+            assert!(
+                ((q - x) / x).abs() <= 2f32.powi(-10),
+                "case {case}: x={x} q={q}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_json_round_trip_arbitrary_trees() {
+    fn gen(rng: &mut SplitMix64, depth: usize) -> Json {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.below(2) == 1),
+            2 => Json::Num((rng.uniform(-1e6, 1e6) * 100.0).round() / 100.0),
+            3 => Json::Str(format!("s{}-\"\\\n{}", rng.below(100), rng.below(10))),
+            4 => Json::Arr((0..rng.below(5)).map(|_| gen(rng, depth - 1)).collect()),
+            _ => Json::Obj(
+                (0..rng.below(5))
+                    .map(|i| (format!("k{i}"), gen(rng, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    let mut rng = SplitMix64::new(66);
+    for case in 0..CASES {
+        let tree = gen(&mut rng, 3);
+        let text = tree.to_string();
+        let back = Json::parse(&text).unwrap_or_else(|e| panic!("case {case}: {e}\n{text}"));
+        assert_eq!(tree, back, "case {case}");
+    }
+}
+
+#[test]
+fn prop_four_step_twiddles_match_direct() {
+    let mut rng = SplitMix64::new(77);
+    for _ in 0..40 {
+        let n1 = 1usize << (1 + rng.below(5));
+        let n2 = 1usize << (1 + rng.below(5));
+        let tw = tcfft::fft::twiddle::four_step_twiddles(n1, n2, false);
+        let n = n1 * n2;
+        for _ in 0..10 {
+            let j = rng.below(n1);
+            let k = rng.below(n2);
+            let want = C64::cis(-2.0 * std::f64::consts::PI * ((j * k) % n) as f64 / n as f64);
+            assert!((tw[j][k] - want).abs() < 1e-12);
+        }
+    }
+}
