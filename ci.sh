@@ -1,0 +1,20 @@
+#!/usr/bin/env bash
+# CI entry point: build + test + lint on the default (offline) feature
+# set. Everything here must pass with no network and no artifacts on
+# disk — the interpreter backend serves the synthesized catalog.
+set -euo pipefail
+cd "$(dirname "$0")"
+
+echo "== cargo build --release =="
+cargo build --release
+
+echo "== cargo test -q =="
+cargo test -q
+
+echo "== cargo fmt --check =="
+cargo fmt --check
+
+echo "== cargo clippy -- -D warnings =="
+cargo clippy --all-targets -- -D warnings
+
+echo "ci: OK"

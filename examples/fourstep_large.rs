@@ -13,7 +13,7 @@ use tcfft::runtime::Runtime;
 use tcfft::util::cli::Args;
 use tcfft::workload::random_signal;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> tcfft::error::Result<()> {
     let args = Args::parse(std::env::args().skip(1));
     let log2n = args.get_usize("log2n", 20);
     let n = 1usize << log2n;
@@ -44,7 +44,7 @@ fn main() -> anyhow::Result<()> {
     let got: Vec<C64> = y.iter().map(|c| C64::new(c.re as f64, c.im as f64)).collect();
     let err = relative_error(&want, &got);
     println!("computed 2^{log2n}-point FFT in {:.1} ms, mean relative error {err:.3e}", dt * 1e3);
-    anyhow::ensure!(err < 0.02, "four-step error too high");
+    tcfft::ensure!(err < 0.02, "four-step error too high");
     println!("fourstep_large: OK");
     Ok(())
 }

@@ -23,7 +23,7 @@ fn psnr(a: &[f32], b: &[f32]) -> f64 {
     10.0 * (1.0f64 / mse.max(1e-12)).log10()
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> tcfft::error::Result<()> {
     let rt = Runtime::load_default()?;
     let fwd = Plan::fft2d(&rt.registry, NX, NY, BATCH)?;
     let inv = Plan::fft2d_algo(&rt.registry, NX, NY, BATCH, "tc", Direction::Inverse)?;
@@ -76,7 +76,7 @@ fn main() -> anyhow::Result<()> {
             "image {b}: kept {:.1}% of spectrum, reconstruction PSNR {p:.1} dB",
             100.0 * kept as f64 / (NX * NY) as f64
         );
-        anyhow::ensure!(p > 20.0, "low-pass reconstruction too lossy: {p:.1} dB");
+        tcfft::ensure!(p > 20.0, "low-pass reconstruction too lossy: {p:.1} dB");
     }
     println!("image_pipeline_2d: OK");
     Ok(())

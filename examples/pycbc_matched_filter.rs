@@ -15,7 +15,7 @@ use tcfft::workload::{add_noise, chirp};
 
 const N: usize = 4096;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> tcfft::error::Result<()> {
     let rt = Runtime::load_default()?;
     let fwd = Plan::fft1d(&rt.registry, N, 4)?;
     let inv = Plan::fft1d_algo(&rt.registry, N, 4, "tc", Direction::Inverse)?;
@@ -77,8 +77,8 @@ fn main() -> anyhow::Result<()> {
 
     println!("injected template at lag {inject_at}");
     println!("matched filter peak at lag {best_lag} (SNR ratio {:.1})", best / mean);
-    anyhow::ensure!(best_lag == inject_at, "matched filter missed the injection");
-    anyhow::ensure!(best / mean > 5.0, "detection not significant");
+    tcfft::ensure!(best_lag == inject_at, "matched filter missed the injection");
+    tcfft::ensure!(best / mean > 5.0, "detection not significant");
     println!("pycbc_matched_filter: OK — detection at the injected time");
     Ok(())
 }

@@ -14,7 +14,7 @@ fn widen(x: &[C32]) -> Vec<C64> {
     x.iter().map(|c| C64::new(c.re as f64, c.im as f64)).collect()
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> tcfft::error::Result<()> {
     let rt = Runtime::load_default()?;
 
     // --- sanity: impulse input -> flat spectrum -------------------------
@@ -26,7 +26,7 @@ fn main() -> anyhow::Result<()> {
     let y = out.to_complex();
     println!("impulse -> X[0]={:?} X[1]={:?} X[{}]={:?}", y[0], y[1], n - 1, y[n - 1]);
     for (k, v) in y.iter().enumerate() {
-        anyhow::ensure!(
+        tcfft::ensure!(
             (v.re - 1.0).abs() < 0.05 && v.im.abs() < 0.05,
             "impulse FFT wrong at bin {k}: {v:?}"
         );
@@ -44,7 +44,7 @@ fn main() -> anyhow::Result<()> {
     let want = fft_mixed_batch(&widen(&input.quantize_f16().to_complex()), batch, n, false);
     let err = relative_error(&want, &widen(&out.to_complex()));
     println!("1D n={n} batch={batch}: mean relative error {err:.3e}");
-    anyhow::ensure!(err < 0.02, "1D error too high");
+    tcfft::ensure!(err < 0.02, "1D error too high");
 
     // --- inverse round trip ---------------------------------------------
     let fwd = Plan::fft1d(&rt.registry, 1024, 4)?;
@@ -62,7 +62,7 @@ fn main() -> anyhow::Result<()> {
         &widen(&back.to_complex()),
     );
     println!("1D 1024-pt forward+inverse round trip: error {err:.3e}");
-    anyhow::ensure!(err < 0.05, "round-trip error too high");
+    tcfft::ensure!(err < 0.05, "round-trip error too high");
 
     // --- 2D -------------------------------------------------------------
     let (nx, ny) = (256, 256);
@@ -80,7 +80,7 @@ fn main() -> anyhow::Result<()> {
     }
     let err = relative_error(&want, &widen(&out.to_complex()));
     println!("2D {nx}x{ny} batch=2: mean relative error {err:.3e}");
-    anyhow::ensure!(err < 0.02, "2D error too high");
+    tcfft::ensure!(err < 0.02, "2D error too high");
 
     println!("\nquickstart: ALL OK");
     Ok(())

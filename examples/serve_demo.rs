@@ -16,7 +16,7 @@ use tcfft::util::rng::SplitMix64;
 use tcfft::util::stats::Summary;
 use tcfft::workload::random_signal;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> tcfft::error::Result<()> {
     let args = Args::parse(std::env::args().skip(1));
     let horizon = args.get_f64("seconds", 10.0);
     let rate = args.get_f64("rate", 120.0);
@@ -114,8 +114,8 @@ fn main() -> anyhow::Result<()> {
     println!("completed throughput  : {:.1} req/s", lat.len() as f64 / wall);
     println!("latency p50 / p99     : {:.2} / {:.2} ms", lat.median() * 1e3, lat.p99() * 1e3);
     println!("service metrics       : {}", m.snapshot().to_string());
-    anyhow::ensure!(failed == 0, "requests failed");
-    anyhow::ensure!(lat.len() > 0, "no requests completed");
+    tcfft::ensure!(failed == 0, "requests failed");
+    tcfft::ensure!(lat.len() > 0, "no requests completed");
     println!("serve_demo: OK");
     Ok(())
 }

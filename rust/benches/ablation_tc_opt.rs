@@ -17,7 +17,7 @@ use tcfft::runtime::{PlanarBatch, Runtime};
 use tcfft::util::table::Table;
 use tcfft::workload::random_signal;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> tcfft::error::Result<()> {
     header("Sec 5.4 ablation: Optimized TC (fragment-level fusion)");
 
     // measured part

@@ -20,7 +20,7 @@ use tcfft::workload::random_signal;
 const N: usize = 4096;
 const REQS: usize = 64;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> tcfft::error::Result<()> {
     header("E2E serving: coordinator overhead + batched throughput");
     let rt = Arc::new(Runtime::load_default()?);
     let key = "fft1d_tc_n4096_b4_fwd";

@@ -17,7 +17,7 @@ use tcfft::runtime::{PlanarBatch, Runtime};
 use tcfft::util::table::Table;
 use tcfft::workload::random_signal;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> tcfft::error::Result<()> {
     header("Fig 4: 1D FFT performance of different sizes");
 
     // ---- part 1: modelled series (the paper's figure) ----

@@ -10,7 +10,7 @@ use tcfft::runtime::{PlanarBatch, Runtime};
 use tcfft::util::table::Table;
 use tcfft::workload::random_signal;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> tcfft::error::Result<()> {
     header("Fig 5: 2D FFT performance of different sizes");
 
     let v100 = GpuSpec::v100();

@@ -12,7 +12,7 @@ use tcfft::runtime::{PlanarBatch, Runtime};
 use tcfft::util::table::Table;
 use tcfft::workload::random_signal;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> tcfft::error::Result<()> {
     header("Fig 7: performance of different batch sizes");
     let v100 = GpuSpec::v100();
     let a = f::fig7a_series(&v100);

@@ -32,7 +32,7 @@ fn paper_relative_error(reference: &[C64], got: &[C64]) -> f64 {
     sum / cnt
 }
 
-fn run_1d(rt: &Runtime, key: &str) -> anyhow::Result<(f64, f64)> {
+fn run_1d(rt: &Runtime, key: &str) -> tcfft::error::Result<(f64, f64)> {
     let meta = rt.registry.get(key)?.clone();
     let (n, b) = (meta.n, meta.batch);
     let x: Vec<_> = (0..b).flat_map(|i| random_signal(n, 1000 + i as u64)).collect();
@@ -57,7 +57,7 @@ fn run_1d(rt: &Runtime, key: &str) -> anyhow::Result<(f64, f64)> {
     Ok((per_bin / b as f64, scale_err / b as f64))
 }
 
-fn run_2d(rt: &Runtime, key: &str) -> anyhow::Result<(f64, f64)> {
+fn run_2d(rt: &Runtime, key: &str) -> tcfft::error::Result<(f64, f64)> {
     let meta = rt.registry.get(key)?.clone();
     let (nx, ny, b) = (meta.nx, meta.ny, meta.batch);
     let x: Vec<_> = (0..b)
@@ -84,7 +84,7 @@ fn run_2d(rt: &Runtime, key: &str) -> anyhow::Result<(f64, f64)> {
     Ok((per_bin / b as f64, scale_err / b as f64))
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> tcfft::error::Result<()> {
     header("Table 4: average relative error vs double-precision oracle");
     let rt = Runtime::load_default()?;
 

@@ -9,6 +9,7 @@ use std::collections::VecDeque;
 use std::sync::mpsc;
 use std::time::Instant;
 
+use crate::error::Result;
 use crate::runtime::PlanarBatch;
 
 /// One pending single-sequence request.
@@ -18,7 +19,7 @@ pub struct Pending {
     /// into per-row requests by the service)
     pub input: PlanarBatch,
     pub enqueued: Instant,
-    pub reply: mpsc::Sender<anyhow::Result<PlanarBatch>>,
+    pub reply: mpsc::Sender<Result<PlanarBatch>>,
 }
 
 /// A batch ready for execution.
@@ -113,7 +114,7 @@ mod tests {
     use super::*;
     use std::time::Duration;
 
-    fn req(id: u64, n: usize) -> (Pending, mpsc::Receiver<anyhow::Result<PlanarBatch>>) {
+    fn req(id: u64, n: usize) -> (Pending, mpsc::Receiver<Result<PlanarBatch>>) {
         let (tx, rx) = mpsc::channel();
         (
             Pending {

@@ -16,7 +16,7 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::Instant;
 
-use anyhow::Result;
+use crate::error::Result;
 
 use super::service::{FftRequest, FftService, Op};
 use crate::plan::Direction;

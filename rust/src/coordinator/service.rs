@@ -21,7 +21,7 @@ use std::sync::{mpsc, Arc, Mutex};
 use std::thread;
 use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, Result};
+use crate::error::{Result, TcFftError};
 
 use super::batcher::{Pending, PlanQueue, ReadyBatch};
 use super::metrics::Metrics;
@@ -89,14 +89,14 @@ impl Ticket {
     pub fn wait(self) -> Result<PlanarBatch> {
         self.rx
             .recv()
-            .map_err(|_| anyhow!("service dropped the request"))?
+            .map_err(|_| TcFftError::msg("service dropped the request"))?
     }
 
     pub fn wait_timeout(self, d: Duration) -> Result<PlanarBatch> {
         match self.rx.recv_timeout(d) {
             Ok(r) => r,
-            Err(mpsc::RecvTimeoutError::Timeout) => Err(anyhow!("request timed out")),
-            Err(_) => Err(anyhow!("service dropped the request")),
+            Err(mpsc::RecvTimeoutError::Timeout) => Err(TcFftError::msg("request timed out")),
+            Err(_) => Err(TcFftError::msg("service dropped the request")),
         }
     }
 }
@@ -178,7 +178,9 @@ fn run_batch(rt: &Runtime, shared: &Shared, key: &str, batch: ReadyBatch) {
         Err(e) => {
             for m in &batch.members {
                 shared.metrics.failed.fetch_add(1, Ordering::Relaxed);
-                let _ = m.reply.send(Err(anyhow!("batch execution failed: {e}")));
+                let _ = m
+                    .reply
+                    .send(Err(TcFftError::msg(format!("batch execution failed: {e}"))));
             }
         }
     }
@@ -310,7 +312,7 @@ impl FftService {
     /// Submit one request; returns a ticket to wait on.
     pub fn submit(&self, req: FftRequest) -> Result<Ticket> {
         if self.shared.shutting_down.load(Ordering::SeqCst) {
-            return Err(anyhow!(crate::error::TcFftError::ShuttingDown));
+            return Err(TcFftError::ShuttingDown);
         }
         let plan = self.plan_for(&req)?;
         let id = self.shared.next_id.fetch_add(1, Ordering::SeqCst);
@@ -320,7 +322,7 @@ impl FftService {
         let mut shape = vec![1usize];
         shape.extend_from_slice(&req.input.shape);
         let input = PlanarBatch { re: req.input.re, im: req.input.im, shape };
-        anyhow::ensure!(
+        crate::ensure!(
             input.shape[1..] == plan.meta.input_shape[1..],
             "request shape {:?} does not match plan {:?}",
             &input.shape[1..],
@@ -342,9 +344,7 @@ impl FftService {
             if let Err(reject) = q.push(pending) {
                 full_queue = true;
                 self.shared.metrics.rejected.fetch_add(1, Ordering::Relaxed);
-                let _ = reject
-                    .reply
-                    .send(Err(anyhow!(crate::error::TcFftError::QueueFull)));
+                let _ = reject.reply.send(Err(TcFftError::QueueFull));
             }
             self.shared.pending_cv.notify_one();
         }
@@ -399,7 +399,7 @@ impl FftService {
         algo: &str,
         dir: Direction,
     ) -> Result<PlanarBatch> {
-        anyhow::ensure!(x.shape.len() == 3, "expected [b, nx, ny]");
+        crate::ensure!(x.shape.len() == 3, "expected [b, nx, ny]");
         let (nx, ny) = (x.shape[1], x.shape[2]);
         let rows = x.shape[0];
         let mut tickets = Vec::new();

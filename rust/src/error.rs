@@ -1,21 +1,97 @@
 //! Error taxonomy and the paper's precision metrics.
-
-use thiserror::Error;
+//!
+//! The offline toolchain has no `anyhow`/`thiserror`; this module is
+//! the crate's single error substrate: a typed enum for the failure
+//! classes the service distinguishes, a `Msg` catch-all for everything
+//! else, and `bail!`/`ensure!` macros mirroring the anyhow idiom.
 
 use crate::hp::C64;
 
-/// Library error type (coordination-level failures; numeric code uses
-/// anyhow at the boundaries).
-#[derive(Debug, Error)]
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, TcFftError>;
+
+/// Library error type.
+#[derive(Debug)]
 pub enum TcFftError {
-    #[error("unsupported FFT size {0}: must be a power of two >= 2")]
+    /// Unsupported FFT size: must be a power of two >= 2.
     BadSize(usize),
-    #[error("no artifact available for {0}")]
+    /// No artifact available for the requested transform.
     NoArtifact(String),
-    #[error("service is shutting down")]
+    /// Service is shutting down.
     ShuttingDown,
-    #[error("request queue is full (backpressure)")]
+    /// Request queue is full (backpressure).
     QueueFull,
+    /// Anything else (I/O, parse, shape mismatches, backend failures).
+    Msg(String),
+}
+
+impl TcFftError {
+    /// Build the catch-all variant from any displayable value.
+    pub fn msg(m: impl std::fmt::Display) -> TcFftError {
+        TcFftError::Msg(m.to_string())
+    }
+}
+
+impl std::fmt::Display for TcFftError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TcFftError::BadSize(n) => {
+                write!(f, "unsupported FFT size {n}: must be a power of two >= 2")
+            }
+            TcFftError::NoArtifact(what) => write!(f, "no artifact available for {what}"),
+            TcFftError::ShuttingDown => write!(f, "service is shutting down"),
+            TcFftError::QueueFull => write!(f, "request queue is full (backpressure)"),
+            TcFftError::Msg(m) => write!(f, "{m}"),
+        }
+    }
+}
+
+impl std::error::Error for TcFftError {}
+
+impl From<std::io::Error> for TcFftError {
+    fn from(e: std::io::Error) -> TcFftError {
+        TcFftError::Msg(e.to_string())
+    }
+}
+
+impl From<std::num::ParseIntError> for TcFftError {
+    fn from(e: std::num::ParseIntError) -> TcFftError {
+        TcFftError::Msg(e.to_string())
+    }
+}
+
+impl From<std::num::ParseFloatError> for TcFftError {
+    fn from(e: std::num::ParseFloatError) -> TcFftError {
+        TcFftError::Msg(e.to_string())
+    }
+}
+
+/// Return early with a `TcFftError`. Accepts either a format string
+/// (producing `TcFftError::Msg`) or an error value convertible into
+/// `TcFftError`.
+#[macro_export]
+macro_rules! bail {
+    ($fmt:literal $(, $arg:expr)* $(,)?) => {
+        return Err($crate::error::TcFftError::msg(format!($fmt $(, $arg)*)))
+    };
+    ($err:expr) => {
+        return Err($crate::error::TcFftError::from($err))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $fmt:literal $(, $arg:expr)* $(,)?) => {
+        if !($cond) {
+            $crate::bail!($fmt $(, $arg)*);
+        }
+    };
+    ($cond:expr, $err:expr) => {
+        if !($cond) {
+            $crate::bail!($err);
+        }
+    };
 }
 
 /// The paper's relative error metric (eq. 5): mean over bins of
@@ -51,6 +127,19 @@ pub fn max_relative_error(reference: &[C64], got: &[C64]) -> f64 {
         .fold(0.0, f64::max)
 }
 
+/// Relative root-mean-square error — the conformance-suite metric
+/// (Table 4 spirit): ||X - X_ref||_2 / ||X_ref||_2.
+pub fn relative_rmse(reference: &[C64], got: &[C64]) -> f64 {
+    assert_eq!(reference.len(), got.len());
+    let mut num = 0.0f64;
+    let mut den = 0.0f64;
+    for (r, g) in reference.iter().zip(got) {
+        num += (*r - *g).norm_sqr();
+        den += r.norm_sqr();
+    }
+    (num / den.max(f64::MIN_POSITIVE)).sqrt()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -60,6 +149,7 @@ mod tests {
         let x = vec![C64::new(1.0, 2.0), C64::new(-3.0, 0.5)];
         assert_eq!(relative_error(&x, &x), 0.0);
         assert_eq!(max_relative_error(&x, &x), 0.0);
+        assert_eq!(relative_rmse(&x, &x), 0.0);
     }
 
     #[test]
@@ -69,5 +159,30 @@ mod tests {
         // error 0.1 against scale 10 -> 0.01, averaged over 2 bins
         assert!((relative_error(&r, &g) - 0.005).abs() < 1e-12);
         assert!((max_relative_error(&r, &g) - 0.01).abs() < 1e-12);
+        // rmse: |err| = 0.1 over ||ref|| = 10
+        assert!((relative_rmse(&r, &g) - 0.01).abs() < 1e-12);
+    }
+
+    #[test]
+    fn display_and_variants() {
+        assert!(TcFftError::BadSize(7).to_string().contains("7"));
+        assert!(TcFftError::NoArtifact("x".into()).to_string().contains("x"));
+        assert!(TcFftError::msg("boom").to_string().contains("boom"));
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        assert!(TcFftError::from(io).to_string().contains("gone"));
+    }
+
+    #[test]
+    fn macros_return_errors() {
+        fn f(x: usize) -> Result<usize> {
+            ensure!(x < 10, "too big: {x}");
+            if x == 5 {
+                bail!(TcFftError::BadSize(x));
+            }
+            Ok(x)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert!(matches!(f(5), Err(TcFftError::BadSize(5))));
+        assert!(f(11).unwrap_err().to_string().contains("too big: 11"));
     }
 }

@@ -1,8 +1,67 @@
 //! Minimal generic complex arithmetic and planar/interleaved layout
 //! conversions used across the host-side FFT oracles and the runtime
 //! buffer marshalling.
+//!
+//! `num_traits` is unavailable offline, so the float abstraction the
+//! generic complex type needs is defined here: just the handful of
+//! operations the FFT substrates use.
 
-use num_traits::Float;
+/// The float operations `Complex<T>` requires (implemented for f32/f64;
+/// the offline stand-in for `num_traits::Float`).
+pub trait Float:
+    Copy
+    + PartialEq
+    + PartialOrd
+    + std::fmt::Debug
+    + std::ops::Add<Output = Self>
+    + std::ops::Sub<Output = Self>
+    + std::ops::Mul<Output = Self>
+    + std::ops::Div<Output = Self>
+    + std::ops::Neg<Output = Self>
+    + std::ops::AddAssign
+{
+    fn zero() -> Self;
+    fn one() -> Self;
+    fn sqrt(self) -> Self;
+    fn sin(self) -> Self;
+    fn cos(self) -> Self;
+}
+
+impl Float for f32 {
+    fn zero() -> f32 {
+        0.0
+    }
+    fn one() -> f32 {
+        1.0
+    }
+    fn sqrt(self) -> f32 {
+        f32::sqrt(self)
+    }
+    fn sin(self) -> f32 {
+        f32::sin(self)
+    }
+    fn cos(self) -> f32 {
+        f32::cos(self)
+    }
+}
+
+impl Float for f64 {
+    fn zero() -> f64 {
+        0.0
+    }
+    fn one() -> f64 {
+        1.0
+    }
+    fn sqrt(self) -> f64 {
+        f64::sqrt(self)
+    }
+    fn sin(self) -> f64 {
+        f64::sin(self)
+    }
+    fn cos(self) -> f64 {
+        f64::cos(self)
+    }
+}
 
 /// A complex number over any float type.
 #[derive(Clone, Copy, Debug, PartialEq, Default)]

@@ -3,5 +3,5 @@
 pub mod complex;
 pub mod f16;
 
-pub use complex::{Complex, C32, C64};
+pub use complex::{Complex, Float, C32, C64};
 pub use f16::F16;

@@ -13,8 +13,7 @@
 //! this models the CUDA-side twiddle kernel; see DESIGN.md
 //! substitutions).
 
-use anyhow::{bail, Context, Result};
-
+use crate::error::{Result, TcFftError};
 use crate::fft::twiddle::four_step_twiddles;
 use crate::hp::C32;
 use crate::runtime::{PlanarBatch, Runtime};
@@ -34,7 +33,7 @@ impl FourStepPlan {
     /// Choose a decomposition whose factors both have artifacts.
     pub fn new(rt: &Runtime, n: usize, inverse: bool) -> Result<FourStepPlan> {
         if !n.is_power_of_two() {
-            bail!("four-step size must be a power of two, got {n}");
+            crate::bail!("four-step size must be a power of two, got {n}");
         }
         // prefer balanced factors with available artifacts
         let algod = "tc";
@@ -67,8 +66,8 @@ impl FourStepPlan {
                 }
             }
         }
-        let (n1, n2, key_n1, key_n2, batch_n1, batch_n2) = best.with_context(|| {
-            format!("no artifact pair factors {n}; build more 1D variants")
+        let (n1, n2, key_n1, key_n2, batch_n1, batch_n2) = best.ok_or_else(|| {
+            TcFftError::NoArtifact(format!("pair factoring {n}; build more 1D variants"))
         })?;
         Ok(FourStepPlan { n1, n2, key_n1, key_n2, batch_n1, batch_n2, inverse })
     }
@@ -149,7 +148,7 @@ impl FourStepPlan {
     /// Execute the four-step FFT over one length-N sequence.
     pub fn execute(&self, rt: &Runtime, x: &[C32]) -> Result<Vec<C32>> {
         let (n1, n2) = (self.n1, self.n2);
-        anyhow::ensure!(x.len() == n1 * n2, "length {} != {}", x.len(), n1 * n2);
+        crate::ensure!(x.len() == n1 * n2, "length {} != {}", x.len(), n1 * n2);
         // row-major matrix M[j][k] = x[j*n2 + k]
         let mut m = x.to_vec();
         // step 1: FFT columns (length n1)

@@ -1,13 +1,30 @@
 //! # tcFFT — half-precision matrix-formulated FFT (paper reproduction)
 //!
 //! Reproduction of *"tcFFT: Accelerating Half-Precision FFT through
-//! Tensor Cores"* (Li, Cheng, Lin 2021) as a three-layer Rust + JAX +
-//! Pallas stack.  See DESIGN.md for the architecture and the
-//! hardware-adaptation mapping (Tensor Cores -> TPU MXU, executed via
-//! interpret-mode CPU PJRT).
+//! Tensor Cores"* (Li, Cheng, Lin 2021).  Radix stages are formulated
+//! as fp16 matrix multiplies with f32 accumulation — the Tensor-Core /
+//! MXU mma contract — and the whole stack (planner, runtime, serving
+//! coordinator) builds and runs fully offline with zero external
+//! dependencies.
+//!
+//! ## Backends
+//!
+//! Execution is pluggable through the [`runtime::Backend`] trait:
+//!
+//! * [`runtime::CpuInterpreter`] — the **default**: a pure-Rust
+//!   interpreter that executes the planner's radix-stage schedules
+//!   directly on [`runtime::PlanarBatch`] planar fp16 buffers
+//!   (fp16-rounded DFT/twiddle tables, f32 accumulation, fp16
+//!   intermediate stores).  Needs no artifacts: when no artifact
+//!   directory exists, [`runtime::Registry`] synthesizes the full
+//!   variant catalog (sizes, schedules, cost metadata) in process.
+//! * `runtime::Executor` — PJRT execution of AOT HLO artifacts, gated
+//!   behind the non-default `pjrt` cargo feature (requires a vendored
+//!   `xla` binding and `make artifacts`; not available offline).
 //!
 //! Layer map:
-//! * [`runtime`] — PJRT execution of AOT artifacts (HLO text).
+//! * [`runtime`] — `Backend` trait, interpreter + PJRT engines,
+//!   artifact/synthesized registry, planar buffers.
 //! * [`plan`] — cuFFT-style planner: size -> radix schedule -> artifact.
 //! * [`coordinator`] — the FFT service: router, dynamic batcher,
 //!   worker scheduler, metrics, TCP server.
@@ -16,8 +33,9 @@
 //! * [`memsim`], [`perfmodel`] — the GPU memory/roofline models that
 //!   regenerate the paper's Table 2 and Figs 4-7.
 //!
-//! Quick start (after `make artifacts`):
-//! ```no_run
+//! Quick start (no artifacts needed — the interpreter serves the
+//! synthesized catalog):
+//! ```
 //! use tcfft::plan::Plan;
 //! use tcfft::runtime::{PlanarBatch, Runtime};
 //!
@@ -25,8 +43,13 @@
 //! let plan = Plan::fft1d(&rt.registry, 4096, 4).unwrap();
 //! let x = PlanarBatch::new(vec![4, 4096]); // fill with your signal
 //! let y = plan.execute(&rt, x).unwrap();
-//! # drop(y);
+//! assert_eq!(y.shape, vec![4, 4096]);
 //! ```
+//!
+//! Run the full offline test suite with `cargo test` (conformance of
+//! the interpreter against the from-scratch f64 oracles is in
+//! `tests/conformance_interpreter.rs`); `cargo bench --bench <name>`
+//! regenerates the paper's tables and figures.
 
 pub mod bench_harness;
 pub mod coordinator;

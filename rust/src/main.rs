@@ -12,10 +12,8 @@
 
 use std::sync::Arc;
 
-use anyhow::Result;
-
 use tcfft::coordinator::{FftService, Server, ServiceConfig};
-use tcfft::error::relative_error;
+use tcfft::error::{relative_error, Result};
 use tcfft::fft::mixed::fft_mixed_batch;
 use tcfft::hp::C64;
 use tcfft::plan::schedule::kernel_schedule;
@@ -30,7 +28,7 @@ fn main() {
     let code = match run(&args) {
         Ok(()) => 0,
         Err(e) => {
-            eprintln!("error: {e:#}");
+            eprintln!("error: {e}");
             1
         }
     };
@@ -165,7 +163,7 @@ fn run_cmd(args: &Args) -> Result<()> {
         dt * 1e3,
         worst
     );
-    anyhow::ensure!(worst < 0.05, "relative error too high");
+    tcfft::ensure!(worst < 0.05, "relative error too high");
     println!("OK");
     Ok(())
 }
@@ -196,7 +194,7 @@ fn bench_cmd(args: &Args) -> Result<()> {
         args.get_usize("iters", 50),
     );
     println!("{}", r.report());
-    let r2 = 6.0 * 2.0 * (n as f64).log2() * n as f64 * batch as f64;
+    let r2 = tcfft::plan::schedule::radix2_equivalent_flops(n, batch);
     println!(
         "radix-2-equivalent throughput: {:.3} GFLOPS (CPU interpret mode)",
         r2 / r.summary.median() / 1e9

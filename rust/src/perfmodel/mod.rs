@@ -253,7 +253,7 @@ pub fn model_fft1d(gpu: &GpuSpec, algo: Algo, n: usize, batch: usize) -> Cost {
     let util = utilization(algo, total);
     let passes = passes_for_axis(n, 1, false);
     let mut cost = model_passes(gpu, algo, &passes, total, util);
-    finish(&mut cost, n as f64, batch);
+    finish(&mut cost, n, batch);
     cost
 }
 
@@ -264,12 +264,13 @@ pub fn model_fft2d(gpu: &GpuSpec, algo: Algo, nx: usize, ny: usize, batch: usize
     let mut passes = passes_for_axis(ny, 1, false);
     passes.extend(passes_for_axis(nx, ny, true));
     let mut cost = model_passes(gpu, algo, &passes, total, util);
-    finish(&mut cost, (nx * ny) as f64, batch);
+    finish(&mut cost, nx * ny, batch);
     cost
 }
 
-fn finish(cost: &mut Cost, n_f: f64, batch: usize) {
-    cost.tflops_r2 = 6.0 * 2.0 * n_f.log2() * n_f * batch as f64 / cost.seconds / 1e12;
+fn finish(cost: &mut Cost, n: usize, batch: usize) {
+    let r2 = crate::plan::schedule::radix2_equivalent_flops(n, batch);
+    cost.tflops_r2 = r2 / cost.seconds / 1e12;
     cost.bw_useful = cost.hbm_bytes / cost.mem_seconds.max(1e-30);
 }
 

@@ -10,8 +10,7 @@ pub mod schedule;
 
 use std::sync::Arc;
 
-use anyhow::{bail, Context, Result};
-
+use crate::error::{Result, TcFftError};
 use crate::fft::digitrev;
 use crate::runtime::{PlanarBatch, Registry, Runtime, VariantMeta};
 
@@ -45,12 +44,14 @@ impl Plan {
         direction: Direction,
     ) -> Result<Plan> {
         if !n.is_power_of_two() || n < 2 {
-            bail!(crate::error::TcFftError::BadSize(n));
+            crate::bail!(TcFftError::BadSize(n));
         }
         let inverse = direction == Direction::Inverse;
         let meta = registry
             .find_fft1d(n, batch, algo, inverse)
-            .with_context(|| format!("no fft1d artifact n={n} algo={algo} inverse={inverse}"))?
+            .ok_or_else(|| {
+                TcFftError::NoArtifact(format!("fft1d n={n} algo={algo} inverse={inverse}"))
+            })?
             .clone();
         let plan = Plan {
             radices_1d: digitrev::radix_schedule(n),
@@ -75,13 +76,13 @@ impl Plan {
         direction: Direction,
     ) -> Result<Plan> {
         if !nx.is_power_of_two() || !ny.is_power_of_two() || nx < 2 || ny < 2 {
-            bail!(crate::error::TcFftError::BadSize(nx.max(ny)));
+            crate::bail!(TcFftError::BadSize(nx.max(ny)));
         }
         let inverse = direction == Direction::Inverse;
         let meta = registry
             .find_fft2d(nx, ny, batch, algo, inverse)
-            .with_context(|| {
-                format!("no fft2d artifact {nx}x{ny} algo={algo} inverse={inverse}")
+            .ok_or_else(|| {
+                TcFftError::NoArtifact(format!("fft2d {nx}x{ny} algo={algo} inverse={inverse}"))
             })?
             .clone();
         let plan = Plan {
@@ -110,7 +111,7 @@ impl Plan {
         let mut product: usize = 1;
         for st in &self.meta.stages {
             if !known.contains(&st.kernel.as_str()) {
-                bail!("manifest stage kernel '{}' unknown to planner", st.kernel);
+                crate::bail!("manifest stage kernel '{}' unknown to planner", st.kernel);
             }
             product = product.saturating_mul(st.radix);
         }
@@ -120,7 +121,7 @@ impl Plan {
             self.meta.nx * self.meta.ny
         };
         if product != want {
-            bail!(
+            crate::bail!(
                 "manifest schedule product {product} != transform size {want} for {}",
                 self.meta.key
             );
@@ -137,7 +138,7 @@ impl Plan {
     /// Input shape: [b, n] (1D) or [b, nx, ny] (2D) with any b >= 1.
     pub fn execute(&self, rt: &Runtime, input: PlanarBatch) -> Result<PlanarBatch> {
         let want_tail = &self.meta.input_shape[1..];
-        anyhow::ensure!(
+        crate::ensure!(
             &input.shape[1..] == want_tail,
             "input tail {:?} != plan tail {:?}",
             &input.shape[1..],

@@ -16,6 +16,43 @@ pub struct PlannedStage {
 }
 
 impl PlannedStage {
+    /// Output span of this invocation (radix * n2).
+    pub fn out_len(&self) -> usize {
+        self.radix * self.n2
+    }
+
+    /// Real FLOPs over one length-`n` sequence (mirror of
+    /// plans.py Stage.flops; complex mul = 6, complex add = 2).
+    pub fn flops(&self, n: usize) -> f64 {
+        let groups = (n / self.out_len()) as f64;
+        let n2 = self.n2 as f64;
+        let per_block = match self.kernel {
+            "r16_first" => (16 * 16 * 6 + 16 * 15 * 2) as f64 * n2,
+            "r16" => (16 * 16 * 6 + 16 * 15 * 2) as f64 * n2 + 16.0 * n2 * 6.0,
+            "fused256_first" => (2 * 16 * (16 * 16 * 6 + 16 * 15 * 2) + 16 * 16 * 6) as f64,
+            "merge256" => {
+                let s1 = 16.0 * ((16 * 16 * 6 + 16 * 15 * 2) as f64 * n2 + 16.0 * n2 * 6.0);
+                let s2 = (16 * 16 * 6) as f64 * (16.0 * n2)
+                    + (16 * 15 * 2) as f64 * (16.0 * n2)
+                    + 16.0 * (16.0 * n2) * 6.0;
+                s1 + s2
+            }
+            "small" => {
+                let r = self.radix as f64;
+                r * n2 * 6.0 + r * r * n2 * 6.0 + r * (r - 1.0) * n2 * 2.0
+            }
+            other => panic!("unknown kernel {other}"),
+        };
+        groups * per_block
+    }
+
+    /// Global-memory traffic over one length-`n` sequence (mirror of
+    /// plans.py Stage.hbm_bytes: read + write the sequence once).
+    pub fn hbm_bytes(&self, n: usize) -> f64 {
+        let bpc = 4.0; // planar complex fp16
+        2.0 * n as f64 * bpc
+    }
+
     /// Per-block VMEM bytes (mirror of plans.py Stage.vmem_bytes;
     /// constants follow the perf-pass tile sizes — see EXPERIMENTS.md).
     pub fn vmem_bytes(&self) -> usize {
@@ -82,6 +119,37 @@ pub fn kernel_schedule(n: usize, lane: usize) -> Vec<PlannedStage> {
     stages
 }
 
+/// The paper's performance metric numerator (eq. 4): the FLOPs a
+/// radix-2 FFT of the same size would execute, 6*2*log2(N)*N*batch.
+/// Single source of truth for the CLI, the perf model and the
+/// synthesized registry metadata.
+pub fn radix2_equivalent_flops(n: usize, batch: usize) -> f64 {
+    6.0 * 2.0 * (n as f64).log2() * n as f64 * batch as f64
+}
+
+/// The `tc_split` ablation schedule (mirror of model.py
+/// `split_schedule`): no stage fusion, unfused radix-16 merges.
+pub fn split_schedule(n: usize, lane: usize) -> Vec<PlannedStage> {
+    let radices = crate::fft::digitrev::radix_schedule(n);
+    let a = radices.iter().filter(|&&r| r == 16).count();
+    let mut stages = Vec::new();
+    let mut n2 = 1usize;
+    if a >= 1 {
+        stages.push(PlannedStage { kernel: "r16_first", radix: 16, n2: 1, lane });
+        n2 = 16;
+    }
+    for _ in 1..a {
+        stages.push(PlannedStage { kernel: "r16", radix: 16, n2, lane });
+        n2 *= 16;
+    }
+    for r in radices.iter().copied().filter(|&r| r != 16) {
+        stages.push(PlannedStage { kernel: "small", radix: r, n2, lane });
+        n2 *= r;
+    }
+    assert_eq!(n2, n);
+    stages
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -120,6 +188,28 @@ mod tests {
             let n = 1usize << t;
             let p: usize = kernel_schedule(n, 1).iter().map(|s| s.radix).product();
             assert_eq!(p, n);
+        }
+    }
+
+    #[test]
+    fn split_schedule_is_unfused_and_reconstructs_n() {
+        for t in 1..=20 {
+            let n = 1usize << t;
+            let sts = split_schedule(n, 1);
+            let p: usize = sts.iter().map(|s| s.radix).product();
+            assert_eq!(p, n);
+            assert!(sts.iter().all(|s| s.kernel != "merge256" && s.kernel != "fused256_first"));
+        }
+    }
+
+    #[test]
+    fn flops_positive_and_scale_with_n() {
+        let small = kernel_schedule(256, 1).iter().map(|s| s.flops(256)).sum::<f64>();
+        let big = kernel_schedule(4096, 1).iter().map(|s| s.flops(4096)).sum::<f64>();
+        assert!(small > 0.0);
+        assert!(big > small);
+        for st in kernel_schedule(1 << 16, 1) {
+            assert!(st.hbm_bytes(1 << 16) > 0.0);
         }
     }
 

@@ -13,8 +13,7 @@
 //! recovered — measured gains are therefore bounded, and reported
 //! honestly by `examples`/benches.
 
-use anyhow::Result;
-
+use crate::error::Result;
 use crate::hp::F16;
 use crate::plan::Plan;
 use crate::runtime::{PlanarBatch, Runtime};

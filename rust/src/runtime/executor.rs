@@ -1,7 +1,12 @@
-//! PJRT execution engine: owns the CPU client and the
+//! PJRT execution engine (feature `pjrt`): owns the CPU client and the
 //! compiled-executable cache; executions run directly on the calling
 //! thread (PJRT's CPU client is internally synchronized and supports
 //! concurrent `Execute`), compilation is serialized per artifact.
+//!
+//! NOT compiled by default: the offline toolchain has no `xla` crate.
+//! Enable the `pjrt` cargo feature after vendoring an xla/PJRT binding
+//! (see README "Backends") to execute real AOT HLO artifacts; every
+//! test and example runs against the `CpuInterpreter` backend instead.
 //!
 //! The request path is: HLO text loaded once per artifact
 //! (`HloModuleProto::from_text_file` — text, not serialized proto, see
@@ -26,21 +31,11 @@ use std::path::Path;
 use std::sync::{Mutex, RwLock};
 use std::time::Instant;
 
-use anyhow::{anyhow, Result};
-
 use super::buffers::PlanarBatch;
+use super::registry::VariantMeta;
+use super::{Backend, ExecStats};
+use crate::error::{Result, TcFftError};
 use crate::hp::f16;
-
-/// Execution statistics for one call.
-#[derive(Clone, Copy, Debug, Default)]
-pub struct ExecStats {
-    /// device wall-clock (compile excluded)
-    pub exec_seconds: f64,
-    /// marshalling (f32<->f16 encode/decode + literal construction)
-    pub marshal_seconds: f64,
-    /// true if this call compiled the executable (cold start)
-    pub compiled: bool,
-}
 
 struct ClientBox(xla::PjRtClient);
 // SAFETY: PJRT_Client is thread-safe per the PJRT C API contract; the
@@ -54,7 +49,7 @@ struct ExeBox(xla::PjRtLoadedExecutable);
 unsafe impl Send for ExeBox {}
 unsafe impl Sync for ExeBox {}
 
-/// The execution engine (shared via `Arc` by `Runtime`).
+/// The PJRT execution engine (shared via `Arc` by `Runtime`).
 pub struct Executor {
     client: ClientBox,
     /// compiled executables; RwLock so the hot path is a shared read
@@ -67,17 +62,13 @@ pub struct Executor {
 impl Executor {
     /// Initialize the PJRT CPU client.
     pub fn spawn() -> Result<Executor> {
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT CPU init: {e}"))?;
+        let client =
+            xla::PjRtClient::cpu().map_err(|e| TcFftError::msg(format!("PJRT CPU init: {e}")))?;
         Ok(Executor {
             client: ClientBox(client),
             cache: RwLock::new(HashMap::new()),
             compile_lock: Mutex::new(()),
         })
-    }
-
-    /// Backwards-compatible alias used by callers holding a `Runtime`.
-    pub fn handle(&self) -> &Executor {
-        self
     }
 
     fn lookup(&self, key: &str) -> Option<&'static ExeBox> {
@@ -99,38 +90,33 @@ impl Executor {
         }
         let path = hlo_path
             .to_str()
-            .ok_or_else(|| anyhow!("non-utf8 artifact path"))?;
+            .ok_or_else(|| TcFftError::msg("non-utf8 artifact path"))?;
         let proto = xla::HloModuleProto::from_text_file(path)
-            .map_err(|e| anyhow!("loading HLO text {path}: {e}"))?;
+            .map_err(|e| TcFftError::msg(format!("loading HLO text {path}: {e}")))?;
         let comp = xla::XlaComputation::from_proto(&proto);
         let exe = self
             .client
             .0
             .compile(&comp)
-            .map_err(|e| anyhow!("compiling {key}: {e}"))?;
+            .map_err(|e| TcFftError::msg(format!("compiling {key}: {e}")))?;
         let boxed: &'static ExeBox = Box::leak(Box::new(ExeBox(exe)));
         self.cache.write().unwrap().insert(key.to_string(), boxed);
         Ok(true)
     }
+}
 
-    /// Pre-compile an artifact; returns compile seconds (0 if cached).
-    pub fn warm(&self, key: &str, hlo_path: &Path) -> Result<f64> {
-        let t0 = Instant::now();
-        let fresh = self.ensure_compiled(key, hlo_path)?;
-        Ok(if fresh { t0.elapsed().as_secs_f64() } else { 0.0 })
+impl Backend for Executor {
+    fn name(&self) -> &'static str {
+        "pjrt"
     }
 
     /// Execute: quantizes input to fp16, runs the artifact, returns
     /// planar f32 output of the same shape. Thread-safe; concurrent
     /// calls execute in parallel on the PJRT CPU thread pool.
-    pub fn execute(
-        &self,
-        key: &str,
-        hlo_path: &Path,
-        input: PlanarBatch,
-    ) -> Result<(PlanarBatch, ExecStats)> {
+    fn execute(&self, meta: &VariantMeta, input: PlanarBatch) -> Result<(PlanarBatch, ExecStats)> {
+        let key = &meta.key;
         let mut stats = ExecStats::default();
-        stats.compiled = self.ensure_compiled(key, hlo_path)?;
+        stats.compiled = self.ensure_compiled(key, &meta.file)?;
         let exe = self.lookup(key).expect("just compiled");
 
         // marshal planar f32 -> fp16 literals
@@ -142,13 +128,13 @@ impl Executor {
             dims,
             &re_bytes,
         )
-        .map_err(|e| anyhow!("building re literal: {e}"))?;
+        .map_err(|e| TcFftError::msg(format!("building re literal: {e}")))?;
         let lit_im = xla::Literal::create_from_shape_and_untyped_data(
             xla::ElementType::F16,
             dims,
             &im_bytes,
         )
-        .map_err(|e| anyhow!("building im literal: {e}"))?;
+        .map_err(|e| TcFftError::msg(format!("building im literal: {e}")))?;
         stats.marshal_seconds += tm.elapsed().as_secs_f64();
 
         // execute
@@ -156,27 +142,31 @@ impl Executor {
         let result = exe
             .0
             .execute::<xla::Literal>(&[lit_re, lit_im])
-            .map_err(|e| anyhow!("executing {key}: {e}"))?;
+            .map_err(|e| TcFftError::msg(format!("executing {key}: {e}")))?;
         let out_lit = result[0][0]
             .to_literal_sync()
-            .map_err(|e| anyhow!("fetching result: {e}"))?;
+            .map_err(|e| TcFftError::msg(format!("fetching result: {e}")))?;
         stats.exec_seconds = te.elapsed().as_secs_f64();
 
         // unmarshal: jax lowered with return_tuple=True -> (re, im)
         let tm = Instant::now();
         let (out_re, out_im) = out_lit
             .to_tuple2()
-            .map_err(|e| anyhow!("result is not a 2-tuple: {e}"))?;
+            .map_err(|e| TcFftError::msg(format!("result is not a 2-tuple: {e}")))?;
         let re = literal_f16_to_f32(&out_re)?;
         let im = literal_f16_to_f32(&out_im)?;
         stats.marshal_seconds += tm.elapsed().as_secs_f64();
 
         Ok((PlanarBatch { re, im, shape: input.shape }, stats))
     }
-}
 
-/// Alias kept for API continuity with the actor-based first version.
-pub type ExecutorHandle<'a> = &'a Executor;
+    /// Pre-compile an artifact; returns compile seconds (0 if cached).
+    fn warm(&self, meta: &VariantMeta) -> Result<f64> {
+        let t0 = Instant::now();
+        let fresh = self.ensure_compiled(&meta.key, &meta.file)?;
+        Ok(if fresh { t0.elapsed().as_secs_f64() } else { 0.0 })
+    }
+}
 
 fn literal_f16_to_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
     // Fast path: copy raw fp16 bytes and decode ourselves; fall back to
@@ -190,16 +180,18 @@ fn literal_f16_to_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
                 Err(_) => {
                     let conv = lit
                         .convert(xla::PrimitiveType::F32)
-                        .map_err(|e| anyhow!("f16->f32 convert: {e}"))?;
-                    conv.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e}"))
+                        .map_err(|e| TcFftError::msg(format!("f16->f32 convert: {e}")))?;
+                    conv.to_vec::<f32>()
+                        .map_err(|e| TcFftError::msg(format!("to_vec: {e}")))
                 }
             }
         }
         _ => {
             let conv = lit
                 .convert(xla::PrimitiveType::F32)
-                .map_err(|e| anyhow!("convert: {e}"))?;
-            conv.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e}"))
+                .map_err(|e| TcFftError::msg(format!("convert: {e}")))?;
+            conv.to_vec::<f32>()
+                .map_err(|e| TcFftError::msg(format!("to_vec: {e}")))
         }
     }
 }

@@ -1,33 +1,87 @@
-//! Runtime layer: PJRT execution of AOT artifacts.
+//! Runtime layer: pluggable execution of planned FFT artifacts.
 //!
-//! `Runtime` = artifact `Registry` (manifest metadata) + `Executor`
-//! engine (PJRT client + executable cache; thread-safe, compile-once).
-//! This is the only module that touches the `xla` crate on the request
-//! path; everything above it works with `PlanarBatch` host buffers.
+//! `Runtime` = artifact `Registry` (manifest metadata, or a synthesized
+//! catalog when no artifacts exist on disk) + a [`Backend`] that
+//! executes variants on `PlanarBatch` host buffers.
+//!
+//! Backends:
+//! * [`CpuInterpreter`] (default, always available): executes the
+//!   planner's radix-stage schedules directly in process with fp16
+//!   operands and f32 accumulation — the offline stand-in for the
+//!   paper's Tensor-Core kernels.
+//! * `Executor` (feature `pjrt`, requires a vendored `xla` crate and
+//!   AOT artifacts): compiles and runs the HLO text artifacts through
+//!   a PJRT CPU client.
 
 pub mod buffers;
+#[cfg(feature = "pjrt")]
 pub mod executor;
+pub mod interpreter;
 pub mod registry;
 
 pub use buffers::PlanarBatch;
-pub use executor::{ExecStats, Executor};
+#[cfg(feature = "pjrt")]
+pub use executor::Executor;
+pub use interpreter::CpuInterpreter;
 pub use registry::{Registry, StageMeta, VariantMeta};
 
-use anyhow::Result;
 use std::path::Path;
 use std::sync::Arc;
 
-/// Self-contained runtime: load artifacts, execute by key.
+use crate::error::Result;
+
+/// Execution statistics for one call.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ExecStats {
+    /// backend wall-clock (compile excluded)
+    pub exec_seconds: f64,
+    /// marshalling (f32<->f16 encode/decode + staging)
+    pub marshal_seconds: f64,
+    /// true if this call compiled/built the executable (cold start)
+    pub compiled: bool,
+}
+
+/// An execution engine that can run any registry variant on planar
+/// host buffers. Implementations must be thread-safe: the coordinator
+/// calls `execute` concurrently from its worker pool.
+pub trait Backend: Send + Sync {
+    /// Short backend identifier for logs and metrics.
+    fn name(&self) -> &'static str;
+
+    /// Execute one variant on a planar batch (blocking). The input
+    /// shape has already been validated against `meta.input_shape`.
+    fn execute(&self, meta: &VariantMeta, input: PlanarBatch) -> Result<(PlanarBatch, ExecStats)>;
+
+    /// Pre-compile/build a variant; returns build seconds (0 if cached).
+    fn warm(&self, meta: &VariantMeta) -> Result<f64> {
+        let _ = meta;
+        Ok(0.0)
+    }
+}
+
+/// Self-contained runtime: resolve artifacts, execute by key.
 pub struct Runtime {
     pub registry: Arc<Registry>,
-    executor: Executor,
+    backend: Box<dyn Backend>,
 }
 
 impl Runtime {
+    /// Load from an artifact directory. When `<dir>/manifest.json` is
+    /// missing the registry falls back to the synthesized catalog; the
+    /// backend is the pure-Rust interpreter unless the `pjrt` feature
+    /// is enabled and real artifacts are present.
     pub fn load(artifact_dir: impl AsRef<Path>) -> Result<Runtime> {
-        let registry = Arc::new(Registry::load(artifact_dir)?);
-        let executor = Executor::spawn()?;
-        Ok(Runtime { registry, executor })
+        let dir = artifact_dir.as_ref();
+        #[cfg(feature = "pjrt")]
+        {
+            if dir.join("manifest.json").is_file() {
+                let registry = Arc::new(Registry::load(dir)?);
+                let backend: Box<dyn Backend> = Box::new(Executor::spawn()?);
+                return Ok(Runtime { registry, backend });
+            }
+        }
+        let registry = Arc::new(Registry::load_or_synthesize(dir)?);
+        Ok(Runtime { registry, backend: Box::new(CpuInterpreter::new()) })
     }
 
     /// Default artifact directory: $TCFFT_ARTIFACTS or ./artifacts.
@@ -36,25 +90,60 @@ impl Runtime {
         Self::load(dir)
     }
 
-    pub fn handle(&self) -> &Executor {
-        self.executor.handle()
+    /// Assemble a runtime from explicit parts (tests, custom backends).
+    pub fn with_backend(registry: Arc<Registry>, backend: Box<dyn Backend>) -> Runtime {
+        Runtime { registry, backend }
+    }
+
+    /// The active backend's identifier.
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
     }
 
     /// Execute an artifact by key on a planar batch (blocking).
     pub fn execute(&self, key: &str, input: PlanarBatch) -> Result<(PlanarBatch, ExecStats)> {
         let meta = self.registry.get(key)?;
-        anyhow::ensure!(
+        crate::ensure!(
             input.shape == meta.input_shape,
             "input shape {:?} != artifact shape {:?} for {key}",
             input.shape,
             meta.input_shape
         );
-        self.executor.handle().execute(key, &meta.file, input)
+        self.backend.execute(meta, input)
     }
 
     /// Pre-compile an artifact; returns compile seconds (0 if cached).
     pub fn warm(&self, key: &str) -> Result<f64> {
         let meta = self.registry.get(key)?;
-        self.executor.handle().warm(key, &meta.file)
+        self.backend.warm(meta)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn load_without_artifacts_synthesizes() {
+        let rt = Runtime::load("/definitely/not/a/dir").unwrap();
+        assert!(rt.registry.synthesized);
+        assert_eq!(rt.backend_name(), "cpu-interpreter");
+    }
+
+    #[test]
+    fn execute_checks_shape() {
+        let rt = Runtime::load("/definitely/not/a/dir").unwrap();
+        let bad = PlanarBatch::new(vec![4, 128]);
+        assert!(rt.execute("fft1d_tc_n256_b4_fwd", bad).is_err());
+        assert!(rt.execute("no_such_key", PlanarBatch::new(vec![1, 2])).is_err());
+    }
+
+    #[test]
+    fn warm_by_key() {
+        let rt = Runtime::load("/definitely/not/a/dir").unwrap();
+        let first = rt.warm("fft1d_tc_n256_b4_fwd").unwrap();
+        let second = rt.warm("fft1d_tc_n256_b4_fwd").unwrap();
+        assert!(first >= 0.0);
+        assert_eq!(second, 0.0);
     }
 }

@@ -1,12 +1,20 @@
 //! Artifact registry: parses `artifacts/manifest.json` (written by
 //! `python/compile/aot.py`) into typed variant metadata, and resolves
 //! lookups from logical FFT descriptions to artifact keys.
+//!
+//! When no artifact directory exists (the default offline situation),
+//! [`Registry::synthesize`] builds the same variant catalog the Python
+//! AOT pipeline would emit — stage schedules, cost metadata and keys —
+//! so the pure-Rust interpreter backend can serve every plan without
+//! any files on disk.
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
-use anyhow::{anyhow, bail, Context, Result};
-
+use crate::error::{Result, TcFftError};
+use crate::plan::schedule::{
+    kernel_schedule, radix2_equivalent_flops, split_schedule, PlannedStage,
+};
 use crate::util::json::Json;
 
 /// One merging-kernel invocation inside an artifact (cost metadata).
@@ -60,24 +68,27 @@ impl VariantMeta {
 pub struct Registry {
     pub dir: PathBuf,
     pub variants: BTreeMap<String, VariantMeta>,
+    /// true when the catalog was synthesized in-process rather than
+    /// parsed from an on-disk manifest
+    pub synthesized: bool,
 }
 
 fn req_usize(j: &Json, k: &str) -> Result<usize> {
     j.get(k)
         .and_then(|v| v.as_usize())
-        .ok_or_else(|| anyhow!("manifest: missing/invalid usize field '{k}'"))
+        .ok_or_else(|| TcFftError::msg(format!("manifest: missing/invalid usize field '{k}'")))
 }
 
 fn req_f64(j: &Json, k: &str) -> Result<f64> {
     j.get(k)
         .and_then(|v| v.as_f64())
-        .ok_or_else(|| anyhow!("manifest: missing/invalid f64 field '{k}'"))
+        .ok_or_else(|| TcFftError::msg(format!("manifest: missing/invalid f64 field '{k}'")))
 }
 
 fn req_str(j: &Json, k: &str) -> Result<String> {
     Ok(j.get(k)
         .and_then(|v| v.as_str())
-        .ok_or_else(|| anyhow!("manifest: missing/invalid str field '{k}'"))?
+        .ok_or_else(|| TcFftError::msg(format!("manifest: missing/invalid str field '{k}'")))?
         .to_string())
 }
 
@@ -86,17 +97,31 @@ impl Registry {
     pub fn load(dir: impl AsRef<Path>) -> Result<Registry> {
         let dir = dir.as_ref().to_path_buf();
         let path = dir.join("manifest.json");
-        let text = std::fs::read_to_string(&path)
-            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            TcFftError::msg(format!("reading {path:?} — run `make artifacts` first: {e}"))
+        })?;
         Self::from_json_str(&text, dir)
     }
 
+    /// Load the manifest when present, otherwise fall back to the
+    /// synthesized catalog (the offline default). A manifest that
+    /// exists but fails to parse is an error, not a silent fallback.
+    pub fn load_or_synthesize(dir: impl AsRef<Path>) -> Result<Registry> {
+        let dir = dir.as_ref();
+        if dir.join("manifest.json").is_file() {
+            Self::load(dir)
+        } else {
+            Ok(Self::synthesize())
+        }
+    }
+
     pub fn from_json_str(text: &str, dir: PathBuf) -> Result<Registry> {
-        let root = Json::parse(text).map_err(|e| anyhow!("manifest parse error: {e}"))?;
+        let root = Json::parse(text)
+            .map_err(|e| TcFftError::msg(format!("manifest parse error: {e}")))?;
         let vars = root
             .get("variants")
             .and_then(|v| v.as_arr())
-            .ok_or_else(|| anyhow!("manifest: no 'variants' array"))?;
+            .ok_or_else(|| TcFftError::msg("manifest: no 'variants' array"))?;
         let mut variants = BTreeMap::new();
         for v in vars {
             let stages = v
@@ -129,9 +154,12 @@ impl Registry {
                 input_shape: v
                     .get("input_shape")
                     .and_then(|a| a.as_arr())
-                    .ok_or_else(|| anyhow!("manifest: missing input_shape"))?
+                    .ok_or_else(|| TcFftError::msg("manifest: missing input_shape"))?
                     .iter()
-                    .map(|x| x.as_usize().ok_or_else(|| anyhow!("bad shape entry")))
+                    .map(|x| {
+                        x.as_usize()
+                            .ok_or_else(|| TcFftError::msg("bad shape entry"))
+                    })
                     .collect::<Result<Vec<_>>>()?,
                 stages,
                 flops_per_seq: req_f64(v, "flops_per_seq")?,
@@ -141,15 +169,63 @@ impl Registry {
             variants.insert(meta.key.clone(), meta);
         }
         if variants.is_empty() {
-            bail!("manifest has no variants");
+            crate::bail!("manifest has no variants");
         }
-        Ok(Registry { dir, variants })
+        Ok(Registry { dir, variants, synthesized: false })
+    }
+
+    /// Build the in-process variant catalog: the Python AOT pipeline's
+    /// `variant_matrix()` plus a full 1D power-of-two ladder so the
+    /// conformance suite can exercise every size 2^1..=2^17 in both
+    /// directions without any artifacts on disk.
+    pub fn synthesize() -> Registry {
+        let dir = PathBuf::from("<synthesized>");
+        let mut variants = BTreeMap::new();
+        let mut add = |m: VariantMeta| {
+            variants.insert(m.key.clone(), m);
+        };
+
+        // full 1D ladder: tc forward + inverse at batch 4
+        for t in 1..=17usize {
+            let n = 1usize << t;
+            add(synth_fft1d(&dir, "tc", n, 4, false));
+            add(synth_fft1d(&dir, "tc", n, 4, true));
+        }
+        // 1D perf/precision ladder (Fig 4, Table 4): r2 baseline
+        for n in [256usize, 1024, 4096, 16384, 65536, 131072] {
+            add(synth_fft1d(&dir, "r2", n, 4, false));
+        }
+        // ablation variants (Sec 5.4 "Optimized TC")
+        for n in [4096usize, 65536] {
+            add(synth_fft1d(&dir, "tc_split", n, 4, false));
+        }
+        // batch sweep at 131072 points (Fig 7a)
+        for b in [1usize, 2, 8, 16] {
+            add(synth_fft1d(&dir, "tc", 131072, b, false));
+        }
+        // four-step large-FFT building block: 1024-point with batch 32
+        add(synth_fft1d(&dir, "tc", 1024, 32, false));
+        add(synth_fft1d(&dir, "tc", 1024, 32, true));
+        // 2D shapes (Fig 5, Table 4)
+        for (nx, ny) in [(128usize, 128usize), (256, 256), (256, 512), (512, 256), (512, 512)] {
+            add(synth_fft2d(&dir, "tc", nx, ny, 2, false));
+        }
+        add(synth_fft2d(&dir, "tc", 256, 256, 2, true));
+        add(synth_fft2d(&dir, "r2", 256, 256, 2, false));
+        add(synth_fft2d(&dir, "r2", 512, 256, 2, false));
+        add(synth_fft2d(&dir, "tc_split", 512, 256, 2, false));
+        // batch sweep 2D 512x256 (Fig 7b)
+        for b in [1usize, 4, 8] {
+            add(synth_fft2d(&dir, "tc", 512, 256, b, false));
+        }
+
+        Registry { dir, variants, synthesized: true }
     }
 
     pub fn get(&self, key: &str) -> Result<&VariantMeta> {
-        self.variants
-            .get(key)
-            .ok_or_else(|| anyhow!("no artifact '{key}' (have {})", self.variants.len()))
+        self.variants.get(key).ok_or_else(|| {
+            TcFftError::NoArtifact(format!("'{key}' (have {})", self.variants.len()))
+        })
     }
 
     /// All variants matching a predicate.
@@ -194,7 +270,11 @@ impl Registry {
             .variants
             .values()
             .filter(|v| {
-                v.op == "fft2d" && v.nx == nx && v.ny == ny && v.algo == algo && v.inverse == inverse
+                v.op == "fft2d"
+                    && v.nx == nx
+                    && v.ny == ny
+                    && v.algo == algo
+                    && v.inverse == inverse
             })
             .collect();
         candidates.sort_by_key(|v| v.batch);
@@ -203,6 +283,128 @@ impl Registry {
             .find(|v| v.batch >= batch)
             .copied()
             .or_else(|| candidates.last().copied())
+    }
+}
+
+fn stage_meta_from_planned(st: &PlannedStage, n_axis: usize) -> StageMeta {
+    StageMeta {
+        kernel: st.kernel.to_string(),
+        radix: st.radix,
+        n2: st.n2,
+        lane: st.lane,
+        flops: st.flops(n_axis) * st.lane as f64,
+        hbm_bytes: st.hbm_bytes(n_axis) * st.lane as f64,
+        vmem_bytes: st.vmem_bytes() as f64,
+    }
+}
+
+/// Stage list for one staged axis (mirror of aot.py Variant.stages).
+fn synth_axis_stages(algo: &str, n_axis: usize, lane: usize) -> Vec<StageMeta> {
+    let planned = if algo == "tc_split" {
+        split_schedule(n_axis, lane)
+    } else {
+        kernel_schedule(n_axis, lane)
+    };
+    planned
+        .iter()
+        .map(|s| stage_meta_from_planned(s, n_axis))
+        .collect()
+}
+
+/// Stockham radix-2 baseline stage list (mirror of aot.py for algo "r2").
+fn synth_r2_stages(total: usize) -> Vec<StageMeta> {
+    let log2 = total.trailing_zeros() as usize;
+    (0..log2)
+        .map(|s| StageMeta {
+            kernel: "stockham2".to_string(),
+            radix: 2,
+            n2: 1usize << s,
+            lane: 1,
+            flops: 10.0 * total as f64,
+            hbm_bytes: 8.0 * total as f64,
+            vmem_bytes: 0.0,
+        })
+        .collect()
+}
+
+fn synth_key(
+    op: &str,
+    algo: &str,
+    n: usize,
+    nx: usize,
+    ny: usize,
+    batch: usize,
+    inverse: bool,
+) -> String {
+    let d = if inverse { "inv" } else { "fwd" };
+    if op == "fft1d" {
+        format!("fft1d_{algo}_n{n}_b{batch}_{d}")
+    } else {
+        format!("fft2d_{algo}_nx{nx}x{ny}_b{batch}_{d}")
+    }
+}
+
+fn synth_fft1d(dir: &Path, algo: &str, n: usize, batch: usize, inverse: bool) -> VariantMeta {
+    let key = synth_key("fft1d", algo, n, 0, 0, batch, inverse);
+    let stages = if algo == "r2" {
+        synth_r2_stages(n)
+    } else {
+        synth_axis_stages(algo, n, 1)
+    };
+    let flops_per_seq: f64 = stages.iter().map(|s| s.flops).sum();
+    let hbm_bytes_per_seq: f64 = stages.iter().map(|s| s.hbm_bytes).sum();
+    VariantMeta {
+        file: dir.join(format!("{key}.hlo.txt")),
+        key,
+        op: "fft1d".to_string(),
+        algo: algo.to_string(),
+        n,
+        nx: 0,
+        ny: 0,
+        batch,
+        inverse,
+        input_shape: vec![batch, n],
+        stages,
+        flops_per_seq,
+        hbm_bytes_per_seq,
+        radix2_equiv_flops: radix2_equivalent_flops(n, batch),
+    }
+}
+
+fn synth_fft2d(
+    dir: &Path,
+    algo: &str,
+    nx: usize,
+    ny: usize,
+    batch: usize,
+    inverse: bool,
+) -> VariantMeta {
+    let key = synth_key("fft2d", algo, 0, nx, ny, batch, inverse);
+    let stages = if algo == "r2" {
+        synth_r2_stages(nx * ny)
+    } else {
+        // contiguous ny pass first, then the strided nx pass (lane=ny)
+        let mut st = synth_axis_stages(algo, ny, 1);
+        st.extend(synth_axis_stages(algo, nx, ny));
+        st
+    };
+    let flops_per_seq: f64 = stages.iter().map(|s| s.flops).sum();
+    let hbm_bytes_per_seq: f64 = stages.iter().map(|s| s.hbm_bytes).sum();
+    VariantMeta {
+        file: dir.join(format!("{key}.hlo.txt")),
+        key,
+        op: "fft2d".to_string(),
+        algo: algo.to_string(),
+        n: 0,
+        nx,
+        ny,
+        batch,
+        inverse,
+        input_shape: vec![batch, nx, ny],
+        stages,
+        flops_per_seq,
+        hbm_bytes_per_seq,
+        radix2_equiv_flops: radix2_equivalent_flops(nx * ny, batch),
     }
 }
 
@@ -231,6 +433,7 @@ mod tests {
     fn parses_and_indexes() {
         let r = Registry::from_json_str(MINI, PathBuf::from("/tmp")).unwrap();
         assert_eq!(r.variants.len(), 2);
+        assert!(!r.synthesized);
         let v = r.get("fft1d_tc_n256_b4_fwd").unwrap();
         assert_eq!(v.batch, 4);
         assert_eq!(v.stages.len(), 1);
@@ -255,5 +458,54 @@ mod tests {
         assert!(Registry::from_json_str("{}", PathBuf::from("/tmp")).is_err());
         assert!(Registry::from_json_str("{\"variants\": []}", PathBuf::from("/tmp")).is_err());
         assert!(Registry::from_json_str("not json", PathBuf::from("/tmp")).is_err());
+    }
+
+    #[test]
+    fn synthesized_catalog_covers_the_aot_matrix() {
+        let r = Registry::synthesize();
+        assert!(r.synthesized);
+        // keys used by benches, examples and the integration suites
+        for key in [
+            "fft1d_tc_n256_b4_fwd",
+            "fft1d_tc_n1024_b4_fwd",
+            "fft1d_tc_n1024_b32_fwd",
+            "fft1d_tc_n4096_b4_fwd",
+            "fft1d_tc_n4096_b4_inv",
+            "fft1d_r2_n4096_b4_fwd",
+            "fft1d_tc_split_n4096_b4_fwd",
+            "fft1d_tc_n65536_b4_fwd",
+            "fft1d_tc_n131072_b1_fwd",
+            "fft1d_tc_n131072_b16_fwd",
+            "fft2d_tc_nx128x128_b2_fwd",
+            "fft2d_tc_nx256x256_b2_fwd",
+            "fft2d_tc_nx256x256_b2_inv",
+            "fft2d_r2_nx256x256_b2_fwd",
+            "fft2d_tc_nx512x256_b2_fwd",
+            "fft2d_r2_nx512x256_b2_fwd",
+            "fft2d_tc_nx512x512_b2_fwd",
+        ] {
+            assert!(r.variants.contains_key(key), "missing {key}");
+        }
+        // the full forward+inverse tc ladder
+        for t in 1..=17usize {
+            let n = 1usize << t;
+            assert!(r.find_fft1d(n, 1, "tc", false).is_some(), "no fwd n={n}");
+            assert!(r.find_fft1d(n, 1, "tc", true).is_some(), "no inv n={n}");
+        }
+        // no catalog entry above 2^17 (tests rely on this failing)
+        assert!(r.find_fft1d(1 << 20, 1, "tc", false).is_none());
+    }
+
+    #[test]
+    fn synthesized_stages_reconstruct_sizes() {
+        let r = Registry::synthesize();
+        for v in r.variants.values() {
+            if v.algo == "r2" {
+                continue; // baseline carries a stockham schedule
+            }
+            let product: usize = v.stages.iter().map(|s| s.radix).product();
+            assert_eq!(product, v.seq_len(), "key {}", v.key);
+            assert!(v.flops_per_seq > 0.0, "key {}", v.key);
+        }
     }
 }

@@ -1,6 +1,9 @@
-//! Integration tests over real AOT artifacts: registry -> plan ->
-//! execute -> verify against the host f64 oracles.  Requires `make
-//! artifacts` to have run (skips gracefully otherwise).
+//! Integration tests of the runtime: registry -> plan -> execute ->
+//! verify against the host f64 oracles.  Runs against the default
+//! backend: the pure-Rust interpreter over the synthesized catalog, so
+//! no artifacts on disk are required.
+
+use std::sync::OnceLock;
 
 use tcfft::error::relative_error;
 use tcfft::fft::{mixed, radix2};
@@ -9,19 +12,11 @@ use tcfft::plan::{Direction, Plan};
 use tcfft::runtime::{PlanarBatch, Runtime};
 use tcfft::workload::random_signal;
 
-use once_cell::sync::Lazy;
-
-// One shared runtime per test binary: PJRT compiles each artifact once.
-static RT: Lazy<Option<Runtime>> = Lazy::new(|| match Runtime::load_default() {
-    Ok(rt) => Some(rt),
-    Err(e) => {
-        eprintln!("skipping integration tests (no artifacts): {e}");
-        None
-    }
-});
-
-fn runtime() -> Option<&'static Runtime> {
-    RT.as_ref()
+// One shared runtime per test binary: the backend builds each staged
+// pipeline once.
+fn runtime() -> &'static Runtime {
+    static RT: OnceLock<Runtime> = OnceLock::new();
+    RT.get_or_init(|| Runtime::load_default().expect("runtime must load without artifacts"))
 }
 
 fn widen(x: &[C32]) -> Vec<C64> {
@@ -30,7 +25,7 @@ fn widen(x: &[C32]) -> Vec<C64> {
 
 #[test]
 fn fft1d_256_matches_oracle() {
-    let Some(rt) = runtime() else { return };
+    let rt = runtime();
     let plan = Plan::fft1d(&rt.registry, 256, 4).unwrap();
     let x: Vec<C32> = (0..4).flat_map(|b| random_signal(256, b as u64)).collect();
     let input = PlanarBatch::from_complex(&x, vec![4, 256]);
@@ -42,7 +37,7 @@ fn fft1d_256_matches_oracle() {
 
 #[test]
 fn fft1d_all_algos_agree() {
-    let Some(rt) = runtime() else { return };
+    let rt = runtime();
     let n = 4096;
     let x: Vec<C32> = (0..4).flat_map(|b| random_signal(n, 7 + b as u64)).collect();
     let input = PlanarBatch::from_complex(&x, vec![4, n]);
@@ -60,7 +55,7 @@ fn fft1d_all_algos_agree() {
 
 #[test]
 fn batch_padding_and_splitting() {
-    let Some(rt) = runtime() else { return };
+    let rt = runtime();
     // artifact batch is 4; drive it with 1, 3, 5 and 9 rows
     let n = 1024;
     let plan = Plan::fft1d(&rt.registry, n, 4).unwrap();
@@ -78,7 +73,7 @@ fn batch_padding_and_splitting() {
 
 #[test]
 fn inverse_round_trip_1d() {
-    let Some(rt) = runtime() else { return };
+    let rt = runtime();
     let n = 4096;
     let fwd = Plan::fft1d(&rt.registry, n, 4).unwrap();
     let inv = Plan::fft1d_algo(&rt.registry, n, 4, "tc", Direction::Inverse).unwrap();
@@ -98,7 +93,7 @@ fn inverse_round_trip_1d() {
 
 #[test]
 fn fft2d_matches_host_fft2() {
-    let Some(rt) = runtime() else { return };
+    let rt = runtime();
     let (nx, ny) = (128, 128);
     let plan = Plan::fft2d(&rt.registry, nx, ny, 2).unwrap();
     let x: Vec<C32> = (0..2).flat_map(|b| random_signal(nx * ny, b as u64)).collect();
@@ -117,7 +112,7 @@ fn fft2d_matches_host_fft2() {
 
 #[test]
 fn linearity_through_the_device() {
-    let Some(rt) = runtime() else { return };
+    let rt = runtime();
     // FFT(a + b) == FFT(a) + FFT(b) within fp16 tolerance
     let n = 1024;
     let plan = Plan::fft1d(&rt.registry, n, 4).unwrap();
@@ -138,14 +133,16 @@ fn linearity_through_the_device() {
 
 #[test]
 fn registry_rejects_missing_artifacts() {
-    let Some(rt) = runtime() else { return };
-    assert!(Plan::fft1d(&rt.registry, 2048, 4).is_err()); // size not built
+    let rt = runtime();
+    // the synthesized 1D ladder stops at 2^17
+    assert!(Plan::fft1d(&rt.registry, 1 << 20, 4).is_err()); // size not built
     assert!(Plan::fft1d_algo(&rt.registry, 256, 4, "nonsense", Direction::Forward).is_err());
+    assert!(Plan::fft1d(&rt.registry, 100, 1).is_err()); // not a power of two
 }
 
 #[test]
 fn exec_stats_reported() {
-    let Some(rt) = runtime() else { return };
+    let rt = runtime();
     let key = "fft1d_tc_n256_b4_fwd";
     let x: Vec<C32> = (0..4).flat_map(|b| random_signal(256, b as u64)).collect();
     let input = PlanarBatch::from_complex(&x, vec![4, 256]);
@@ -158,7 +155,7 @@ fn exec_stats_reported() {
 
 #[test]
 fn precision_recovery_reduces_error() {
-    let Some(rt) = runtime() else { return };
+    let rt = runtime();
     // paper future-work #2: hi/lo split recovers input-quantization
     // error; internal fp16 rounding remains, so expect a measurable
     // (not order-of-magnitude) improvement.
@@ -179,7 +176,7 @@ fn precision_recovery_reduces_error() {
 
 #[test]
 fn four_step_composition_matches_oracle() {
-    let Some(rt) = runtime() else { return };
+    let rt = runtime();
     // paper Sec 3.1: large FFTs composed from basic kernels
     let n = 1 << 16; // 256 x 256 over the available artifacts
     let plan = tcfft::large::FourStepPlan::new(rt, n, false).unwrap();
@@ -200,7 +197,7 @@ fn four_step_composition_matches_oracle() {
 
 #[test]
 fn warm_reports_compile_time_once() {
-    let Some(rt) = runtime() else { return };
+    let rt = runtime();
     let key = "fft1d_tc_n1024_b4_fwd";
     let first = rt.warm(key).unwrap();
     let second = rt.warm(key).unwrap();

@@ -1,7 +1,8 @@
 //! Integration tests of the coordinator: batching, routing, metrics,
-//! backpressure, TCP server — over real artifacts.
+//! backpressure, TCP server — over the interpreter backend (no
+//! artifacts on disk required).
 
-use std::sync::Arc;
+use std::sync::{Arc, OnceLock};
 use std::time::Duration;
 
 use tcfft::coordinator::{FftRequest, FftService, Op, Server, ServiceConfig};
@@ -12,28 +13,23 @@ use tcfft::plan::Direction;
 use tcfft::runtime::{PlanarBatch, Runtime};
 use tcfft::workload::random_signal;
 
-use once_cell::sync::Lazy;
-
 // One shared runtime across the binary; each test builds its own
-// service on top (cheap) while PJRT executables compile once.
-static RT: Lazy<Option<Arc<Runtime>>> = Lazy::new(|| match Runtime::load_default() {
-    Ok(rt) => Some(Arc::new(rt)),
-    Err(e) => {
-        eprintln!("skipping service tests (no artifacts): {e}");
-        None
-    }
-});
-
-fn service() -> Option<Arc<FftService>> {
-    RT.as_ref().map(|rt| {
-        Arc::new(FftService::start(
-            Arc::clone(rt),
-            ServiceConfig {
-                max_wait: Duration::from_millis(2),
-                ..ServiceConfig::default()
-            },
-        ))
+// service on top (cheap) while staged pipelines build once.
+fn shared_runtime() -> &'static Arc<Runtime> {
+    static RT: OnceLock<Arc<Runtime>> = OnceLock::new();
+    RT.get_or_init(|| {
+        Arc::new(Runtime::load_default().expect("runtime must load without artifacts"))
     })
+}
+
+fn service() -> Arc<FftService> {
+    Arc::new(FftService::start(
+        Arc::clone(shared_runtime()),
+        ServiceConfig {
+            max_wait: Duration::from_millis(2),
+            ..ServiceConfig::default()
+        },
+    ))
 }
 
 fn widen(x: &[C32]) -> Vec<C64> {
@@ -42,7 +38,7 @@ fn widen(x: &[C32]) -> Vec<C64> {
 
 #[test]
 fn concurrent_requests_batch_and_return_correct_rows() {
-    let Some(svc) = service() else { return };
+    let svc = service();
     let n = 1024;
     // submit 8 distinct sequences concurrently; the batcher groups them
     // into artifact-batch-4 executions; each reply must match ITS row
@@ -78,7 +74,7 @@ fn concurrent_requests_batch_and_return_correct_rows() {
 
 #[test]
 fn mixed_op_routing() {
-    let Some(svc) = service() else { return };
+    let svc = service();
     // 1D and 2D requests in flight together route to different queues
     let sig1 = random_signal(1024, 1);
     let sig2 = random_signal(256 * 256, 2);
@@ -105,21 +101,23 @@ fn mixed_op_routing() {
 
 #[test]
 fn unknown_size_fails_fast() {
-    let Some(svc) = service() else { return };
-    let sig = random_signal(2048, 3);
+    let svc = service();
+    // the synthesized ladder stops at 2^17; 2^20 has no artifact
+    let n = 1 << 20;
+    let sig = random_signal(n, 3);
     let r = svc.submit(FftRequest {
-        op: Op::Fft1d { n: 2048 },
+        op: Op::Fft1d { n },
         algo: "tc".into(),
         direction: Direction::Forward,
-        input: PlanarBatch::from_complex(&sig, vec![2048]),
+        input: PlanarBatch::from_complex(&sig, vec![n]),
     });
-    assert!(r.is_err(), "2048 has no artifact; submit must fail");
+    assert!(r.is_err(), "2^20 has no artifact; submit must fail");
     svc.shutdown();
 }
 
 #[test]
 fn blocking_helper_preserves_order() {
-    let Some(svc) = service() else { return };
+    let svc = service();
     let n = 1024;
     let x: Vec<C32> = (0..3).flat_map(|b| random_signal(n, 60 + b as u64)).collect();
     let input = PlanarBatch::from_complex(&x, vec![3, n]);
@@ -135,7 +133,7 @@ fn blocking_helper_preserves_order() {
 
 #[test]
 fn tcp_server_round_trip() {
-    let Some(svc) = service() else { return };
+    let svc = service();
     let server = Server::bind("127.0.0.1:0", Arc::clone(&svc)).unwrap();
     let addr = server.local_addr().unwrap();
     let stop = server.stop_handle();
@@ -183,9 +181,8 @@ fn tcp_server_round_trip() {
 
 #[test]
 fn backpressure_rejects_when_queue_full() {
-    let Some(rt) = RT.as_ref() else { return };
     let svc = Arc::new(FftService::start(
-        Arc::clone(rt),
+        Arc::clone(shared_runtime()),
         ServiceConfig {
             max_wait: Duration::from_secs(3600), // never deadline-flush
             max_queue: 2,

@@ -153,6 +153,120 @@ fn prop_json_round_trip_arbitrary_trees() {
 }
 
 #[test]
+fn prop_f16_exhaustive_finite_round_trip() {
+    // EVERY finite bit pattern (normals AND subnormals) must survive
+    // decode -> encode exactly; NaNs must stay NaN.
+    for bits in 0u16..=0xFFFF {
+        let h = F16::from_bits(bits);
+        if h.is_nan() {
+            assert!(F16::from_f32(h.to_f32()).is_nan(), "bits {bits:#06x}");
+        } else {
+            assert_eq!(F16::from_f32(h.to_f32()).to_bits(), bits, "bits {bits:#06x}");
+        }
+    }
+}
+
+#[test]
+fn prop_f16_subnormal_round_trip_through_f64() {
+    // subnormal range: 2^-24 .. 2^-14; exact f64 representations of
+    // every subnormal must encode back to the same pattern
+    for bits in 1u16..0x0400 {
+        let h = F16::from_bits(bits);
+        assert!(h.is_finite());
+        let wide = h.to_f64();
+        assert!(wide > 0.0 && wide < 6.104e-5, "bits {bits:#06x} -> {wide}");
+        assert_eq!(F16::from_f64(wide).to_bits(), bits, "bits {bits:#06x}");
+    }
+}
+
+#[test]
+fn prop_f16_round_to_nearest_even_at_mantissa_boundary() {
+    // For every normal fp16 value h with even mantissa, h + half-ulp is
+    // an exact tie and must round DOWN to h (ties-to-even); with odd
+    // mantissa it must round UP to the next (even) pattern.  Scan a
+    // spread of exponents across the normal range.
+    let mut rng = SplitMix64::new(88);
+    for case in 0..CASES {
+        let exp = 1 + rng.below(29) as u16; // biased exponent, normal range
+        let mant = (rng.next_u64() & 0x3FF) as u16;
+        let bits = (exp << 10) | mant;
+        let h = F16::from_bits(bits);
+        let next = F16::from_bits(bits + 1);
+        if next.is_infinite() {
+            continue; // h is MAX at this exponent path end
+        }
+        let tie = (h.to_f64() + next.to_f64()) * 0.5; // exact in f64
+        let rounded = F16::from_f64(tie).to_bits();
+        let want = if mant & 1 == 0 { bits } else { bits + 1 };
+        assert_eq!(rounded, want, "case {case}: bits {bits:#06x} tie {tie}");
+        // just above / below the tie must round toward the nearer value
+        let ulp = next.to_f64() - h.to_f64();
+        assert_eq!(F16::from_f64(tie - 0.26 * ulp).to_bits(), bits, "case {case}");
+        assert_eq!(F16::from_f64(tie + 0.26 * ulp).to_bits(), bits + 1, "case {case}");
+    }
+}
+
+#[test]
+fn prop_twiddle_conjugate_symmetry() {
+    // inverse tables are exact conjugates of forward tables
+    let mut rng = SplitMix64::new(99);
+    for _ in 0..40 {
+        let r = 1usize << (1 + rng.below(4)); // 2..16
+        let n2 = 1usize << rng.below(7); // 1..64
+        let fwd = tcfft::fft::twiddle::twiddle_matrix(r, n2, false);
+        let inv = tcfft::fft::twiddle::twiddle_matrix(r, n2, true);
+        for m in 0..r {
+            for k in 0..n2 {
+                assert!((fwd[m][k].conj() - inv[m][k]).abs() < 1e-12, "({m},{k})");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_twiddle_periodicity_and_group_structure() {
+    // W_N^{m k} depends only on (m*k) mod N: the table equals the
+    // direct cis form, first row/col are 1, and the N/2 offset negates
+    let mut rng = SplitMix64::new(111);
+    for _ in 0..40 {
+        let r = 1usize << (1 + rng.below(4));
+        let n2 = 1usize << (1 + rng.below(6));
+        let n = r * n2;
+        let t = tcfft::fft::twiddle::twiddle_matrix(r, n2, false);
+        for _ in 0..20 {
+            let m = rng.below(r);
+            let k = rng.below(n2);
+            let direct =
+                C64::cis(-2.0 * std::f64::consts::PI * ((m * k) % n) as f64 / n as f64);
+            assert!((t[m][k] - direct).abs() < 1e-12, "({m},{k}) of {r}x{n2}");
+        }
+        for k in 0..n2 {
+            assert!((t[0][k] - C64::one()).abs() < 1e-12);
+        }
+        // unit magnitude everywhere (pure rotations)
+        for row in &t {
+            for w in row {
+                assert!((w.abs() - 1.0).abs() < 1e-12);
+            }
+        }
+    }
+    // explicit periodicity/negation on a full-resolution table: r = N
+    let n = 32;
+    let full = tcfft::fft::twiddle::dft_matrix(n, false);
+    for m in 0..n {
+        for j in 0..n {
+            let wrapped = full[m][j];
+            let direct = full[1][(m * j) % n];
+            assert!((wrapped - direct).abs() < 1e-12, "periodicity ({m},{j})");
+        }
+    }
+    for j in 0..n {
+        let neg = full[1][(j + n / 2) % n];
+        assert!((full[1][j] + neg).abs() < 1e-12, "half-period negation {j}");
+    }
+}
+
+#[test]
 fn prop_four_step_twiddles_match_direct() {
     let mut rng = SplitMix64::new(77);
     for _ in 0..40 {
