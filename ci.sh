@@ -1,20 +1,55 @@
 #!/usr/bin/env bash
 # CI entry point: build + test + lint on the default (offline) feature
-# set. Everything here must pass with no network and no artifacts on
-# disk — the interpreter backend serves the synthesized catalog.
+# set, plus a short smoke-bench that regenerates and validates
+# BENCH_interp.json. Everything here must pass with no network and no
+# artifacts on disk — the interpreter backend serves the synthesized
+# catalog.
+#
+#   ./ci.sh              # everything (core + bench-smoke)
+#   ./ci.sh core         # build + test + fmt + clippy only
+#   ./ci.sh bench-smoke  # capped-iteration benches + JSON validation
 set -euo pipefail
 cd "$(dirname "$0")"
 
-echo "== cargo build --release =="
-cargo build --release
+core() {
+  echo "== cargo build --release =="
+  cargo build --release
 
-echo "== cargo test -q =="
-cargo test -q
+  echo "== cargo test -q =="
+  cargo test -q
 
-echo "== cargo fmt --check =="
-cargo fmt --check
+  echo "== cargo fmt --check =="
+  cargo fmt --check
 
-echo "== cargo clippy -- -D warnings =="
-cargo clippy --all-targets -- -D warnings
+  echo "== cargo clippy -- -D warnings =="
+  cargo clippy --all-targets -- -D warnings
+}
+
+bench_smoke() {
+  echo "== smoke bench: fig4_1d + fig7_batch (TCFFT_BENCH_SMOKE=1) =="
+  # start from a clean slate so bench-validate proves the benches
+  # emitted fresh entries (update_bench_json merges into existing files)
+  rm -f BENCH_interp.json
+  TCFFT_BENCH_SMOKE=1 cargo bench --bench fig4_1d
+  TCFFT_BENCH_SMOKE=1 cargo bench --bench fig7_batch
+
+  echo "== bench-validate BENCH_interp.json =="
+  # no --file: benches and validator share the cwd-independent default
+  # (<workspace-root>/BENCH_interp.json, from CARGO_MANIFEST_DIR)
+  cargo run --release -- bench-validate
+}
+
+case "${1:-all}" in
+  core) core ;;
+  bench-smoke) bench_smoke ;;
+  all)
+    core
+    bench_smoke
+    ;;
+  *)
+    echo "usage: $0 [core|bench-smoke|all]" >&2
+    exit 2
+    ;;
+esac
 
 echo "ci: OK"

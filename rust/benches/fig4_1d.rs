@@ -1,24 +1,62 @@
 //! Bench: regenerate paper Fig 4 — 1D FFT performance across sizes on
 //! V100 and A100.
 //!
-//! Two parts:
+//! Three parts:
 //!  1. MODEL: radix-2-equivalent TFLOPS for tcFFT / unoptimized-TC /
 //!     cuFFT-half over 2^8..2^27 on both GPUs (the figure's series).
 //!  2. MEASURED (CPU interpret substrate): wall-clock of the real AOT
 //!     artifacts, tc vs r2 baseline, which validates the *relative*
 //!     algorithm structure this testbed can observe.
+//!  3. ENGINE: the batch-major fused parallel engine vs the pre-PR
+//!     row-major reference interpreter; medians land in
+//!     `BENCH_interp.json` (headline: n=4096 batch=32, 4 threads).
 //!
 //!     cargo bench --bench fig4_1d
+//!     TCFFT_BENCH_SMOKE=1 cargo bench --bench fig4_1d   # CI smoke
+//!
+//! Parts 2 and 3 honor TCFFT_BENCH_SMOKE (reduced matrix, capped
+//! iterations) while still emitting the JSON entries CI validates.
 
-use tcfft::bench_harness::{bench, header};
+use tcfft::bench_harness::{bench, bench_entry, header, smoke, update_bench_json};
 use tcfft::perfmodel::{figures as f, GpuSpec};
 use tcfft::plan::{Direction, Plan};
-use tcfft::runtime::{PlanarBatch, Runtime};
+use tcfft::runtime::{
+    Backend, CpuInterpreter, PlanarBatch, ReferenceInterpreter, Runtime, VariantMeta,
+};
+use tcfft::util::json::Json;
 use tcfft::util::table::Table;
 use tcfft::workload::random_signal;
 
+/// Headline thread count recorded in BENCH_interp.json.
+const ENGINE_THREADS: usize = 4;
+
+/// Bench-local 1D forward-tc descriptor. The synthesized catalog
+/// deliberately has no b=32 tier at n=4096 (adding one would flip
+/// `find_fft1d` from split-over-b4 to pad-to-32 for serving requests
+/// with batch 5..=31), so the engine-vs-reference comparison builds
+/// its variant metadata here instead of polluting the registry.
+fn bench_meta_1d_tc(key: &str, n: usize, batch: usize) -> VariantMeta {
+    VariantMeta {
+        key: key.to_string(),
+        file: std::path::PathBuf::new(),
+        op: "fft1d".to_string(),
+        algo: "tc".to_string(),
+        n,
+        nx: 0,
+        ny: 0,
+        batch,
+        inverse: false,
+        input_shape: vec![batch, n],
+        stages: Vec::new(),
+        flops_per_seq: 0.0,
+        hbm_bytes_per_seq: 0.0,
+        radix2_equiv_flops: 0.0,
+    }
+}
+
 fn main() -> tcfft::error::Result<()> {
     header("Fig 4: 1D FFT performance of different sizes");
+    let iters = if smoke() { 3 } else { 12 };
 
     // ---- part 1: modelled series (the paper's figure) ----
     let v100 = GpuSpec::v100();
@@ -33,8 +71,9 @@ fn main() -> tcfft::error::Result<()> {
 
     // ---- part 2: measured artifacts on the CPU substrate ----
     let rt = Runtime::load_default()?;
+    let sizes: &[usize] = if smoke() { &[256, 4096] } else { &[256, 1024, 4096, 16384, 65536] };
     let mut t = Table::new(&["n", "tc median ms", "r2 median ms", "tc/r2 (CPU)"]);
-    for n in [256usize, 1024, 4096, 16384, 65536] {
+    for &n in sizes {
         let mut med = Vec::new();
         for algo in ["tc", "r2"] {
             let plan = Plan::fft1d_algo(&rt.registry, n, 4, algo, Direction::Forward)?;
@@ -46,7 +85,7 @@ fn main() -> tcfft::error::Result<()> {
                 || {
                     plan.execute(&rt, input.clone()).unwrap();
                 },
-                12,
+                iters,
             );
             med.push(r.summary.median());
         }
@@ -58,6 +97,67 @@ fn main() -> tcfft::error::Result<()> {
         ]);
     }
     println!("measured on CPU-PJRT (interpret substrate; relative only):\n{}", t.render());
+
+    // ---- part 3: batch-major engine vs the pre-PR reference ----
+    // (n, batch) shapes; the first is the acceptance headline
+    let shapes: &[(usize, usize)] =
+        if smoke() { &[(4096, 32)] } else { &[(4096, 32), (1024, 32), (16384, 4)] };
+    let mut entries: Vec<(String, Json)> = Vec::new();
+    let mut te = Table::new(&["key", "reference ms", "engine 1t ms", "engine 4t ms", "speedup"]);
+    for &(n, b) in shapes {
+        let key = format!("fft1d_tc_n{n}_b{b}_fwd");
+        let meta = bench_meta_1d_tc(&key, n, b);
+        let x: Vec<_> = (0..b).flat_map(|i| random_signal(n, i as u64)).collect();
+        let input = PlanarBatch::from_complex(&x, vec![b, n]);
+
+        let reference = ReferenceInterpreter::new();
+        let serial = CpuInterpreter::with_threads(1);
+        let parallel = CpuInterpreter::with_threads(ENGINE_THREADS);
+        reference.execute(&meta, input.clone())?; // warm all three
+        serial.execute(&meta, input.clone())?;
+        parallel.execute(&meta, input.clone())?;
+
+        let r_ref = bench(
+            &format!("{key} reference"),
+            || {
+                reference.execute(&meta, input.clone()).unwrap();
+            },
+            iters,
+        );
+        let r_ser = bench(
+            &format!("{key} engine 1t"),
+            || {
+                serial.execute(&meta, input.clone()).unwrap();
+            },
+            iters,
+        );
+        let r_par = bench(
+            &format!("{key} engine {ENGINE_THREADS}t"),
+            || {
+                parallel.execute(&meta, input.clone()).unwrap();
+            },
+            iters,
+        );
+        let (m_ref, m_ser, m_par) =
+            (r_ref.summary.median(), r_ser.summary.median(), r_par.summary.median());
+        te.row(vec![
+            key.clone(),
+            format!("{:.2}", m_ref * 1e3),
+            format!("{:.2}", m_ser * 1e3),
+            format!("{:.2}", m_par * 1e3),
+            format!("{:.2}x", m_ref / m_par),
+        ]);
+        entries.push((
+            key,
+            bench_entry("fig4_1d", ENGINE_THREADS, r_par.summary.len(), m_ref, m_ser, m_par),
+        ));
+    }
+    let path = update_bench_json(&entries)?;
+    println!(
+        "engine vs pre-PR reference (before/after recorded in {}):\n{}",
+        path.display(),
+        te.render()
+    );
     println!("fig4_1d: OK");
     Ok(())
 }

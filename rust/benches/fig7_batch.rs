@@ -1,16 +1,23 @@
 //! Bench: regenerate paper Fig 7 — performance vs batch size.
 //! Fig 7(a): 1D 131072-point; Fig 7(b): 2D 512x256.
 //!
-//! Model series for the GPU figure + measured batch-sweep artifacts on
-//! the CPU substrate (real batched executions through the runtime).
+//! Model series for the GPU figure + a measured batch sweep through
+//! the batch-major engine (and, for the smallest batch, the pre-PR
+//! reference interpreter so the sweep contributes before/after
+//! entries to `BENCH_interp.json`).
 //!
 //!     cargo bench --bench fig7_batch
+//!     TCFFT_BENCH_SMOKE=1 cargo bench --bench fig7_batch   # CI smoke
 
-use tcfft::bench_harness::{bench, header};
+use tcfft::bench_harness::{bench, bench_entry, header, smoke, update_bench_json};
 use tcfft::perfmodel::{figures as f, GpuSpec};
-use tcfft::runtime::{PlanarBatch, Runtime};
+use tcfft::runtime::{Backend, CpuInterpreter, PlanarBatch, ReferenceInterpreter, Runtime};
+use tcfft::util::json::Json;
 use tcfft::util::table::Table;
 use tcfft::workload::random_signal;
+
+const N: usize = 131072;
+const ENGINE_THREADS: usize = 4;
 
 fn main() -> tcfft::error::Result<()> {
     header("Fig 7: performance of different batch sizes");
@@ -31,29 +38,88 @@ fn main() -> tcfft::error::Result<()> {
     assert!(cross_a <= 3, "1D crossover too late");
     assert!(cross_b <= cross_a, "2D should cross at smaller batch than 1D");
 
-    // measured: batch sweep over the real artifacts (CPU substrate)
+    // measured: batch sweep over the synthesized catalog's variants
+    // (b=4 has no artifact — the dynamic batcher covers it in serving)
     let rt = Runtime::load_default()?;
+    let iters = if smoke() { 2 } else { 3 };
+    let batches: &[usize] = if smoke() { &[1, 16] } else { &[1, 2, 8, 16] };
+    let parallel = CpuInterpreter::with_threads(ENGINE_THREADS);
+    let mut entries: Vec<(String, Json)> = Vec::new();
     let mut t = Table::new(&["batch", "median ms", "ms/seq (scaling)"]);
-    for bsz in [1usize, 2, 4, 8, 16] {
-        let key = format!("fft1d_tc_n131072_b{bsz}_fwd");
+    for &bsz in batches {
+        let key = format!("fft1d_tc_n{N}_b{bsz}_fwd");
         let meta = rt.registry.get(&key)?.clone();
-        let x: Vec<_> = (0..bsz)
-            .flat_map(|i| random_signal(131072, i as u64))
-            .collect();
-        let input = PlanarBatch::from_complex(&x, vec![bsz, 131072]);
-        rt.execute(&key, input.clone())?; // warm
-        let r = bench(&key, || {
-            rt.execute(&key, input.clone()).unwrap();
-        }, 3);
+        let x: Vec<_> = (0..bsz).flat_map(|i| random_signal(N, i as u64)).collect();
+        let input = PlanarBatch::from_complex(&x, vec![bsz, N]);
+        parallel.execute(&meta, input.clone())?; // warm
+        let r = bench(
+            &key,
+            || {
+                parallel.execute(&meta, input.clone()).unwrap();
+            },
+            iters,
+        );
         let med = r.summary.median();
         t.row(vec![
             bsz.to_string(),
             format!("{:.1}", med * 1e3),
             format!("{:.1}", med * 1e3 / bsz as f64),
         ]);
-        let _ = meta;
+
+        if bsz == 1 {
+            // before/after entry at the cheapest sweep point: the
+            // row-major reference is too slow to sweep every batch
+            let reference = ReferenceInterpreter::new();
+            let serial = CpuInterpreter::with_threads(1);
+            reference.execute(&meta, input.clone())?;
+            serial.execute(&meta, input.clone())?;
+            let r_ref = bench(
+                &format!("{key} reference"),
+                || {
+                    reference.execute(&meta, input.clone()).unwrap();
+                },
+                iters,
+            );
+            let r_ser = bench(
+                &format!("{key} engine 1t"),
+                || {
+                    serial.execute(&meta, input.clone()).unwrap();
+                },
+                iters,
+            );
+            entries.push((
+                key,
+                bench_entry(
+                    "fig7_batch",
+                    ENGINE_THREADS,
+                    r.summary.len(),
+                    r_ref.summary.median(),
+                    r_ser.summary.median(),
+                    med,
+                ),
+            ));
+        } else {
+            // engine-only scaling point (no before/after: the pre-PR
+            // reference is too slow to sweep at every batch size)
+            entries.push((
+                key,
+                Json::obj(vec![
+                    ("bench", Json::str("fig7_batch")),
+                    ("threads", Json::num(ENGINE_THREADS as f64)),
+                    ("iters", Json::num(r.summary.len() as f64)),
+                    ("engine_median_s", Json::num(med)),
+                    ("engine_median_s_per_seq", Json::num(med / bsz as f64)),
+                    ("smoke", Json::Bool(smoke())),
+                ]),
+            ));
+        }
     }
-    println!("measured 1D 131072-pt batch sweep (CPU substrate):\n{}", t.render());
+    let path = update_bench_json(&entries)?;
+    println!(
+        "measured 1D {N}-pt batch sweep (engine, {ENGINE_THREADS} threads; JSON: {}):\n{}",
+        path.display(),
+        t.render()
+    );
     println!("fig7_batch: OK");
     Ok(())
 }

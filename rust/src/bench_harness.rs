@@ -1,7 +1,20 @@
 //! Bench harness (criterion is unavailable offline): warmup + timed
-//! iterations with summary statistics, and a tiny registration macro so
-//! `cargo bench` binaries share structure.
+//! iterations with summary statistics, plus the machine-readable
+//! `BENCH_interp.json` emitter that records the repo's perf trajectory
+//! (pre-PR reference engine vs the batch-major parallel engine).
+//!
+//! Env knobs:
+//! * `TCFFT_BENCH_SMOKE=1` — capped iterations / reduced matrix, for
+//!   the CI smoke step (entries are still emitted);
+//! * `TCFFT_BENCH_JSON` — output path. Default: `BENCH_interp.json`
+//!   at the **workspace root**, resolved from `CARGO_MANIFEST_DIR` so
+//!   it is independent of the invoker's cwd (`cargo bench` runs bench
+//!   binaries with cwd = the package root `rust/`, while `cargo run`
+//!   inherits the caller's cwd — both must agree on one file).
 
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
 use crate::util::stats::{time_iters, Summary};
 
 pub struct BenchResult {
@@ -38,6 +51,74 @@ pub fn bench<F: FnMut()>(name: &str, mut f: F, max_iters: usize) -> BenchResult 
     BenchResult { name: name.to_string(), summary }
 }
 
+/// True when the CI smoke mode is on: benches shrink their matrix and
+/// iteration counts but still emit every expected JSON entry.
+pub fn smoke() -> bool {
+    std::env::var("TCFFT_BENCH_SMOKE").map(|v| v != "0" && !v.is_empty()).unwrap_or(false)
+}
+
+/// Resolve the `BENCH_interp.json` path: `TCFFT_BENCH_JSON` if set,
+/// else `<workspace-root>/BENCH_interp.json` (cwd-independent — see
+/// the module docs for why).
+pub fn bench_json_path() -> PathBuf {
+    if let Ok(p) = std::env::var("TCFFT_BENCH_JSON") {
+        return PathBuf::from(p);
+    }
+    // the crate lives in <workspace-root>/rust
+    let manifest = Path::new(env!("CARGO_MANIFEST_DIR"));
+    manifest.parent().unwrap_or(manifest).join("BENCH_interp.json")
+}
+
+/// Schema tag checked by `tcfft bench-validate`.
+pub const BENCH_SCHEMA: &str = "tcfft-bench-interp/1";
+
+/// Merge `entries` into `BENCH_interp.json` (keyed by artifact key, so
+/// `fig4_1d` and `fig7_batch` can each contribute their slice without
+/// clobbering the other's). Creates the file if missing or unreadable.
+pub fn update_bench_json(entries: &[(String, Json)]) -> std::io::Result<PathBuf> {
+    let path = bench_json_path();
+    let mut existing = std::fs::read_to_string(&path)
+        .ok()
+        .and_then(|t| Json::parse(&t).ok())
+        .and_then(|j| match j.get("entries") {
+            Some(Json::Obj(m)) => Some(m.clone()),
+            _ => None,
+        })
+        .unwrap_or_default();
+    for (k, v) in entries {
+        existing.insert(k.clone(), v.clone());
+    }
+    let doc = Json::obj(vec![
+        ("schema", Json::str(BENCH_SCHEMA)),
+        ("host_arch", Json::str(std::env::consts::ARCH)),
+        ("entries", Json::Obj(existing)),
+    ]);
+    std::fs::write(&path, doc.to_string() + "\n")?;
+    Ok(path)
+}
+
+/// Standard per-entry payload: before/after medians plus the speedup.
+pub fn bench_entry(
+    bench: &str,
+    threads: usize,
+    iters: usize,
+    reference_median_s: f64,
+    engine_serial_median_s: f64,
+    engine_median_s: f64,
+) -> Json {
+    Json::obj(vec![
+        ("bench", Json::str(bench)),
+        ("threads", Json::num(threads as f64)),
+        ("iters", Json::num(iters as f64)),
+        ("reference_median_s", Json::num(reference_median_s)),
+        ("engine_serial_median_s", Json::num(engine_serial_median_s)),
+        ("engine_median_s", Json::num(engine_median_s)),
+        ("speedup_serial", Json::num(reference_median_s / engine_serial_median_s)),
+        ("speedup", Json::num(reference_median_s / engine_median_s)),
+        ("smoke", Json::Bool(smoke())),
+    ])
+}
+
 /// Standard header printed by every bench binary.
 pub fn header(title: &str) {
     println!("\n=== {title} ===");
@@ -57,5 +138,19 @@ mod tests {
         let r = bench("noop", || { std::hint::black_box(1 + 1); }, 50);
         assert!(r.summary.len() >= 5);
         assert!(r.report().contains("noop"));
+    }
+
+    #[test]
+    fn bench_entry_shape() {
+        let e = bench_entry("fig4_1d", 4, 12, 0.4, 0.2, 0.1);
+        assert_eq!(e.get("bench").and_then(|v| v.as_str()), Some("fig4_1d"));
+        assert_eq!(e.get("threads").and_then(|v| v.as_usize()), Some(4));
+        let sp = e.get("speedup").and_then(|v| v.as_f64()).unwrap();
+        assert!((sp - 4.0).abs() < 1e-12);
+        let sps = e.get("speedup_serial").and_then(|v| v.as_f64()).unwrap();
+        assert!((sps - 2.0).abs() < 1e-12);
+        // round-trips through the writer grammar
+        let parsed = Json::parse(&e.to_string()).unwrap();
+        assert_eq!(parsed.get("iters").and_then(|v| v.as_usize()), Some(12));
     }
 }

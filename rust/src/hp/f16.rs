@@ -84,6 +84,31 @@ impl F16 {
         F16(h)
     }
 
+    /// Round an f32 to the nearest f16 value, returned as f32 — the
+    /// interpreter's per-stage device-store rounding. Semantically
+    /// identical to `F16::from_f32(x).to_f32()` (round-to-nearest-even)
+    /// but with a branch-light fast path for the common case where the
+    /// result is a normal f16: the 13 excess mantissa bits are rounded
+    /// off directly on the f32 bit pattern. Subnormal, overflow, zero
+    /// and nan inputs fall through to the full codec.
+    #[inline]
+    pub fn round_f32(x: f32) -> f32 {
+        let bits = x.to_bits();
+        let abs = bits & 0x7FFF_FFFF;
+        // |x| in [2^-14, 65520): rounds to a normal f16. 65520 is the
+        // first value that rounds up to infinity; below 2^-14 the
+        // result is subnormal (and just-under inputs that round up to
+        // 2^-14 are still handled correctly by the slow path).
+        if (0x3880_0000..0x477F_F000).contains(&abs) {
+            // round-to-nearest-even on the low 13 bits; a mantissa
+            // carry propagates into the exponent field, which is
+            // exactly the widening of the f16 carry in `from_f32`
+            let lsb = (bits >> 13) & 1;
+            return f32::from_bits(bits.wrapping_add(0xFFF + lsb) & !0x1FFF);
+        }
+        F16::from_f32(x).to_f32()
+    }
+
     /// Convert to f32 (exact).
     pub fn to_f32(self) -> f32 {
         let sign = ((self.0 & 0x8000) as u32) << 16;
@@ -229,6 +254,74 @@ mod tests {
         // 2047.5 rounds to 2048 (carry propagates cleanly)
         let h = F16::from_f32(2047.9);
         assert_eq!(h.to_f32(), 2048.0);
+    }
+
+    /// `round_f32` must agree bit-for-bit with the full codec
+    /// (`from_f32` then `to_f32`) — exhaustively over every f16 bit
+    /// pattern widened to f32 (the fixed points of the rounding).
+    #[test]
+    fn round_f32_agrees_on_all_f16_patterns() {
+        for bits in 0u16..=0xFFFF {
+            let h = F16::from_bits(bits);
+            let x = h.to_f32();
+            let fast = F16::round_f32(x);
+            if h.is_nan() {
+                assert!(fast.is_nan(), "bits {bits:#06x}");
+            } else {
+                assert_eq!(fast.to_bits(), x.to_bits(), "bits {bits:#06x}");
+            }
+        }
+    }
+
+    /// ... and over a dense strided sweep of raw f32 bit patterns
+    /// (hits normals, subnormals, ties, overflow and nan encodings).
+    #[test]
+    fn round_f32_agrees_on_f32_sweep() {
+        let mut bits = 0u32;
+        loop {
+            let x = f32::from_bits(bits);
+            let slow = F16::from_f32(x).to_f32();
+            let fast = F16::round_f32(x);
+            assert!(
+                fast.to_bits() == slow.to_bits() || (fast.is_nan() && slow.is_nan()),
+                "bits {bits:#010x}: fast {fast} vs slow {slow}"
+            );
+            let (next, wrapped) = bits.overflowing_add(4_099);
+            if wrapped {
+                break;
+            }
+            bits = next;
+        }
+    }
+
+    /// Targeted boundary cases around the fast-path range cut-offs.
+    #[test]
+    fn round_f32_boundaries() {
+        for x in [
+            0.0f32,
+            -0.0,
+            65503.99,
+            65504.0,
+            65519.99, // largest value still rounding down to 65504
+            65520.0,  // tie: rounds up to infinity
+            65536.0,
+            f32::INFINITY,
+            f32::NEG_INFINITY,
+            f32::NAN,
+            2.0f32.powi(-14),                    // smallest normal f16
+            2.0f32.powi(-14) - 2.0f32.powi(-30), // just below: subnormal result
+            2.0f32.powi(-24),                    // smallest subnormal
+            2.0f32.powi(-26),                    // underflows to zero
+            1.0 + 2.0f32.powi(-11),              // tie at 1.0
+            -(1.0 + 3.0 * 2.0f32.powi(-11)),     // tie, negative
+        ] {
+            let slow = F16::from_f32(x).to_f32();
+            let fast = F16::round_f32(x);
+            assert!(
+                fast.to_bits() == slow.to_bits() || (fast.is_nan() && slow.is_nan()),
+                "x {x}: fast {fast} vs slow {slow}"
+            );
+        }
     }
 
     #[test]

@@ -12,12 +12,15 @@
 //! Execution is pluggable through the [`runtime::Backend`] trait:
 //!
 //! * [`runtime::CpuInterpreter`] — the **default**: a pure-Rust
-//!   interpreter that executes the planner's radix-stage schedules
-//!   directly on [`runtime::PlanarBatch`] planar fp16 buffers
-//!   (fp16-rounded DFT/twiddle tables, f32 accumulation, fp16
-//!   intermediate stores).  Needs no artifacts: when no artifact
+//!   batch-major fused stage engine that executes the planner's
+//!   radix-stage schedules directly on [`runtime::PlanarBatch`] planar
+//!   fp16 buffers (fp16-rounded DFT/twiddle tables, f32 accumulation,
+//!   fp16 intermediate stores), parallelized across batch-row chunks
+//!   (`TCFFT_THREADS`).  Needs no artifacts: when no artifact
 //!   directory exists, [`runtime::Registry`] synthesizes the full
 //!   variant catalog (sizes, schedules, cost metadata) in process.
+//!   [`runtime::ReferenceInterpreter`] keeps the row-at-a-time
+//!   baseline for equivalence tests and `BENCH_interp.json`.
 //! * `runtime::Executor` — PJRT execution of AOT HLO artifacts, gated
 //!   behind the non-default `pjrt` cargo feature (requires a vendored
 //!   `xla` binding and `make artifacts`; not available offline).

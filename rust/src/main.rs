@@ -6,6 +6,7 @@
 //!   run    --n N [--batch B]     run a random-input FFT, check vs oracle
 //!   serve  --addr HOST:PORT      TCP JSON service
 //!   bench  --n N [--iters K]     quick throughput measurement
+//!   bench-validate [--file F]    check BENCH_interp.json (CI smoke step)
 //!   precision                    Table 4 (relative error vs f64 oracle)
 //!   table2                       memsim Table 2
 //!   figures                      perfmodel Figs 4-7 summaries
@@ -42,6 +43,7 @@ fn run(args: &Args) -> Result<()> {
         Some("run") => run_cmd(args),
         Some("serve") => serve_cmd(args),
         Some("bench") => bench_cmd(args),
+        Some("bench-validate") => bench_validate_cmd(args),
         Some("precision") => precision_cmd(args),
         Some("table2") => {
             println!("{}", tcfft::memsim::table2::render());
@@ -69,6 +71,9 @@ USAGE: tcfft <SUBCOMMAND> [OPTIONS]
                                 execute on random input, verify vs f64 oracle
   serve [--addr 127.0.0.1:7070] TCP JSON FFT service
   bench --n N [--batch B]       quick wall-clock throughput
+  bench-validate [--file BENCH_interp.json]
+                                validate the bench JSON emitted by
+                                fig4_1d/fig7_batch (run those first)
   precision                     Table 4: relative error vs FFTW-f64 stand-in
   table2                        Table 2: memsim bandwidth vs continuous size
   figures                       Figs 4-7: modelled V100/A100 series
@@ -199,6 +204,82 @@ fn bench_cmd(args: &Args) -> Result<()> {
         "radix-2-equivalent throughput: {:.3} GFLOPS (CPU interpret mode)",
         r2 / r.summary.median() / 1e9
     );
+    Ok(())
+}
+
+/// CI smoke check: `BENCH_interp.json` (emitted by the fig4_1d and
+/// fig7_batch benches) parses, carries the expected schema, and holds
+/// the headline before/after entry plus the batch-sweep anchor.
+fn bench_validate_cmd(args: &Args) -> Result<()> {
+    use tcfft::bench_harness::BENCH_SCHEMA;
+    use tcfft::util::json::Json;
+
+    const HEADLINE: &str = "fft1d_tc_n4096_b32_fwd";
+    const SWEEP_ANCHOR: &str = "fft1d_tc_n131072_b1_fwd";
+
+    // same default resolution as the emitting benches (cwd-independent)
+    let default_file = tcfft::bench_harness::bench_json_path().display().to_string();
+    let file = args.get_str("file", &default_file);
+    let text = std::fs::read_to_string(file)
+        .map_err(|e| tcfft::error::TcFftError::msg(format!("reading {file}: {e}")))?;
+    let doc = Json::parse(&text)
+        .map_err(|e| tcfft::error::TcFftError::msg(format!("{file}: parse error: {e}")))?;
+    tcfft::ensure!(
+        doc.get("schema").and_then(|s| s.as_str()) == Some(BENCH_SCHEMA),
+        "{file}: missing/unexpected schema (want {BENCH_SCHEMA})"
+    );
+    let entries = match doc.get("entries") {
+        Some(e @ Json::Obj(m)) if !m.is_empty() => e.clone(),
+        _ => tcfft::bail!("{file}: no entries — run the fig4_1d/fig7_batch benches first"),
+    };
+
+    let pos = |key: &str, field: &str| -> Result<f64> {
+        let v = entries
+            .get(key)
+            .and_then(|e| e.get(field))
+            .and_then(|x| x.as_f64())
+            .ok_or_else(|| {
+                tcfft::error::TcFftError::msg(format!("{file}: {key}.{field} missing"))
+            })?;
+        tcfft::ensure!(v.is_finite() && v > 0.0, "{file}: {key}.{field} = {v} not positive");
+        Ok(v)
+    };
+
+    // the acceptance headline: before AND after numbers plus speedups
+    let m_ref = pos(HEADLINE, "reference_median_s")?;
+    let m_ser = pos(HEADLINE, "engine_serial_median_s")?;
+    let m_par = pos(HEADLINE, "engine_median_s")?;
+    pos(HEADLINE, "speedup")?;
+    pos(HEADLINE, "speedup_serial")?;
+    // the fig7 sweep anchor
+    pos(SWEEP_ANCHOR, "engine_median_s")?;
+
+    let mut t = Table::new(&["entry", "bench", "engine median ms", "speedup vs pre-PR"]);
+    if let Json::Obj(m) = &entries {
+        for (k, e) in m {
+            t.row(vec![
+                k.clone(),
+                e.get("bench").and_then(|b| b.as_str()).unwrap_or("?").to_string(),
+                e.get("engine_median_s")
+                    .and_then(|x| x.as_f64())
+                    .map(|x| format!("{:.2}", x * 1e3))
+                    .unwrap_or_else(|| "-".into()),
+                e.get("speedup")
+                    .and_then(|x| x.as_f64())
+                    .map(|x| format!("{x:.2}x"))
+                    .unwrap_or_else(|| "-".into()),
+            ]);
+        }
+    }
+    println!("{}", t.render());
+    println!(
+        "headline {HEADLINE}: reference {:.2} ms -> engine {:.2} ms serial / {:.2} ms parallel ({:.2}x)",
+        m_ref * 1e3,
+        m_ser * 1e3,
+        m_par * 1e3,
+        m_ref / m_par
+    );
+    println!("bench-validate: OK ({file})");
     Ok(())
 }
 

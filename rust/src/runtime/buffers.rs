@@ -1,7 +1,7 @@
 //! Planar complex buffer marshalling between host f32 and the fp16
 //! PJRT literals the artifacts consume/produce.
 
-use crate::hp::{f16, C32};
+use crate::hp::{f16, C32, F16};
 
 /// A batch of planar complex data with a logical shape.
 #[derive(Clone, Debug, Default)]
@@ -64,6 +64,19 @@ impl PlanarBatch {
         Self::decode_f16(&re, &im, self.shape.clone())
     }
 
+    /// In-place variant of [`quantize_f16`](Self::quantize_f16): same
+    /// rounding, no byte staging and no new allocations. This is the
+    /// marshal step of `Backend::execute`, which owns its input and has
+    /// no reason to clone the whole batch just to round it.
+    pub fn quantize_f16_mut(&mut self) {
+        for v in self.re.iter_mut() {
+            *v = F16::round_f32(*v);
+        }
+        for v in self.im.iter_mut() {
+            *v = F16::round_f32(*v);
+        }
+    }
+
     /// Slice out batch rows [lo, hi) (first-dim slicing).
     pub fn slice_rows(&self, lo: usize, hi: usize) -> Self {
         let row: usize = self.shape[1..].iter().product();
@@ -94,15 +107,22 @@ impl PlanarBatch {
         PlanarBatch { re, im, shape }
     }
 
-    /// Zero-pad the batch dim up to `batch` rows.
+    /// Zero-pad the batch dim up to `batch` rows. Reserves the exact
+    /// target capacity up front instead of cloning at the source size
+    /// and growing (which reallocated and re-copied every call).
     pub fn pad_batch(&self, batch: usize) -> Self {
         assert!(batch >= self.shape[0]);
         let row: usize = self.shape[1..].iter().product();
-        let mut out = self.clone();
-        out.shape[0] = batch;
-        out.re.resize(batch * row, 0.0);
-        out.im.resize(batch * row, 0.0);
-        out
+        let len = batch * row;
+        let mut shape = self.shape.clone();
+        shape[0] = batch;
+        let mut re = Vec::with_capacity(len);
+        re.extend_from_slice(&self.re);
+        re.resize(len, 0.0);
+        let mut im = Vec::with_capacity(len);
+        im.extend_from_slice(&self.im);
+        im.resize(len, 0.0);
+        PlanarBatch { re, im, shape }
     }
 }
 
@@ -125,6 +145,40 @@ mod tests {
         let q2 = q1.quantize_f16();
         assert_eq!(q1.re, q2.re);
         assert_eq!(q1.im, q2.im);
+    }
+
+    #[test]
+    fn quantize_mut_matches_quantize() {
+        let xs: Vec<C32> = (0..512)
+            .map(|i| {
+                let t = i as f32;
+                C32::new((t * 0.731).sin() * 3.0e4, 1.0 / (t + 0.07) - 9.0e-6)
+            })
+            .collect();
+        let b = PlanarBatch::from_complex(&xs, vec![2, 256]);
+        let want = b.quantize_f16();
+        let mut got = b.clone();
+        got.quantize_f16_mut();
+        // bit-exact: same fp16 rounding as the encode/decode round trip
+        for i in 0..want.len() {
+            assert_eq!(want.re[i].to_bits(), got.re[i].to_bits(), "re[{i}]");
+            assert_eq!(want.im[i].to_bits(), got.im[i].to_bits(), "im[{i}]");
+        }
+        assert_eq!(want.shape, got.shape);
+    }
+
+    #[test]
+    fn pad_batch_reserves_exact_capacity() {
+        let b = PlanarBatch::from_complex(
+            &(0..8).map(|i| C32::new(i as f32, 0.0)).collect::<Vec<_>>(),
+            vec![2, 4],
+        );
+        let p = b.pad_batch(16);
+        // with_capacity only guarantees a lower bound, so assert the
+        // robust form of "reserved up front": enough room, full length
+        assert!(p.re.capacity() >= 64, "cap {}", p.re.capacity());
+        assert!(p.im.capacity() >= 64, "cap {}", p.im.capacity());
+        assert_eq!(p.re.len(), 64);
     }
 
     #[test]

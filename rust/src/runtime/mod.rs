@@ -22,7 +22,7 @@ pub mod registry;
 pub use buffers::PlanarBatch;
 #[cfg(feature = "pjrt")]
 pub use executor::Executor;
-pub use interpreter::CpuInterpreter;
+pub use interpreter::{CpuInterpreter, ReferenceInterpreter};
 pub use registry::{Registry, StageMeta, VariantMeta};
 
 use std::path::Path;

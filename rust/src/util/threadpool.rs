@@ -1,17 +1,53 @@
-//! Fixed-size worker thread pool (no tokio offline).  The coordinator's
-//! execution backend: jobs are boxed closures; the pool drains cleanly
-//! on drop.  Channel-based, no unsafe.
+//! Fixed-size worker thread pool (no tokio offline).  Shared by the
+//! coordinator and the interpreter's batch-parallel execution engine:
+//! jobs are boxed closures; `wait_idle` blocks on a condvar (no
+//! spinning); `scope` runs a set of borrowing closures to completion.
+//! The pool drains cleanly on drop and survives panicking jobs.
+//!
+//! The only `unsafe` is the lifetime erasure inside [`ThreadPool::scope`],
+//! which is sound because `scope` does not return until every submitted
+//! closure has finished running (enforced by a completion guard that
+//! fires even when a closure panics).
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::thread;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
+/// A job submitted through [`ThreadPool::scope`]: may borrow from the
+/// submitting stack frame ('env outlives the scope call).
+pub type ScopedJob<'env> = Box<dyn FnOnce() + Send + 'env>;
+
+/// Count of submitted-but-unfinished jobs plus the condvar that
+/// announces the pool going idle.
+struct InFlight {
+    count: Mutex<usize>,
+    idle: Condvar,
+}
+
+impl InFlight {
+    fn incr(&self) {
+        *self.count.lock().unwrap() += 1;
+    }
+
+    fn decr(&self) {
+        let mut n = self.count.lock().unwrap();
+        *n -= 1;
+        if *n == 0 {
+            self.idle.notify_all();
+        }
+    }
+}
+
 pub struct ThreadPool {
-    tx: Option<mpsc::Sender<Job>>,
+    /// Mutex-wrapped so submission is `Sync` on every toolchain the
+    /// repo supports (`mpsc::Sender` itself only became `Sync` in
+    /// Rust 1.72); contention is negligible — sends are tiny.
+    tx: Option<Mutex<mpsc::Sender<Job>>>,
     workers: Vec<thread::JoinHandle<()>>,
-    in_flight: Arc<AtomicUsize>,
+    in_flight: Arc<InFlight>,
 }
 
 impl ThreadPool {
@@ -19,7 +55,7 @@ impl ThreadPool {
         assert!(size > 0);
         let (tx, rx) = mpsc::channel::<Job>();
         let rx = Arc::new(Mutex::new(rx));
-        let in_flight = Arc::new(AtomicUsize::new(0));
+        let in_flight = Arc::new(InFlight { count: Mutex::new(0), idle: Condvar::new() });
         let workers = (0..size)
             .map(|i| {
                 let rx = Arc::clone(&rx);
@@ -33,8 +69,10 @@ impl ThreadPool {
                         };
                         match job {
                             Ok(job) => {
-                                job();
-                                in_flight.fetch_sub(1, Ordering::SeqCst);
+                                // a panicking job must not kill the
+                                // worker or leak the in-flight count
+                                let _ = catch_unwind(AssertUnwindSafe(job));
+                                in_flight.decr();
                             }
                             Err(_) => break, // channel closed: shut down
                         }
@@ -42,28 +80,84 @@ impl ThreadPool {
                     .expect("spawn worker")
             })
             .collect();
-        ThreadPool { tx: Some(tx), workers, in_flight }
+        ThreadPool { tx: Some(Mutex::new(tx)), workers, in_flight }
     }
 
     /// Submit a job for execution.
     pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
-        self.in_flight.fetch_add(1, Ordering::SeqCst);
+        self.in_flight.incr();
         self.tx
             .as_ref()
             .expect("pool shut down")
+            .lock()
+            .unwrap()
             .send(Box::new(f))
             .expect("worker channel closed");
     }
 
     /// Number of jobs submitted but not yet finished.
     pub fn in_flight(&self) -> usize {
-        self.in_flight.load(Ordering::SeqCst)
+        *self.in_flight.count.lock().unwrap()
     }
 
-    /// Busy-wait (with yield) until all submitted jobs finish.
+    /// Block until all submitted jobs finish (condvar wait, no spin).
     pub fn wait_idle(&self) {
-        while self.in_flight() > 0 {
-            thread::yield_now();
+        let mut n = self.in_flight.count.lock().unwrap();
+        while *n > 0 {
+            n = self.in_flight.idle.wait(n).unwrap();
+        }
+    }
+
+    /// Run a set of closures that may borrow from the caller's stack
+    /// and block until every one has completed. Panics from the
+    /// closures are re-raised here (after all of them have finished),
+    /// so a failing task cannot leave dangling borrows behind.
+    pub fn scope<'env>(&self, tasks: Vec<ScopedJob<'env>>) {
+        let total = tasks.len();
+        if total == 0 {
+            return;
+        }
+        struct ScopeState {
+            done: Mutex<usize>,
+            all_done: Condvar,
+            panicked: AtomicBool,
+        }
+        struct DoneGuard(Arc<ScopeState>);
+        impl Drop for DoneGuard {
+            fn drop(&mut self) {
+                // runs even when the task unwinds: the scope's wait
+                // below must never miss a completion
+                *self.0.done.lock().unwrap() += 1;
+                self.0.all_done.notify_all();
+            }
+        }
+        let state = Arc::new(ScopeState {
+            done: Mutex::new(0),
+            all_done: Condvar::new(),
+            panicked: AtomicBool::new(false),
+        });
+        for task in tasks {
+            // SAFETY: the borrows captured by `task` live for 'env,
+            // which outlives this function body; we block below until
+            // the DoneGuard of every task has fired, so no worker can
+            // touch the closure (or its borrows) after `scope` returns.
+            let task: Job = unsafe { std::mem::transmute::<ScopedJob<'env>, Job>(task) };
+            let state = Arc::clone(&state);
+            self.execute(move || {
+                let guard = DoneGuard(Arc::clone(&state));
+                if catch_unwind(AssertUnwindSafe(task)).is_err() {
+                    state.panicked.store(true, Ordering::SeqCst);
+                }
+                drop(guard);
+            });
+        }
+        let mut done = state.done.lock().unwrap();
+        while *done < total {
+            done = state.all_done.wait(done).unwrap();
+        }
+        drop(done);
+        if state.panicked.load(Ordering::SeqCst) {
+            panic!("thread-pool scope task panicked");
         }
     }
 
@@ -145,5 +239,84 @@ mod tests {
         let mut got: Vec<u64> = rx.iter().collect();
         got.sort();
         assert_eq!(got, (0..10u64).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn wait_idle_survives_panicking_job() {
+        let pool = ThreadPool::new(2);
+        pool.execute(|| panic!("boom"));
+        let ok = Arc::new(AtomicU64::new(0));
+        let c = Arc::clone(&ok);
+        pool.execute(move || {
+            c.fetch_add(1, Ordering::SeqCst);
+        });
+        pool.wait_idle(); // must not hang on the panicked job
+        assert_eq!(pool.in_flight(), 0);
+        assert_eq!(ok.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn scope_borrows_stack_data() {
+        let pool = ThreadPool::new(4);
+        let mut data = vec![0u64; 64];
+        let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = data
+            .chunks_mut(16)
+            .enumerate()
+            .map(|(i, chunk)| {
+                let f: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
+                    for v in chunk.iter_mut() {
+                        *v = i as u64 + 1;
+                    }
+                });
+                f
+            })
+            .collect();
+        pool.scope(tasks);
+        for (i, v) in data.iter().enumerate() {
+            assert_eq!(*v, (i / 16) as u64 + 1, "slot {i}");
+        }
+    }
+
+    #[test]
+    fn scope_blocks_until_all_complete() {
+        let pool = ThreadPool::new(2);
+        let counter = AtomicU64::new(0);
+        // more tasks than workers: scope must wait for the queue tail
+        let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = (0..16)
+            .map(|_| {
+                let c = &counter;
+                let f: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
+                    std::thread::sleep(std::time::Duration::from_millis(1));
+                    c.fetch_add(1, Ordering::SeqCst);
+                });
+                f
+            })
+            .collect();
+        pool.scope(tasks);
+        assert_eq!(counter.load(Ordering::SeqCst), 16);
+    }
+
+    #[test]
+    fn scope_propagates_panics_after_completion() {
+        let pool = ThreadPool::new(2);
+        let finished = Arc::new(AtomicU64::new(0));
+        let f2 = Arc::clone(&finished);
+        let tasks: Vec<Box<dyn FnOnce() + Send + 'static>> = vec![
+            Box::new(|| panic!("task failed")),
+            Box::new(move || {
+                f2.fetch_add(1, Ordering::SeqCst);
+            }),
+        ];
+        let res = catch_unwind(AssertUnwindSafe(|| pool.scope(tasks)));
+        assert!(res.is_err(), "scope must re-raise task panics");
+        assert_eq!(finished.load(Ordering::SeqCst), 1, "other tasks still ran");
+        pool.wait_idle();
+    }
+
+    #[test]
+    fn empty_scope_is_a_noop() {
+        let pool = ThreadPool::new(1);
+        pool.scope(Vec::new());
+        assert_eq!(pool.in_flight(), 0);
     }
 }

@@ -1,0 +1,163 @@
+//! Bit-exactness contract of the batch-major parallel execution engine.
+//!
+//! The engine chunks batch rows across the thread pool; rows are
+//! independent, so chunking must never change a single output bit.
+//! This suite drives the full variant space — 1D and 2D, forward and
+//! inverse, `tc`/`tc_split`/`r2`, batches {1, 3, 32} (3 is a
+//! non-power-of-two batch that forces uneven chunk splits) — and
+//! asserts:
+//!
+//! * parallel engine == serial engine, **bit for bit**;
+//! * `tc_split` == the pre-PR [`ReferenceInterpreter`], bit for bit
+//!   (the de-fused ablation kernels were never re-associated);
+//! * `tc`/`r2` track the reference within a tight rel-RMSE bound (the
+//!   fused kernels change only f32-level association — every fp16
+//!   rounding point is identical, so outputs agree far below the fp16
+//!   noise floor).
+
+use tcfft::error::relative_rmse;
+use tcfft::hp::complex::widen;
+use tcfft::hp::C32;
+use tcfft::runtime::{Backend, CpuInterpreter, PlanarBatch, ReferenceInterpreter, VariantMeta};
+use tcfft::workload::random_signal;
+
+fn meta_1d(algo: &str, n: usize, batch: usize, inverse: bool) -> VariantMeta {
+    let d = if inverse { "inv" } else { "fwd" };
+    VariantMeta {
+        key: format!("eq_fft1d_{algo}_n{n}_b{batch}_{d}"),
+        file: std::path::PathBuf::new(),
+        op: "fft1d".to_string(),
+        algo: algo.to_string(),
+        n,
+        nx: 0,
+        ny: 0,
+        batch,
+        inverse,
+        input_shape: vec![batch, n],
+        stages: Vec::new(),
+        flops_per_seq: 0.0,
+        hbm_bytes_per_seq: 0.0,
+        radix2_equiv_flops: 0.0,
+    }
+}
+
+fn meta_2d(algo: &str, nx: usize, ny: usize, batch: usize, inverse: bool) -> VariantMeta {
+    let d = if inverse { "inv" } else { "fwd" };
+    VariantMeta {
+        key: format!("eq_fft2d_{algo}_nx{nx}x{ny}_b{batch}_{d}"),
+        file: std::path::PathBuf::new(),
+        op: "fft2d".to_string(),
+        algo: algo.to_string(),
+        n: 0,
+        nx,
+        ny,
+        batch,
+        inverse,
+        input_shape: vec![batch, nx, ny],
+        stages: Vec::new(),
+        flops_per_seq: 0.0,
+        hbm_bytes_per_seq: 0.0,
+        radix2_equiv_flops: 0.0,
+    }
+}
+
+fn random_batch(seq: usize, batch: usize, shape: Vec<usize>, seed: u64) -> PlanarBatch {
+    let x: Vec<C32> = (0..batch)
+        .flat_map(|b| random_signal(seq, seed + b as u64))
+        .collect();
+    PlanarBatch::from_complex(&x, shape)
+}
+
+fn assert_bit_identical(a: &PlanarBatch, b: &PlanarBatch, what: &str) {
+    assert_eq!(a.shape, b.shape, "{what}: shape");
+    for i in 0..a.len() {
+        assert_eq!(
+            a.re[i].to_bits(),
+            b.re[i].to_bits(),
+            "{what}: re[{i}] {} vs {}",
+            a.re[i],
+            b.re[i]
+        );
+        assert_eq!(
+            a.im[i].to_bits(),
+            b.im[i].to_bits(),
+            "{what}: im[{i}] {} vs {}",
+            a.im[i],
+            b.im[i]
+        );
+    }
+}
+
+/// Run one variant through the serial engine, the parallel engine and
+/// the pre-PR reference, and check all three contracts.
+fn check(meta: &VariantMeta, input: PlanarBatch, threads: usize) {
+    let serial = CpuInterpreter::with_threads(1);
+    let parallel = CpuInterpreter::with_threads(threads);
+    let reference = ReferenceInterpreter::new();
+
+    let (y_ser, _) = serial.execute(meta, input.clone()).unwrap();
+    let (y_par, _) = parallel.execute(meta, input.clone()).unwrap();
+    let (y_ref, _) = reference.execute(meta, input).unwrap();
+
+    assert_bit_identical(&y_ser, &y_par, &format!("{} serial vs parallel", meta.key));
+
+    if meta.algo == "tc_split" {
+        // the de-fused ablation kernel keeps the pre-PR float-op order
+        assert_bit_identical(&y_ser, &y_ref, &format!("{} engine vs reference", meta.key));
+    } else {
+        let err = relative_rmse(&widen(&y_ref.to_complex()), &widen(&y_ser.to_complex()));
+        assert!(err < 2e-3, "{}: engine vs reference rmse {err}", meta.key);
+    }
+}
+
+#[test]
+fn fft1d_all_algos_dirs_batches() {
+    for algo in ["tc", "tc_split", "r2"] {
+        for inverse in [false, true] {
+            for batch in [1usize, 3, 32] {
+                let meta = meta_1d(algo, 1024, batch, inverse);
+                let input = random_batch(1024, batch, vec![batch, 1024], 11);
+                // 5 workers over 32 rows -> chunks of 7,7,7,7,4
+                check(&meta, input, 5);
+            }
+        }
+    }
+}
+
+#[test]
+fn fft1d_nonpow2_batch_chunk_edge() {
+    // batch 3 at n=4096 crosses the parallel work threshold, so three
+    // single-row chunks really run on the pool (threads > rows edge)
+    for algo in ["tc", "tc_split", "r2"] {
+        let meta = meta_1d(algo, 4096, 3, false);
+        let input = random_batch(4096, 3, vec![3, 4096], 23);
+        check(&meta, input, 4);
+    }
+}
+
+#[test]
+fn fft2d_all_algos_dirs_batches() {
+    for algo in ["tc", "tc_split", "r2"] {
+        for inverse in [false, true] {
+            for batch in [1usize, 3, 32] {
+                let meta = meta_2d(algo, 64, 64, batch, inverse);
+                let input = random_batch(64 * 64, batch, vec![batch, 64, 64], 37);
+                check(&meta, input, 5);
+            }
+        }
+    }
+}
+
+#[test]
+fn engine_is_deterministic_across_repeats() {
+    // same input, same backend, repeated runs (scratch arena reuse,
+    // warm cache) must be bit-identical
+    let meta = meta_1d("tc", 2048, 6, false);
+    let be = CpuInterpreter::with_threads(4);
+    let input = random_batch(2048, 6, vec![6, 2048], 53);
+    let (first, _) = be.execute(&meta, input.clone()).unwrap();
+    for _ in 0..3 {
+        let (again, _) = be.execute(&meta, input.clone()).unwrap();
+        assert_bit_identical(&first, &again, "repeat determinism");
+    }
+}
