@@ -26,12 +26,13 @@ core() {
 }
 
 bench_smoke() {
-  echo "== smoke bench: fig4_1d + fig7_batch (TCFFT_BENCH_SMOKE=1) =="
+  echo "== smoke bench: fig4_1d + fig7_batch + large_fourstep (TCFFT_BENCH_SMOKE=1) =="
   # start from a clean slate so bench-validate proves the benches
   # emitted fresh entries (update_bench_json merges into existing files)
   rm -f BENCH_interp.json
   TCFFT_BENCH_SMOKE=1 cargo bench --bench fig4_1d
   TCFFT_BENCH_SMOKE=1 cargo bench --bench fig7_batch
+  TCFFT_BENCH_SMOKE=1 cargo bench --bench large_fourstep
 
   echo "== bench-validate BENCH_interp.json =="
   # no --file: benches and validator share the cwd-independent default

@@ -1,0 +1,122 @@
+//! Bench: the batched four-step large-FFT engine vs the kept
+//! per-sequence baseline, at the acceptance shape n = 2^20, batch 8.
+//!
+//! The baseline ([`tcfft::large::BaselineFourStep`]) is the pre-PR
+//! path: one sequence per call, element-wise gather/scatter transposes
+//! and a full N1 x N2 `C64` twiddle table recomputed every call. The
+//! engine ([`tcfft::large::FourStepPlan`]) batches the whole request,
+//! runs tiled transposes with a cached flat twiddle table, and chunks
+//! host-side steps over the worker pool. Before/after medians merge
+//! into `BENCH_interp.json` (entry `fourstep_tc_n1048576_b8_fwd`) and
+//! `tcfft bench-validate` checks them in CI.
+//!
+//!     cargo bench --bench large_fourstep
+//!     TCFFT_BENCH_SMOKE=1 cargo bench --bench large_fourstep   # CI smoke
+
+use tcfft::bench_harness::{bench, bench_entry, header, smoke, update_bench_json};
+use tcfft::error::relative_rmse;
+use tcfft::fft::radix2;
+use tcfft::hp::complex::widen;
+use tcfft::hp::C32;
+use tcfft::large::{BaselineFourStep, FourStepConfig, FourStepPlan};
+use tcfft::runtime::{PlanarBatch, Runtime};
+use tcfft::util::table::Table;
+use tcfft::workload::random_signal;
+
+const LOG2N: usize = 20;
+const BATCH: usize = 8;
+/// Headline host-side thread count recorded in BENCH_interp.json
+/// (matches the fig4_1d/fig7_batch engine entries).
+const ENGINE_THREADS: usize = 4;
+
+fn main() -> tcfft::error::Result<()> {
+    header("Four-step large FFT: batched engine vs per-sequence baseline");
+    let n = 1usize << LOG2N;
+    // the shape IS the acceptance headline, so smoke mode caps
+    // iterations but never shrinks it
+    let iters = if smoke() { 2 } else { 5 };
+    let rt = Runtime::load_default()?;
+
+    let baseline = BaselineFourStep::new(&rt, n, "tc", false)?;
+    let serial = FourStepPlan::with_config(
+        &rt,
+        n,
+        false,
+        FourStepConfig { threads: 1, ..FourStepConfig::default() },
+    )?;
+    let parallel = FourStepPlan::with_config(
+        &rt,
+        n,
+        false,
+        FourStepConfig { threads: ENGINE_THREADS, ..FourStepConfig::default() },
+    )?;
+    println!(
+        "n = 2^{LOG2N}, batch {BATCH}: baseline {} x {}, engine {}",
+        baseline.n1,
+        baseline.n2,
+        parallel.describe()
+    );
+
+    let x: Vec<C32> = (0..BATCH)
+        .flat_map(|i| random_signal(n, 0x4A + i as u64))
+        .collect();
+    let seqs: Vec<Vec<C32>> = (0..BATCH).map(|i| x[i * n..(i + 1) * n].to_vec()).collect();
+    let input = PlanarBatch::from_complex(&x, vec![BATCH, n]);
+
+    // correctness gate before timing: engine row 0 vs the f64 oracle
+    let out = parallel.execute_batch(&rt, input.clone())?;
+    let q = PlanarBatch::from_complex(&seqs[0], vec![1, n]).quantize_f16();
+    let want = radix2::fft_vec(&widen(&q.to_complex()), false);
+    let got = widen(&out.slice_rows(0, 1).to_complex());
+    let err = relative_rmse(&want, &got);
+    tcfft::ensure!(err < 5e-3, "four-step engine rel-RMSE {err:.3e} over 5e-3");
+    println!("engine vs radix2 oracle (row 0): rel-RMSE {err:.3e}\n");
+
+    let r_ref = bench(
+        &format!("baseline per-seq x{BATCH}"),
+        || {
+            for s in &seqs {
+                baseline.execute(&rt, s).unwrap();
+            }
+        },
+        iters,
+    );
+    let r_ser = bench(
+        "engine batched 1t",
+        || {
+            serial.execute_batch(&rt, input.clone()).unwrap();
+        },
+        iters,
+    );
+    let r_par = bench(
+        &format!("engine batched {ENGINE_THREADS}t"),
+        || {
+            parallel.execute_batch(&rt, input.clone()).unwrap();
+        },
+        iters,
+    );
+    let (m_ref, m_ser, m_par) =
+        (r_ref.summary.median(), r_ser.summary.median(), r_par.summary.median());
+
+    let key = format!("fourstep_tc_n{n}_b{BATCH}_fwd");
+    let mut t = Table::new(&["key", "baseline ms", "engine 1t ms", "engine 4t ms", "speedup"]);
+    t.row(vec![
+        key.clone(),
+        format!("{:.1}", m_ref * 1e3),
+        format!("{:.1}", m_ser * 1e3),
+        format!("{:.1}", m_par * 1e3),
+        format!("{:.2}x", m_ref / m_par),
+    ]);
+    let entries = vec![(
+        key,
+        bench_entry("large_fourstep", ENGINE_THREADS, r_par.summary.len(), m_ref, m_ser, m_par),
+    )];
+    let path = update_bench_json(&entries)?;
+    println!(
+        "batched engine vs per-sequence baseline (recorded in {}):\n{}",
+        path.display(),
+        t.render()
+    );
+    println!("large_fourstep: OK");
+    Ok(())
+}

@@ -35,6 +35,11 @@ pub struct PlanQueue {
     pub capacity: usize, // artifact batch size
     queue: VecDeque<Pending>,
     pub max_queue: usize, // backpressure bound
+    /// zero-pad short flushes up to `capacity` (artifact-shaped
+    /// batches). Large four-step queues run unpadded: the batched
+    /// engine accepts any row count, and padding a 2^20-point slot
+    /// would burn a whole transform's worth of work on zeros.
+    pad: bool,
 }
 
 impl PlanQueue {
@@ -44,7 +49,14 @@ impl PlanQueue {
             capacity,
             queue: VecDeque::new(),
             max_queue,
+            pad: true,
         }
+    }
+
+    /// A queue whose flushes carry exactly the pending rows (no zero
+    /// padding) — for plans whose executor takes arbitrary batch sizes.
+    pub fn unpadded(key: impl Into<String>, capacity: usize, max_queue: usize) -> Self {
+        PlanQueue { pad: false, ..Self::new(key, capacity, max_queue) }
     }
 
     pub fn len(&self) -> usize {
@@ -56,7 +68,11 @@ impl PlanQueue {
     }
 
     /// Enqueue; Err(req) if the queue is full (backpressure).
-    pub fn push(&mut self, req: Pending) -> Result<(), Pending> {
+    ///
+    /// Note the explicit `std::result::Result`: this is the one spot in
+    /// the module that does not use the one-parameter `crate::error`
+    /// alias (the rejected request rides back in the error slot).
+    pub fn push(&mut self, req: Pending) -> std::result::Result<(), Pending> {
         if self.queue.len() >= self.max_queue {
             return Err(req);
         }
@@ -91,11 +107,12 @@ impl PlanQueue {
         let mut members: Vec<Pending> = self.queue.drain(..take).collect();
         let tail: Vec<usize> = members[0].input.shape[1..].to_vec();
         let row: usize = tail.iter().product();
-        let mut shape = vec![self.capacity];
+        let rows = if self.pad { self.capacity } else { take };
+        let mut shape = vec![rows];
         shape.extend_from_slice(&tail);
         let mut input = PlanarBatch {
-            re: vec![0.0; self.capacity * row],
-            im: vec![0.0; self.capacity * row],
+            re: vec![0.0; rows * row],
+            im: vec![0.0; rows * row],
             shape,
         };
         for (i, m) in members.iter_mut().enumerate() {
@@ -104,7 +121,7 @@ impl PlanQueue {
             input.re[i * row..(i + 1) * row].copy_from_slice(&part.re);
             input.im[i * row..(i + 1) * row].copy_from_slice(&part.im);
         }
-        let padded = self.capacity - take;
+        let padded = rows - take;
         Some(ReadyBatch { input, members, padded })
     }
 }
@@ -157,6 +174,27 @@ mod tests {
         assert_eq!(b.members.len(), 1);
         assert_eq!(b.padded, 3);
         assert_eq!(b.input.shape, vec![4, 8]);
+    }
+
+    #[test]
+    fn unpadded_flush_carries_exact_rows() {
+        let mut q = PlanQueue::unpadded("big", 4, 64);
+        for i in 0..2 {
+            let (p, _rx) = req(i, 8);
+            q.push(p).map_err(|_| ()).unwrap();
+        }
+        let b = q.flush().unwrap();
+        assert_eq!(b.members.len(), 2);
+        assert_eq!(b.padded, 0, "unpadded queue must not synthesize rows");
+        assert_eq!(b.input.shape, vec![2, 8]);
+        // capacity still bounds one flush
+        for i in 0..6 {
+            let (p, _rx) = req(10 + i, 8);
+            q.push(p).map_err(|_| ()).unwrap();
+        }
+        let b = q.flush().unwrap();
+        assert_eq!(b.input.shape, vec![4, 8]);
+        assert_eq!(q.len(), 2);
     }
 
     #[test]

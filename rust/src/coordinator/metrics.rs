@@ -15,6 +15,8 @@ pub struct Metrics {
     pub padded_slots: AtomicU64,
     pub busy_slots: AtomicU64,
     pub rejected: AtomicU64,
+    /// requests that resolved to the four-step large-FFT route
+    pub large_requests: AtomicU64,
     lat: Mutex<Summary>,        // end-to-end request latency (s)
     queue_wait: Mutex<Summary>, // time spent waiting in the batcher (s)
     exec: Mutex<Summary>,       // device execution time per batch (s)
@@ -57,6 +59,7 @@ impl Metrics {
             ("completed", Json::num(self.completed.load(Ordering::Relaxed) as f64)),
             ("failed", Json::num(self.failed.load(Ordering::Relaxed) as f64)),
             ("rejected", Json::num(self.rejected.load(Ordering::Relaxed) as f64)),
+            ("large_requests", Json::num(self.large_requests.load(Ordering::Relaxed) as f64)),
             ("batches", Json::num(self.batches.load(Ordering::Relaxed) as f64)),
             ("padding_ratio", Json::num(self.padding_ratio())),
             ("latency_p50_ms", Json::num(lat.median() * 1e3)),

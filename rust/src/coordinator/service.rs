@@ -25,6 +25,7 @@ use crate::error::{Result, TcFftError};
 
 use super::batcher::{Pending, PlanQueue, ReadyBatch};
 use super::metrics::Metrics;
+use crate::large::{FourStepConfig, FourStepPlan};
 use crate::plan::{Direction, Plan};
 use crate::runtime::{PlanarBatch, Runtime};
 
@@ -53,12 +54,24 @@ pub struct ServiceConfig {
     pub max_queue: usize,
     /// execution pool size (overlaps marshalling with PJRT execution)
     pub exec_threads: usize,
-    /// flusher scan period
+    /// legacy flusher scan period — ignored since the flusher became
+    /// deadline-driven (it now parks until the earliest pending
+    /// deadline instead of polling); kept so existing configs build
     pub tick: Duration,
     /// leader execution: the submit() call that fills a batch runs it
     /// inline on the submitting thread, skipping two thread hand-offs
     /// (perf iteration 4). Deadline flushes still go through the pool.
     pub inline_exec: bool,
+    /// batch capacity of the four-step large-FFT queues (`Op::Fft1d`
+    /// sizes with no direct artifact). Flushed unpadded — the batched
+    /// engine takes any row count, and a padded 2^20-point slot would
+    /// burn a whole transform's worth of work on zeros.
+    pub large_batch: usize,
+    /// largest size the four-step route will serve. Plans are cached
+    /// per (n, algo, dir) and never evicted, and each costs O(n)
+    /// twiddle memory — this bound keeps a client walking the size
+    /// space from ballooning the cache.
+    pub max_large_n: usize,
 }
 
 impl Default for ServiceConfig {
@@ -74,6 +87,8 @@ impl Default for ServiceConfig {
             exec_threads: 1,
             tick: Duration::from_micros(200),
             inline_exec: true,
+            large_batch: 4,
+            max_large_n: 1 << 24,
         }
     }
 }
@@ -101,6 +116,15 @@ impl Ticket {
     }
 }
 
+/// How a request executes: through a direct artifact plan, or through
+/// the batched four-step engine for sizes with no artifact. Carries
+/// only what `submit` needs to queue the request (key, batch capacity,
+/// expected per-request shape tail).
+enum Route {
+    Direct { key: String, capacity: usize, tail: Vec<usize> },
+    Large { key: String, n: usize },
+}
+
 struct Shared {
     queues: Mutex<HashMap<String, PlanQueue>>,
     /// signalled when a request is enqueued; the flusher parks on this
@@ -109,6 +133,11 @@ struct Shared {
     /// by ~15%)
     pending_cv: std::sync::Condvar,
     plans: Mutex<HashMap<String, Plan>>,
+    /// cached four-step plans for large sizes, keyed by the queue key
+    /// (`4step:{n}:{algo}:{dir}`). `run_batch` consults this map to
+    /// decide whether a ready batch executes through the batched
+    /// four-step engine or directly through the runtime.
+    large_plans: Mutex<HashMap<String, Arc<FourStepPlan>>>,
     metrics: Arc<Metrics>,
     next_id: AtomicU64,
     shutting_down: AtomicBool,
@@ -156,12 +185,18 @@ fn run_batch(rt: &Runtime, shared: &Shared, key: &str, batch: ReadyBatch) {
         .metrics
         .padded_slots
         .fetch_add(batch.padded as u64, Ordering::Relaxed);
+    // four-step queues execute through the cached batched engine; every
+    // other key is a direct artifact execution
+    let large = shared.large_plans.lock().unwrap().get(key).cloned();
     let t_exec = Instant::now();
-    let result = rt.execute(key, batch.input);
+    let result = match large {
+        Some(plan) => plan.execute_batch(rt, batch.input),
+        None => rt.execute(key, batch.input).map(|(out, _stats)| out),
+    };
     let exec_s = t_exec.elapsed().as_secs_f64();
     shared.metrics.record_exec(exec_s);
     match result {
-        Ok((out, _stats)) => {
+        Ok(out) => {
             let now = Instant::now();
             for (i, m) in batch.members.iter().enumerate() {
                 let row = out.slice_rows(i, i + 1);
@@ -201,6 +236,7 @@ impl FftService {
             queues: Mutex::new(HashMap::new()),
             pending_cv: std::sync::Condvar::new(),
             plans: Mutex::new(HashMap::new()),
+            large_plans: Mutex::new(HashMap::new()),
             metrics: Arc::new(Metrics::new()),
             next_id: AtomicU64::new(1),
             shutting_down: AtomicBool::new(false),
@@ -236,28 +272,26 @@ impl FftService {
         let flusher = thread::Builder::new()
             .name("tcfft-flusher".into())
             .spawn(move || {
-                // event-driven: park on the condvar while idle (bounded
-                // by 20 ms so shutdown and long ticks stay responsive);
-                // when requests are pending, wake at the deadline tick.
+                // Deadline-driven: flush everything already due, THEN
+                // park until the earliest pending deadline (the pre-PR
+                // flusher slept a full tick before flushing, taxing
+                // batches already past max_wait with up to a tick of
+                // extra latency). The park is capped so shutdown stays
+                // responsive and floored so a deadline landing mid-scan
+                // cannot spin the thread.
+                const PARK_CAP: Duration = Duration::from_millis(20);
+                const PARK_FLOOR: Duration = Duration::from_micros(50);
                 while !sh.shutting_down.load(Ordering::SeqCst) {
-                    let any_pending = {
-                        let guard = sh.queues.lock().unwrap();
-                        let pending = guard.values().any(|q| !q.is_empty());
-                        if !pending {
-                            let _ = sh
-                                .pending_cv
-                                .wait_timeout(guard, Duration::from_millis(20))
-                                .unwrap();
-                            continue;
-                        }
-                        pending
-                    };
-                    if any_pending {
-                        thread::sleep(sh.cfg.tick.min(sh.cfg.max_wait).min(
-                            Duration::from_millis(20),
-                        ));
-                        flush_due(&sh, &tx, false);
-                    }
+                    flush_due(&sh, &tx, false);
+                    let now = Instant::now();
+                    let guard = sh.queues.lock().unwrap();
+                    let next_deadline = guard
+                        .values()
+                        .filter_map(|q| q.oldest_age(now))
+                        .map(|age| sh.cfg.max_wait.saturating_sub(age))
+                        .min();
+                    let park = next_deadline.unwrap_or(PARK_CAP).min(PARK_CAP).max(PARK_FLOOR);
+                    let _ = sh.pending_cv.wait_timeout(guard, park).unwrap();
                 }
                 flush_due(&sh, &tx, true); // final drain
             })
@@ -309,12 +343,72 @@ impl FftService {
         Ok(plan)
     }
 
+    /// Resolve a request to its execution route: a direct artifact
+    /// plan, or — for `Op::Fft1d` power-of-two sizes with no artifact —
+    /// a cached four-step large-FFT plan (paper Sec 3.1).
+    fn route_for(&self, req: &FftRequest) -> Result<Route> {
+        match self.plan_for(req) {
+            Ok(plan) => Ok(Route::Direct {
+                key: plan.meta.key,
+                capacity: plan.meta.batch,
+                tail: plan.meta.input_shape[1..].to_vec(),
+            }),
+            Err(TcFftError::NoArtifact(reason)) => match req.op {
+                Op::Fft1d { n }
+                    if n.is_power_of_two() && n >= 4 && n <= self.shared.cfg.max_large_n =>
+                {
+                    self.large_route_for(n, req)
+                }
+                _ => Err(TcFftError::NoArtifact(reason)),
+            },
+            Err(e) => Err(e),
+        }
+    }
+
+    /// Find or build the cached four-step plan for (n, algo, dir).
+    fn large_route_for(&self, n: usize, req: &FftRequest) -> Result<Route> {
+        // Only known algos may mint cache entries: plans cost megabytes
+        // of twiddle tables and are never evicted, so an unvalidated
+        // string from the TCP surface must not grow `large_plans` (and
+        // a typo should fail loudly, like the direct-artifact path,
+        // instead of silently computing with the tc fallback).
+        if !matches!(req.algo.as_str(), "tc" | "tc_split" | "r2") {
+            return Err(TcFftError::NoArtifact(format!(
+                "fft1d n={n} algo={} (unknown algo has no four-step route)",
+                req.algo
+            )));
+        }
+        let inverse = req.direction == Direction::Inverse;
+        let key = format!("4step:{n}:{}:{}", req.algo, if inverse { "inv" } else { "fwd" });
+        {
+            let cache = self.shared.large_plans.lock().unwrap();
+            if cache.contains_key(&key) {
+                return Ok(Route::Large { key, n });
+            }
+        }
+        // build outside the lock (twiddle precompute is real work);
+        // a racing builder just loses to or_insert
+        let plan = FourStepPlan::with_config(
+            &self.rt,
+            n,
+            inverse,
+            FourStepConfig { algo: req.algo.clone(), ..FourStepConfig::default() },
+        )?;
+        self.shared
+            .large_plans
+            .lock()
+            .unwrap()
+            .entry(key.clone())
+            .or_insert_with(|| Arc::new(plan));
+        Ok(Route::Large { key, n })
+    }
+
     /// Submit one request; returns a ticket to wait on.
     pub fn submit(&self, req: FftRequest) -> Result<Ticket> {
         if self.shared.shutting_down.load(Ordering::SeqCst) {
             return Err(TcFftError::ShuttingDown);
         }
-        let plan = self.plan_for(&req)?;
+        let route = self.route_for(&req)?;
         let id = self.shared.next_id.fetch_add(1, Ordering::SeqCst);
         self.shared.metrics.requests.fetch_add(1, Ordering::Relaxed);
 
@@ -322,24 +416,38 @@ impl FftService {
         let mut shape = vec![1usize];
         shape.extend_from_slice(&req.input.shape);
         let input = PlanarBatch { re: req.input.re, im: req.input.im, shape };
-        crate::ensure!(
-            input.shape[1..] == plan.meta.input_shape[1..],
-            "request shape {:?} does not match plan {:?}",
-            &input.shape[1..],
-            &plan.meta.input_shape[1..]
-        );
+        let (queue_key, capacity, pad) = match &route {
+            Route::Direct { key, capacity, tail } => {
+                crate::ensure!(
+                    input.shape[1..] == tail[..],
+                    "request shape {:?} does not match plan {:?}",
+                    &input.shape[1..],
+                    &tail[..]
+                );
+                (key.clone(), *capacity, true)
+            }
+            Route::Large { key, n } => {
+                crate::ensure!(
+                    input.shape[1..] == [*n],
+                    "request shape {:?} does not match four-step n={n}",
+                    &input.shape[1..]
+                );
+                self.shared.metrics.large_requests.fetch_add(1, Ordering::Relaxed);
+                (key.clone(), self.shared.cfg.large_batch.max(1), false)
+            }
+        };
 
         let (tx, rx) = mpsc::channel();
         let pending = Pending { id, input, enqueued: Instant::now(), reply: tx };
         let mut full_queue = false;
         {
             let mut queues = self.shared.queues.lock().unwrap();
-            let q = queues.entry(plan.meta.key.clone()).or_insert_with(|| {
-                PlanQueue::new(
-                    plan.meta.key.clone(),
-                    plan.meta.batch,
-                    self.shared.cfg.max_queue,
-                )
+            let q = queues.entry(queue_key.clone()).or_insert_with(|| {
+                if pad {
+                    PlanQueue::new(queue_key.clone(), capacity, self.shared.cfg.max_queue)
+                } else {
+                    PlanQueue::unpadded(queue_key.clone(), capacity, self.shared.cfg.max_queue)
+                }
             });
             if let Err(reject) = q.push(pending) {
                 full_queue = true;

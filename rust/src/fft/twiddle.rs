@@ -52,6 +52,28 @@ pub fn four_step_twiddles(n1: usize, n2: usize, inverse: bool) -> Vec<Vec<C64>> 
         .collect()
 }
 
+/// Flattened planar four-step twiddles for the batched large-FFT
+/// engine: `(re, im)` with `re[j*n2 + k] = Re W_N^{jk}` (row-major
+/// `[n1][n2]`, the layout of the engine's twiddled transpose). Angles
+/// are reduced mod N and evaluated in f64 like every other table here,
+/// then stored as f32 — the next device call quantizes the product to
+/// fp16, so the f32 store costs nothing observable.
+pub fn four_step_twiddles_flat(n1: usize, n2: usize, inverse: bool) -> (Vec<f32>, Vec<f32>) {
+    let n = n1 * n2;
+    let sign = if inverse { 2.0 } else { -2.0 };
+    let mut re = vec![0f32; n];
+    let mut im = vec![0f32; n];
+    for j in 0..n1 {
+        for k in 0..n2 {
+            let e = ((j * k) % n) as f64;
+            let ang = sign * std::f64::consts::PI * e / n as f64;
+            re[j * n2 + k] = ang.cos() as f32;
+            im[j * n2 + k] = ang.sin() as f32;
+        }
+    }
+    (re, im)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -89,6 +111,20 @@ mod tests {
         for (rf, ri) in f.iter().zip(&fi) {
             for (a, b) in rf.iter().zip(ri) {
                 assert!((a.conj() - *b).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn flat_four_step_twiddles_match_the_matrix_form() {
+        for inverse in [false, true] {
+            let m = four_step_twiddles(16, 8, inverse);
+            let (re, im) = four_step_twiddles_flat(16, 8, inverse);
+            for j in 0..16 {
+                for k in 0..8 {
+                    assert_eq!(re[j * 8 + k], m[j][k].re as f32, "re ({j},{k})");
+                    assert_eq!(im[j * 8 + k], m[j][k].im as f32, "im ({j},{k})");
+                }
             }
         }
     }

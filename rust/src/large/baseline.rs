@@ -1,0 +1,178 @@
+//! The pre-PR per-sequence four-step path, kept verbatim as the
+//! "before" series of `BENCH_interp.json` (entry
+//! `fourstep_tc_n1048576_b8_fwd`) and as a cross-check oracle for the
+//! batched engine in `large::FourStepPlan`.
+//!
+//! Its costs are the point: one sequence per call, element-wise
+//! gather/scatter transposes, per-call recomputation of the full
+//! N1 x N2 `C64` twiddle table, and fresh allocations for every
+//! intermediate. Do not "fix" those here — the batched engine in
+//! `large/mod.rs` is the fix, and this module is what it is measured
+//! against.
+
+use crate::error::{Result, TcFftError};
+use crate::fft::twiddle::four_step_twiddles;
+use crate::hp::C32;
+use crate::runtime::{PlanarBatch, Runtime};
+
+/// A single-level four-step plan for N = n1 * n2 built on 1D batched
+/// artifacts, executed one sequence at a time (the kept baseline).
+pub struct BaselineFourStep {
+    pub n1: usize,
+    pub n2: usize,
+    key_n1: String,
+    key_n2: String,
+    batch_n1: usize,
+    batch_n2: usize,
+    inverse: bool,
+}
+
+impl BaselineFourStep {
+    /// Choose a balanced decomposition whose factors both have
+    /// artifacts for `algo` (no fallback: the baseline is single-algo).
+    pub fn new(rt: &Runtime, n: usize, algo: &str, inverse: bool) -> Result<BaselineFourStep> {
+        if !n.is_power_of_two() {
+            crate::bail!("four-step size must be a power of two, got {n}");
+        }
+        // prefer balanced factors with available artifacts
+        let mut best: Option<(usize, usize, String, String, usize, usize)> = None;
+        let t = n.trailing_zeros() as usize;
+        for t1 in 1..t {
+            let n1 = 1usize << t1;
+            let n2 = n / n1;
+            let v1 = rt.registry.find_fft1d(n1, usize::MAX, algo, inverse);
+            let v2 = rt.registry.find_fft1d(n2, usize::MAX, algo, inverse);
+            if let (Some(v1), Some(v2)) = (v1, v2) {
+                let balance = (t1 as isize - (t - t1) as isize).abs();
+                let cur = best
+                    .as_ref()
+                    .map(|(b1, b2, ..)| {
+                        let bt1 = b1.trailing_zeros() as isize;
+                        let bt2 = b2.trailing_zeros() as isize;
+                        (bt1 - bt2).abs()
+                    })
+                    .unwrap_or(isize::MAX);
+                if balance < cur {
+                    best = Some((
+                        n1,
+                        n2,
+                        v1.key.clone(),
+                        v2.key.clone(),
+                        v1.batch,
+                        v2.batch,
+                    ));
+                }
+            }
+        }
+        let (n1, n2, key_n1, key_n2, batch_n1, batch_n2) = best.ok_or_else(|| {
+            TcFftError::NoArtifact(format!("pair factoring {n}; build more 1D variants"))
+        })?;
+        Ok(BaselineFourStep { n1, n2, key_n1, key_n2, batch_n1, batch_n2, inverse })
+    }
+
+    pub fn n(&self) -> usize {
+        self.n1 * self.n2
+    }
+
+    /// Run batched column FFTs of length `len` over a row-major
+    /// (rows x cols) matrix laid out in `x`, using artifact `key`.
+    fn device_fft_cols(
+        &self,
+        rt: &Runtime,
+        key: &str,
+        cap: usize,
+        x: &mut [C32],
+        rows: usize,
+        cols: usize,
+    ) -> Result<()> {
+        // gather columns into a (cols, rows) planar batch, run, scatter
+        let mut seqs = PlanarBatch::new(vec![cols, rows]);
+        for c in 0..cols {
+            for r in 0..rows {
+                seqs.re[c * rows + r] = x[r * cols + c].re;
+                seqs.im[c * rows + r] = x[r * cols + c].im;
+            }
+        }
+        let out = self.run_batched(rt, key, cap, seqs)?;
+        for c in 0..cols {
+            for r in 0..rows {
+                x[r * cols + c] = C32::new(out.re[c * rows + r], out.im[c * rows + r]);
+            }
+        }
+        Ok(())
+    }
+
+    fn device_fft_rows(
+        &self,
+        rt: &Runtime,
+        key: &str,
+        cap: usize,
+        x: &mut [C32],
+        rows: usize,
+        cols: usize,
+    ) -> Result<()> {
+        let mut seqs = PlanarBatch::new(vec![rows, cols]);
+        for (i, c) in x.iter().enumerate() {
+            seqs.re[i] = c.re;
+            seqs.im[i] = c.im;
+        }
+        let out = self.run_batched(rt, key, cap, seqs)?;
+        for (i, c) in x.iter_mut().enumerate() {
+            *c = C32::new(out.re[i], out.im[i]);
+        }
+        Ok(())
+    }
+
+    fn run_batched(
+        &self,
+        rt: &Runtime,
+        key: &str,
+        cap: usize,
+        x: PlanarBatch,
+    ) -> Result<PlanarBatch> {
+        let b = x.shape[0];
+        let mut outs = Vec::new();
+        let mut lo = 0;
+        while lo < b {
+            let hi = (lo + cap).min(b);
+            let chunk = x.slice_rows(lo, hi).pad_batch(cap);
+            let (out, _) = rt.execute(key, chunk)?;
+            outs.push(out.slice_rows(0, hi - lo));
+            lo = hi;
+        }
+        Ok(PlanarBatch::concat(&outs))
+    }
+
+    /// Execute the four-step FFT over one length-N sequence.
+    pub fn execute(&self, rt: &Runtime, x: &[C32]) -> Result<Vec<C32>> {
+        let (n1, n2) = (self.n1, self.n2);
+        crate::ensure!(x.len() == n1 * n2, "length {} != {}", x.len(), n1 * n2);
+        // row-major matrix M[j][k] = x[j*n2 + k]
+        let mut m = x.to_vec();
+        // step 1: FFT columns (length n1)
+        self.device_fft_cols(rt, &self.key_n1, self.batch_n1, &mut m, n1, n2)?;
+        // step 2: twiddle M[j][k] *= W_N^{jk} (table rebuilt every call
+        // — the cost the cached flat table in the batched engine kills)
+        let tw = four_step_twiddles(n1, n2, self.inverse);
+        for j in 0..n1 {
+            for k in 0..n2 {
+                let w = tw[j][k];
+                let v = m[j * n2 + k];
+                m[j * n2 + k] = C32::new(
+                    (v.re as f64 * w.re - v.im as f64 * w.im) as f32,
+                    (v.re as f64 * w.im + v.im as f64 * w.re) as f32,
+                );
+            }
+        }
+        // step 3: FFT rows (length n2)
+        self.device_fft_rows(rt, &self.key_n2, self.batch_n2, &mut m, n1, n2)?;
+        // step 4: transpose read-out X[k*n1 + j] = M[j][k]
+        let mut out = vec![C32::new(0.0, 0.0); n1 * n2];
+        for j in 0..n1 {
+            for k in 0..n2 {
+                out[k * n1 + j] = m[j * n2 + k];
+            }
+        }
+        Ok(out)
+    }
+}

@@ -1,179 +1,700 @@
-//! Four-step composition of large FFTs from small AOT artifacts
-//! (paper Sec 3.1: "larger size FFTs can be realized by combining these
-//! basic kernels").
+//! Batched, multi-level four-step composition of large FFTs from
+//! small AOT artifacts (paper Sec 3.1: "larger size FFTs can be
+//! realized by combining these basic kernels").
 //!
-//! For N = N1 * N2, viewing the sequence as a row-major N1 x N2 matrix:
-//!   1. FFT each COLUMN (length N1)          — batched small FFTs
-//!   2. multiply element (j, k) by W_N^{jk}  — twiddle correction
-//!   3. FFT each ROW (length N2)             — batched small FFTs
-//!   4. read out transposed: X[k*N1 + j] = M[j][k]
+//! For N = N1 * N2, viewing each sequence as a row-major N1 x N2
+//! matrix M:
+//!   1. transpose to [N2][N1] (tiled) and FFT the N2 rows (length N1)
+//!      — batched small FFTs on the device;
+//!   2. transpose back to [N1][N2] while multiplying element (j, k) by
+//!      W_N^{jk} — the twiddle correction fused into the transpose,
+//!      against a flat f32 table precomputed once per plan;
+//!   3. FFT the N1 rows (length N2) — batched small FFTs;
+//!   4. final tiled transpose: X[k*N1 + j] = M[j][k].
 //!
-//! Steps 1/3 run on the device via the 1024-point batched artifacts;
-//! step 2's twiddle multiply and the transposes run on the host (f32 —
-//! this models the CUDA-side twiddle kernel; see DESIGN.md
-//! substitutions).
+//! The engine differs from the kept per-sequence baseline
+//! ([`BaselineFourStep`]) in four ways:
+//!
+//! * **batched** — [`FourStepPlan::execute_batch`] transforms a whole
+//!   `PlanarBatch` of sequences per call; the device steps run over
+//!   `batch * N2` (resp. `batch * N1`) rows at artifact capacity, so
+//!   per-call overheads amortize across the batch;
+//! * **cache-blocked** — the three transposes are tiled
+//!   ([`TILE`]x[`TILE`]), not element-wise gather/scatter loops;
+//! * **twiddle-cached** — the flat `[N1][N2]` f32 table is built once
+//!   at plan time (the baseline recomputes an N1 x N2 `C64` table on
+//!   every call) and fused into the middle transpose;
+//! * **parallel** — host-side steps are chunked over contiguous
+//!   output-row ranges on the shared [`crate::util::threadpool`] pool
+//!   (`TCFFT_THREADS`, same contract as the interpreter engine), with
+//!   a serial fall-through below a work threshold.
+//!
+//! Factors larger than the leaf cap ([`FourStepConfig::max_leaf_log2`],
+//! default 2^11) recurse through another four-step level, so sizes
+//! beyond 2^22 decompose multi-level; leaves resolve to the requested
+//! algorithm's artifacts with a `tc` fallback. The coordinator routes
+//! `Op::Fft1d` sizes with no direct artifact to a cached plan from
+//! this module.
+
+pub mod baseline;
+
+pub use baseline::BaselineFourStep;
+
+use std::collections::HashSet;
+use std::sync::{Arc, Mutex, OnceLock};
 
 use crate::error::{Result, TcFftError};
-use crate::fft::twiddle::four_step_twiddles;
+use crate::fft::twiddle::four_step_twiddles_flat;
 use crate::hp::C32;
 use crate::runtime::{PlanarBatch, Runtime};
+use crate::util::threadpool::{default_threads, ScopedJob, ThreadPool};
 
-/// A four-step plan for N = n1 * n2 built on 1D batched artifacts.
-pub struct FourStepPlan {
-    pub n1: usize,
-    pub n2: usize,
-    key_n1: String,
-    key_n2: String,
-    batch_n1: usize,
-    batch_n2: usize,
-    inverse: bool,
+/// Transpose tile edge: a 32x32 f32 tile is 4 KiB per plane, so a
+/// src/dst tile pair stays L1-resident while the strided reads walk it.
+const TILE: usize = 32;
+
+/// Minimum elements in a host-side step before fanning out to the
+/// pool; below this the dispatch overhead beats the parallel win.
+const PAR_MIN_ELEMS: usize = 1 << 16;
+
+/// Default leaf cap (log2): factors above 2^11 recurse through another
+/// four-step level, so a single level covers up to 2^22 and anything
+/// beyond decomposes multi-level. 2^11 keeps a leaf's operand tables
+/// and the transpose working set cache-friendly even though the
+/// synthesized catalog carries artifacts up to 2^17.
+pub const DEFAULT_MAX_LEAF_LOG2: usize = 11;
+
+/// Tuning knobs for [`FourStepPlan`].
+#[derive(Clone, Debug)]
+pub struct FourStepConfig {
+    /// preferred leaf algorithm (`"tc"` | `"tc_split"` | `"r2"`);
+    /// factors without artifacts for it fall back to `"tc"`
+    pub algo: String,
+    /// largest factor solved by a single artifact call (log2); factors
+    /// above this recurse through another four-step level
+    pub max_leaf_log2: usize,
+    /// worker threads for the host-side transpose/twiddle steps:
+    /// 0 = shared crate default (`TCFFT_THREADS`, same contract as the
+    /// interpreter engine), 1 = serial
+    pub threads: usize,
 }
 
-impl FourStepPlan {
-    /// Choose a decomposition whose factors both have artifacts.
-    pub fn new(rt: &Runtime, n: usize, inverse: bool) -> Result<FourStepPlan> {
-        if !n.is_power_of_two() {
-            crate::bail!("four-step size must be a power of two, got {n}");
+impl Default for FourStepConfig {
+    fn default() -> Self {
+        FourStepConfig {
+            algo: "tc".to_string(),
+            max_leaf_log2: DEFAULT_MAX_LEAF_LOG2,
+            threads: 0,
         }
-        // prefer balanced factors with available artifacts
-        let algod = "tc";
-        let mut best: Option<(usize, usize, String, String, usize, usize)> = None;
-        let t = n.trailing_zeros() as usize;
-        for t1 in 1..t {
-            let n1 = 1usize << t1;
-            let n2 = n / n1;
-            let v1 = rt.registry.find_fft1d(n1, usize::MAX, algod, inverse);
-            let v2 = rt.registry.find_fft1d(n2, usize::MAX, algod, inverse);
-            if let (Some(v1), Some(v2)) = (v1, v2) {
-                let balance = (t1 as isize - (t - t1) as isize).abs();
-                let cur = best
-                    .as_ref()
-                    .map(|(b1, b2, ..)| {
-                        let bt1 = b1.trailing_zeros() as isize;
-                        let bt2 = b2.trailing_zeros() as isize;
-                        (bt1 - bt2).abs()
-                    })
-                    .unwrap_or(isize::MAX);
-                if balance < cur {
-                    best = Some((
-                        n1,
-                        n2,
-                        v1.key.clone(),
-                        v2.key.clone(),
-                        v1.batch,
-                        v2.batch,
-                    ));
+    }
+}
+
+/// One level of the decomposition tree.
+enum Node {
+    /// Solved by one batched artifact.
+    Leaf {
+        key: String,
+        cap: usize,
+        n: usize,
+        algo: &'static str,
+    },
+    /// Four-step split n = n1 * n2 with a cached flat twiddle table.
+    Split {
+        n1: usize,
+        n2: usize,
+        left: Box<Node>,
+        right: Box<Node>,
+        tw_re: Vec<f32>,
+        tw_im: Vec<f32>,
+    },
+}
+
+/// Pick the canonical algo string so leaves can carry `&'static str`.
+fn algo_static(algo: &str) -> &'static str {
+    match algo {
+        "tc_split" => "tc_split",
+        "r2" => "r2",
+        _ => "tc",
+    }
+}
+
+/// Build the decomposition for `n`: leaf if an artifact exists within
+/// the leaf cap (first algo in `algos` that has one wins), else the
+/// most balanced split whose halves both build. `memo` caches sizes
+/// that failed so the search stays O(log^2 n).
+fn build_node(
+    rt: &Runtime,
+    n: usize,
+    algos: &[String],
+    inverse: bool,
+    max_leaf: usize,
+    force_split: bool,
+    memo: &mut HashSet<usize>,
+) -> Result<Node> {
+    if !force_split && n <= max_leaf {
+        for algo in algos {
+            if let Some(v) = rt.registry.find_fft1d(n, usize::MAX, algo, inverse) {
+                return Ok(Node::Leaf {
+                    key: v.key.clone(),
+                    cap: v.batch,
+                    n,
+                    algo: algo_static(algo),
+                });
+            }
+        }
+    }
+    if memo.contains(&n) {
+        return Err(TcFftError::NoArtifact(format!("four-step factor {n}")));
+    }
+    let t = n.trailing_zeros() as usize;
+    if t < 2 {
+        memo.insert(n);
+        return Err(TcFftError::NoArtifact(format!(
+            "no 1D artifact for n={n} and it is too small to split"
+        )));
+    }
+    // candidate split points, most balanced first (ties: larger n1)
+    let mut cands: Vec<usize> = (1..t).collect();
+    cands.sort_by_key(|&t1| {
+        let balance = (t1 as isize - (t as isize - t1 as isize)).abs();
+        (balance, std::cmp::Reverse(t1))
+    });
+    for &t1 in &cands {
+        let (n1, n2) = (1usize << t1, n >> t1);
+        let left = match build_node(rt, n1, algos, inverse, max_leaf, false, memo) {
+            Ok(l) => l,
+            Err(_) => continue,
+        };
+        let right = match build_node(rt, n2, algos, inverse, max_leaf, false, memo) {
+            Ok(r) => r,
+            Err(_) => continue,
+        };
+        let (tw_re, tw_im) = four_step_twiddles_flat(n1, n2, inverse);
+        return Ok(Node::Split {
+            n1,
+            n2,
+            left: Box::new(left),
+            right: Box::new(right),
+            tw_re,
+            tw_im,
+        });
+    }
+    memo.insert(n);
+    Err(TcFftError::NoArtifact(format!(
+        "no four-step decomposition of n={n} (algos {algos:?}, leaf cap {max_leaf})"
+    )))
+}
+
+/// A reusable pair of planar scratch planes.
+type ScratchPair = (Vec<f32>, Vec<f32>);
+
+/// The process-wide host-step pool every default-config plan shares
+/// (sized by [`default_threads`], i.e. the `TCFFT_THREADS` contract).
+/// Without this, the coordinator's never-evicted plan cache would
+/// accumulate one private pool per (n, algo, dir) key.
+fn shared_pool() -> Arc<ThreadPool> {
+    static POOL: OnceLock<Arc<ThreadPool>> = OnceLock::new();
+    Arc::clone(POOL.get_or_init(|| Arc::new(ThreadPool::new(default_threads()))))
+}
+
+/// Host-side execution context: the shared pool (None = serial) plus
+/// the plan's scratch arena, so steady-state execution of a cached
+/// plan allocates nothing for its transpose buffers.
+struct ExecCtx<'a> {
+    pool: Option<Arc<ThreadPool>>,
+    threads: usize,
+    scratch: &'a Mutex<Option<ScratchPair>>,
+}
+
+impl ExecCtx<'_> {
+    fn pool_for(&self, total_elems: usize) -> Option<&Arc<ThreadPool>> {
+        match &self.pool {
+            Some(p) if self.threads > 1 && total_elems >= PAR_MIN_ELEMS => Some(p),
+            _ => None,
+        }
+    }
+
+    /// Borrow a scratch pair of at least `len` elements per plane.
+    fn take_scratch(&self, len: usize) -> ScratchPair {
+        let popped = self.scratch.lock().unwrap().take();
+        let (mut re, mut im) = popped.unwrap_or_default();
+        if re.len() < len {
+            re.resize(len, 0.0);
+            im.resize(len, 0.0);
+        }
+        (re, im)
+    }
+
+    /// Return a scratch pair, retaining only the most recent one. A
+    /// run's last return is the top level's (largest) pair — exactly
+    /// the next same-shape request's need — so retained memory stays
+    /// at one working set per plan instead of growing with nesting
+    /// depth or concurrency.
+    fn give_scratch(&self, pair: ScratchPair) {
+        *self.scratch.lock().unwrap() = Some(pair);
+    }
+}
+
+/// Tiled transpose of one sequence, output rows `rows.0..rows.1`:
+/// `dst[r*oc + c] = src[c*or + r]`, times `tw[r*oc + c]` when a
+/// twiddle table is given. `dims = (or, oc)` are the OUTPUT rows/cols;
+/// `dst` starts at output row `rows.0`; `src`/`tw` span the sequence.
+fn transpose_range(
+    src: (&[f32], &[f32]),
+    dst: (&mut [f32], &mut [f32]),
+    rows: (usize, usize),
+    dims: (usize, usize),
+    tw: Option<(&[f32], &[f32])>,
+) {
+    let (src_re, src_im) = src;
+    let (dst_re, dst_im) = dst;
+    let (r0, r1) = rows;
+    let (out_rows, out_cols) = dims;
+    debug_assert_eq!(dst_re.len(), (r1 - r0) * out_cols);
+    for rb in (r0..r1).step_by(TILE) {
+        let row_end = (rb + TILE).min(r1);
+        for cb in (0..out_cols).step_by(TILE) {
+            let ce = (cb + TILE).min(out_cols);
+            for r in rb..row_end {
+                let d = (r - r0) * out_cols;
+                match tw {
+                    None => {
+                        for c in cb..ce {
+                            let s = c * out_rows + r;
+                            dst_re[d + c] = src_re[s];
+                            dst_im[d + c] = src_im[s];
+                        }
+                    }
+                    Some((tw_re, tw_im)) => {
+                        let t = r * out_cols;
+                        for c in cb..ce {
+                            let s = c * out_rows + r;
+                            let (ar, ai) = (src_re[s], src_im[s]);
+                            let (wr, wi) = (tw_re[t + c], tw_im[t + c]);
+                            dst_re[d + c] = ar * wr - ai * wi;
+                            dst_im[d + c] = ar * wi + ai * wr;
+                        }
+                    }
                 }
             }
         }
-        let (n1, n2, key_n1, key_n2, batch_n1, batch_n2) = best.ok_or_else(|| {
-            TcFftError::NoArtifact(format!("pair factoring {n}; build more 1D variants"))
-        })?;
-        Ok(FourStepPlan { n1, n2, key_n1, key_n2, batch_n1, batch_n2, inverse })
+    }
+}
+
+/// Transpose (optionally twiddling) every sequence of a batch,
+/// row-chunked over the pool when the work is large enough. Chunks are
+/// contiguous output-row ranges, so parallel and serial execution
+/// write identical bytes.
+fn par_transpose(
+    ctx: &ExecCtx<'_>,
+    src: (&[f32], &[f32]),
+    dst: (&mut [f32], &mut [f32]),
+    seqs: usize,
+    dims: (usize, usize),
+    tw: Option<(&[f32], &[f32])>,
+) {
+    let (out_rows, out_cols) = dims;
+    let n = out_rows * out_cols;
+    let (src_re, src_im) = src;
+    let (dst_re, dst_im) = dst;
+    debug_assert_eq!(src_re.len(), seqs * n);
+    debug_assert_eq!(dst_re.len(), seqs * n);
+    let Some(pool) = ctx.pool_for(seqs * n) else {
+        for s in 0..seqs {
+            let (a, b) = (s * n, (s + 1) * n);
+            transpose_range(
+                (&src_re[a..b], &src_im[a..b]),
+                (&mut dst_re[a..b], &mut dst_im[a..b]),
+                (0, out_rows),
+                dims,
+                tw,
+            );
+        }
+        return;
+    };
+    let chunks_per_seq = (ctx.threads * 2).div_ceil(seqs).max(1);
+    let rows_per_task = out_rows.div_ceil(chunks_per_seq).max(1);
+    let mut tasks: Vec<ScopedJob<'_>> = Vec::new();
+    for (s, (dre_seq, dim_seq)) in dst_re.chunks_mut(n).zip(dst_im.chunks_mut(n)).enumerate() {
+        let sre = &src_re[s * n..(s + 1) * n];
+        let sim = &src_im[s * n..(s + 1) * n];
+        let mut r0 = 0usize;
+        for (dre, dim) in dre_seq
+            .chunks_mut(rows_per_task * out_cols)
+            .zip(dim_seq.chunks_mut(rows_per_task * out_cols))
+        {
+            let rows_here = dre.len() / out_cols;
+            let range = (r0, r0 + rows_here);
+            tasks.push(Box::new(move || {
+                transpose_range((sre, sim), (dre, dim), range, dims, tw);
+            }));
+            r0 += rows_here;
+        }
+    }
+    pool.scope(tasks);
+}
+
+/// Run `rows` length-`n` sequences through artifact `key` in place,
+/// chunked to the artifact batch capacity (the tail chunk is
+/// zero-padded, as the artifact shape demands). The backend returns
+/// ownership of the staging buffer it was handed, so one allocation
+/// serves every chunk of the loop.
+fn run_leaf(
+    rt: &Runtime,
+    key: &str,
+    cap: usize,
+    n: usize,
+    re: &mut [f32],
+    im: &mut [f32],
+    rows: usize,
+) -> Result<()> {
+    debug_assert_eq!(re.len(), rows * n);
+    let mut chunk = PlanarBatch::new(vec![cap, n]);
+    let mut lo = 0usize;
+    while lo < rows {
+        let take = (rows - lo).min(cap);
+        let (a, b) = (lo * n, (lo + take) * n);
+        chunk.re[..b - a].copy_from_slice(&re[a..b]);
+        chunk.im[..b - a].copy_from_slice(&im[a..b]);
+        if take < cap {
+            // reused buffer: clear stale rows in the padded tail
+            chunk.re[b - a..].fill(0.0);
+            chunk.im[b - a..].fill(0.0);
+        }
+        let (out, _) = rt.execute(key, std::mem::take(&mut chunk))?;
+        re[a..b].copy_from_slice(&out.re[..b - a]);
+        im[a..b].copy_from_slice(&out.im[..b - a]);
+        chunk = out; // same shape [cap, n]; recycle for the next chunk
+        debug_assert_eq!(chunk.re.len(), cap * n);
+        lo += take;
+    }
+    Ok(())
+}
+
+impl Node {
+    fn n(&self) -> usize {
+        match self {
+            Node::Leaf { n, .. } => *n,
+            Node::Split { n1, n2, .. } => n1 * n2,
+        }
+    }
+
+    fn depth(&self) -> usize {
+        match self {
+            Node::Leaf { .. } => 0,
+            Node::Split { left, right, .. } => 1 + left.depth().max(right.depth()),
+        }
+    }
+
+    fn describe(&self) -> String {
+        match self {
+            Node::Leaf { n, algo, .. } => format!("{n}[{algo}]"),
+            Node::Split { left, right, .. } => {
+                format!("({} x {})", left.describe(), right.describe())
+            }
+        }
+    }
+
+    /// Transform `rows` length-`self.n()` sequences in place.
+    fn run(
+        &self,
+        rt: &Runtime,
+        re: &mut [f32],
+        im: &mut [f32],
+        rows: usize,
+        ctx: &ExecCtx<'_>,
+    ) -> Result<()> {
+        match self {
+            Node::Leaf { key, cap, n, .. } => run_leaf(rt, key, *cap, *n, re, im, rows),
+            Node::Split { n1, n2, left, right, tw_re, tw_im } => {
+                let (n1, n2) = (*n1, *n2);
+                let n = n1 * n2;
+                let len = rows * n;
+                debug_assert_eq!(re.len(), len);
+                let (mut s_re, mut s_im) = ctx.take_scratch(len);
+                // step 1: tiled transpose [n1][n2] -> [n2][n1]
+                par_transpose(
+                    ctx,
+                    (&*re, &*im),
+                    (&mut s_re[..len], &mut s_im[..len]),
+                    rows,
+                    (n2, n1),
+                    None,
+                );
+                // step 2: length-n1 FFTs over the rows*n2 columns
+                left.run(rt, &mut s_re[..len], &mut s_im[..len], rows * n2, ctx)?;
+                // step 3: transpose back, twiddle fused: [n2][n1] -> [n1][n2]
+                par_transpose(
+                    ctx,
+                    (&s_re[..len], &s_im[..len]),
+                    (&mut *re, &mut *im),
+                    rows,
+                    (n1, n2),
+                    Some((tw_re.as_slice(), tw_im.as_slice())),
+                );
+                // step 4: length-n2 FFTs over the rows*n1 rows
+                right.run(rt, re, im, rows * n1, ctx)?;
+                // step 5: final transpose [n1][n2] -> [n2][n1] is the
+                // natural-order read-out X[k*n1 + j] = M[j][k]
+                par_transpose(
+                    ctx,
+                    (&*re, &*im),
+                    (&mut s_re[..len], &mut s_im[..len]),
+                    rows,
+                    (n2, n1),
+                    None,
+                );
+                re.copy_from_slice(&s_re[..len]);
+                im.copy_from_slice(&s_im[..len]);
+                ctx.give_scratch((s_re, s_im));
+                Ok(())
+            }
+        }
+    }
+}
+
+/// A cached, batched four-step plan for one (n, algo, direction).
+///
+/// Build once (the decomposition tree and every level's flat twiddle
+/// table are precomputed here), then call
+/// [`execute_batch`](Self::execute_batch) per request batch. Plans are
+/// `Send + Sync`; the coordinator shares them behind `Arc`.
+pub struct FourStepPlan {
+    n: usize,
+    inverse: bool,
+    algo: String,
+    root: Node,
+    threads: usize,
+    /// true when `FourStepConfig::threads` pinned an explicit count —
+    /// those plans own a private pool (benches, tests); default-config
+    /// plans all share [`shared_pool`]
+    explicit_pool: bool,
+    pool: Mutex<Option<Arc<ThreadPool>>>,
+    /// the most recently used transpose plane pair; steady-state
+    /// execution of a cached plan allocates nothing here
+    scratch: Mutex<Option<ScratchPair>>,
+}
+
+impl FourStepPlan {
+    /// Default-config plan (algo `"tc"`), kept signature-compatible
+    /// with the pre-PR constructor.
+    pub fn new(rt: &Runtime, n: usize, inverse: bool) -> Result<FourStepPlan> {
+        Self::with_config(rt, n, inverse, FourStepConfig::default())
+    }
+
+    /// Plan with an explicit leaf algorithm (falls back to `"tc"` for
+    /// factors the requested algo has no artifacts for).
+    pub fn with_algo(rt: &Runtime, n: usize, algo: &str, inverse: bool) -> Result<FourStepPlan> {
+        Self::with_config(
+            rt,
+            n,
+            inverse,
+            FourStepConfig { algo: algo.to_string(), ..FourStepConfig::default() },
+        )
+    }
+
+    pub fn with_config(
+        rt: &Runtime,
+        n: usize,
+        inverse: bool,
+        cfg: FourStepConfig,
+    ) -> Result<FourStepPlan> {
+        if !n.is_power_of_two() || n < 4 {
+            crate::bail!(TcFftError::BadSize(n));
+        }
+        let max_leaf = 1usize << cfg.max_leaf_log2.clamp(1, 20);
+        let mut algos = vec![cfg.algo.clone()];
+        if cfg.algo != "tc" {
+            algos.push("tc".to_string());
+        }
+        let mut memo = HashSet::new();
+        // the top level always splits: a four-step plan exists to
+        // compose sizes, direct artifact or not
+        let root = build_node(rt, n, &algos, inverse, max_leaf, true, &mut memo)?;
+        let (threads, explicit_pool) = if cfg.threads == 0 {
+            (default_threads(), false)
+        } else {
+            (cfg.threads.clamp(1, 64), true)
+        };
+        Ok(FourStepPlan {
+            n,
+            inverse,
+            algo: cfg.algo,
+            root,
+            threads,
+            explicit_pool,
+            pool: Mutex::new(None),
+            scratch: Mutex::new(None),
+        })
     }
 
     pub fn n(&self) -> usize {
-        self.n1 * self.n2
+        self.n
     }
 
-    /// Run batched column FFTs of length `len` over a row-major
-    /// (rows x cols) matrix laid out in `x`, using artifact `key`.
-    fn device_fft_cols(
-        &self,
-        rt: &Runtime,
-        key: &str,
-        cap: usize,
-        x: &mut [C32],
-        rows: usize,
-        cols: usize,
-    ) -> Result<()> {
-        // gather columns into a (cols, rows) planar batch, run, scatter
-        let mut seqs = PlanarBatch::new(vec![cols, rows]);
-        for c in 0..cols {
-            for r in 0..rows {
-                seqs.re[c * rows + r] = x[r * cols + c].re;
-                seqs.im[c * rows + r] = x[r * cols + c].im;
-            }
-        }
-        let out = self.run_batched(rt, key, cap, seqs)?;
-        for c in 0..cols {
-            for r in 0..rows {
-                x[r * cols + c] = C32::new(out.re[c * rows + r], out.im[c * rows + r]);
-            }
-        }
-        Ok(())
+    pub fn inverse(&self) -> bool {
+        self.inverse
     }
 
-    fn device_fft_rows(
-        &self,
-        rt: &Runtime,
-        key: &str,
-        cap: usize,
-        x: &mut [C32],
-        rows: usize,
-        cols: usize,
-    ) -> Result<()> {
-        let mut seqs = PlanarBatch::new(vec![rows, cols]);
-        for (i, c) in x.iter().enumerate() {
-            seqs.re[i] = c.re;
-            seqs.im[i] = c.im;
-        }
-        let out = self.run_batched(rt, key, cap, seqs)?;
-        for (i, c) in x.iter_mut().enumerate() {
-            *c = C32::new(out.re[i], out.im[i]);
-        }
-        Ok(())
+    /// The requested leaf algorithm (individual leaves may have fallen
+    /// back to `"tc"`; see [`describe`](Self::describe)).
+    pub fn algo(&self) -> &str {
+        &self.algo
     }
 
-    fn run_batched(
-        &self,
-        rt: &Runtime,
-        key: &str,
-        cap: usize,
-        x: PlanarBatch,
-    ) -> Result<PlanarBatch> {
+    /// Host-side worker count (the `TCFFT_THREADS` contract).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Top-level factors (n1, n2).
+    pub fn factors(&self) -> (usize, usize) {
+        match &self.root {
+            Node::Split { n1, n2, .. } => (*n1, *n2),
+            Node::Leaf { n, .. } => (*n, 1),
+        }
+    }
+
+    pub fn n1(&self) -> usize {
+        self.factors().0
+    }
+
+    pub fn n2(&self) -> usize {
+        self.factors().1
+    }
+
+    /// Number of four-step levels (1 = single split, 2+ = multi-level).
+    pub fn depth(&self) -> usize {
+        self.root.depth()
+    }
+
+    /// Human-readable decomposition, e.g. `(1024[tc] x 1024[tc])`.
+    pub fn describe(&self) -> String {
+        self.root.describe()
+    }
+
+    fn pool(&self) -> Arc<ThreadPool> {
+        if !self.explicit_pool {
+            return shared_pool();
+        }
+        let mut guard = self.pool.lock().unwrap();
+        Arc::clone(guard.get_or_insert_with(|| Arc::new(ThreadPool::new(self.threads))))
+    }
+
+    /// Transform a whole batch of sequences (shape `[b, n]`) in one
+    /// call — the batched entry point the service routes to.
+    pub fn execute_batch(&self, rt: &Runtime, x: PlanarBatch) -> Result<PlanarBatch> {
+        crate::ensure!(
+            x.shape.len() == 2 && x.shape[1] == self.n,
+            "four-step input shape {:?} != [b, {}]",
+            x.shape,
+            self.n
+        );
+        debug_assert_eq!(self.root.n(), self.n);
         let b = x.shape[0];
-        let mut outs = Vec::new();
-        let mut lo = 0;
-        while lo < b {
-            let hi = (lo + cap).min(b);
-            let chunk = x.slice_rows(lo, hi).pad_batch(cap);
-            let (out, _) = rt.execute(key, chunk)?;
-            outs.push(out.slice_rows(0, hi - lo));
-            lo = hi;
+        if b == 0 {
+            return Ok(x);
         }
-        Ok(PlanarBatch::concat(&outs))
+        let pool = if self.threads > 1 && b * self.n >= PAR_MIN_ELEMS {
+            Some(self.pool())
+        } else {
+            None
+        };
+        let ctx = ExecCtx { pool, threads: self.threads, scratch: &self.scratch };
+        let mut re = x.re;
+        let mut im = x.im;
+        self.root.run(rt, &mut re, &mut im, b, &ctx)?;
+        Ok(PlanarBatch { re, im, shape: vec![b, self.n] })
     }
 
-    /// Execute the four-step FFT over one length-N sequence.
+    /// Single-sequence convenience wrapper over the batched engine.
     pub fn execute(&self, rt: &Runtime, x: &[C32]) -> Result<Vec<C32>> {
-        let (n1, n2) = (self.n1, self.n2);
-        crate::ensure!(x.len() == n1 * n2, "length {} != {}", x.len(), n1 * n2);
-        // row-major matrix M[j][k] = x[j*n2 + k]
-        let mut m = x.to_vec();
-        // step 1: FFT columns (length n1)
-        self.device_fft_cols(rt, &self.key_n1, self.batch_n1, &mut m, n1, n2)?;
-        // step 2: twiddle M[j][k] *= W_N^{jk}
-        let tw = four_step_twiddles(n1, n2, self.inverse);
-        for j in 0..n1 {
-            for k in 0..n2 {
-                let w = tw[j][k];
-                let v = m[j * n2 + k];
-                m[j * n2 + k] = C32::new(
-                    (v.re as f64 * w.re - v.im as f64 * w.im) as f32,
-                    (v.re as f64 * w.im + v.im as f64 * w.re) as f32,
-                );
+        crate::ensure!(x.len() == self.n, "length {} != {}", x.len(), self.n);
+        let out = self.execute_batch(rt, PlanarBatch::from_complex(x, vec![1, self.n]))?;
+        Ok(out.to_complex())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::error::relative_rmse;
+    use crate::fft::refdft;
+    use crate::hp::complex::widen;
+    use crate::workload::random_signal;
+
+    fn rt() -> Runtime {
+        Runtime::load("/definitely/not/a/dir").unwrap()
+    }
+
+    #[test]
+    fn balanced_single_level_decomposition() {
+        let rt = rt();
+        let p = FourStepPlan::new(&rt, 1 << 18, false).unwrap();
+        assert_eq!(p.n(), 1 << 18);
+        assert_eq!(p.factors(), (512, 512));
+        assert_eq!(p.depth(), 1);
+        assert!(p.describe().contains("[tc]"), "{}", p.describe());
+    }
+
+    #[test]
+    fn small_leaf_cap_forces_multi_level() {
+        let rt = rt();
+        let cfg = FourStepConfig { max_leaf_log2: 3, ..FourStepConfig::default() };
+        let p = FourStepPlan::with_config(&rt, 256, false, cfg).unwrap();
+        // 256 = 16 x 16, each 16 = 4 x 4 under an 8-point leaf cap
+        assert_eq!(p.factors(), (16, 16));
+        assert_eq!(p.depth(), 2, "decomposition: {}", p.describe());
+    }
+
+    #[test]
+    fn rejects_bad_sizes() {
+        let rt = rt();
+        assert!(FourStepPlan::new(&rt, 100, false).is_err()); // not a power of two
+        assert!(FourStepPlan::new(&rt, 2, false).is_err()); // too small to split
+    }
+
+    #[test]
+    fn thread_knob_is_respected() {
+        let rt = rt();
+        let cfg = FourStepConfig { threads: 3, ..FourStepConfig::default() };
+        let p = FourStepPlan::with_config(&rt, 1 << 12, false, cfg).unwrap();
+        assert_eq!(p.threads(), 3);
+        let auto = FourStepPlan::new(&rt, 1 << 12, false).unwrap();
+        assert!((1..=64).contains(&auto.threads()));
+    }
+
+    #[test]
+    fn tiny_four_step_matches_the_dft_definition() {
+        let rt = rt();
+        for inverse in [false, true] {
+            let p = FourStepPlan::new(&rt, 64, inverse).unwrap();
+            let x: Vec<C32> = (0..2u64).flat_map(|b| random_signal(64, 7 + b)).collect();
+            let input = PlanarBatch::from_complex(&x, vec![2, 64]);
+            let out = p.execute_batch(&rt, input.clone()).unwrap();
+            let q = input.quantize_f16();
+            for b in 0..2 {
+                let want = refdft::dft(&widen(&q.to_complex()[b * 64..(b + 1) * 64]), inverse);
+                let got = widen(&out.to_complex()[b * 64..(b + 1) * 64]);
+                let err = relative_rmse(&want, &got);
+                assert!(err < 5e-3, "inverse={inverse} row={b}: rmse {err:.3e}");
             }
         }
-        // step 3: FFT rows (length n2)
-        self.device_fft_rows(rt, &self.key_n2, self.batch_n2, &mut m, n1, n2)?;
-        // step 4: transpose read-out X[k*n1 + j] = M[j][k]
-        let mut out = vec![C32::new(0.0, 0.0); n1 * n2];
-        for j in 0..n1 {
-            for k in 0..n2 {
-                out[k * n1 + j] = m[j * n2 + k];
-            }
+    }
+
+    #[test]
+    fn single_sequence_wrapper_agrees_with_batch() {
+        let rt = rt();
+        let p = FourStepPlan::new(&rt, 256, false).unwrap();
+        let x = random_signal(256, 42);
+        let single = p.execute(&rt, &x).unwrap();
+        let batch = p
+            .execute_batch(&rt, PlanarBatch::from_complex(&x, vec![1, 256]))
+            .unwrap()
+            .to_complex();
+        for (a, b) in single.iter().zip(&batch) {
+            assert_eq!(a.re.to_bits(), b.re.to_bits());
+            assert_eq!(a.im.to_bits(), b.im.to_bits());
         }
-        Ok(out)
     }
 }

@@ -30,8 +30,12 @@
 //!   artifact/synthesized registry, planar buffers.
 //! * [`plan`] — cuFFT-style planner: size -> radix schedule -> artifact.
 //! * [`coordinator`] — the FFT service: router, dynamic batcher,
-//!   worker scheduler, metrics, TCP server.
-//! * [`large`] — four-step composition of big FFTs from small artifacts.
+//!   worker scheduler, metrics, TCP server. Sizes with no direct
+//!   artifact route to a cached four-step plan.
+//! * [`large`] — batched, multi-level four-step engine composing big
+//!   FFTs from small artifacts (tiled transposes, cached flat twiddle
+//!   tables, `TCFFT_THREADS` host parallelism), plus the kept
+//!   per-sequence baseline.
 //! * [`fft`], [`hp`] — host-side oracles and numeric substrates.
 //! * [`memsim`], [`perfmodel`] — the GPU memory/roofline models that
 //!   regenerate the paper's Table 2 and Figs 4-7.

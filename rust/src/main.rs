@@ -73,7 +73,8 @@ USAGE: tcfft <SUBCOMMAND> [OPTIONS]
   bench --n N [--batch B]       quick wall-clock throughput
   bench-validate [--file BENCH_interp.json]
                                 validate the bench JSON emitted by
-                                fig4_1d/fig7_batch (run those first)
+                                fig4_1d/fig7_batch/large_fourstep
+                                (run those first)
   precision                     Table 4: relative error vs FFTW-f64 stand-in
   table2                        Table 2: memsim bandwidth vs continuous size
   figures                       Figs 4-7: modelled V100/A100 series
@@ -207,15 +208,17 @@ fn bench_cmd(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// CI smoke check: `BENCH_interp.json` (emitted by the fig4_1d and
-/// fig7_batch benches) parses, carries the expected schema, and holds
-/// the headline before/after entry plus the batch-sweep anchor.
+/// CI smoke check: `BENCH_interp.json` (emitted by the fig4_1d,
+/// fig7_batch and large_fourstep benches) parses, carries the expected
+/// schema, and holds the headline before/after entry, the batch-sweep
+/// anchor, and the four-step large-FFT acceptance entry.
 fn bench_validate_cmd(args: &Args) -> Result<()> {
     use tcfft::bench_harness::BENCH_SCHEMA;
     use tcfft::util::json::Json;
 
     const HEADLINE: &str = "fft1d_tc_n4096_b32_fwd";
     const SWEEP_ANCHOR: &str = "fft1d_tc_n131072_b1_fwd";
+    const FOURSTEP: &str = "fourstep_tc_n1048576_b8_fwd";
 
     // same default resolution as the emitting benches (cwd-independent)
     let default_file = tcfft::bench_harness::bench_json_path().display().to_string();
@@ -253,6 +256,12 @@ fn bench_validate_cmd(args: &Args) -> Result<()> {
     pos(HEADLINE, "speedup_serial")?;
     // the fig7 sweep anchor
     pos(SWEEP_ANCHOR, "engine_median_s")?;
+    // the large-FFT acceptance entry: batched four-step engine vs the
+    // kept per-sequence baseline at n=2^20 batch=8
+    let m4_ref = pos(FOURSTEP, "reference_median_s")?;
+    let m4_par = pos(FOURSTEP, "engine_median_s")?;
+    pos(FOURSTEP, "engine_serial_median_s")?;
+    pos(FOURSTEP, "speedup")?;
 
     let mut t = Table::new(&["entry", "bench", "engine median ms", "speedup vs pre-PR"]);
     if let Json::Obj(m) = &entries {
@@ -278,6 +287,12 @@ fn bench_validate_cmd(args: &Args) -> Result<()> {
         m_ser * 1e3,
         m_par * 1e3,
         m_ref / m_par
+    );
+    println!(
+        "large-FFT {FOURSTEP}: per-seq baseline {:.1} ms -> batched engine {:.1} ms ({:.2}x)",
+        m4_ref * 1e3,
+        m4_par * 1e3,
+        m4_ref / m4_par
     );
     println!("bench-validate: OK ({file})");
     Ok(())

@@ -146,6 +146,13 @@ impl Plan {
         );
         let cap = self.meta.batch;
         let b = input.shape[0];
+        if b == cap {
+            // exact fit: no pad, no slice, no concat — the common path
+            // when a batched caller (the four-step engine, the service
+            // batcher) already groups to artifact capacity
+            let (out, _) = rt.execute(&self.meta.key, input)?;
+            return Ok(out);
+        }
         let mut outs = Vec::new();
         let mut lo = 0;
         while lo < b {

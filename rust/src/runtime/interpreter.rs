@@ -67,7 +67,7 @@ use super::{Backend, ExecStats};
 use crate::error::Result;
 use crate::fft::digitrev;
 use crate::hp::F16;
-use crate::util::threadpool::{ScopedJob, ThreadPool};
+use crate::util::threadpool::{default_threads, ScopedJob, ThreadPool};
 
 /// Largest single-stage radix the schedules produce (16 from the
 /// paper's radix-16 formulation; trailing stages are 2/4/8).
@@ -491,20 +491,6 @@ impl Compiled {
         };
         Compiled { axes }
     }
-}
-
-/// Resolve the thread-count knob: `TCFFT_THREADS` env var (accepted
-/// range 1..=64), else the machine's available parallelism capped at
-/// 16 (documented in the README "Execution engine" section).
-fn default_threads() -> usize {
-    if let Ok(v) = std::env::var("TCFFT_THREADS") {
-        if let Ok(n) = v.trim().parse::<usize>() {
-            if n >= 1 {
-                return n.min(64);
-            }
-        }
-    }
-    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(16)
 }
 
 /// The pure-Rust interpreter backend (the offline default): batch-major

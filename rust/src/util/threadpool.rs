@@ -16,6 +16,21 @@ use std::thread;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
+/// Resolve the crate-wide worker-count knob shared by every parallel
+/// engine (the interpreter's batch engine and the four-step large-FFT
+/// engine): `TCFFT_THREADS` env var (accepted range 1..=64), else the
+/// machine's available parallelism capped at 16.
+pub fn default_threads() -> usize {
+    if let Ok(v) = std::env::var("TCFFT_THREADS") {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            if n >= 1 {
+                return n.min(64);
+            }
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(16)
+}
+
 /// A job submitted through [`ThreadPool::scope`]: may borrow from the
 /// submitting stack frame ('env outlives the scope call).
 pub type ScopedJob<'env> = Box<dyn FnOnce() + Send + 'env>;
@@ -318,5 +333,12 @@ mod tests {
         let pool = ThreadPool::new(1);
         pool.scope(Vec::new());
         assert_eq!(pool.in_flight(), 0);
+    }
+
+    #[test]
+    fn default_threads_is_in_contract_range() {
+        // env-dependent, so only the documented bounds are asserted
+        let t = default_threads();
+        assert!((1..=64).contains(&t), "threads {t}");
     }
 }

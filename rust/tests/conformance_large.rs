@@ -1,0 +1,185 @@
+//! Conformance of the batched four-step large-FFT engine against the
+//! host f64 oracles: batched execution across decompositions
+//! (including the forced multi-level path), inverse round trip, algo
+//! selection/fallback, and agreement with the kept per-sequence
+//! baseline.
+//!
+//! Oracle strategy mirrors `conformance_interpreter.rs`: the f64
+//! radix-2 FFT (itself anchored to the O(N^2) DFT definition) applied
+//! to the fp16-quantized input, checked by relative RMSE with the same
+//! 5e-3 bound.
+
+use std::sync::{Arc, OnceLock};
+
+use tcfft::error::relative_rmse;
+use tcfft::fft::radix2;
+use tcfft::hp::complex::widen;
+use tcfft::hp::{C32, C64};
+use tcfft::large::{BaselineFourStep, FourStepConfig, FourStepPlan};
+use tcfft::runtime::{PlanarBatch, Runtime};
+use tcfft::workload::random_signal;
+
+const RMSE_TOL: f64 = 5e-3;
+
+fn runtime() -> &'static Arc<Runtime> {
+    static RT: OnceLock<Arc<Runtime>> = OnceLock::new();
+    RT.get_or_init(|| {
+        Arc::new(Runtime::load("/definitely/not/a/dir").expect("synthesized runtime"))
+    })
+}
+
+/// f64 radix-2 oracle per batch row, on the fp16-quantized input.
+fn oracle_rows(q: &PlanarBatch, inverse: bool) -> Vec<C64> {
+    let n = q.shape[1];
+    let x = widen(&q.to_complex());
+    let mut out = Vec::with_capacity(x.len());
+    for row in x.chunks(n) {
+        out.extend(radix2::fft_vec(row, inverse));
+    }
+    out
+}
+
+fn check_rows(plan: &FourStepPlan, input: &PlanarBatch, inverse: bool, what: &str) {
+    let rt = runtime();
+    let out = plan.execute_batch(rt, input.clone()).unwrap();
+    assert_eq!(out.shape, input.shape, "{what}: shape");
+    let n = input.shape[1];
+    let want = oracle_rows(&input.quantize_f16(), inverse);
+    let got = widen(&out.to_complex());
+    for b in 0..input.shape[0] {
+        let (lo, hi) = (b * n, (b + 1) * n);
+        let rmse = relative_rmse(&want[lo..hi], &got[lo..hi]);
+        assert!(
+            rmse < RMSE_TOL,
+            "{what} row={b}: rel-RMSE {rmse:.3e} over {RMSE_TOL:.1e} (plan {})",
+            plan.describe()
+        );
+    }
+}
+
+fn batch_input(n: usize, b: usize, seed: u64) -> PlanarBatch {
+    let x: Vec<C32> = (0..b as u64)
+        .flat_map(|i| random_signal(n, seed + i))
+        .collect();
+    PlanarBatch::from_complex(&x, vec![b, n])
+}
+
+#[test]
+fn batched_single_level_matches_radix2_oracle() {
+    let rt = runtime();
+    let plan = FourStepPlan::new(rt, 1 << 18, false).unwrap();
+    assert_eq!(plan.depth(), 1);
+    check_rows(&plan, &batch_input(1 << 18, 3, 0x51), false, "n=2^18 b=3");
+}
+
+#[test]
+fn decomposition_sweep_matches_oracle() {
+    // a spread of sizes, including one with a direct artifact (2^16)
+    // and one odd log2 (unbalanced factors)
+    let rt = runtime();
+    for t in [14usize, 15, 16] {
+        let plan = FourStepPlan::new(rt, 1 << t, false).unwrap();
+        check_rows(&plan, &batch_input(1 << t, 2, 0x60 + t as u64), false, &format!("n=2^{t}"));
+    }
+}
+
+#[test]
+fn forced_multi_level_matches_oracle() {
+    // a small leaf cap forces two four-step levels at a size the f64
+    // oracle covers instantly
+    let rt = runtime();
+    let cfg = FourStepConfig { max_leaf_log2: 5, ..FourStepConfig::default() };
+    let plan = FourStepPlan::with_config(rt, 1 << 12, false, cfg).unwrap();
+    assert!(plan.depth() >= 2, "expected multi-level, got {}", plan.describe());
+    check_rows(&plan, &batch_input(1 << 12, 4, 0x71), false, "multi-level n=2^12");
+}
+
+#[test]
+fn inverse_round_trip_recovers_the_quantized_input() {
+    // forward then unnormalized inverse, scaled by 1/N. Inputs are
+    // scaled down so the unnormalized inverse peaks (~N * max|x|) stay
+    // inside fp16 range at n=2^16 — a dynamic-range property of half
+    // precision, not an engine artifact.
+    let rt = runtime();
+    let n = 1 << 16;
+    let fwd = FourStepPlan::new(rt, n, false).unwrap();
+    let inv = FourStepPlan::new(rt, n, true).unwrap();
+    let x: Vec<C32> = random_signal(n, 0x81).iter().map(|c| c.scale(1.0 / 64.0)).collect();
+    let input = PlanarBatch::from_complex(&x, vec![1, n]);
+    let spec = fwd.execute_batch(rt, input.clone()).unwrap();
+    let mut back = inv.execute_batch(rt, spec).unwrap();
+    for v in back.re.iter_mut().chain(back.im.iter_mut()) {
+        *v /= n as f32;
+    }
+    let want = widen(&input.quantize_f16().to_complex());
+    let got = widen(&back.to_complex());
+    let rmse = relative_rmse(&want, &got);
+    assert!(rmse < 2.0 * RMSE_TOL, "round-trip rel-RMSE {rmse:.3e}");
+}
+
+#[test]
+fn r2_leaves_serve_the_four_step() {
+    // 2^16 = 256 x 256 and the r2 catalog has forward 256-point
+    // artifacts, so the requested algo is honored end to end
+    let rt = runtime();
+    let plan = FourStepPlan::with_algo(rt, 1 << 16, "r2", false).unwrap();
+    assert_eq!(plan.algo(), "r2");
+    assert!(plan.describe().contains("[r2]"), "decomposition: {}", plan.describe());
+    check_rows(&plan, &batch_input(1 << 16, 1, 0x91), false, "r2 n=2^16");
+}
+
+#[test]
+fn unavailable_algo_falls_back_to_tc() {
+    // tc_split artifacts exist only at 4096/65536, so a 2^14 plan falls
+    // back to tc leaves instead of failing (the PR-2 behavior)
+    let rt = runtime();
+    let plan = FourStepPlan::with_algo(rt, 1 << 14, "tc_split", false).unwrap();
+    assert_eq!(plan.algo(), "tc_split");
+    assert!(plan.describe().contains("[tc]"), "decomposition: {}", plan.describe());
+    check_rows(&plan, &batch_input(1 << 14, 2, 0xA1), false, "fallback n=2^14");
+}
+
+#[test]
+fn batched_engine_agrees_with_the_per_sequence_baseline() {
+    let rt = runtime();
+    let n = 1 << 16;
+    let engine = FourStepPlan::new(rt, n, false).unwrap();
+    let baseline = BaselineFourStep::new(rt, n, "tc", false).unwrap();
+    assert_eq!((baseline.n1, baseline.n2), engine.factors(), "same balanced split");
+    let x = random_signal(n, 0xB1);
+    let got_engine = widen(&engine.execute(rt, &x).unwrap());
+    let got_base = widen(&baseline.execute(rt, &x).unwrap());
+    // identical artifacts and rounding points; only the twiddle
+    // multiply differs (f32 table vs per-call f64), far below fp16 noise
+    let rmse = relative_rmse(&got_base, &got_engine);
+    assert!(rmse < 1e-3, "engine vs baseline rel-RMSE {rmse:.3e}");
+}
+
+#[test]
+fn serial_and_parallel_hosts_are_bit_identical() {
+    // transposes and twiddles are chunked by contiguous output rows, so
+    // the parallel host path must write exactly the serial bytes
+    let rt = runtime();
+    let n = 1 << 16;
+    let serial = FourStepPlan::with_config(
+        rt,
+        n,
+        false,
+        FourStepConfig { threads: 1, ..FourStepConfig::default() },
+    )
+    .unwrap();
+    let parallel = FourStepPlan::with_config(
+        rt,
+        n,
+        false,
+        FourStepConfig { threads: 3, ..FourStepConfig::default() },
+    )
+    .unwrap();
+    let input = batch_input(n, 3, 0xC1);
+    let a = serial.execute_batch(rt, input.clone()).unwrap();
+    let b = parallel.execute_batch(rt, input).unwrap();
+    for i in 0..a.len() {
+        assert_eq!(a.re[i].to_bits(), b.re[i].to_bits(), "re[{i}]");
+        assert_eq!(a.im[i].to_bits(), b.im[i].to_bits(), "im[{i}]");
+    }
+}

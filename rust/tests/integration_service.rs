@@ -6,8 +6,8 @@ use std::sync::{Arc, OnceLock};
 use std::time::Duration;
 
 use tcfft::coordinator::{FftRequest, FftService, Op, Server, ServiceConfig};
-use tcfft::error::relative_error;
-use tcfft::fft::mixed;
+use tcfft::error::{relative_error, relative_rmse};
+use tcfft::fft::{mixed, radix2};
 use tcfft::hp::{C32, C64};
 use tcfft::plan::Direction;
 use tcfft::runtime::{PlanarBatch, Runtime};
@@ -100,18 +100,133 @@ fn mixed_op_routing() {
 }
 
 #[test]
-fn unknown_size_fails_fast() {
+fn large_fft1d_routes_through_four_step() {
+    // the synthesized ladder stops at 2^17; 2^20 has no direct
+    // artifact, so the service resolves a cached four-step plan — the
+    // acceptance round trip: result matches the radix2 oracle to 5e-3
     let svc = service();
-    // the synthesized ladder stops at 2^17; 2^20 has no artifact
     let n = 1 << 20;
     let sig = random_signal(n, 3);
+    let t = svc
+        .submit(FftRequest {
+            op: Op::Fft1d { n },
+            algo: "tc".into(),
+            direction: Direction::Forward,
+            input: PlanarBatch::from_complex(&sig, vec![n]),
+        })
+        .unwrap();
+    let out = t.wait().unwrap();
+    assert_eq!(out.shape, vec![1, n]);
+    let q = PlanarBatch::from_complex(&sig, vec![1, n]).quantize_f16();
+    let want = radix2::fft_vec(&widen(&q.to_complex()), false);
+    let rmse = relative_rmse(&want, &widen(&out.to_complex()));
+    assert!(rmse <= 5e-3, "service four-step rel-RMSE {rmse:.3e} over 5e-3");
+    let snap = svc.metrics().snapshot();
+    assert_eq!(snap.get("large_requests").unwrap().as_i64(), Some(1));
+    assert_eq!(snap.get("completed").unwrap().as_i64(), Some(1));
+    svc.shutdown();
+}
+
+#[test]
+fn concurrent_large_requests_batch_and_return_their_rows() {
+    // several distinct 2^18 sequences in flight: the unpadded large
+    // queue groups them, and each reply must match ITS oracle row
+    let svc = service();
+    let n = 1 << 18;
+    let signals: Vec<Vec<C32>> = (0..3).map(|i| random_signal(n, 500 + i as u64)).collect();
+    let tickets: Vec<_> = signals
+        .iter()
+        .map(|sig| {
+            svc.submit(FftRequest {
+                op: Op::Fft1d { n },
+                algo: "tc".into(),
+                direction: Direction::Forward,
+                input: PlanarBatch::from_complex(sig, vec![n]),
+            })
+            .unwrap()
+        })
+        .collect();
+    for (sig, t) in signals.iter().zip(tickets) {
+        let out = t.wait().unwrap();
+        let q = PlanarBatch::from_complex(sig, vec![1, n]).quantize_f16();
+        let want = radix2::fft_vec(&widen(&q.to_complex()), false);
+        let rmse = relative_rmse(&want, &widen(&out.to_complex()));
+        assert!(rmse <= 5e-3, "row mismatch: rel-RMSE {rmse:.3e}");
+    }
+    let snap = svc.metrics().snapshot();
+    assert_eq!(snap.get("large_requests").unwrap().as_i64(), Some(3));
+    assert_eq!(snap.get("completed").unwrap().as_i64(), Some(3));
+    svc.shutdown();
+}
+
+#[test]
+fn unroutable_requests_fail_fast() {
+    let svc = service();
+    // not a power of two: no plan and no four-step route
     let r = svc.submit(FftRequest {
-        op: Op::Fft1d { n },
+        op: Op::Fft1d { n: 1000 },
         algo: "tc".into(),
         direction: Direction::Forward,
-        input: PlanarBatch::from_complex(&sig, vec![n]),
+        input: PlanarBatch::new(vec![1000]),
     });
-    assert!(r.is_err(), "2^20 has no artifact; submit must fail");
+    assert!(r.is_err(), "n=1000 must fail fast");
+    // 2D sizes without artifacts have no large route either
+    let r = svc.submit(FftRequest {
+        op: Op::Fft2d { nx: 1024, ny: 1024 },
+        algo: "tc".into(),
+        direction: Direction::Forward,
+        input: PlanarBatch::new(vec![1024, 1024]),
+    });
+    assert!(r.is_err(), "unknown 2D size must fail fast");
+    // unknown algo strings must not mint cached four-step plans
+    let r = svc.submit(FftRequest {
+        op: Op::Fft1d { n: 1 << 18 },
+        algo: "nonsense".into(),
+        direction: Direction::Forward,
+        input: PlanarBatch::new(vec![1 << 18]),
+    });
+    assert!(r.is_err(), "unknown algo must fail fast, not fall back");
+    svc.shutdown();
+}
+
+#[test]
+fn large_queue_backpressure_rejects_when_full() {
+    // QueueFull must keep working on the four-step route: a bounded
+    // large queue with the flusher effectively disabled rejects the
+    // overflow submissions
+    let svc = Arc::new(FftService::start(
+        Arc::clone(shared_runtime()),
+        ServiceConfig {
+            max_wait: Duration::from_secs(3600), // never deadline-flush
+            max_queue: 2,
+            inline_exec: false, // keep queued requests queued
+            ..ServiceConfig::default()
+        },
+    ));
+    let n = 1 << 18;
+    let mut errors = 0;
+    let mut tickets = Vec::new();
+    for i in 0..4 {
+        let sig = random_signal(n, i as u64);
+        let t = svc
+            .submit(FftRequest {
+                op: Op::Fft1d { n },
+                algo: "tc".into(),
+                direction: Direction::Forward,
+                input: PlanarBatch::from_complex(&sig, vec![n]),
+            })
+            .unwrap();
+        tickets.push(t);
+    }
+    for t in tickets {
+        if t.wait_timeout(Duration::from_millis(200)).is_err() {
+            errors += 1;
+        }
+    }
+    assert!(errors >= 2, "expected large-queue rejections, got {errors}");
+    let snap = svc.metrics().snapshot();
+    assert!(snap.get("rejected").unwrap().as_i64().unwrap() >= 2);
+    assert_eq!(snap.get("large_requests").unwrap().as_i64(), Some(4));
     svc.shutdown();
 }
 
@@ -186,9 +301,9 @@ fn backpressure_rejects_when_queue_full() {
         ServiceConfig {
             max_wait: Duration::from_secs(3600), // never deadline-flush
             max_queue: 2,
-            tick: Duration::from_secs(3600), // flusher effectively off
             exec_threads: 1,
             inline_exec: false, // keep queued requests queued
+            ..ServiceConfig::default()
         },
     ));
     // capacity 4 queue bounded at 2: the 3rd+ submissions are rejected
