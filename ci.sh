@@ -18,6 +18,12 @@ core() {
   echo "== cargo test -q =="
   cargo test -q
 
+  echo "== cargo doc --no-deps (warnings are errors) =="
+  RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
+
+  echo "== cargo test --doc -q =="
+  cargo test --doc -q
+
   echo "== cargo fmt --check =="
   cargo fmt --check
 
@@ -26,13 +32,14 @@ core() {
 }
 
 bench_smoke() {
-  echo "== smoke bench: fig4_1d + fig7_batch + large_fourstep (TCFFT_BENCH_SMOKE=1) =="
+  echo "== smoke bench: fig4_1d + fig7_batch + large_fourstep + rfft_1d (TCFFT_BENCH_SMOKE=1) =="
   # start from a clean slate so bench-validate proves the benches
   # emitted fresh entries (update_bench_json merges into existing files)
   rm -f BENCH_interp.json
   TCFFT_BENCH_SMOKE=1 cargo bench --bench fig4_1d
   TCFFT_BENCH_SMOKE=1 cargo bench --bench fig7_batch
   TCFFT_BENCH_SMOKE=1 cargo bench --bench large_fourstep
+  TCFFT_BENCH_SMOKE=1 cargo bench --bench rfft_1d
 
   echo "== bench-validate BENCH_interp.json =="
   # no --file: benches and validator share the cwd-independent default

@@ -38,10 +38,10 @@ fn main() -> tcfft::error::Result<()> {
         },
     ));
 
-    // request mix: 50% 1D n=1024, 30% 1D n=4096, 20% 2D 256x256
+    // request mix: 50% 1D/1024, 20% 1D/4096, 10% R2C/4096, 20% 2D
     println!(
         "offered load: Poisson {rate:.0} req/s for {horizon:.0}s \
-         (mix: 50% 1D/1024, 30% 1D/4096, 20% 2D/256x256)"
+         (mix: 50% 1D/1024, 20% 1D/4096, 10% R2C/4096, 20% 2D/256x256)"
     );
     let t0 = Instant::now();
     let mut rng = SplitMix64::new(2026);
@@ -68,14 +68,17 @@ fn main() -> tcfft::error::Result<()> {
                 let pick = crng.next_f64();
                 let (op, data_len) = if pick < 0.5 {
                     (Op::Fft1d { n: 1024 }, 1024)
-                } else if pick < 0.8 {
+                } else if pick < 0.7 {
                     (Op::Fft1d { n: 4096 }, 4096)
+                } else if pick < 0.8 {
+                    // real-signal clients ride the packed R2C route
+                    (Op::Rfft1d { n: 4096 }, 4096)
                 } else {
                     (Op::Fft2d { nx: 256, ny: 256 }, 65536)
                 };
                 let sig = random_signal(data_len, crng.next_u64());
                 let shape = match op {
-                    Op::Fft1d { n } => vec![n],
+                    Op::Fft1d { n } | Op::Rfft1d { n } => vec![n],
                     Op::Fft2d { nx, ny } => vec![nx, ny],
                 };
                 let req = FftRequest {

@@ -1,0 +1,59 @@
+//! Spectral convolution on real signals: matched-filter a real chirp
+//! out of noise with BOTH transforms on the half-precision R2C/C2R
+//! path — the workload the real-input engine exists for (seismic
+//! filtering, image correlation, Toeplitz solvers all feed real data).
+//!
+//!     cargo run --release --example spectral_conv
+//!
+//! Pipeline: template -> rfft (device, once at build) ; strain ->
+//! rfft (device) -> pointwise cross-spectrum (host f32, 1/n folded in)
+//! -> irfft (device) -> correlation peak = injection time.
+
+use tcfft::runtime::Runtime;
+use tcfft::util::rng::SplitMix64;
+use tcfft::workload::{chirp, SpectralConv};
+
+const N: usize = 8192;
+const TEMPLATE_LEN: usize = 1024;
+
+fn main() -> tcfft::error::Result<()> {
+    let rt = Runtime::load_default()?;
+
+    // a real chirp template (the real part of the complex chirp the
+    // pyCBC example uses)
+    let template: Vec<f32> = chirp(TEMPLATE_LEN, 6.0, 80.0, 0.8)
+        .iter()
+        .map(|c| c.re)
+        .collect();
+
+    // strain: the template injected at a known lag into real noise
+    let inject_at = 2953usize;
+    let mut rng = SplitMix64::new(41);
+    let mut strain: Vec<f32> = (0..N).map(|_| 0.15 * rng.normal() as f32).collect();
+    for (i, &t) in template.iter().enumerate() {
+        strain[(inject_at + i) % N] += 0.4 * t;
+    }
+
+    // build once (one R2C over the reversed template), then filter:
+    // R2C -> pointwise multiply -> C2R, ~2x cheaper than the C2C pair
+    let mf = SpectralConv::matched_filter(&rt, N, &template)?;
+    let snr = mf.convolve(&rt, &strain)?;
+
+    let (best_lag, best) = snr
+        .iter()
+        .map(|v| v.abs())
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+        .unwrap();
+    let mean = snr.iter().map(|v| v.abs()).sum::<f32>() / N as f32;
+
+    println!("injected template at lag {inject_at}");
+    println!(
+        "matched filter peak at lag {best_lag} (peak/mean ratio {:.1})",
+        best / mean
+    );
+    tcfft::ensure!(best_lag == inject_at, "matched filter missed the injection");
+    tcfft::ensure!(best / mean > 5.0, "detection not significant");
+    println!("spectral_conv: OK — detection at the injected time via R2C/C2R");
+    Ok(())
+}

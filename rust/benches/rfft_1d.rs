@@ -1,0 +1,128 @@
+//! Bench: the real-input (R2C) path vs the same-size complex (C2C)
+//! transform on identical real signals — the acceptance evidence that
+//! real workloads get their ~2x back.
+//!
+//! The "before" series is what a real-signal caller had to do without
+//! the R2C path: promote to complex (im = 0) and run the full n-point
+//! C2C engine. The "after" series is the rfft1d path: the n/2-point
+//! complex engine wrapped in the fused half-spectrum split. Medians
+//! merge into `BENCH_interp.json` (entry `rfft1d_tc_n4096_b32_fwd`,
+//! fields: `reference_median_s` = C2C, `engine_median_s` = R2C) and
+//! `tcfft bench-validate` checks them in CI.
+//!
+//!     cargo bench --bench rfft_1d
+//!     TCFFT_BENCH_SMOKE=1 cargo bench --bench rfft_1d   # CI smoke
+
+use tcfft::bench_harness::{bench, bench_entry, header, smoke, update_bench_json};
+use tcfft::error::relative_rmse;
+use tcfft::fft::radix2;
+use tcfft::hp::complex::widen;
+use tcfft::runtime::{Backend, CpuInterpreter, PlanarBatch, VariantMeta};
+use tcfft::util::table::Table;
+use tcfft::workload::random_signal;
+
+const N: usize = 4096;
+const BATCH: usize = 32;
+/// Headline thread count recorded in BENCH_interp.json (matches the
+/// fig4_1d/fig7_batch/large_fourstep entries).
+const ENGINE_THREADS: usize = 4;
+
+/// Bench-local variant descriptor (the synthesized catalog carries the
+/// b=4 serving tiers; the bench compares engines at the headline batch
+/// without perturbing `find_fft1d`'s tier selection — see fig4_1d).
+fn bench_meta(op: &str, key: &str, n: usize, batch: usize) -> VariantMeta {
+    VariantMeta {
+        key: key.to_string(),
+        file: std::path::PathBuf::new(),
+        op: op.to_string(),
+        algo: "tc".to_string(),
+        n,
+        nx: 0,
+        ny: 0,
+        batch,
+        inverse: false,
+        input_shape: vec![batch, n],
+        stages: Vec::new(),
+        flops_per_seq: 0.0,
+        hbm_bytes_per_seq: 0.0,
+        radix2_equiv_flops: 0.0,
+    }
+}
+
+fn main() -> tcfft::error::Result<()> {
+    header("Real-input R2C vs same-size complex C2C");
+    let iters = if smoke() { 3 } else { 12 };
+
+    let c2c_meta = bench_meta("fft1d", "bench_fft1d_tc_n4096_b32_fwd", N, BATCH);
+    let r2c_meta = bench_meta("rfft1d", "bench_rfft1d_tc_n4096_b32_fwd", N, BATCH);
+
+    // the same real signal drives both paths: C2C sees it promoted to
+    // complex (im = 0), R2C consumes the re plane directly
+    let sig: Vec<f32> = (0..BATCH)
+        .flat_map(|b| random_signal(N, 0x2C + b as u64))
+        .map(|c| c.re)
+        .collect();
+    let input = PlanarBatch::from_real(&sig, vec![BATCH, N]);
+
+    let c2c = CpuInterpreter::with_threads(ENGINE_THREADS);
+    let r2c_serial = CpuInterpreter::with_threads(1);
+    let r2c = CpuInterpreter::with_threads(ENGINE_THREADS);
+    c2c.execute(&c2c_meta, input.clone())?; // warm all three
+    r2c_serial.execute(&r2c_meta, input.clone())?;
+    let (packed, _) = r2c.execute(&r2c_meta, input.clone())?;
+
+    // correctness gate before timing: packed row 0 vs the f64 oracle
+    let bins = N / 2 + 1;
+    let q = input.slice_rows(0, 1).quantize_f16();
+    let want = radix2::fft_vec(&widen(&q.to_complex()), false);
+    let got = widen(&packed.to_complex()[..bins]);
+    let err = relative_rmse(&want[..bins], &got);
+    tcfft::ensure!(err < 5e-3, "R2C rel-RMSE {err:.3e} over 5e-3");
+    println!("R2C vs radix2 oracle (row 0, packed bins): rel-RMSE {err:.3e}\n");
+
+    let r_c2c = bench(
+        &format!("C2C n={N} b={BATCH} {ENGINE_THREADS}t"),
+        || {
+            c2c.execute(&c2c_meta, input.clone()).unwrap();
+        },
+        iters,
+    );
+    let r_ser = bench(
+        &format!("R2C n={N} b={BATCH} 1t"),
+        || {
+            r2c_serial.execute(&r2c_meta, input.clone()).unwrap();
+        },
+        iters,
+    );
+    let r_par = bench(
+        &format!("R2C n={N} b={BATCH} {ENGINE_THREADS}t"),
+        || {
+            r2c.execute(&r2c_meta, input.clone()).unwrap();
+        },
+        iters,
+    );
+    let (m_c2c, m_ser, m_par) =
+        (r_c2c.summary.median(), r_ser.summary.median(), r_par.summary.median());
+
+    let key = format!("rfft1d_tc_n{N}_b{BATCH}_fwd");
+    let mut t = Table::new(&["key", "C2C ms", "R2C 1t ms", "R2C 4t ms", "R2C speedup"]);
+    t.row(vec![
+        key.clone(),
+        format!("{:.2}", m_c2c * 1e3),
+        format!("{:.2}", m_ser * 1e3),
+        format!("{:.2}", m_par * 1e3),
+        format!("{:.2}x", m_c2c / m_par),
+    ]);
+    let entries = vec![(
+        key,
+        bench_entry("rfft_1d", ENGINE_THREADS, r_par.summary.len(), m_c2c, m_ser, m_par),
+    )];
+    let path = update_bench_json(&entries)?;
+    println!(
+        "R2C vs same-size C2C on real input (recorded in {}):\n{}",
+        path.display(),
+        t.render()
+    );
+    println!("rfft_1d: OK");
+    Ok(())
+}

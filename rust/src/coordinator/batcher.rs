@@ -14,27 +14,36 @@ use crate::runtime::PlanarBatch;
 
 /// One pending single-sequence request.
 pub struct Pending {
+    /// service-assigned request id
     pub id: u64,
     /// shape [1, ...]: one sequence (multi-row submissions are split
     /// into per-row requests by the service)
     pub input: PlanarBatch,
+    /// when the request entered the queue (drives the deadline flush)
     pub enqueued: Instant,
+    /// per-request reply channel
     pub reply: mpsc::Sender<Result<PlanarBatch>>,
 }
 
 /// A batch ready for execution.
 pub struct ReadyBatch {
+    /// the assembled (possibly padded) batch input
     pub input: PlanarBatch,
+    /// the requests whose rows fill the batch, in row order
     pub members: Vec<Pending>,
+    /// zero-padded slots appended after the member rows
     pub padded: usize,
 }
 
 /// Per-plan FIFO queue with deadline-or-full flushing.
 pub struct PlanQueue {
+    /// routing key (artifact key or four-step plan key)
     pub key: String,
-    pub capacity: usize, // artifact batch size
+    /// rows per flush (artifact batch size)
+    pub capacity: usize,
     queue: VecDeque<Pending>,
-    pub max_queue: usize, // backpressure bound
+    /// backpressure bound on queued requests
+    pub max_queue: usize,
     /// zero-pad short flushes up to `capacity` (artifact-shaped
     /// batches). Large four-step queues run unpadded: the batched
     /// engine accepts any row count, and padding a 2^20-point slot
@@ -43,6 +52,7 @@ pub struct PlanQueue {
 }
 
 impl PlanQueue {
+    /// Padded queue (flushes are zero-padded to `capacity` rows).
     pub fn new(key: impl Into<String>, capacity: usize, max_queue: usize) -> Self {
         PlanQueue {
             key: key.into(),
@@ -59,10 +69,12 @@ impl PlanQueue {
         PlanQueue { pad: false, ..Self::new(key, capacity, max_queue) }
     }
 
+    /// Pending requests in the queue.
     pub fn len(&self) -> usize {
         self.queue.len()
     }
 
+    /// True when nothing is pending.
     pub fn is_empty(&self) -> bool {
         self.queue.is_empty()
     }

@@ -6,35 +6,50 @@ use std::sync::Mutex;
 use crate::util::json::Json;
 use crate::util::stats::Summary;
 
+/// Service-wide counters and latency summaries, snapshot as JSON by
+/// the `metrics` TCP op and the tests.
 #[derive(Default)]
 pub struct Metrics {
+    /// total submitted requests (accepted or rejected)
     pub requests: AtomicU64,
+    /// requests answered successfully
     pub completed: AtomicU64,
+    /// requests answered with an execution error
     pub failed: AtomicU64,
+    /// executed batches
     pub batches: AtomicU64,
+    /// zero-padded batch slots across all executed batches
     pub padded_slots: AtomicU64,
+    /// occupied batch slots across all executed batches
     pub busy_slots: AtomicU64,
+    /// requests rejected by queue backpressure
     pub rejected: AtomicU64,
     /// requests that resolved to the four-step large-FFT route
     pub large_requests: AtomicU64,
+    /// real-input (`Op::Rfft1d`) requests, direct or four-step routed
+    pub rfft_requests: AtomicU64,
     lat: Mutex<Summary>,        // end-to-end request latency (s)
     queue_wait: Mutex<Summary>, // time spent waiting in the batcher (s)
     exec: Mutex<Summary>,       // device execution time per batch (s)
 }
 
 impl Metrics {
+    /// Fresh zeroed metrics.
     pub fn new() -> Metrics {
         Metrics::default()
     }
 
+    /// Record one end-to-end request latency sample.
     pub fn record_latency(&self, seconds: f64) {
         self.lat.lock().unwrap().add(seconds);
     }
 
+    /// Record one batcher queue-wait sample.
     pub fn record_queue_wait(&self, seconds: f64) {
         self.queue_wait.lock().unwrap().add(seconds);
     }
 
+    /// Record one per-batch execution-time sample.
     pub fn record_exec(&self, seconds: f64) {
         self.exec.lock().unwrap().add(seconds);
     }
@@ -50,6 +65,7 @@ impl Metrics {
         }
     }
 
+    /// One JSON snapshot of every counter and summary statistic.
     pub fn snapshot(&self) -> Json {
         let lat = self.lat.lock().unwrap();
         let qw = self.queue_wait.lock().unwrap();
@@ -60,6 +76,7 @@ impl Metrics {
             ("failed", Json::num(self.failed.load(Ordering::Relaxed) as f64)),
             ("rejected", Json::num(self.rejected.load(Ordering::Relaxed) as f64)),
             ("large_requests", Json::num(self.large_requests.load(Ordering::Relaxed) as f64)),
+            ("rfft_requests", Json::num(self.rfft_requests.load(Ordering::Relaxed) as f64)),
             ("batches", Json::num(self.batches.load(Ordering::Relaxed) as f64)),
             ("padding_ratio", Json::num(self.padding_ratio())),
             ("latency_p50_ms", Json::num(lat.median() * 1e3)),

@@ -5,6 +5,10 @@
 //!   request:  {"op": "fft1d", "n": 4096, "dir": "fwd", "algo": "tc",
 //!              "re": [...], "im": [...]}
 //!             {"op": "fft2d", "nx": 256, "ny": 256, ...}
+//!             {"op": "rfft1d", "n": 4096, ...}  real input: fwd takes
+//!               n real samples in "re" ("im" may be omitted) and
+//!               returns the packed n/2+1 bins; "dir": "inv" takes the
+//!               packed bins and returns n real samples (scaled by n)
 //!             {"op": "metrics"}        -> metrics snapshot
 //!             {"op": "ping"}           -> {"ok": true}
 //!   response: {"ok": true, "re": [...], "im": [...], "latency_ms": x}
@@ -23,6 +27,8 @@ use crate::plan::Direction;
 use crate::runtime::PlanarBatch;
 use crate::util::json::Json;
 
+/// The TCP front end: accepts line-delimited JSON connections and
+/// forwards transform requests to an [`FftService`].
 pub struct Server {
     listener: TcpListener,
     svc: Arc<FftService>,
@@ -30,6 +36,8 @@ pub struct Server {
 }
 
 impl Server {
+    /// Bind the listener (e.g. `"127.0.0.1:7070"`, port 0 for
+    /// ephemeral) over a running service.
     pub fn bind(addr: &str, svc: Arc<FftService>) -> Result<Server> {
         let listener = TcpListener::bind(addr)?;
         listener.set_nonblocking(true)?;
@@ -40,10 +48,12 @@ impl Server {
         })
     }
 
+    /// The bound socket address (useful with ephemeral ports).
     pub fn local_addr(&self) -> Result<std::net::SocketAddr> {
         Ok(self.listener.local_addr()?)
     }
 
+    /// A flag that stops [`run`](Self::run) when set to true.
     pub fn stop_handle(&self) -> Arc<AtomicBool> {
         Arc::clone(&self.stop)
     }
@@ -106,6 +116,8 @@ fn parse_floats(j: &Json, key: &str) -> Option<Vec<f32>> {
         .collect()
 }
 
+/// Handle one protocol line against the service and build the reply
+/// (exposed for in-process protocol tests).
 pub fn handle_line(line: &str, svc: &FftService) -> Json {
     let req = match Json::parse(line) {
         Ok(j) => j,
@@ -118,7 +130,7 @@ pub fn handle_line(line: &str, svc: &FftService) -> Json {
             let snap = svc.metrics().snapshot();
             Json::obj(vec![("ok", Json::Bool(true)), ("metrics", snap)])
         }
-        "fft1d" | "fft2d" => {
+        "fft1d" | "fft2d" | "rfft1d" => {
             let algo = req.get("algo").and_then(|a| a.as_str()).unwrap_or("tc");
             let dir = match req.get("dir").and_then(|d| d.as_str()).unwrap_or("fwd") {
                 "inv" => Direction::Inverse,
@@ -130,21 +142,41 @@ pub fn handle_line(line: &str, svc: &FftService) -> Json {
             };
             let im = match parse_floats(&req, "im") {
                 Some(v) => v,
+                // the R2C forward path ignores the imaginary plane by
+                // contract, so real-signal clients may omit "im"
+                // entirely instead of serializing n literal zeros
+                None if op == "rfft1d" && dir == Direction::Forward => vec![0.0; re.len()],
                 None => return err_json("missing/invalid 'im' array"),
             };
             if re.len() != im.len() {
                 return err_json("re/im length mismatch");
             }
-            let (op, shape) = if op == "fft1d" {
-                let n = match req.get("n").and_then(|v| v.as_usize()) {
-                    Some(n) => n,
-                    None => re.len(),
-                };
-                (Op::Fft1d { n }, vec![n])
-            } else {
-                let nx = req.get("nx").and_then(|v| v.as_usize()).unwrap_or(0);
-                let ny = req.get("ny").and_then(|v| v.as_usize()).unwrap_or(0);
-                (Op::Fft2d { nx, ny }, vec![nx, ny])
+            let (op, shape) = match op {
+                "fft1d" => {
+                    let n = match req.get("n").and_then(|v| v.as_usize()) {
+                        Some(n) => n,
+                        None => re.len(),
+                    };
+                    (Op::Fft1d { n }, vec![n])
+                }
+                "rfft1d" => {
+                    // forward sends n real samples; inverse sends the
+                    // packed n/2+1 bins, so n defaults to 2*(len-1)
+                    let n = match req.get("n").and_then(|v| v.as_usize()) {
+                        Some(n) => n,
+                        None if dir == Direction::Inverse => {
+                            2 * re.len().saturating_sub(1)
+                        }
+                        None => re.len(),
+                    };
+                    let len = if dir == Direction::Inverse { n / 2 + 1 } else { n };
+                    (Op::Rfft1d { n }, vec![len])
+                }
+                _ => {
+                    let nx = req.get("nx").and_then(|v| v.as_usize()).unwrap_or(0);
+                    let ny = req.get("ny").and_then(|v| v.as_usize()).unwrap_or(0);
+                    (Op::Fft2d { nx, ny }, vec![nx, ny])
+                }
             };
             if shape.iter().product::<usize>() != re.len() {
                 return err_json("data length does not match shape");

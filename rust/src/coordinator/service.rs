@@ -25,24 +25,46 @@ use crate::error::{Result, TcFftError};
 
 use super::batcher::{Pending, PlanQueue, ReadyBatch};
 use super::metrics::Metrics;
-use crate::large::{FourStepConfig, FourStepPlan};
+use crate::large::{FourStepConfig, FourStepPlan, RealFourStepPlan};
 use crate::plan::{Direction, Plan};
 use crate::runtime::{PlanarBatch, Runtime};
 
 /// A logical FFT request (one sequence).
 #[derive(Clone, Debug)]
 pub struct FftRequest {
+    /// transform kind and size
     pub op: Op,
+    /// algorithm variant (`"tc"` | `"tc_split"` | `"r2"`)
     pub algo: String,
+    /// forward or (unnormalized) inverse
     pub direction: Direction,
-    /// planar input, shape [n] (1D) or [nx, ny] (2D)
+    /// planar input, shape [n] (1D), [nx, ny] (2D), [n] real rows
+    /// (R2C forward) or [n/2 + 1] packed bins (C2R inverse)
     pub input: PlanarBatch,
 }
 
+/// The transform kinds the service routes.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Op {
-    Fft1d { n: usize },
-    Fft2d { nx: usize, ny: usize },
+    /// Batched 1D complex transform of length `n`.
+    Fft1d {
+        /// transform length (power of two)
+        n: usize,
+    },
+    /// Batched 2D complex transform, row-major `nx` x `ny`.
+    Fft2d {
+        /// first (strided) axis length
+        nx: usize,
+        /// second (contiguous) axis length
+        ny: usize,
+    },
+    /// Batched real-input 1D transform of length `n`: R2C forward
+    /// (real rows in, Hermitian-packed `n/2 + 1` bins out) or C2R
+    /// inverse, selected by [`FftRequest::direction`].
+    Rfft1d {
+        /// real transform length (power of two)
+        n: usize,
+    },
 }
 
 /// Service configuration.
@@ -62,10 +84,11 @@ pub struct ServiceConfig {
     /// inline on the submitting thread, skipping two thread hand-offs
     /// (perf iteration 4). Deadline flushes still go through the pool.
     pub inline_exec: bool,
-    /// batch capacity of the four-step large-FFT queues (`Op::Fft1d`
-    /// sizes with no direct artifact). Flushed unpadded — the batched
-    /// engine takes any row count, and a padded 2^20-point slot would
-    /// burn a whole transform's worth of work on zeros.
+    /// batch capacity of the four-step large-FFT queues (`Op::Fft1d` /
+    /// `Op::Rfft1d` sizes with no direct artifact). Flushed unpadded —
+    /// the batched engines take any row count, and a padded
+    /// 2^20-point slot would burn a whole transform's worth of work on
+    /// zeros.
     pub large_batch: usize,
     /// largest size the four-step route will serve. Plans are cached
     /// per (n, algo, dir) and never evicted, and each costs O(n)
@@ -95,6 +118,7 @@ impl Default for ServiceConfig {
 
 /// Handle for one submitted request.
 pub struct Ticket {
+    /// service-assigned request id (monotonic)
     pub id: u64,
     rx: mpsc::Receiver<Result<PlanarBatch>>,
 }
@@ -107,6 +131,7 @@ impl Ticket {
             .map_err(|_| TcFftError::msg("service dropped the request"))?
     }
 
+    /// [`wait`](Self::wait) with a timeout.
     pub fn wait_timeout(self, d: Duration) -> Result<PlanarBatch> {
         match self.rx.recv_timeout(d) {
             Ok(r) => r,
@@ -122,7 +147,24 @@ impl Ticket {
 /// expected per-request shape tail).
 enum Route {
     Direct { key: String, capacity: usize, tail: Vec<usize> },
-    Large { key: String, n: usize },
+    Large { key: String, tail: Vec<usize> },
+}
+
+/// A cached large-size plan: the complex four-step engine, or its
+/// real-input (R2C/C2R) wrapper. Both execute whole `PlanarBatch`es.
+#[derive(Clone)]
+enum LargePlan {
+    Complex(Arc<FourStepPlan>),
+    Real(Arc<RealFourStepPlan>),
+}
+
+impl LargePlan {
+    fn execute_batch(&self, rt: &Runtime, input: PlanarBatch) -> Result<PlanarBatch> {
+        match self {
+            LargePlan::Complex(p) => p.execute_batch(rt, input),
+            LargePlan::Real(p) => p.execute_batch(rt, input),
+        }
+    }
 }
 
 struct Shared {
@@ -134,10 +176,11 @@ struct Shared {
     pending_cv: std::sync::Condvar,
     plans: Mutex<HashMap<String, Plan>>,
     /// cached four-step plans for large sizes, keyed by the queue key
-    /// (`4step:{n}:{algo}:{dir}`). `run_batch` consults this map to
-    /// decide whether a ready batch executes through the batched
-    /// four-step engine or directly through the runtime.
-    large_plans: Mutex<HashMap<String, Arc<FourStepPlan>>>,
+    /// (`4step:{n}:{algo}:{dir}` complex, `4stepr:...` real).
+    /// `run_batch` consults this map to decide whether a ready batch
+    /// executes through a batched four-step engine or directly through
+    /// the runtime.
+    large_plans: Mutex<HashMap<String, LargePlan>>,
     metrics: Arc<Metrics>,
     next_id: AtomicU64,
     shutting_down: AtomicBool,
@@ -231,6 +274,9 @@ pub struct FftService {
 }
 
 impl FftService {
+    /// Spawn the service threads (flusher + execution workers) over a
+    /// runtime. Shut down with [`shutdown`](Self::shutdown) or by
+    /// dropping the service.
     pub fn start(rt: Arc<Runtime>, cfg: ServiceConfig) -> FftService {
         let shared = Arc::new(Shared {
             queues: Mutex::new(HashMap::new()),
@@ -306,10 +352,12 @@ impl FftService {
         }
     }
 
+    /// The service's live metrics (counters + latency summaries).
     pub fn metrics(&self) -> Arc<Metrics> {
         Arc::clone(&self.shared.metrics)
     }
 
+    /// The runtime the service executes on.
     pub fn runtime(&self) -> Arc<Runtime> {
         Arc::clone(&self.rt)
     }
@@ -320,6 +368,7 @@ impl FftService {
         let cache_key = match req.op {
             Op::Fft1d { n } => format!("1d:{n}:{}:{}", req.algo, inverse),
             Op::Fft2d { nx, ny } => format!("2d:{nx}x{ny}:{}:{}", req.algo, inverse),
+            Op::Rfft1d { n } => format!("r1d:{n}:{}:{}", req.algo, inverse),
         };
         {
             let plans = self.shared.plans.lock().unwrap();
@@ -334,6 +383,9 @@ impl FftService {
             Op::Fft2d { nx, ny } => {
                 Plan::fft2d_algo(&self.rt.registry, nx, ny, 1, &req.algo, req.direction)?
             }
+            Op::Rfft1d { n } => {
+                Plan::rfft1d_algo(&self.rt.registry, n, 1, &req.algo, req.direction)?
+            }
         };
         self.shared
             .plans
@@ -344,8 +396,9 @@ impl FftService {
     }
 
     /// Resolve a request to its execution route: a direct artifact
-    /// plan, or — for `Op::Fft1d` power-of-two sizes with no artifact —
-    /// a cached four-step large-FFT plan (paper Sec 3.1).
+    /// plan, or — for `Op::Fft1d` / `Op::Rfft1d` power-of-two sizes
+    /// with no artifact — a cached four-step large-FFT plan (paper
+    /// Sec 3.1; the real wrapper for `Rfft1d`).
     fn route_for(&self, req: &FftRequest) -> Result<Route> {
         match self.plan_for(req) {
             Ok(plan) => Ok(Route::Direct {
@@ -359,13 +412,18 @@ impl FftService {
                 {
                     self.large_route_for(n, req)
                 }
+                Op::Rfft1d { n }
+                    if n.is_power_of_two() && n >= 8 && n <= self.shared.cfg.max_large_n =>
+                {
+                    self.large_route_for(n, req)
+                }
                 _ => Err(TcFftError::NoArtifact(reason)),
             },
             Err(e) => Err(e),
         }
     }
 
-    /// Find or build the cached four-step plan for (n, algo, dir).
+    /// Find or build the cached four-step plan for (op, n, algo, dir).
     fn large_route_for(&self, n: usize, req: &FftRequest) -> Result<Route> {
         // Only known algos may mint cache entries: plans cost megabytes
         // of twiddle tables and are never evicted, so an unvalidated
@@ -374,33 +432,42 @@ impl FftService {
         // instead of silently computing with the tc fallback).
         if !matches!(req.algo.as_str(), "tc" | "tc_split" | "r2") {
             return Err(TcFftError::NoArtifact(format!(
-                "fft1d n={n} algo={} (unknown algo has no four-step route)",
+                "n={n} algo={} (unknown algo has no four-step route)",
                 req.algo
             )));
         }
         let inverse = req.direction == Direction::Inverse;
-        let key = format!("4step:{n}:{}:{}", req.algo, if inverse { "inv" } else { "fwd" });
+        let real = matches!(req.op, Op::Rfft1d { .. });
+        let dir = if inverse { "inv" } else { "fwd" };
+        let key = if real {
+            format!("4stepr:{n}:{}:{dir}", req.algo)
+        } else {
+            format!("4step:{n}:{}:{dir}", req.algo)
+        };
+        // the per-request shape the submit path validates against:
+        // C2R consumes packed spectra, everything else full rows
+        let tail = if real && inverse { vec![n / 2 + 1] } else { vec![n] };
         {
             let cache = self.shared.large_plans.lock().unwrap();
             if cache.contains_key(&key) {
-                return Ok(Route::Large { key, n });
+                return Ok(Route::Large { key, tail });
             }
         }
         // build outside the lock (twiddle precompute is real work);
         // a racing builder just loses to or_insert
-        let plan = FourStepPlan::with_config(
-            &self.rt,
-            n,
-            inverse,
-            FourStepConfig { algo: req.algo.clone(), ..FourStepConfig::default() },
-        )?;
+        let cfg = FourStepConfig { algo: req.algo.clone(), ..FourStepConfig::default() };
+        let plan = if real {
+            LargePlan::Real(Arc::new(RealFourStepPlan::with_config(&self.rt, n, inverse, cfg)?))
+        } else {
+            LargePlan::Complex(Arc::new(FourStepPlan::with_config(&self.rt, n, inverse, cfg)?))
+        };
         self.shared
             .large_plans
             .lock()
             .unwrap()
             .entry(key.clone())
-            .or_insert_with(|| Arc::new(plan));
-        Ok(Route::Large { key, n })
+            .or_insert(plan);
+        Ok(Route::Large { key, tail })
     }
 
     /// Submit one request; returns a ticket to wait on.
@@ -411,6 +478,9 @@ impl FftService {
         let route = self.route_for(&req)?;
         let id = self.shared.next_id.fetch_add(1, Ordering::SeqCst);
         self.shared.metrics.requests.fetch_add(1, Ordering::Relaxed);
+        if matches!(req.op, Op::Rfft1d { .. }) {
+            self.shared.metrics.rfft_requests.fetch_add(1, Ordering::Relaxed);
+        }
 
         // normalize input to [1, ...]
         let mut shape = vec![1usize];
@@ -426,11 +496,12 @@ impl FftService {
                 );
                 (key.clone(), *capacity, true)
             }
-            Route::Large { key, n } => {
+            Route::Large { key, tail } => {
                 crate::ensure!(
-                    input.shape[1..] == [*n],
-                    "request shape {:?} does not match four-step n={n}",
-                    &input.shape[1..]
+                    input.shape[1..] == tail[..],
+                    "request shape {:?} does not match four-step tail {:?}",
+                    &input.shape[1..],
+                    &tail[..]
                 );
                 self.shared.metrics.large_requests.fetch_add(1, Ordering::Relaxed);
                 (key.clone(), self.shared.cfg.large_batch.max(1), false)
@@ -473,23 +544,26 @@ impl FftService {
         Ok(Ticket { id, rx })
     }
 
-    /// Convenience: blocking 1D transform of a (possibly multi-row) batch.
-    pub fn fft1d_blocking(
+    /// Shared body of the blocking helpers: submit every row of `x` as
+    /// its own request (shape = the batch tail), wait in row order,
+    /// and concatenate the replies.
+    fn blocking_rows(
         &self,
         x: PlanarBatch,
+        op: Op,
         algo: &str,
         dir: Direction,
     ) -> Result<PlanarBatch> {
-        let n = *x.shape.last().unwrap();
         let rows = x.shape[0];
+        let tail = x.shape[1..].to_vec();
         let mut tickets = Vec::new();
         for r in 0..rows {
             let row = x.slice_rows(r, r + 1);
             let req = FftRequest {
-                op: Op::Fft1d { n },
+                op,
                 algo: algo.to_string(),
                 direction: dir,
-                input: PlanarBatch { re: row.re, im: row.im, shape: vec![n] },
+                input: PlanarBatch { re: row.re, im: row.im, shape: tail.clone() },
             };
             tickets.push(self.submit(req)?);
         }
@@ -498,6 +572,33 @@ impl FftService {
             .map(|t| t.wait())
             .collect::<Result<Vec<_>>>()?;
         Ok(PlanarBatch::concat(&outs))
+    }
+
+    /// Convenience: blocking 1D transform of a (possibly multi-row) batch.
+    pub fn fft1d_blocking(
+        &self,
+        x: PlanarBatch,
+        algo: &str,
+        dir: Direction,
+    ) -> Result<PlanarBatch> {
+        let n = *x.shape.last().unwrap();
+        self.blocking_rows(x, Op::Fft1d { n }, algo, dir)
+    }
+
+    /// Convenience: blocking real 1D transform of a (possibly
+    /// multi-row) batch — R2C forward (`[b, n]` real rows in,
+    /// `[b, n/2 + 1]` packed spectra out) or C2R inverse (the mirror
+    /// image, output scaled by `n`).
+    pub fn rfft1d_blocking(
+        &self,
+        x: PlanarBatch,
+        algo: &str,
+        dir: Direction,
+    ) -> Result<PlanarBatch> {
+        crate::ensure!(x.shape.len() == 2, "expected [b, len]");
+        let len = x.shape[1];
+        let n = if dir == Direction::Inverse { 2 * (len - 1) } else { len };
+        self.blocking_rows(x, Op::Rfft1d { n }, algo, dir)
     }
 
     /// Same for 2D.
@@ -509,23 +610,7 @@ impl FftService {
     ) -> Result<PlanarBatch> {
         crate::ensure!(x.shape.len() == 3, "expected [b, nx, ny]");
         let (nx, ny) = (x.shape[1], x.shape[2]);
-        let rows = x.shape[0];
-        let mut tickets = Vec::new();
-        for r in 0..rows {
-            let row = x.slice_rows(r, r + 1);
-            let req = FftRequest {
-                op: Op::Fft2d { nx, ny },
-                algo: algo.to_string(),
-                direction: dir,
-                input: PlanarBatch { re: row.re, im: row.im, shape: vec![nx, ny] },
-            };
-            tickets.push(self.submit(req)?);
-        }
-        let outs = tickets
-            .into_iter()
-            .map(|t| t.wait())
-            .collect::<Result<Vec<_>>>()?;
-        Ok(PlanarBatch::concat(&outs))
+        self.blocking_rows(x, Op::Fft2d { nx, ny }, algo, dir)
     }
 
     /// Graceful shutdown: drain queues, stop threads.

@@ -70,6 +70,7 @@ impl BaselineFourStep {
         Ok(BaselineFourStep { n1, n2, key_n1, key_n2, batch_n1, batch_n2, inverse })
     }
 
+    /// The composed transform length `n1 * n2`.
     pub fn n(&self) -> usize {
         self.n1 * self.n2
     }

@@ -34,7 +34,9 @@
 //! beyond 2^22 decompose multi-level; leaves resolve to the requested
 //! algorithm's artifacts with a `tc` fallback. The coordinator routes
 //! `Op::Fft1d` sizes with no direct artifact to a cached plan from
-//! this module.
+//! this module, and `Op::Rfft1d` sizes to a [`RealFourStepPlan`] —
+//! the R2C/C2R wrapper that runs the half-size complex engine inside
+//! the fused half-spectrum pass.
 
 pub mod baseline;
 
@@ -46,7 +48,7 @@ use std::sync::{Arc, Mutex, OnceLock};
 use crate::error::{Result, TcFftError};
 use crate::fft::twiddle::four_step_twiddles_flat;
 use crate::hp::C32;
-use crate::runtime::{PlanarBatch, Runtime};
+use crate::runtime::{PlanarBatch, RealHalfSpectrum, Runtime};
 use crate::util::threadpool::{default_threads, ScopedJob, ThreadPool};
 
 /// Transpose tile edge: a 32x32 f32 tile is 4 KiB per plane, so a
@@ -493,6 +495,7 @@ impl FourStepPlan {
         )
     }
 
+    /// Plan with explicit tuning knobs (leaf algo, leaf cap, threads).
     pub fn with_config(
         rt: &Runtime,
         n: usize,
@@ -528,10 +531,12 @@ impl FourStepPlan {
         })
     }
 
+    /// The transform length `n`.
     pub fn n(&self) -> usize {
         self.n
     }
 
+    /// True for the inverse (unnormalized) direction.
     pub fn inverse(&self) -> bool {
         self.inverse
     }
@@ -555,10 +560,12 @@ impl FourStepPlan {
         }
     }
 
+    /// Top-level first factor (`factors().0`).
     pub fn n1(&self) -> usize {
         self.factors().0
     }
 
+    /// Top-level second factor (`factors().1`).
     pub fn n2(&self) -> usize {
         self.factors().1
     }
@@ -612,6 +619,123 @@ impl FourStepPlan {
         crate::ensure!(x.len() == self.n, "length {} != {}", x.len(), self.n);
         let out = self.execute_batch(rt, PlanarBatch::from_complex(x, vec![1, self.n]))?;
         Ok(out.to_complex())
+    }
+}
+
+/// A cached, batched four-step plan for REAL-input transforms of one
+/// (n, algo, direction): the R2C/C2R analogue of [`FourStepPlan`] for
+/// sizes beyond the artifact catalog.
+///
+/// The real transform wraps an `n/2`-point complex four-step engine in
+/// the fused half-spectrum pass of
+/// [`RealHalfSpectrum`](crate::runtime::RealHalfSpectrum) — the same
+/// split/merge kernels (and fp16 rounding points) the interpreter's
+/// `rfft1d` path uses, so both R2C engines share one numeric
+/// definition. Forward consumes `[b, n]` real rows and emits the
+/// Hermitian-packed `[b, n/2 + 1]` spectrum; inverse is the mirror
+/// image, scaled by `n` (unnormalized). The coordinator routes
+/// `Op::Rfft1d` sizes with no direct artifact to a cached plan from
+/// this type.
+pub struct RealFourStepPlan {
+    n: usize,
+    inverse: bool,
+    /// the half-size complex engine (same direction)
+    inner: FourStepPlan,
+    /// the fused half-spectrum split/merge pass
+    real: RealHalfSpectrum,
+    /// retained half-size staging planes (same most-recent-pair policy
+    /// as the inner engine's transpose scratch): steady-state execution
+    /// allocates only the returned output batch
+    scratch: Mutex<Option<ScratchPair>>,
+}
+
+impl RealFourStepPlan {
+    /// Default-config plan (leaf algo `"tc"`).
+    pub fn new(rt: &Runtime, n: usize, inverse: bool) -> Result<RealFourStepPlan> {
+        Self::with_config(rt, n, inverse, FourStepConfig::default())
+    }
+
+    /// Plan with explicit tuning knobs; `n` must be a power of two
+    /// >= 8 so the half size still splits four-step.
+    pub fn with_config(
+        rt: &Runtime,
+        n: usize,
+        inverse: bool,
+        cfg: FourStepConfig,
+    ) -> Result<RealFourStepPlan> {
+        if !n.is_power_of_two() || n < 8 {
+            crate::bail!(TcFftError::BadSize(n));
+        }
+        let inner = FourStepPlan::with_config(rt, n / 2, inverse, cfg)?;
+        Ok(RealFourStepPlan {
+            n,
+            inverse,
+            inner,
+            real: RealHalfSpectrum::new(n),
+            scratch: Mutex::new(None),
+        })
+    }
+
+    /// The real transform length `n`.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// True for the C2R (inverse) direction.
+    pub fn inverse(&self) -> bool {
+        self.inverse
+    }
+
+    /// The requested leaf algorithm of the inner complex engine.
+    pub fn algo(&self) -> &str {
+        self.inner.algo()
+    }
+
+    /// Human-readable decomposition of the inner half-size engine.
+    pub fn describe(&self) -> String {
+        format!("r2c({} x {})", self.n, self.inner.describe())
+    }
+
+    /// Transform a whole batch in one call: forward `[b, n]` real rows
+    /// -> `[b, n/2 + 1]` packed spectra; inverse the mirror image with
+    /// the crate-wide unnormalized scaling (`n * x`).
+    pub fn execute_batch(&self, rt: &Runtime, x: PlanarBatch) -> Result<PlanarBatch> {
+        let m = self.n / 2;
+        let want_tail = if self.inverse { m + 1 } else { self.n };
+        crate::ensure!(
+            x.shape.len() == 2 && x.shape[1] == want_tail,
+            "real four-step input shape {:?} != [b, {want_tail}]",
+            x.shape
+        );
+        let b = x.shape[0];
+        // no empty-batch early return: input and output tails differ
+        // for real transforms, so even b = 0 must flow through to get
+        // the correctly shaped output (every pass below is a no-op)
+        // quantize up front: the split/merge pass must see the fp16
+        // values the device sees (leaf artifacts re-round harmlessly)
+        let mut q = x;
+        q.quantize_f16_mut();
+        // staging planes from the retained pair (pack/merge overwrite
+        // every element, so resizing is the only initialization needed)
+        let (mut z_re, mut z_im) = self.scratch.lock().unwrap().take().unwrap_or_default();
+        z_re.resize(b * m, 0.0);
+        z_im.resize(b * m, 0.0);
+        let mut z = PlanarBatch { re: z_re, im: z_im, shape: vec![b, m] };
+        if self.inverse {
+            self.real.merge_rows(&q.re, &q.im, &mut z.re, &mut z.im, b);
+            let z = self.inner.execute_batch(rt, z)?;
+            let mut out = PlanarBatch::new(vec![b, self.n]);
+            self.real.unpack_rows(&z.re, &z.im, &mut out.re, b);
+            *self.scratch.lock().unwrap() = Some((z.re, z.im));
+            Ok(out)
+        } else {
+            self.real.pack_rows(&q.re, &mut z.re, &mut z.im, b);
+            let z = self.inner.execute_batch(rt, z)?;
+            let mut out = PlanarBatch::new(vec![b, m + 1]);
+            self.real.split_rows(&z.re, &z.im, &mut out.re, &mut out.im, b);
+            *self.scratch.lock().unwrap() = Some((z.re, z.im));
+            Ok(out)
+        }
     }
 }
 
@@ -680,6 +804,69 @@ mod tests {
                 assert!(err < 5e-3, "inverse={inverse} row={b}: rmse {err:.3e}");
             }
         }
+    }
+
+    #[test]
+    fn real_four_step_matches_the_dft_definition() {
+        let rt = rt();
+        let n = 128; // forced through the four-step composition (m = 64)
+        let p = RealFourStepPlan::new(&rt, n, false).unwrap();
+        assert_eq!(p.n(), n);
+        assert!(p.describe().starts_with("r2c("), "{}", p.describe());
+        let sig: Vec<f32> = random_signal(2 * n, 11).iter().map(|c| c.re).collect();
+        let input = PlanarBatch::from_real(&sig, vec![2, n]);
+        let out = p.execute_batch(&rt, input.clone()).unwrap();
+        assert_eq!(out.shape, vec![2, n / 2 + 1]);
+        let q = input.quantize_f16();
+        for b in 0..2 {
+            let want = refdft::dft(&widen(&q.to_complex()[b * n..(b + 1) * n]), false);
+            let got = widen(&out.to_complex()[b * (n / 2 + 1)..(b + 1) * (n / 2 + 1)]);
+            let err = relative_rmse(&want[..n / 2 + 1], &got);
+            assert!(err < 5e-3, "row {b}: rmse {err:.3e}");
+        }
+    }
+
+    #[test]
+    fn real_four_step_round_trip() {
+        let rt = rt();
+        let n = 256;
+        let fwd = RealFourStepPlan::new(&rt, n, false).unwrap();
+        let inv = RealFourStepPlan::new(&rt, n, true).unwrap();
+        assert!(inv.inverse());
+        let sig: Vec<f32> = random_signal(n, 21).iter().map(|c| c.re).collect();
+        let input = PlanarBatch::from_real(&sig, vec![1, n]);
+        let spec = fwd.execute_batch(&rt, input.clone()).unwrap();
+        let back = inv.execute_batch(&rt, spec).unwrap();
+        let q = input.quantize_f16();
+        for i in 0..n {
+            assert!(
+                (back.re[i] / n as f32 - q.re[i]).abs() < 0.01,
+                "sample {i}: {} vs {}",
+                back.re[i] / n as f32,
+                q.re[i]
+            );
+            assert_eq!(back.im[i], 0.0, "C2R output must be real");
+        }
+    }
+
+    #[test]
+    fn real_four_step_empty_batch_keeps_the_output_tail() {
+        // input and output tails differ on the real path, so even an
+        // empty batch must come back with the OUTPUT shape
+        let rt = rt();
+        let fwd = RealFourStepPlan::new(&rt, 64, false).unwrap();
+        let out = fwd.execute_batch(&rt, PlanarBatch::new(vec![0, 64])).unwrap();
+        assert_eq!(out.shape, vec![0, 33]);
+        let inv = RealFourStepPlan::new(&rt, 64, true).unwrap();
+        let out = inv.execute_batch(&rt, PlanarBatch::new(vec![0, 33])).unwrap();
+        assert_eq!(out.shape, vec![0, 64]);
+    }
+
+    #[test]
+    fn real_four_step_rejects_bad_sizes() {
+        let rt = rt();
+        assert!(RealFourStepPlan::new(&rt, 100, false).is_err());
+        assert!(RealFourStepPlan::new(&rt, 4, false).is_err()); // half too small
     }
 
     #[test]

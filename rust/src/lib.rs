@@ -7,6 +7,10 @@
 //! coordinator) builds and runs fully offline with zero external
 //! dependencies.
 //!
+//! `ARCHITECTURE.md` at the repo root is the anchor document: module
+//! map, request data flow through the service, the canonical fp16
+//! rounding-point contract, and the oracle chain.
+//!
 //! ## Backends
 //!
 //! Execution is pluggable through the [`runtime::Backend`] trait:
@@ -27,15 +31,20 @@
 //!
 //! Layer map:
 //! * [`runtime`] — `Backend` trait, interpreter + PJRT engines,
-//!   artifact/synthesized registry, planar buffers.
-//! * [`plan`] — cuFFT-style planner: size -> radix schedule -> artifact.
+//!   artifact/synthesized registry, planar buffers, and the R2C/C2R
+//!   half-spectrum kernels ([`runtime::RealHalfSpectrum`]).
+//! * [`plan`] — cuFFT-style planner: size -> radix schedule ->
+//!   artifact, for `fft1d`/`fft2d` and the real-input
+//!   `rfft1d`/`irfft1d` pair.
 //! * [`coordinator`] — the FFT service: router, dynamic batcher,
 //!   worker scheduler, metrics, TCP server. Sizes with no direct
-//!   artifact route to a cached four-step plan.
+//!   artifact route to a cached four-step plan (complex or real).
 //! * [`large`] — batched, multi-level four-step engine composing big
 //!   FFTs from small artifacts (tiled transposes, cached flat twiddle
-//!   tables, `TCFFT_THREADS` host parallelism), plus the kept
-//!   per-sequence baseline.
+//!   tables, `TCFFT_THREADS` host parallelism), its real-input
+//!   wrapper, plus the kept per-sequence baseline.
+//! * [`workload`] — evaluation signals and the spectral-convolution
+//!   workload (FIR/matched filtering over the real path).
 //! * [`fft`], [`hp`] — host-side oracles and numeric substrates.
 //! * [`memsim`], [`perfmodel`] — the GPU memory/roofline models that
 //!   regenerate the paper's Table 2 and Figs 4-7.

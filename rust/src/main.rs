@@ -67,13 +67,14 @@ USAGE: tcfft <SUBCOMMAND> [OPTIONS]
 
   info                          list loaded artifacts
   plan --n N | --nx X --ny Y    show the merging-kernel schedule
-  run --n N [--batch B] [--algo tc|tc_split|r2]
-                                execute on random input, verify vs f64 oracle
+  run --n N [--batch B] [--algo tc|tc_split|r2] [--real]
+                                execute on random input, verify vs f64
+                                oracle (--real: R2C half-spectrum path)
   serve [--addr 127.0.0.1:7070] TCP JSON FFT service
   bench --n N [--batch B]       quick wall-clock throughput
   bench-validate [--file BENCH_interp.json]
                                 validate the bench JSON emitted by
-                                fig4_1d/fig7_batch/large_fourstep
+                                fig4_1d/fig7_batch/large_fourstep/rfft_1d
                                 (run those first)
   precision                     Table 4: relative error vs FFTW-f64 stand-in
   table2                        Table 2: memsim bandwidth vs continuous size
@@ -84,10 +85,10 @@ fn info() -> Result<()> {
     let rt = Runtime::load_default()?;
     let mut t = Table::new(&["key", "op", "algo", "shape", "batch", "dir", "stages"]);
     for v in rt.registry.variants.values() {
-        let shape = if v.op == "fft1d" {
-            format!("{}", v.n)
-        } else {
+        let shape = if v.op == "fft2d" {
             format!("{}x{}", v.nx, v.ny)
+        } else {
+            format!("{}", v.n)
         };
         t.row(vec![
             v.key.clone(),
@@ -135,6 +136,9 @@ fn run_cmd(args: &Args) -> Result<()> {
     let batch = args.get_usize("batch", 4);
     let algo = args.get_str("algo", "tc");
     let rt = Runtime::load_default()?;
+    if args.has_flag("real") {
+        return run_real_cmd(&rt, n, batch, algo);
+    }
     let plan = Plan::fft1d_algo(&rt.registry, n, batch, algo, Direction::Forward)?;
     println!("plan: {} (artifact batch {})", plan.meta.key, plan.meta.batch);
 
@@ -166,6 +170,51 @@ fn run_cmd(args: &Args) -> Result<()> {
     }
     println!(
         "executed {batch}x{n}-point {algo} FFT in {:.2} ms  |  max mean-relative-error {:.3e}",
+        dt * 1e3,
+        worst
+    );
+    tcfft::ensure!(worst < 0.05, "relative error too high");
+    println!("OK");
+    Ok(())
+}
+
+/// `run --real`: R2C forward on random real rows, verified against the
+/// f64 oracle on the Hermitian-packed bins. The requested `--algo`
+/// passes through (and fails loudly if the catalog has no real variant
+/// for it, rather than silently verifying `tc`).
+fn run_real_cmd(rt: &Runtime, n: usize, batch: usize, algo: &str) -> Result<()> {
+    let plan = Plan::rfft1d_algo(&rt.registry, n, batch, algo, Direction::Forward)?;
+    println!("plan: {} (artifact batch {})", plan.meta.key, plan.meta.batch);
+    let sig: Vec<f32> = (0..batch)
+        .flat_map(|b| random_signal(n, 42 + b as u64))
+        .map(|c| c.re)
+        .collect();
+    let input = PlanarBatch::from_real(&sig, vec![batch, n]);
+    let t0 = std::time::Instant::now();
+    let out = plan.execute(rt, input.clone())?;
+    let dt = t0.elapsed().as_secs_f64();
+    let bins = n / 2 + 1;
+    tcfft::ensure!(out.shape == vec![batch, bins], "packed shape {:?}", out.shape);
+
+    let q = input.quantize_f16();
+    let xq: Vec<C64> = q
+        .to_complex()
+        .iter()
+        .map(|c| C64::new(c.re as f64, c.im as f64))
+        .collect();
+    let want = fft_mixed_batch(&xq, batch, n, false);
+    let got: Vec<C64> = out
+        .to_complex()
+        .iter()
+        .map(|c| C64::new(c.re as f64, c.im as f64))
+        .collect();
+    let mut worst = 0.0f64;
+    for b in 0..batch {
+        let e = relative_error(&want[b * n..b * n + bins], &got[b * bins..(b + 1) * bins]);
+        worst = worst.max(e);
+    }
+    println!(
+        "executed {batch}x{n}-point R2C FFT in {:.2} ms  |  max mean-relative-error {:.3e}",
         dt * 1e3,
         worst
     );
@@ -209,9 +258,10 @@ fn bench_cmd(args: &Args) -> Result<()> {
 }
 
 /// CI smoke check: `BENCH_interp.json` (emitted by the fig4_1d,
-/// fig7_batch and large_fourstep benches) parses, carries the expected
-/// schema, and holds the headline before/after entry, the batch-sweep
-/// anchor, and the four-step large-FFT acceptance entry.
+/// fig7_batch, large_fourstep and rfft_1d benches) parses, carries the
+/// expected schema, and holds the headline before/after entry, the
+/// batch-sweep anchor, the four-step large-FFT acceptance entry, and
+/// the R2C-vs-C2C acceptance entry.
 fn bench_validate_cmd(args: &Args) -> Result<()> {
     use tcfft::bench_harness::BENCH_SCHEMA;
     use tcfft::util::json::Json;
@@ -219,6 +269,7 @@ fn bench_validate_cmd(args: &Args) -> Result<()> {
     const HEADLINE: &str = "fft1d_tc_n4096_b32_fwd";
     const SWEEP_ANCHOR: &str = "fft1d_tc_n131072_b1_fwd";
     const FOURSTEP: &str = "fourstep_tc_n1048576_b8_fwd";
+    const RFFT: &str = "rfft1d_tc_n4096_b32_fwd";
 
     // same default resolution as the emitting benches (cwd-independent)
     let default_file = tcfft::bench_harness::bench_json_path().display().to_string();
@@ -262,6 +313,12 @@ fn bench_validate_cmd(args: &Args) -> Result<()> {
     let m4_par = pos(FOURSTEP, "engine_median_s")?;
     pos(FOURSTEP, "engine_serial_median_s")?;
     pos(FOURSTEP, "speedup")?;
+    // the real-input acceptance entry: R2C vs the same-size C2C
+    // transform (the "reference" median IS the C2C run)
+    let mr_c2c = pos(RFFT, "reference_median_s")?;
+    let mr_r2c = pos(RFFT, "engine_median_s")?;
+    pos(RFFT, "engine_serial_median_s")?;
+    pos(RFFT, "speedup")?;
 
     let mut t = Table::new(&["entry", "bench", "engine median ms", "speedup vs pre-PR"]);
     if let Json::Obj(m) = &entries {
@@ -293,6 +350,12 @@ fn bench_validate_cmd(args: &Args) -> Result<()> {
         m4_ref * 1e3,
         m4_par * 1e3,
         m4_ref / m4_par
+    );
+    println!(
+        "real-input {RFFT}: C2C {:.2} ms -> R2C {:.2} ms ({:.2}x)",
+        mr_c2c * 1e3,
+        mr_r2c * 1e3,
+        mr_c2c / mr_r2c
     );
     println!("bench-validate: OK ({file})");
     Ok(())

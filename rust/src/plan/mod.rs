@@ -17,14 +17,33 @@ use crate::runtime::{PlanarBatch, Registry, Runtime, VariantMeta};
 /// Transform direction. Inverse is UNNORMALIZED (cuFFT convention).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Direction {
+    /// Forward transform (`e^(-2*pi*i*jk/N)` kernel).
     Forward,
+    /// Unnormalized inverse: `ifft(fft(x)) = N * x` — scale by `1/N`
+    /// on the host to recover the signal.
     Inverse,
 }
 
 /// A bound execution plan.
+///
+/// The cuFFT-style lifecycle — plan once, execute many times — with no
+/// artifacts required (the registry synthesizes its catalog offline):
+///
+/// ```
+/// use tcfft::plan::Plan;
+/// use tcfft::runtime::{PlanarBatch, Runtime};
+///
+/// let rt = Runtime::load_default().unwrap();
+/// let plan = Plan::fft1d(&rt.registry, 4096, 4).unwrap();
+/// let x = PlanarBatch::new(vec![4, 4096]); // fill with your signal
+/// let y = plan.execute(&rt, x).unwrap();
+/// assert_eq!(y.shape, vec![4, 4096]);
+/// ```
 #[derive(Clone, Debug)]
 pub struct Plan {
+    /// the bound artifact's metadata (key, shapes, stage schedule)
     pub meta: VariantMeta,
+    /// transform direction the artifact was compiled for
     pub direction: Direction,
     /// merge-order radix schedule (per staged axis) for reporting
     pub radices_1d: Vec<usize>,
@@ -36,6 +55,8 @@ impl Plan {
         Self::fft1d_algo(registry, n, batch, "tc", Direction::Forward)
     }
 
+    /// [`fft1d`](Self::fft1d) with an explicit algorithm
+    /// (`"tc"` | `"tc_split"` | `"r2"`) and direction.
     pub fn fft1d_algo(
         registry: &Arc<Registry>,
         n: usize,
@@ -62,11 +83,69 @@ impl Plan {
         Ok(plan)
     }
 
+    /// Plan a batched R2C forward real FFT of length `n`: consumes
+    /// `[batch, n]` real rows (the `re` plane; `im` is ignored) and
+    /// produces the Hermitian-packed `[batch, n/2 + 1]` half spectrum.
+    /// Costs roughly half the same-size complex transform — it runs an
+    /// `n/2`-point complex FFT plus one fused split pass.
+    ///
+    /// ```
+    /// use tcfft::plan::Plan;
+    /// use tcfft::runtime::{PlanarBatch, Runtime};
+    ///
+    /// let rt = Runtime::load_default().unwrap();
+    /// let plan = Plan::rfft1d(&rt.registry, 1024, 2).unwrap();
+    /// let x = PlanarBatch::from_real(&[0.0f32; 2 * 1024], vec![2, 1024]);
+    /// let spectrum = plan.execute(&rt, x).unwrap();
+    /// assert_eq!(spectrum.shape, vec![2, 513]); // bins 0..=n/2
+    /// ```
+    pub fn rfft1d(registry: &Arc<Registry>, n: usize, batch: usize) -> Result<Plan> {
+        Self::rfft1d_algo(registry, n, batch, "tc", Direction::Forward)
+    }
+
+    /// Plan a batched C2R inverse real FFT of length `n`: consumes the
+    /// Hermitian-packed `[batch, n/2 + 1]` spectrum and produces
+    /// `[batch, n]` real rows scaled by `n` (unnormalized, like every
+    /// inverse in this crate — divide by `n` to recover the signal).
+    pub fn irfft1d(registry: &Arc<Registry>, n: usize, batch: usize) -> Result<Plan> {
+        Self::rfft1d_algo(registry, n, batch, "tc", Direction::Inverse)
+    }
+
+    /// [`rfft1d`](Self::rfft1d) / [`irfft1d`](Self::irfft1d) with an
+    /// explicit leaf algorithm and direction.
+    pub fn rfft1d_algo(
+        registry: &Arc<Registry>,
+        n: usize,
+        batch: usize,
+        algo: &str,
+        direction: Direction,
+    ) -> Result<Plan> {
+        if !n.is_power_of_two() || n < 4 {
+            crate::bail!(TcFftError::BadSize(n));
+        }
+        let inverse = direction == Direction::Inverse;
+        let meta = registry
+            .find_rfft1d(n, batch, algo, inverse)
+            .ok_or_else(|| {
+                TcFftError::NoArtifact(format!("rfft1d n={n} algo={algo} inverse={inverse}"))
+            })?
+            .clone();
+        let plan = Plan {
+            // the staged axis is the half-size complex pipeline
+            radices_1d: digitrev::radix_schedule(n / 2),
+            meta,
+            direction,
+        };
+        plan.validate_against_manifest()?;
+        Ok(plan)
+    }
+
     /// Plan a batched 2D FFT (tcfftPlan2D analogue). Row-major (nx, ny).
     pub fn fft2d(registry: &Arc<Registry>, nx: usize, ny: usize, batch: usize) -> Result<Plan> {
         Self::fft2d_algo(registry, nx, ny, batch, "tc", Direction::Forward)
     }
 
+    /// [`fft2d`](Self::fft2d) with an explicit algorithm and direction.
     pub fn fft2d_algo(
         registry: &Arc<Registry>,
         nx: usize,
@@ -107,6 +186,8 @@ impl Plan {
             "r16",
             "merge256",
             "small",
+            "r2c_post",
+            "c2r_pre",
         ];
         let mut product: usize = 1;
         for st in &self.meta.stages {
@@ -115,10 +196,12 @@ impl Plan {
             }
             product = product.saturating_mul(st.radix);
         }
-        let want = if self.meta.op == "fft1d" {
-            self.meta.n
-        } else {
+        // rfft1d carries the half-size complex stages plus the radix-2
+        // real stage, so its product also reconstructs n
+        let want = if self.meta.op == "fft2d" {
             self.meta.nx * self.meta.ny
+        } else {
+            self.meta.n
         };
         if product != want {
             crate::bail!(
@@ -200,6 +283,20 @@ mod tests {
         let r = mini_registry();
         assert!(Plan::fft1d(&r, 100, 1).is_err()); // not a power of two
         assert!(Plan::fft1d(&r, 512, 1).is_err()); // no artifact
+        assert!(Plan::rfft1d(&r, 96, 1).is_err()); // not a power of two
+        assert!(Plan::rfft1d(&r, 2, 1).is_err()); // too small to pack
+    }
+
+    #[test]
+    fn real_plans_bind_packed_shapes() {
+        let r = Arc::new(Registry::synthesize());
+        let fwd = Plan::rfft1d(&r, 1024, 4).unwrap();
+        assert_eq!(fwd.meta.op, "rfft1d");
+        assert_eq!(fwd.meta.input_shape, vec![4, 1024]);
+        assert_eq!(fwd.radices_1d, crate::fft::digitrev::radix_schedule(512));
+        let inv = Plan::irfft1d(&r, 1024, 4).unwrap();
+        assert_eq!(inv.meta.input_shape, vec![4, 513]);
+        assert_eq!(inv.direction, Direction::Inverse);
     }
 
     #[test]

@@ -9,9 +9,14 @@ pub const VMEM_FUSE_BUDGET: usize = 4 * 1024 * 1024;
 /// One planned kernel invocation.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct PlannedStage {
+    /// kernel identifier (one of the planner's known collection)
     pub kernel: &'static str,
+    /// merge radix of this stage (product over stages = transform size)
     pub radix: usize,
+    /// span already merged when this stage runs
     pub n2: usize,
+    /// contiguous lane width (1 for 1D; the row length for the strided
+    /// 2D pass)
     pub lane: usize,
 }
 
@@ -40,6 +45,11 @@ impl PlannedStage {
             "small" => {
                 let r = self.radix as f64;
                 r * n2 * 6.0 + r * r * n2 * 6.0 + r * (r - 1.0) * n2 * 2.0
+            }
+            "r2c_post" | "c2r_pre" => {
+                // one fused pass over the half spectrum: n2/2 + 1 bin
+                // pairs, each ~20 f32 ops against the fp16 W table
+                (n2 / 2.0 + 1.0) * 20.0
             }
             other => panic!("unknown kernel {other}"),
         };
@@ -76,6 +86,12 @@ impl PlannedStage {
                 blk * bpc * 2 + tw
             }
             "small" => self.radix * (self.n2 * self.lane).min(SMALL_TILE) * bpc * 3,
+            "r2c_post" | "c2r_pre" => {
+                // tiled half-spectrum pass: a bin-pair tile of the W
+                // table plus in/out staging
+                let tile = (self.n2 / 2 + 1).min(SMALL_TILE);
+                tile * bpc * 5
+            }
             other => panic!("unknown kernel {other}"),
         }
     }
@@ -150,6 +166,32 @@ pub fn split_schedule(n: usize, lane: usize) -> Vec<PlannedStage> {
     stages
 }
 
+/// The real-input (R2C/C2R) schedule for an `n`-point real transform:
+/// the fused complex schedule of the half size `m = n/2` plus the
+/// half-spectrum pass — `r2c_post` appended for the forward transform,
+/// `c2r_pre` prepended for the inverse. The real stage carries radix 2
+/// and span `m`, so the stage radices still multiply out to `n`.
+pub fn rfft_schedule(n: usize, lane: usize, inverse: bool) -> Vec<PlannedStage> {
+    assert!(n.is_power_of_two() && n >= 4, "real FFT size {n} must be a power of two >= 4");
+    let m = n / 2;
+    let half = kernel_schedule(m, lane);
+    let real = PlannedStage {
+        kernel: if inverse { "c2r_pre" } else { "r2c_post" },
+        radix: 2,
+        n2: m,
+        lane,
+    };
+    if inverse {
+        let mut out = vec![real];
+        out.extend(half);
+        out
+    } else {
+        let mut out = half;
+        out.push(real);
+        out
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -210,6 +252,29 @@ mod tests {
         assert!(big > small);
         for st in kernel_schedule(1 << 16, 1) {
             assert!(st.hbm_bytes(1 << 16) > 0.0);
+        }
+    }
+
+    #[test]
+    fn rfft_schedule_wraps_the_half_size() {
+        for t in 2..=20usize {
+            let n = 1usize << t;
+            let fwd = rfft_schedule(n, 1, false);
+            let inv = rfft_schedule(n, 1, true);
+            // the real stage sits last (forward) / first (inverse)
+            assert_eq!(fwd.last().unwrap().kernel, "r2c_post");
+            assert_eq!(inv.first().unwrap().kernel, "c2r_pre");
+            // radices reconstruct n, costs stay positive and bounded
+            for sts in [&fwd, &inv] {
+                let p: usize = sts.iter().map(|s| s.radix).product();
+                assert_eq!(p, n, "n={n}");
+                for st in sts.iter() {
+                    let real_stage = st.kernel == "r2c_post" || st.kernel == "c2r_pre";
+                    let span = if real_stage { n } else { n / 2 };
+                    assert!(st.flops(span) > 0.0, "n={n} stage {st:?}");
+                    assert!(st.vmem_bytes() <= VMEM_FUSE_BUDGET, "n={n} stage {st:?}");
+                }
+            }
         }
     }
 

@@ -6,18 +6,22 @@ use crate::hp::{f16, C32, F16};
 /// A batch of planar complex data with a logical shape.
 #[derive(Clone, Debug, Default)]
 pub struct PlanarBatch {
+    /// real plane, row-major over `shape`
     pub re: Vec<f32>,
+    /// imaginary plane, same layout as `re`
     pub im: Vec<f32>,
     /// logical dims, e.g. [batch, n] or [batch, nx, ny]
     pub shape: Vec<usize>,
 }
 
 impl PlanarBatch {
+    /// Zero-filled batch of the given logical shape.
     pub fn new(shape: Vec<usize>) -> Self {
         let len = shape.iter().product();
         PlanarBatch { re: vec![0.0; len], im: vec![0.0; len], shape }
     }
 
+    /// Split an interleaved complex slice into the planar layout.
     pub fn from_complex(x: &[C32], shape: Vec<usize>) -> Self {
         assert_eq!(x.len(), shape.iter().product::<usize>());
         PlanarBatch {
@@ -27,6 +31,15 @@ impl PlanarBatch {
         }
     }
 
+    /// Build a real-signal batch: the samples fill the `re` plane and
+    /// the imaginary plane is zero — the input layout of the R2C path
+    /// (`rfft1d` forward), which reads only `re`.
+    pub fn from_real(x: &[f32], shape: Vec<usize>) -> Self {
+        assert_eq!(x.len(), shape.iter().product::<usize>());
+        PlanarBatch { re: x.to_vec(), im: vec![0.0; x.len()], shape }
+    }
+
+    /// Join the planes back into interleaved complex values.
     pub fn to_complex(&self) -> Vec<C32> {
         self.re
             .iter()
@@ -35,10 +48,12 @@ impl PlanarBatch {
             .collect()
     }
 
+    /// Total elements per plane (`shape` product).
     pub fn len(&self) -> usize {
         self.re.len()
     }
 
+    /// True when the batch holds no elements.
     pub fn is_empty(&self) -> bool {
         self.re.is_empty()
     }
@@ -129,6 +144,14 @@ impl PlanarBatch {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn from_real_zeroes_the_imaginary_plane() {
+        let b = PlanarBatch::from_real(&[1.0, 2.0, 3.0, 4.0], vec![2, 2]);
+        assert_eq!(b.re, vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(b.im.iter().all(|&v| v == 0.0));
+        assert_eq!(b.shape, vec![2, 2]);
+    }
 
     #[test]
     fn complex_round_trip() {

@@ -52,6 +52,20 @@
 //!   chunking cannot change results: the parallel engine is bit-exact
 //!   with the serial one (enforced by `tests/engine_equivalence.rs`).
 //!
+//! # Real-input transforms (R2C / C2R)
+//!
+//! `rfft1d` variants run the same staged pipeline at the HALF size
+//! `m = n/2` and wrap it in the fused half-spectrum pass of
+//! [`super::real::RealHalfSpectrum`]: forward packs adjacent real
+//! samples into complex pairs, transforms, and splits into the
+//! Hermitian-packed `[0..=n/2]` spectrum; inverse merges the packed
+//! spectrum, transforms, and unpacks to `n * x` (unnormalized, like
+//! every inverse in this crate). The split/merge pass uses its own
+//! fp16-rounded `W_N^k` operand table with f32 arithmetic and fp16
+//! stores — the same rounding contract as the merge stages — so a real
+//! transform costs roughly half its complex counterpart without
+//! changing the numeric model.
+//!
 //! [`ReferenceInterpreter`] keeps the pre-PR row-at-a-time engine
 //! (per-row table reloads, per-call allocations, full-codec fp16
 //! rounding) as the numeric reference and the perf baseline recorded
@@ -62,6 +76,7 @@ use std::sync::{Arc, Mutex, RwLock};
 use std::time::Instant;
 
 use super::buffers::PlanarBatch;
+use super::real::RealHalfSpectrum;
 use super::registry::VariantMeta;
 use super::{Backend, ExecStats};
 use crate::error::Result;
@@ -388,6 +403,9 @@ struct Scratch {
     a_im: Vec<f32>,
     b_re: Vec<f32>,
     b_im: Vec<f32>,
+    /// half-size staging planes for the real (R2C/C2R) path
+    z_re: Vec<f32>,
+    z_im: Vec<f32>,
 }
 
 impl Scratch {
@@ -398,6 +416,45 @@ impl Scratch {
             self.b_re.resize(len, 0.0);
             self.b_im.resize(len, 0.0);
         }
+    }
+}
+
+/// The real-transform wrapper shared by both engines: route the
+/// quantized input (`[b, n]` real rows forward, `[b, n/2 + 1]` packed
+/// spectra inverse) through pack/merge, the supplied half-size complex
+/// pipeline runner, and split/unpack. Every fp16 rounding point lives
+/// in [`RealHalfSpectrum`] and the pipeline itself; this function only
+/// moves data. The half-size staging planes come from the caller
+/// (`CpuInterpreter` hands in its scratch arena, so its steady state
+/// allocates only the returned output); the output buffer itself is
+/// owned by the caller's caller and is a fresh allocation by design.
+fn run_real(
+    real: &RealHalfSpectrum,
+    inverse: bool,
+    q: &PlanarBatch,
+    z_re: &mut Vec<f32>,
+    z_im: &mut Vec<f32>,
+    run: impl FnOnce(&mut [f32], &mut [f32], usize),
+) -> PlanarBatch {
+    let b = q.shape[0];
+    let (n, m) = (real.n(), real.m());
+    let len = b * m;
+    if z_re.len() < len {
+        z_re.resize(len, 0.0);
+        z_im.resize(len, 0.0);
+    }
+    if inverse {
+        real.merge_rows(&q.re, &q.im, &mut z_re[..len], &mut z_im[..len], b);
+        run(&mut z_re[..len], &mut z_im[..len], b);
+        let mut out = PlanarBatch::new(vec![b, n]);
+        real.unpack_rows(&z_re[..len], &z_im[..len], &mut out.re, b);
+        out
+    } else {
+        real.pack_rows(&q.re, &mut z_re[..len], &mut z_im[..len], b);
+        run(&mut z_re[..len], &mut z_im[..len], b);
+        let mut out = PlanarBatch::new(vec![b, m + 1]);
+        real.split_rows(&z_re[..len], &z_im[..len], &mut out.re, &mut out.im, b);
+        out
     }
 }
 
@@ -473,13 +530,26 @@ fn run_rows(
     }
 }
 
-/// A fully built transform: one axis pass for 1D, two for 2D.
+/// A fully built transform: one axis pass for 1D (over the half size
+/// for real transforms, with the half-spectrum pass attached), two
+/// for 2D.
 struct Compiled {
     axes: Vec<AxisPipeline>,
+    /// the fused half-spectrum split/merge pass (real transforms only)
+    real: Option<RealHalfSpectrum>,
 }
 
 impl Compiled {
     fn build(meta: &VariantMeta, fuse: bool) -> Compiled {
+        if meta.op == "rfft1d" {
+            // the complex pipeline runs at the half size m = n/2; the
+            // real split (fwd) / merge (inv) pass wraps around it
+            let m = meta.n / 2;
+            return Compiled {
+                axes: vec![AxisPipeline::build(m, &meta.algo, meta.inverse, fuse)],
+                real: Some(RealHalfSpectrum::new(meta.n)),
+            };
+        }
         let axes = if meta.op == "fft1d" {
             vec![AxisPipeline::build(meta.n, &meta.algo, meta.inverse, fuse)]
         } else {
@@ -489,7 +559,7 @@ impl Compiled {
                 AxisPipeline::build(meta.nx, &meta.algo, meta.inverse, fuse),
             ]
         };
-        Compiled { axes }
+        Compiled { axes, real: None }
     }
 }
 
@@ -622,6 +692,20 @@ impl Backend for CpuInterpreter {
 
         let te = Instant::now();
         let batch = q.shape[0];
+        if let Some(real) = &compiled.real {
+            // real transform: half-size complex pipeline wrapped in the
+            // fused half-spectrum pass (input im plane is ignored on
+            // the R2C side — the signal is real by contract). Staging
+            // planes come from the arena; run_axis nests its own
+            // scratch borrow, so the arena settles at two entries.
+            let out = self.with_scratch(|s| {
+                run_real(real, meta.inverse, &q, &mut s.z_re, &mut s.z_im, |re, im, rows| {
+                    self.run_axis(&compiled.axes[0], re, im, rows, 1);
+                })
+            });
+            let exec_seconds = te.elapsed().as_secs_f64();
+            return Ok((out, ExecStats { exec_seconds, marshal_seconds, compiled: fresh }));
+        }
         if meta.op == "fft1d" {
             self.run_axis(&compiled.axes[0], &mut q.re, &mut q.im, batch, 1);
         } else {
@@ -656,6 +740,7 @@ pub struct ReferenceInterpreter {
 }
 
 impl ReferenceInterpreter {
+    /// Fresh engine with an empty pipeline cache.
     pub fn new() -> ReferenceInterpreter {
         ReferenceInterpreter { cache: RwLock::new(HashMap::new()) }
     }
@@ -774,6 +859,16 @@ impl Backend for ReferenceInterpreter {
         let marshal_seconds = tm.elapsed().as_secs_f64();
         let te = Instant::now();
         let batch = q.shape[0];
+        if let Some(real) = &compiled.real {
+            // the reference engine allocates per call on purpose (the
+            // honest pre-PR baseline), so its staging is local
+            let (mut z_re, mut z_im) = (Vec::new(), Vec::new());
+            let out = run_real(real, meta.inverse, &q, &mut z_re, &mut z_im, |re, im, rows| {
+                reference_run_axis(&compiled.axes[0], re, im, rows, 1);
+            });
+            let exec_seconds = te.elapsed().as_secs_f64();
+            return Ok((out, ExecStats { exec_seconds, marshal_seconds, compiled: fresh }));
+        }
         if meta.op == "fft1d" {
             reference_run_axis(&compiled.axes[0], &mut q.re, &mut q.im, batch, 1);
         } else {
@@ -897,6 +992,105 @@ mod tests {
         assert_eq!(be.scratch.lock().unwrap().len(), 1, "scratch returned to arena");
         be.execute(meta, x).unwrap();
         assert_eq!(be.scratch.lock().unwrap().len(), 1, "scratch reused, not duplicated");
+    }
+
+    #[test]
+    fn real_path_settles_into_the_scratch_arena() {
+        // the outer staging borrow nests the pipeline's own scratch
+        // borrow, so the arena settles at two entries and stops growing
+        let reg = Registry::synthesize();
+        let be = CpuInterpreter::with_threads(1);
+        let meta = reg.get("rfft1d_tc_n256_b4_fwd").unwrap();
+        let x = PlanarBatch::new(vec![4, 256]);
+        be.execute(meta, x.clone()).unwrap();
+        let settled = be.scratch.lock().unwrap().len();
+        assert!(settled <= 2, "arena grew to {settled}");
+        be.execute(meta, x).unwrap();
+        assert_eq!(be.scratch.lock().unwrap().len(), settled, "arena kept growing");
+    }
+
+    #[test]
+    fn rfft_impulse_gives_flat_packed_spectrum() {
+        let reg = Registry::synthesize();
+        let meta = reg.get("rfft1d_tc_n256_b4_fwd").unwrap();
+        let be = CpuInterpreter::new();
+        let mut x = PlanarBatch::new(vec![4, 256]);
+        x.re[0] = 1.0; // real impulse in row 0
+        let (y, _) = be.execute(meta, x).unwrap();
+        assert_eq!(y.shape, vec![4, 129]);
+        for k in 0..129 {
+            assert!((y.re[k] - 1.0).abs() < 0.01, "bin {k}: {}", y.re[k]);
+            assert!(y.im[k].abs() < 0.01, "bin {k}: {}", y.im[k]);
+        }
+        // Hermitian endpoints are exactly real
+        assert_eq!(y.im[0], 0.0);
+        assert_eq!(y.im[128], 0.0);
+    }
+
+    #[test]
+    fn rfft_matches_refdft_small() {
+        let reg = Registry::synthesize();
+        let be = CpuInterpreter::new();
+        let meta = reg.get("rfft1d_tc_n64_b4_fwd").unwrap();
+        let sig: Vec<f32> = random_signal(64, 9).iter().map(|c| c.re).collect();
+        let input = PlanarBatch::from_real(&sig, vec![1, 64]).pad_batch(4);
+        let (out, _) = be.execute(meta, input.clone()).unwrap();
+        let q = input.quantize_f16();
+        let want = refdft::dft(&widen(&q.to_complex()[..64]), false);
+        let got = widen(&out.to_complex()[..33]);
+        let err = relative_rmse(&want[..33], &got);
+        assert!(err < 2e-3, "rfft rmse {err}");
+    }
+
+    #[test]
+    fn rfft_engine_tracks_reference_closely() {
+        let reg = Registry::synthesize();
+        for key in ["rfft1d_tc_n256_b4_fwd", "rfft1d_tc_n256_b4_inv"] {
+            let meta = reg.get(key).unwrap();
+            let bins = meta.input_shape[1];
+            let x: Vec<f32> = (0..4 * bins)
+                .map(|i| ((i * 29 + 3) % 41) as f32 / 41.0 - 0.5)
+                .collect();
+            let mut input = PlanarBatch::new(vec![4, bins]);
+            input.re.copy_from_slice(&x);
+            if meta.inverse {
+                // a plausible packed spectrum: reuse the same values in im
+                // but keep the Hermitian-real endpoints real
+                input.im.copy_from_slice(&x);
+                for row in 0..4 {
+                    input.im[row * bins] = 0.0;
+                    input.im[row * bins + bins - 1] = 0.0;
+                }
+            }
+            let (y_new, _) = CpuInterpreter::new().execute(meta, input.clone()).unwrap();
+            let (y_ref, _) = ReferenceInterpreter::new().execute(meta, input).unwrap();
+            let err = relative_rmse(&widen(&y_ref.to_complex()), &widen(&y_new.to_complex()));
+            assert!(err < 1e-3, "{key}: engine vs reference rmse {err}");
+        }
+    }
+
+    #[test]
+    fn irfft_of_rfft_recovers_the_signal() {
+        let reg = Registry::synthesize();
+        let be = CpuInterpreter::new();
+        let fwd = reg.get("rfft1d_tc_n256_b4_fwd").unwrap();
+        let inv = reg.get("rfft1d_tc_n256_b4_inv").unwrap();
+        let sig: Vec<f32> = random_signal(4 * 256, 5).iter().map(|c| c.re).collect();
+        let input = PlanarBatch::from_real(&sig, vec![4, 256]);
+        let (spec, _) = be.execute(fwd, input.clone()).unwrap();
+        let (back, _) = be.execute(inv, spec).unwrap();
+        assert_eq!(back.shape, vec![4, 256]);
+        let q = input.quantize_f16();
+        for i in 0..4 * 256 {
+            // unnormalized: back = n * x
+            assert!(
+                (back.re[i] / 256.0 - q.re[i]).abs() < 0.01,
+                "sample {i}: {} vs {}",
+                back.re[i] / 256.0,
+                q.re[i]
+            );
+            assert_eq!(back.im[i], 0.0, "C2R output must be real");
+        }
     }
 
     #[test]

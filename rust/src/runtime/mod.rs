@@ -17,12 +17,14 @@ pub mod buffers;
 #[cfg(feature = "pjrt")]
 pub mod executor;
 pub mod interpreter;
+pub mod real;
 pub mod registry;
 
 pub use buffers::PlanarBatch;
 #[cfg(feature = "pjrt")]
 pub use executor::Executor;
 pub use interpreter::{CpuInterpreter, ReferenceInterpreter};
+pub use real::RealHalfSpectrum;
 pub use registry::{Registry, StageMeta, VariantMeta};
 
 use std::path::Path;

@@ -1,0 +1,305 @@
+//! Half-spectrum split/merge kernels for real-input transforms — the
+//! shared numeric core of the R2C/C2R path.
+//!
+//! An N-point real FFT is computed as an M = N/2-point *complex* FFT
+//! plus one O(N) post-processing pass (and symmetrically for the
+//! inverse): pack the real samples pairwise into complex values
+//! `z[j] = x[2j] + i*x[2j+1]`, transform, then split the half-size
+//! spectrum `Z` into the Hermitian-packed spectrum `G[0..=M]` of the
+//! real signal using the identities
+//!
+//! ```text
+//!   E[k] = (Z[k] + conj(Z[M-k])) / 2          (FFT of the even samples)
+//!   O[k] = (Z[k] - conj(Z[M-k])) / (2i)       (FFT of the odd samples)
+//!   G[k]   = E[k] + W_N^k * O[k]              W_N^k = e^(-2*pi*i*k/N)
+//!   G[M-k] = conj(E[k]) - conj(W_N^k * O[k])
+//! ```
+//!
+//! so one table of `W_N^k` for `k = 0..=M/2` serves every bin pair.
+//! The inverse pre-processing inverts the split exactly, scaled so the
+//! unnormalized M-point inverse FFT yields `N * x` (the cuFFT C2R
+//! convention, matching the crate-wide unnormalized inverse):
+//!
+//! ```text
+//!   Z'[k] = (G[k] + conj(G[M-k])) + i * conj(W_N^k) * (G[k] - conj(G[M-k]))
+//! ```
+//!
+//! # fp16 rounding points
+//!
+//! The pass honors the same device contract as the merge stages
+//! (see [`crate::runtime::interpreter`]): the `W_N^k` operand table is
+//! rounded to fp16 once at build time, inputs arrive as fp16 values,
+//! all arithmetic accumulates in f32, and outputs are rounded back to
+//! fp16 on store. Packing/unpacking are pure data movement and round
+//! nothing.
+//!
+//! Both execution engines — the [`crate::runtime::CpuInterpreter`]
+//! stage pipeline and the [`crate::large::RealFourStepPlan`] four-step
+//! composition — run these exact kernels, so the two R2C paths share
+//! one numeric definition.
+
+use crate::hp::F16;
+
+/// fp16 rounding on the store path (bit-identical to the codec).
+#[inline]
+fn rnd16(x: f32) -> f32 {
+    F16::round_f32(x)
+}
+
+/// Precomputed half-spectrum split/merge pass for one real size `n`.
+///
+/// Holds the fp16-rounded `W_N^k` twiddle table (`k = 0..=n/4`) and
+/// applies the forward split ([`split_rows`](Self::split_rows)) or the
+/// inverse merge ([`merge_rows`](Self::merge_rows)) batch-major over
+/// planar rows, plus the lossless pack/unpack reshuffles.
+pub struct RealHalfSpectrum {
+    /// half size: the length of the underlying complex transform
+    m: usize,
+    /// fp16-rounded `cos(-2*pi*k/n)` for `k = 0..=m/2`
+    w_re: Vec<f32>,
+    /// fp16-rounded `sin(-2*pi*k/n)` for `k = 0..=m/2`
+    w_im: Vec<f32>,
+}
+
+impl RealHalfSpectrum {
+    /// Build the pass for an `n`-point real transform (`n` a power of
+    /// two, `n >= 4`). The same table serves forward and inverse.
+    pub fn new(n: usize) -> RealHalfSpectrum {
+        assert!(n.is_power_of_two() && n >= 4, "real FFT size {n} must be a power of two >= 4");
+        let m = n / 2;
+        let half = m / 2;
+        let mut w_re = Vec::with_capacity(half + 1);
+        let mut w_im = Vec::with_capacity(half + 1);
+        for k in 0..=half {
+            let ang = -2.0 * std::f64::consts::PI * k as f64 / n as f64;
+            w_re.push(rnd16(ang.cos() as f32));
+            w_im.push(rnd16(ang.sin() as f32));
+        }
+        RealHalfSpectrum { m, w_re, w_im }
+    }
+
+    /// The real transform length `n`.
+    pub fn n(&self) -> usize {
+        2 * self.m
+    }
+
+    /// The underlying complex transform length `m = n/2`.
+    pub fn m(&self) -> usize {
+        self.m
+    }
+
+    /// Bins in the Hermitian-packed spectrum: `n/2 + 1`.
+    pub fn packed_len(&self) -> usize {
+        self.m + 1
+    }
+
+    /// Pack `rows` real rows (length `n`, read from `src_re` with the
+    /// row stride `n`) into complex rows `z[j] = x[2j] + i*x[2j+1]`
+    /// (length `m`). Pure data movement — no rounding.
+    pub fn pack_rows(&self, src_re: &[f32], z_re: &mut [f32], z_im: &mut [f32], rows: usize) {
+        let (n, m) = (2 * self.m, self.m);
+        assert_eq!(src_re.len(), rows * n, "pack: source/shape mismatch");
+        assert_eq!(z_re.len(), rows * m, "pack: dest/shape mismatch");
+        for row in 0..rows {
+            let src = &src_re[row * n..(row + 1) * n];
+            let base = row * m;
+            for j in 0..m {
+                z_re[base + j] = src[2 * j];
+                z_im[base + j] = src[2 * j + 1];
+            }
+        }
+    }
+
+    /// Unpack `rows` complex rows (length `m`) back into real rows
+    /// (length `n`): `x[2j] = Re z[j]`, `x[2j+1] = Im z[j]`, written to
+    /// the `out_re` plane. Pure data movement — no rounding.
+    pub fn unpack_rows(&self, z_re: &[f32], z_im: &[f32], out_re: &mut [f32], rows: usize) {
+        let (n, m) = (2 * self.m, self.m);
+        assert_eq!(z_re.len(), rows * m, "unpack: source/shape mismatch");
+        assert_eq!(out_re.len(), rows * n, "unpack: dest/shape mismatch");
+        for row in 0..rows {
+            let base = row * m;
+            let dst = &mut out_re[row * n..(row + 1) * n];
+            for j in 0..m {
+                dst[2 * j] = z_re[base + j];
+                dst[2 * j + 1] = z_im[base + j];
+            }
+        }
+    }
+
+    /// Forward split: turn `rows` half-size spectra `Z` (length `m`)
+    /// into Hermitian-packed real spectra `G` (length `m + 1`), one
+    /// fused pass per bin pair against the fp16 `W` table, f32
+    /// arithmetic, fp16 stores. Bins 0 and `m` come out with exactly
+    /// zero imaginary part (they are real by Hermitian symmetry).
+    pub fn split_rows(
+        &self,
+        z_re: &[f32],
+        z_im: &[f32],
+        g_re: &mut [f32],
+        g_im: &mut [f32],
+        rows: usize,
+    ) {
+        let m = self.m;
+        assert_eq!(z_re.len(), rows * m, "split: source/shape mismatch");
+        assert_eq!(g_re.len(), rows * (m + 1), "split: dest/shape mismatch");
+        for row in 0..rows {
+            let zb = row * m;
+            let gb = row * (m + 1);
+            for k in 0..=m / 2 {
+                // a = Z[k], b = Z[m-k] (Z[m] wraps to Z[0])
+                let (ar, ai) = (z_re[zb + k % m], z_im[zb + k % m]);
+                let (br, bi) = (z_re[zb + (m - k) % m], z_im[zb + (m - k) % m]);
+                let (er, ei) = (0.5 * (ar + br), 0.5 * (ai - bi));
+                let (or_, oi) = (0.5 * (ai + bi), 0.5 * (br - ar));
+                let (wr, wi) = (self.w_re[k], self.w_im[k]);
+                let (tr, ti) = (wr * or_ - wi * oi, wr * oi + wi * or_);
+                g_re[gb + k] = rnd16(er + tr);
+                g_im[gb + k] = rnd16(ei + ti);
+                // k = m/2 writes its own (self-paired) bin twice with
+                // the identical value, so no guard is needed
+                g_re[gb + m - k] = rnd16(er - tr);
+                g_im[gb + m - k] = rnd16(ti - ei);
+            }
+        }
+    }
+
+    /// Inverse merge: turn `rows` Hermitian-packed spectra `G` (length
+    /// `m + 1`) into half-size spectra `Z'` (length `m`), scaled so the
+    /// unnormalized inverse M-point FFT of `Z'` unpacks to `n * x`.
+    /// Same fused structure, fp16 `W` table, f32 arithmetic, fp16
+    /// stores.
+    pub fn merge_rows(
+        &self,
+        g_re: &[f32],
+        g_im: &[f32],
+        z_re: &mut [f32],
+        z_im: &mut [f32],
+        rows: usize,
+    ) {
+        let m = self.m;
+        assert_eq!(g_re.len(), rows * (m + 1), "merge: source/shape mismatch");
+        assert_eq!(z_re.len(), rows * m, "merge: dest/shape mismatch");
+        for row in 0..rows {
+            let gb = row * (m + 1);
+            let zb = row * m;
+            for k in 0..=m / 2 {
+                // g = G[k], h = G[m-k]; S = g + conj h, D = g - conj h
+                let (gr, gi) = (g_re[gb + k], g_im[gb + k]);
+                let (hr, hi) = (g_re[gb + m - k], g_im[gb + m - k]);
+                let (sr, si) = (gr + hr, gi - hi);
+                let (dr, di) = (gr - hr, gi + hi);
+                let (wr, wi) = (self.w_re[k], self.w_im[k]);
+                // Z'[k] = S + i * conj(W^k) * D
+                z_re[zb + k % m] = rnd16(sr - wr * di + wi * dr);
+                z_im[zb + k % m] = rnd16(si + wr * dr + wi * di);
+                if k > 0 && m - k != k {
+                    // Z'[m-k] = conj-symmetric partner through -W^k
+                    z_re[zb + m - k] = rnd16(sr + wr * di - wi * dr);
+                    z_im[zb + m - k] = rnd16(wr * dr + wi * di - si);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fft::refdft;
+    use crate::hp::C64;
+
+    /// f64 model of one split+transform against the packed layout.
+    fn oracle_packed(x: &[f64]) -> Vec<C64> {
+        let n = x.len();
+        let xc: Vec<C64> = x.iter().map(|&v| C64::new(v, 0.0)).collect();
+        refdft::dft(&xc, false)[..n / 2 + 1].to_vec()
+    }
+
+    /// Exact f64 complex DFT of the packed pairs, quantized through the
+    /// same fp16 codec the kernels use.
+    fn fp16v(x: f64) -> f32 {
+        F16::from_f32(x as f32).to_f32()
+    }
+
+    #[test]
+    fn split_matches_definition_on_small_sizes() {
+        for n in [4usize, 8, 16, 64] {
+            let m = n / 2;
+            let x: Vec<f64> = (0..n).map(|i| ((i * 37 + 11) % 17) as f64 / 17.0 - 0.5).collect();
+            let xq: Vec<f32> = x.iter().map(|&v| fp16v(v)).collect();
+            // exact half-size complex DFT of the packed pairs
+            let z: Vec<C64> = (0..m)
+                .map(|j| C64::new(xq[2 * j] as f64, xq[2 * j + 1] as f64))
+                .collect();
+            let zf = refdft::dft(&z, false);
+            let (z_re, z_im): (Vec<f32>, Vec<f32>) = zf
+                .iter()
+                .map(|c| (fp16v(c.re), fp16v(c.im)))
+                .unzip();
+            let rs = RealHalfSpectrum::new(n);
+            let mut g_re = vec![0f32; m + 1];
+            let mut g_im = vec![0f32; m + 1];
+            rs.split_rows(&z_re, &z_im, &mut g_re, &mut g_im, 1);
+            let want = oracle_packed(&xq.iter().map(|&v| v as f64).collect::<Vec<_>>());
+            for k in 0..=m {
+                let got = C64::new(g_re[k] as f64, g_im[k] as f64);
+                assert!(
+                    (got - want[k]).abs() < 0.05 * (n as f64).sqrt(),
+                    "n={n} bin {k}: got {got:?} want {:?}",
+                    want[k]
+                );
+            }
+            // Hermitian endpoints are exactly real
+            assert_eq!(g_im[0], 0.0, "n={n}: bin 0 must be real");
+            assert_eq!(g_im[m], 0.0, "n={n}: bin m must be real");
+        }
+    }
+
+    #[test]
+    fn merge_inverts_split() {
+        // split then merge recovers 2*Z (the C2R doubling that makes
+        // the unnormalized inverse land at N*x instead of (N/2)*x)
+        let n = 32;
+        let m = n / 2;
+        let z_re: Vec<f32> = (0..m).map(|j| fp16v((j as f64 * 0.73).sin())).collect();
+        let z_im: Vec<f32> = (0..m).map(|j| fp16v((j as f64 * 1.19).cos())).collect();
+        let rs = RealHalfSpectrum::new(n);
+        let mut g_re = vec![0f32; m + 1];
+        let mut g_im = vec![0f32; m + 1];
+        rs.split_rows(&z_re, &z_im, &mut g_re, &mut g_im, 1);
+        let mut back_re = vec![0f32; m];
+        let mut back_im = vec![0f32; m];
+        rs.merge_rows(&g_re, &g_im, &mut back_re, &mut back_im, 1);
+        for j in 0..m {
+            assert!(
+                (back_re[j] - 2.0 * z_re[j]).abs() < 0.01,
+                "re[{j}]: {} vs {}",
+                back_re[j],
+                2.0 * z_re[j]
+            );
+            assert!((back_im[j] - 2.0 * z_im[j]).abs() < 0.01, "im[{j}]");
+        }
+    }
+
+    #[test]
+    fn pack_unpack_round_trip() {
+        let n = 16;
+        let rs = RealHalfSpectrum::new(n);
+        let x: Vec<f32> = (0..n).map(|i| i as f32 * 0.25 - 2.0).collect();
+        let mut z_re = vec![0f32; n / 2];
+        let mut z_im = vec![0f32; n / 2];
+        rs.pack_rows(&x, &mut z_re, &mut z_im, 1);
+        assert_eq!(z_re[1], x[2]);
+        assert_eq!(z_im[1], x[3]);
+        let mut back = vec![0f32; n];
+        rs.unpack_rows(&z_re, &z_im, &mut back, 1);
+        assert_eq!(back, x);
+    }
+
+    #[test]
+    #[should_panic(expected = "power of two")]
+    fn rejects_tiny_sizes() {
+        RealHalfSpectrum::new(2);
+    }
+}

@@ -13,7 +13,7 @@ use std::path::{Path, PathBuf};
 
 use crate::error::{Result, TcFftError};
 use crate::plan::schedule::{
-    kernel_schedule, radix2_equivalent_flops, split_schedule, PlannedStage,
+    kernel_schedule, radix2_equivalent_flops, rfft_schedule, split_schedule, PlannedStage,
 };
 use crate::util::json::Json;
 
@@ -49,12 +49,13 @@ pub struct VariantMeta {
 }
 
 impl VariantMeta {
-    /// Total complex elements per batch element.
+    /// Logical transform length per batch element (the real length `n`
+    /// for `rfft1d`, whose packed spectrum holds `n/2 + 1` bins).
     pub fn seq_len(&self) -> usize {
-        if self.op == "fft1d" {
-            self.n
-        } else {
+        if self.op == "fft2d" {
             self.nx * self.ny
+        } else {
+            self.n
         }
     }
 
@@ -115,6 +116,8 @@ impl Registry {
         }
     }
 
+    /// Parse a manifest from its JSON text (artifact files resolve
+    /// relative to `dir`).
     pub fn from_json_str(text: &str, dir: PathBuf) -> Result<Registry> {
         let root = Json::parse(text)
             .map_err(|e| TcFftError::msg(format!("manifest parse error: {e}")))?;
@@ -206,6 +209,12 @@ impl Registry {
         // four-step large-FFT building block: 1024-point with batch 32
         add(synth_fft1d(&dir, "tc", 1024, 32, false));
         add(synth_fft1d(&dir, "tc", 1024, 32, true));
+        // real-input (R2C forward / C2R inverse) ladder at batch 4
+        for t in 2..=17usize {
+            let n = 1usize << t;
+            add(synth_rfft1d(&dir, "tc", n, 4, false));
+            add(synth_rfft1d(&dir, "tc", n, 4, true));
+        }
         // 2D shapes (Fig 5, Table 4)
         for (nx, ny) in [(128usize, 128usize), (256, 256), (256, 512), (512, 256), (512, 512)] {
             add(synth_fft2d(&dir, "tc", nx, ny, 2, false));
@@ -222,6 +231,7 @@ impl Registry {
         Registry { dir, variants, synthesized: true }
     }
 
+    /// Look up a variant by its exact key.
     pub fn get(&self, key: &str) -> Result<&VariantMeta> {
         self.variants.get(key).ok_or_else(|| {
             TcFftError::NoArtifact(format!("'{key}' (have {})", self.variants.len()))
@@ -236,6 +246,39 @@ impl Registry {
         self.variants.values().filter(move |v| pred(v))
     }
 
+    /// Batch-tier selection shared by every `find_*` lookup: among the
+    /// variants matching `pred`, pick the smallest batch >= wanted,
+    /// else the largest available (the batcher splits oversize
+    /// requests).
+    fn find_tier(
+        &self,
+        batch: usize,
+        pred: impl Fn(&VariantMeta) -> bool,
+    ) -> Option<&VariantMeta> {
+        let mut candidates: Vec<&VariantMeta> =
+            self.variants.values().filter(|v| pred(v)).collect();
+        candidates.sort_by_key(|v| v.batch);
+        candidates
+            .iter()
+            .find(|v| v.batch >= batch)
+            .copied()
+            .or_else(|| candidates.last().copied())
+    }
+
+    /// Find a real-input 1D variant (R2C when `inverse` is false, C2R
+    /// when true): same batch-tier selection as [`find_fft1d`](Self::find_fft1d).
+    pub fn find_rfft1d(
+        &self,
+        n: usize,
+        batch: usize,
+        algo: &str,
+        inverse: bool,
+    ) -> Option<&VariantMeta> {
+        self.find_tier(batch, |v| {
+            v.op == "rfft1d" && v.n == n && v.algo == algo && v.inverse == inverse
+        })
+    }
+
     /// Find a 1D variant: exact size/algo/direction; smallest batch >= wanted,
     /// else the largest available (the batcher splits oversize requests).
     pub fn find_fft1d(
@@ -245,19 +288,13 @@ impl Registry {
         algo: &str,
         inverse: bool,
     ) -> Option<&VariantMeta> {
-        let mut candidates: Vec<&VariantMeta> = self
-            .variants
-            .values()
-            .filter(|v| v.op == "fft1d" && v.n == n && v.algo == algo && v.inverse == inverse)
-            .collect();
-        candidates.sort_by_key(|v| v.batch);
-        candidates
-            .iter()
-            .find(|v| v.batch >= batch)
-            .copied()
-            .or_else(|| candidates.last().copied())
+        self.find_tier(batch, |v| {
+            v.op == "fft1d" && v.n == n && v.algo == algo && v.inverse == inverse
+        })
     }
 
+    /// Find a 2D variant: exact shape/algo/direction, same batch-tier
+    /// selection as [`find_fft1d`](Self::find_fft1d).
     pub fn find_fft2d(
         &self,
         nx: usize,
@@ -266,23 +303,9 @@ impl Registry {
         algo: &str,
         inverse: bool,
     ) -> Option<&VariantMeta> {
-        let mut candidates: Vec<&VariantMeta> = self
-            .variants
-            .values()
-            .filter(|v| {
-                v.op == "fft2d"
-                    && v.nx == nx
-                    && v.ny == ny
-                    && v.algo == algo
-                    && v.inverse == inverse
-            })
-            .collect();
-        candidates.sort_by_key(|v| v.batch);
-        candidates
-            .iter()
-            .find(|v| v.batch >= batch)
-            .copied()
-            .or_else(|| candidates.last().copied())
+        self.find_tier(batch, |v| {
+            v.op == "fft2d" && v.nx == nx && v.ny == ny && v.algo == algo && v.inverse == inverse
+        })
     }
 }
 
@@ -368,6 +391,45 @@ fn synth_fft1d(dir: &Path, algo: &str, n: usize, batch: usize, inverse: bool) ->
         flops_per_seq,
         hbm_bytes_per_seq,
         radix2_equiv_flops: radix2_equivalent_flops(n, batch),
+    }
+}
+
+/// Real-input 1D variant: an `n`-point real transform served by the
+/// `n/2`-point complex schedule plus the half-spectrum pass. Forward
+/// (R2C) consumes `[batch, n]` real rows and emits the Hermitian-packed
+/// `[batch, n/2 + 1]` spectrum; inverse (C2R) is the mirror image.
+fn synth_rfft1d(dir: &Path, algo: &str, n: usize, batch: usize, inverse: bool) -> VariantMeta {
+    let d = if inverse { "inv" } else { "fwd" };
+    let key = format!("rfft1d_{algo}_n{n}_b{batch}_{d}");
+    let m = n / 2;
+    let stages: Vec<StageMeta> = rfft_schedule(n, 1, inverse)
+        .iter()
+        .map(|s| {
+            // the half-spectrum pass spans the full n; the complex
+            // stages live inside the half-size transform
+            let span = if s.kernel == "r2c_post" || s.kernel == "c2r_pre" { n } else { m };
+            stage_meta_from_planned(s, span)
+        })
+        .collect();
+    let flops_per_seq: f64 = stages.iter().map(|s| s.flops).sum();
+    let hbm_bytes_per_seq: f64 = stages.iter().map(|s| s.hbm_bytes).sum();
+    let input_shape = if inverse { vec![batch, m + 1] } else { vec![batch, n] };
+    VariantMeta {
+        file: dir.join(format!("{key}.hlo.txt")),
+        key,
+        op: "rfft1d".to_string(),
+        algo: algo.to_string(),
+        n,
+        nx: 0,
+        ny: 0,
+        batch,
+        inverse,
+        input_shape,
+        stages,
+        flops_per_seq,
+        hbm_bytes_per_seq,
+        // a real transform carries half the equivalent complex work
+        radix2_equiv_flops: radix2_equivalent_flops(n, batch) / 2.0,
     }
 }
 
@@ -494,6 +556,23 @@ mod tests {
         }
         // no catalog entry above 2^17 (tests rely on this failing)
         assert!(r.find_fft1d(1 << 20, 1, "tc", false).is_none());
+    }
+
+    #[test]
+    fn synthesized_catalog_has_the_real_ladder() {
+        let r = Registry::synthesize();
+        for t in 2..=17usize {
+            let n = 1usize << t;
+            let fwd = r.find_rfft1d(n, 1, "tc", false).expect("fwd rfft variant");
+            assert_eq!(fwd.input_shape, vec![4, n], "n={n}");
+            let inv = r.find_rfft1d(n, 1, "tc", true).expect("inv rfft variant");
+            assert_eq!(inv.input_shape, vec![4, n / 2 + 1], "n={n}");
+            assert_eq!(inv.seq_len(), n);
+        }
+        // the real ladder mirrors the complex one's upper bound
+        assert!(r.find_rfft1d(1 << 20, 1, "tc", false).is_none());
+        // and does not leak into complex lookups
+        assert_eq!(r.find_fft1d(4096, 4, "tc", false).unwrap().op, "fft1d");
     }
 
     #[test]

@@ -1,4 +1,10 @@
-//! Workload generators for the evaluation and the examples.
+//! Workload generators for the evaluation and the examples, plus the
+//! spectral-convolution workload ([`spectral`]) built on the real-FFT
+//! (R2C/C2R) path.
+
+pub mod spectral;
+
+pub use spectral::SpectralConv;
 
 use crate::hp::{C32, C64};
 use crate::util::rng::SplitMix64;

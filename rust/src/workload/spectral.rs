@@ -1,0 +1,197 @@
+//! Spectral convolution of real signals — the workload the R2C/C2R
+//! path exists for: FIR filtering and matched filtering computed as
+//! `irfft(rfft(x) * H)` with both transforms running through the
+//! half-precision real-FFT plans.
+//!
+//! The filter spectrum `H` is computed once at build time (one R2C
+//! pass over the zero-padded taps); each [`SpectralConv::convolve`]
+//! call then costs one R2C, one O(n) pointwise complex multiply on the
+//! host (f32, scaled by `1/n` so the unnormalized C2R lands at unit
+//! scale), and one C2R — against two full-size complex transforms for
+//! the promote-to-complex alternative.
+//!
+//! Convolution is CIRCULAR (period `n`), the native product of the
+//! DFT; callers wanting linear convolution zero-pad in the usual way.
+
+use crate::error::Result;
+use crate::plan::Plan;
+use crate::runtime::{PlanarBatch, Runtime};
+
+/// A prepared circular convolution of real length-`n` signals with a
+/// fixed real filter, evaluated in the frequency domain.
+pub struct SpectralConv {
+    n: usize,
+    fwd: Plan,
+    inv: Plan,
+    /// packed filter spectrum, bins 0..=n/2 (real plane)
+    h_re: Vec<f32>,
+    /// packed filter spectrum, bins 0..=n/2 (imaginary plane)
+    h_im: Vec<f32>,
+}
+
+impl SpectralConv {
+    /// Build the convolver for signal length `n` (power of two >= 4)
+    /// and the given FIR taps (`taps.len() <= n`; zero-padded).
+    pub fn new(rt: &Runtime, n: usize, taps: &[f32]) -> Result<SpectralConv> {
+        crate::ensure!(taps.len() <= n, "filter ({}) longer than signal ({n})", taps.len());
+        let fwd = Plan::rfft1d(&rt.registry, n, 1)?;
+        let inv = Plan::irfft1d(&rt.registry, n, 1)?;
+        let mut h = PlanarBatch::new(vec![1, n]);
+        h.re[..taps.len()].copy_from_slice(taps);
+        let spec = fwd.execute(rt, h)?;
+        Ok(SpectralConv { n, fwd, inv, h_re: spec.re, h_im: spec.im })
+    }
+
+    /// Build a matched filter for a real template: circular correlation
+    /// against the template, i.e. convolution with its time reversal.
+    /// The output of [`convolve`](Self::convolve) then peaks at the lag
+    /// where the template sits in the input.
+    pub fn matched_filter(rt: &Runtime, n: usize, template: &[f32]) -> Result<SpectralConv> {
+        crate::ensure!(template.len() <= n, "template longer than signal");
+        let mut taps = vec![0f32; n];
+        for (i, &t) in template.iter().enumerate() {
+            taps[(n - i) % n] = t;
+        }
+        Self::new(rt, n, &taps)
+    }
+
+    /// The signal length `n`.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Circularly convolve a batch of real rows (`[b, n]`, samples in
+    /// the `re` plane) with the prepared filter. Output has the same
+    /// shape with the result in the `re` plane at unit scale (the
+    /// `1/n` of the unnormalized inverse is folded into the pointwise
+    /// multiply, which also keeps the C2R input inside fp16 range).
+    pub fn convolve_batch(&self, rt: &Runtime, x: PlanarBatch) -> Result<PlanarBatch> {
+        crate::ensure!(
+            x.shape.len() == 2 && x.shape[1] == self.n,
+            "input shape {:?} != [b, {}]",
+            x.shape,
+            self.n
+        );
+        let b = x.shape[0];
+        let mut spec = self.fwd.execute(rt, x)?;
+        let bins = self.n / 2 + 1;
+        let scale = 1.0 / self.n as f32;
+        for row in 0..b {
+            let base = row * bins;
+            for k in 0..bins {
+                let (xr, xi) = (spec.re[base + k], spec.im[base + k]);
+                let (hr, hi) = (self.h_re[k], self.h_im[k]);
+                spec.re[base + k] = (xr * hr - xi * hi) * scale;
+                spec.im[base + k] = (xr * hi + xi * hr) * scale;
+            }
+        }
+        self.inv.execute(rt, spec)
+    }
+
+    /// Single-signal convenience over
+    /// [`convolve_batch`](Self::convolve_batch): returns the real
+    /// output samples.
+    pub fn convolve(&self, rt: &Runtime, x: &[f32]) -> Result<Vec<f32>> {
+        crate::ensure!(x.len() == self.n, "length {} != {}", x.len(), self.n);
+        let out = self.convolve_batch(rt, PlanarBatch::from_real(x, vec![1, self.n]))?;
+        Ok(out.re)
+    }
+}
+
+/// O(n^2) f64 circular convolution — the oracle the spectral path is
+/// validated against: `out[j] = sum_k x[(j - k) mod n] * h[k]`.
+pub fn circular_convolve_ref(x: &[f64], h: &[f64]) -> Vec<f64> {
+    let n = x.len();
+    assert_eq!(h.len(), n);
+    let mut out = vec![0.0; n];
+    for (j, o) in out.iter_mut().enumerate() {
+        let mut acc = 0.0;
+        for (k, &hv) in h.iter().enumerate() {
+            acc += x[(j + n - k) % n] * hv;
+        }
+        *o = acc;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hp::F16;
+    use crate::workload::random_signal;
+
+    fn rt() -> Runtime {
+        Runtime::load("/definitely/not/a/dir").unwrap()
+    }
+
+    #[test]
+    fn identity_filter_returns_the_signal() {
+        let rt = rt();
+        // h = delta: convolution is the identity
+        let conv = SpectralConv::new(&rt, 64, &[1.0]).unwrap();
+        let x: Vec<f32> = random_signal(64, 3).iter().map(|c| c.re).collect();
+        let y = conv.convolve(&rt, &x).unwrap();
+        for i in 0..64 {
+            let q = F16::from_f32(x[i]).to_f32();
+            assert!((y[i] - q).abs() < 0.01, "sample {i}: {} vs {q}", y[i]);
+        }
+    }
+
+    #[test]
+    fn matches_the_time_domain_oracle() {
+        let rt = rt();
+        let n = 128;
+        let taps = [0.25f32, 0.5, 0.25, -0.1];
+        let conv = SpectralConv::new(&rt, n, &taps).unwrap();
+        let x: Vec<f32> = random_signal(n, 17).iter().map(|c| c.re).collect();
+        let y = conv.convolve(&rt, &x).unwrap();
+        // oracle over the fp16-quantized operands
+        let xq: Vec<f64> = x.iter().map(|&v| F16::from_f32(v).to_f32() as f64).collect();
+        let mut hq = vec![0.0f64; n];
+        for (i, &t) in taps.iter().enumerate() {
+            hq[i] = F16::from_f32(t).to_f32() as f64;
+        }
+        let want = circular_convolve_ref(&xq, &hq);
+        let num: f64 = y
+            .iter()
+            .zip(&want)
+            .map(|(&a, &b)| (a as f64 - b) * (a as f64 - b))
+            .sum();
+        let den: f64 = want.iter().map(|&w| w * w).sum();
+        let rmse = (num / den.max(f64::MIN_POSITIVE)).sqrt();
+        assert!(rmse < 1e-2, "conv vs oracle rel-RMSE {rmse:.3e}");
+    }
+
+    #[test]
+    fn matched_filter_peaks_at_the_injected_lag() {
+        let rt = rt();
+        let n = 256;
+        let template: Vec<f32> = (0..32)
+            .map(|i| ((i as f32 * 0.9).sin() * (1.0 - i as f32 / 40.0)))
+            .collect();
+        let inject_at = 77usize;
+        let mut strain = vec![0f32; n];
+        for (i, &t) in template.iter().enumerate() {
+            strain[(inject_at + i) % n] += 0.8 * t;
+        }
+        // mild noise
+        for (i, s) in strain.iter_mut().enumerate() {
+            *s += 0.02 * (((i * 37 + 5) % 19) as f32 / 19.0 - 0.5);
+        }
+        let mf = SpectralConv::matched_filter(&rt, n, &template).unwrap();
+        let y = mf.convolve(&rt, &strain).unwrap();
+        let peak = y
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap();
+        assert_eq!(peak, inject_at, "matched filter missed the injection");
+    }
+
+    #[test]
+    fn rejects_oversized_filters() {
+        let rt = rt();
+        assert!(SpectralConv::new(&rt, 16, &[0.0; 17]).is_err());
+    }
+}

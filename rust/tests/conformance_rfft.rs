@@ -1,0 +1,268 @@
+//! Conformance of the real-input (R2C/C2R) path against the host f64
+//! oracles, for BOTH engines: the interpreter's `rfft1d` plans (every
+//! power-of-two size 2^4..=2^16 at request batches {1, 4, 32}) and the
+//! `large::RealFourStepPlan` four-step composition. Checked by relative
+//! RMSE over the Hermitian-packed bins, plus the packed-layout property
+//! tests (Hermitian symmetry, real endpoints), the irfft(rfft(x))
+//! round trip, and R2C-vs-C2C agreement on promoted real inputs.
+//!
+//! Oracle strategy matches `conformance_interpreter.rs`: sizes <= 512
+//! go straight to the O(N^2) DFT definition (`fft::refdft`); larger
+//! sizes use the f64 radix-2 FFT. The fp16 pipeline simulation of this
+//! path measures forward rel-RMSE 4e-4..6e-4 over 2^4..2^16, so the
+//! 5e-3 bound keeps ~10x margin while failing on structural errors.
+
+use std::sync::{Arc, OnceLock};
+
+use tcfft::error::relative_rmse;
+use tcfft::fft::{radix2, refdft};
+use tcfft::hp::{C32, C64};
+use tcfft::large::RealFourStepPlan;
+use tcfft::plan::Plan;
+use tcfft::runtime::{PlanarBatch, Registry, Runtime};
+use tcfft::workload::random_signal;
+
+const RMSE_TOL: f64 = 5e-3;
+
+fn runtime() -> &'static Runtime {
+    static RT: OnceLock<Runtime> = OnceLock::new();
+    RT.get_or_init(|| {
+        Runtime::with_backend(
+            Arc::new(Registry::synthesize()),
+            Box::new(tcfft::runtime::CpuInterpreter::new()),
+        )
+    })
+}
+
+fn widen(x: &[C32]) -> Vec<C64> {
+    x.iter().map(|c| C64::new(c.re as f64, c.im as f64)).collect()
+}
+
+/// Uniform [-1, 1) real rows (the re parts of the paper TestCase).
+fn real_rows(n: usize, batch: usize, seed: u64) -> Vec<f32> {
+    (0..batch)
+        .flat_map(|b| random_signal(n, seed + b as u64))
+        .map(|c| c.re)
+        .collect()
+}
+
+/// f64 oracle spectrum of one fp16-quantized real row.
+fn oracle_row(quantized: &[C64], inverse: bool) -> Vec<C64> {
+    if quantized.len() <= 512 {
+        refdft::dft(quantized, inverse)
+    } else {
+        radix2::fft_vec(quantized, inverse)
+    }
+}
+
+fn check_r2c(n: usize, batch: usize, seed: u64) {
+    let rt = runtime();
+    let plan = Plan::rfft1d(&rt.registry, n, batch).unwrap();
+    let input = PlanarBatch::from_real(&real_rows(n, batch, seed), vec![batch, n]);
+    let out = plan.execute(rt, input.clone()).unwrap();
+    let bins = n / 2 + 1;
+    assert_eq!(out.shape, vec![batch, bins]);
+
+    let q = widen(&input.quantize_f16().to_complex());
+    let got = widen(&out.to_complex());
+    for b in 0..batch {
+        let want = oracle_row(&q[b * n..(b + 1) * n], false);
+        let rmse = relative_rmse(&want[..bins], &got[b * bins..(b + 1) * bins]);
+        assert!(
+            rmse < RMSE_TOL,
+            "n={n} batch={batch} row={b}: packed rel-RMSE {rmse:.3e} over {RMSE_TOL:.1e}"
+        );
+    }
+}
+
+#[test]
+fn r2c_all_sizes_batch_1() {
+    for t in 4..=16usize {
+        check_r2c(1 << t, 1, 0x1A00 + t as u64);
+    }
+}
+
+#[test]
+fn r2c_all_sizes_batch_4() {
+    for t in 4..=16usize {
+        check_r2c(1 << t, 4, 0x2B00 + t as u64);
+    }
+}
+
+#[test]
+fn r2c_all_sizes_batch_32() {
+    for t in 4..=16usize {
+        check_r2c(1 << t, 32, 0x3C00 + t as u64);
+    }
+}
+
+#[test]
+fn packed_output_is_hermitian() {
+    // the packed bins must agree with the conjugate-symmetric full
+    // spectrum: X[n-k] = conj(X[k]) — checked against the C2C engine
+    // on the promoted input — and the endpoint bins are exactly real
+    let rt = runtime();
+    for n in [64usize, 1024, 8192] {
+        let bins = n / 2 + 1;
+        let sig = real_rows(n, 1, 0xD0 + n as u64);
+        let rplan = Plan::rfft1d(&rt.registry, n, 1).unwrap();
+        let packed = rplan
+            .execute(rt, PlanarBatch::from_real(&sig, vec![1, n]))
+            .unwrap();
+        assert_eq!(packed.im[0], 0.0, "n={n}: bin 0 must be exactly real");
+        assert_eq!(packed.im[bins - 1], 0.0, "n={n}: bin n/2 must be exactly real");
+
+        let cplan = Plan::fft1d(&rt.registry, n, 1).unwrap();
+        let full = cplan
+            .execute(rt, PlanarBatch::from_real(&sig, vec![1, n]))
+            .unwrap();
+        // the full spectrum of a real signal is Hermitian; its first
+        // half must match the packed output, its second half the
+        // conjugate mirror — both within the two engines' fp16 noise
+        let fullc = widen(&full.to_complex());
+        let packc = widen(&packed.to_complex());
+        let mirror: Vec<C64> = (0..bins).map(|k| fullc[(n - k) % n].conj()).collect();
+        let scale = fullc.iter().map(|c| c.abs()).fold(0.0, f64::max);
+        for k in 0..bins {
+            assert!(
+                (packc[k] - fullc[k]).abs() < 0.02 * scale,
+                "n={n} bin {k}: packed vs full"
+            );
+            assert!(
+                (packc[k] - mirror[k]).abs() < 0.02 * scale,
+                "n={n} bin {k}: packed vs conj mirror"
+            );
+        }
+    }
+}
+
+#[test]
+fn irfft_of_rfft_round_trips() {
+    // forward then unnormalized inverse, scaled back by 1/n, recovers
+    // the quantized signal. Sizes stay <= 2^14 for the same fp16
+    // dynamic-range reason as the complex round-trip test.
+    let rt = runtime();
+    for t in [4usize, 8, 12, 14] {
+        let n = 1 << t;
+        let fwd = Plan::rfft1d(&rt.registry, n, 4).unwrap();
+        let inv = Plan::irfft1d(&rt.registry, n, 4).unwrap();
+        let input = PlanarBatch::from_real(&real_rows(n, 4, 0x4E00 + t as u64), vec![4, n]);
+        let spec = fwd.execute(rt, input.clone()).unwrap();
+        let back = inv.execute(rt, spec).unwrap();
+        assert_eq!(back.shape, vec![4, n]);
+        let q = input.quantize_f16();
+        let mut num = 0.0f64;
+        let mut den = 0.0f64;
+        for i in 0..4 * n {
+            let d = back.re[i] as f64 / n as f64 - q.re[i] as f64;
+            num += d * d;
+            den += (q.re[i] as f64) * (q.re[i] as f64);
+            assert_eq!(back.im[i], 0.0, "C2R output must be real");
+        }
+        let rmse = (num / den).sqrt();
+        assert!(rmse < 2.0 * RMSE_TOL, "n={n}: round-trip rmse {rmse:.3e}");
+    }
+}
+
+#[test]
+fn r2c_agrees_with_c2c_on_promoted_input() {
+    // both paths compute the same transform of a real signal; they
+    // differ only in fp16 rounding order (n-point pipeline vs n/2
+    // pipeline + split), so mutual error is bounded by 2x the oracle
+    // tolerance each side satisfies
+    let rt = runtime();
+    for n in [256usize, 4096, 65536] {
+        let bins = n / 2 + 1;
+        let sig = real_rows(n, 4, 0x5F00 + n as u64);
+        let rplan = Plan::rfft1d(&rt.registry, n, 4).unwrap();
+        let cplan = Plan::fft1d(&rt.registry, n, 4).unwrap();
+        let packed = rplan
+            .execute(rt, PlanarBatch::from_real(&sig, vec![4, n]))
+            .unwrap();
+        let full = cplan
+            .execute(rt, PlanarBatch::from_real(&sig, vec![4, n]))
+            .unwrap();
+        let pc = widen(&packed.to_complex());
+        let fc = widen(&full.to_complex());
+        for b in 0..4 {
+            let half: Vec<C64> = fc[b * n..b * n + bins].to_vec();
+            let rmse = relative_rmse(&half, &pc[b * bins..(b + 1) * bins]);
+            assert!(rmse < 2.0 * RMSE_TOL, "n={n} row={b}: R2C vs C2C rmse {rmse:.3e}");
+        }
+    }
+}
+
+#[test]
+fn large_four_step_r2c_matches_the_oracle() {
+    // beyond the artifact catalog: the four-step real engine at 2^18
+    let rt = runtime();
+    let n = 1 << 18;
+    let bins = n / 2 + 1;
+    let plan = RealFourStepPlan::new(rt, n, false).unwrap();
+    let input = PlanarBatch::from_real(&real_rows(n, 2, 0x6A), vec![2, n]);
+    let out = plan.execute_batch(rt, input.clone()).unwrap();
+    assert_eq!(out.shape, vec![2, bins]);
+    let q = widen(&input.quantize_f16().to_complex());
+    let got = widen(&out.to_complex());
+    for b in 0..2 {
+        let want = radix2::fft_vec(&q[b * n..(b + 1) * n], false);
+        let rmse = relative_rmse(&want[..bins], &got[b * bins..(b + 1) * bins]);
+        assert!(rmse < RMSE_TOL, "row {b}: four-step R2C rmse {rmse:.3e}");
+    }
+}
+
+#[test]
+fn large_four_step_real_round_trips() {
+    // C2R at large n: pre-scale the spectrum by 1/n on the host (the
+    // unnormalized inverse would overflow fp16 at this size), then the
+    // inverse recovers the signal at unit scale
+    let rt = runtime();
+    let n = 1 << 18;
+    let fwd = RealFourStepPlan::new(rt, n, false).unwrap();
+    let inv = RealFourStepPlan::new(rt, n, true).unwrap();
+    let input = PlanarBatch::from_real(&real_rows(n, 1, 0x7B), vec![1, n]);
+    let mut spec = fwd.execute_batch(rt, input.clone()).unwrap();
+    for v in spec.re.iter_mut().chain(spec.im.iter_mut()) {
+        *v /= n as f32;
+    }
+    let back = inv.execute_batch(rt, spec).unwrap();
+    let q = input.quantize_f16();
+    let mut num = 0.0f64;
+    let mut den = 0.0f64;
+    for i in 0..n {
+        let d = back.re[i] as f64 - q.re[i] as f64;
+        num += d * d;
+        den += (q.re[i] as f64) * (q.re[i] as f64);
+    }
+    let rmse = (num / den).sqrt();
+    assert!(rmse < 2.0 * RMSE_TOL, "four-step real round-trip rmse {rmse:.3e}");
+}
+
+#[test]
+fn rfft_convolution_matches_the_time_domain_oracle() {
+    // the acceptance workload: rfft -> pointwise multiply -> irfft
+    // equals direct circular convolution of the quantized operands
+    use tcfft::hp::F16;
+    use tcfft::workload::spectral::{circular_convolve_ref, SpectralConv};
+    let rt = runtime();
+    let n = 1024;
+    let taps: Vec<f32> = (0..16).map(|i| 0.5 / (1.0 + i as f32)).collect();
+    let conv = SpectralConv::new(rt, n, &taps).unwrap();
+    let x = real_rows(n, 1, 0x8C);
+    let y = conv.convolve(rt, &x).unwrap();
+    let xq: Vec<f64> = x.iter().map(|&v| F16::from_f32(v).to_f32() as f64).collect();
+    let mut hq = vec![0.0f64; n];
+    for (i, &t) in taps.iter().enumerate() {
+        hq[i] = F16::from_f32(t).to_f32() as f64;
+    }
+    let want = circular_convolve_ref(&xq, &hq);
+    let mut num = 0.0f64;
+    let mut den = 0.0f64;
+    for i in 0..n {
+        let d = y[i] as f64 - want[i];
+        num += d * d;
+        den += want[i] * want[i];
+    }
+    let rmse = (num / den).sqrt();
+    assert!(rmse < 1e-2, "spectral conv vs oracle rmse {rmse:.3e}");
+}

@@ -160,6 +160,89 @@ fn concurrent_large_requests_batch_and_return_their_rows() {
 }
 
 #[test]
+fn rfft_requests_route_direct_and_return_packed_rows() {
+    let svc = service();
+    let n = 1024;
+    let bins = n / 2 + 1;
+    let sig: Vec<f32> = random_signal(n, 40).iter().map(|c| c.re).collect();
+    let t = svc
+        .submit(FftRequest {
+            op: Op::Rfft1d { n },
+            algo: "tc".into(),
+            direction: Direction::Forward,
+            input: PlanarBatch::from_real(&sig, vec![n]),
+        })
+        .unwrap();
+    let out = t.wait().unwrap();
+    assert_eq!(out.shape, vec![1, bins]);
+    let q = PlanarBatch::from_real(&sig, vec![1, n]).quantize_f16();
+    let want = mixed::fft_mixed_batch(&widen(&q.to_complex()), 1, n, false);
+    let rmse = relative_rmse(&want[..bins], &widen(&out.to_complex()));
+    assert!(rmse < 5e-3, "service R2C rel-RMSE {rmse:.3e}");
+    let snap = svc.metrics().snapshot();
+    assert_eq!(snap.get("rfft_requests").unwrap().as_i64(), Some(1));
+    assert_eq!(snap.get("large_requests").unwrap().as_i64(), Some(0));
+    svc.shutdown();
+}
+
+#[test]
+fn large_rfft_routes_through_the_real_four_step() {
+    // 2^18 has no direct rfft artifact: the service resolves a cached
+    // RealFourStepPlan and the packed result matches the radix2 oracle
+    let svc = service();
+    let n = 1 << 18;
+    let bins = n / 2 + 1;
+    let sig: Vec<f32> = random_signal(n, 41).iter().map(|c| c.re).collect();
+    let t = svc
+        .submit(FftRequest {
+            op: Op::Rfft1d { n },
+            algo: "tc".into(),
+            direction: Direction::Forward,
+            input: PlanarBatch::from_real(&sig, vec![n]),
+        })
+        .unwrap();
+    let out = t.wait().unwrap();
+    assert_eq!(out.shape, vec![1, bins]);
+    let q = PlanarBatch::from_real(&sig, vec![1, n]).quantize_f16();
+    let want = radix2::fft_vec(&widen(&q.to_complex()), false);
+    let rmse = relative_rmse(&want[..bins], &widen(&out.to_complex()));
+    assert!(rmse <= 5e-3, "service four-step R2C rel-RMSE {rmse:.3e}");
+    let snap = svc.metrics().snapshot();
+    assert_eq!(snap.get("rfft_requests").unwrap().as_i64(), Some(1));
+    assert_eq!(snap.get("large_requests").unwrap().as_i64(), Some(1));
+    svc.shutdown();
+}
+
+#[test]
+fn rfft_blocking_helper_round_trips() {
+    // R2C then C2R through the service helpers recovers the signal
+    // (unnormalized inverse: divide by n on the host)
+    let svc = service();
+    let n = 512;
+    let sig: Vec<f32> = (0..2)
+        .flat_map(|b| random_signal(n, 70 + b as u64))
+        .map(|c| c.re)
+        .collect();
+    let input = PlanarBatch::from_real(&sig, vec![2, n]);
+    let spec = svc
+        .rfft1d_blocking(input.clone(), "tc", Direction::Forward)
+        .unwrap();
+    assert_eq!(spec.shape, vec![2, n / 2 + 1]);
+    let back = svc.rfft1d_blocking(spec, "tc", Direction::Inverse).unwrap();
+    assert_eq!(back.shape, vec![2, n]);
+    let q = input.quantize_f16();
+    for i in 0..2 * n {
+        assert!(
+            (back.re[i] / n as f32 - q.re[i]).abs() < 0.01,
+            "sample {i}: {} vs {}",
+            back.re[i] / n as f32,
+            q.re[i]
+        );
+    }
+    svc.shutdown();
+}
+
+#[test]
 fn unroutable_requests_fail_fast() {
     let svc = service();
     // not a power of two: no plan and no four-step route
@@ -186,6 +269,14 @@ fn unroutable_requests_fail_fast() {
         input: PlanarBatch::new(vec![1 << 18]),
     });
     assert!(r.is_err(), "unknown algo must fail fast, not fall back");
+    // same rules on the real route
+    let r = svc.submit(FftRequest {
+        op: Op::Rfft1d { n: 1000 },
+        algo: "tc".into(),
+        direction: Direction::Forward,
+        input: PlanarBatch::new(vec![1000]),
+    });
+    assert!(r.is_err(), "non-power-of-two rfft must fail fast");
     svc.shutdown();
 }
 
@@ -278,6 +369,18 @@ fn tcp_server_round_trip() {
     let resp = tcfft::util::json::Json::parse(line.trim()).unwrap();
     assert_eq!(resp.get("ok").and_then(|b| b.as_bool()), Some(true), "{line}");
     assert_eq!(resp.get("re").unwrap().as_arr().unwrap().len(), 256);
+
+    // small rfft1d over the wire: 32 real samples -> 17 packed bins
+    // ("im" omitted — the R2C forward protocol doesn't require it)
+    let sig: Vec<f32> = random_signal(32, 6).iter().map(|c| c.re).collect();
+    let re: Vec<String> = sig.iter().map(|v| format!("{v:.4}")).collect();
+    let req = format!("{{\"op\":\"rfft1d\",\"n\":32,\"re\":[{}]}}\n", re.join(","));
+    conn.write_all(req.as_bytes()).unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    let resp = tcfft::util::json::Json::parse(line.trim()).unwrap();
+    assert_eq!(resp.get("ok").and_then(|b| b.as_bool()), Some(true), "{line}");
+    assert_eq!(resp.get("re").unwrap().as_arr().unwrap().len(), 17);
 
     // metrics op
     conn.write_all(b"{\"op\":\"metrics\"}\n").unwrap();
