@@ -11,6 +11,30 @@
 set -euo pipefail
 cd "$(dirname "$0")"
 
+# Cross-reference check over the anchor documents: every relative
+# markdown link target in ARCHITECTURE/BENCHMARKS/README/ROADMAP must
+# exist on disk (http/mailto links and pure #anchors are skipped).
+# Pure grep/sed so the gate needs no extra tooling.
+md_link_check() {
+  local failed=0
+  for f in README.md ARCHITECTURE.md BENCHMARKS.md ROADMAP.md; do
+    [ -f "$f" ] || { echo "dead-link check: $f itself is missing"; failed=1; continue; }
+    while IFS= read -r link; do
+      case "$link" in
+        http://*|https://*|mailto:*) continue ;;
+      esac
+      local target="${link%%#*}"
+      [ -n "$target" ] || continue # same-file #anchor
+      if [ ! -e "$target" ]; then
+        echo "dead link in $f: ($link) -> $target does not exist"
+        failed=1
+      fi
+    done < <(grep -oE '\]\([^)]+\)' "$f" | sed -E 's/^\]\(//; s/\)$//')
+  done
+  [ "$failed" -eq 0 ] || { echo "markdown dead-link check FAILED"; return 1; }
+  echo "markdown cross-references OK"
+}
+
 core() {
   echo "== cargo build --release =="
   cargo build --release
@@ -24,6 +48,9 @@ core() {
   echo "== cargo test --doc -q =="
   cargo test --doc -q
 
+  echo "== markdown dead-link check =="
+  md_link_check
+
   echo "== cargo fmt --check =="
   cargo fmt --check
 
@@ -32,7 +59,7 @@ core() {
 }
 
 bench_smoke() {
-  echo "== smoke bench: fig4_1d + fig7_batch + large_fourstep + rfft_1d (TCFFT_BENCH_SMOKE=1) =="
+  echo "== smoke bench: fig4_1d + fig7_batch + large_fourstep + rfft_1d + rfft_2d (TCFFT_BENCH_SMOKE=1) =="
   # start from a clean slate so bench-validate proves the benches
   # emitted fresh entries (update_bench_json merges into existing files)
   rm -f BENCH_interp.json
@@ -40,10 +67,12 @@ bench_smoke() {
   TCFFT_BENCH_SMOKE=1 cargo bench --bench fig7_batch
   TCFFT_BENCH_SMOKE=1 cargo bench --bench large_fourstep
   TCFFT_BENCH_SMOKE=1 cargo bench --bench rfft_1d
+  TCFFT_BENCH_SMOKE=1 cargo bench --bench rfft_2d
 
   echo "== bench-validate BENCH_interp.json =="
   # no --file: benches and validator share the cwd-independent default
-  # (<workspace-root>/BENCH_interp.json, from CARGO_MANIFEST_DIR)
+  # (<workspace-root>/BENCH_interp.json, from CARGO_MANIFEST_DIR);
+  # bench-validate requires the 2D entry rfft2d_tc_nx256x256_b8_fwd
   cargo run --release -- bench-validate
 }
 

@@ -27,6 +27,7 @@ fn main() -> tcfft::error::Result<()> {
         "fft1d_tc_n1024_b4_fwd",
         "fft1d_tc_n4096_b4_fwd",
         "fft2d_tc_nx256x256_b2_fwd",
+        "rfft2d_tc_nx128x128_b4_fwd",
     ] {
         rt.warm(key)?;
     }
@@ -37,11 +38,22 @@ fn main() -> tcfft::error::Result<()> {
             ..ServiceConfig::default()
         },
     ));
+    // a 3-filter bank for the convolve route: smoother, differencer,
+    // and a short low-pass FIR over 1024-sample signals
+    let fir: Vec<f32> = (0..16).map(|i| 0.4 / (1.0 + i as f32)).collect();
+    svc.register_filter_bank(
+        "demo",
+        1024,
+        &[vec![0.25f32, 0.5, 0.25], vec![1.0, -1.0], fir],
+        "tc",
+    )?;
 
-    // request mix: 50% 1D/1024, 20% 1D/4096, 10% R2C/4096, 20% 2D
+    // request mix: 40% 1D/1024, 20% 1D/4096, 10% R2C/4096,
+    // 10% R2C-2D/128x128, 15% 2D/256x256, 5% filter-bank convolve
     println!(
         "offered load: Poisson {rate:.0} req/s for {horizon:.0}s \
-         (mix: 50% 1D/1024, 20% 1D/4096, 10% R2C/4096, 20% 2D/256x256)"
+         (mix: 40% 1D/1024, 20% 1D/4096, 10% R2C/4096, \
+          10% rfft2d/128x128, 15% 2D/256x256, 5% convolve/1024x3)"
     );
     let t0 = Instant::now();
     let mut rng = SplitMix64::new(2026);
@@ -66,20 +78,43 @@ fn main() -> tcfft::error::Result<()> {
                     break;
                 }
                 let pick = crng.next_f64();
-                let (op, data_len) = if pick < 0.5 {
+                if pick >= 0.95 {
+                    // filter-bank convolve: one real signal, all three
+                    // registered filters back in one reply
+                    let sig: Vec<f32> = random_signal(1024, crng.next_u64())
+                        .iter()
+                        .map(|v| v.re)
+                        .collect();
+                    let t_req = Instant::now();
+                    let input = PlanarBatch::from_real(&sig, vec![1024]);
+                    match svc.submit_convolve("demo", input).and_then(|t| t.wait()) {
+                        Ok(_) => lat.add(t_req.elapsed().as_secs_f64()),
+                        Err(e) => {
+                            failed += 1;
+                            if failed <= 3 {
+                                eprintln!("client {c}: {e}");
+                            }
+                        }
+                    }
+                    continue;
+                }
+                let (op, data_len) = if pick < 0.4 {
                     (Op::Fft1d { n: 1024 }, 1024)
-                } else if pick < 0.7 {
+                } else if pick < 0.6 {
                     (Op::Fft1d { n: 4096 }, 4096)
-                } else if pick < 0.8 {
+                } else if pick < 0.7 {
                     // real-signal clients ride the packed R2C route
                     (Op::Rfft1d { n: 4096 }, 4096)
+                } else if pick < 0.8 {
+                    // real image fields ride the packed 2D route
+                    (Op::Rfft2d { nx: 128, ny: 128 }, 128 * 128)
                 } else {
                     (Op::Fft2d { nx: 256, ny: 256 }, 65536)
                 };
                 let sig = random_signal(data_len, crng.next_u64());
                 let shape = match op {
                     Op::Fft1d { n } | Op::Rfft1d { n } => vec![n],
-                    Op::Fft2d { nx, ny } => vec![nx, ny],
+                    Op::Fft2d { nx, ny } | Op::Rfft2d { nx, ny } => vec![nx, ny],
                 };
                 let req = FftRequest {
                     op,

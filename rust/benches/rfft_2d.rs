@@ -1,0 +1,142 @@
+//! Bench: the real-input 2D (R2C) path vs the same-shape complex
+//! (C2C) 2D transform on identical real fields — the acceptance
+//! evidence that real images get their ~2x back in two dimensions.
+//!
+//! The "before" series is what a real-image caller had to do without
+//! the 2D R2C path: promote to complex (im = 0) and run the full
+//! nx x ny C2C engine. The "after" series is the rfft2d path: row-wise
+//! half-size real transforms into packed Hermitian rows, then complex
+//! column transforms over the `ny/2 + 1` bins. Medians merge into
+//! `BENCH_interp.json` (entry `rfft2d_tc_nx256x256_b8_fwd`, fields:
+//! `reference_median_s` = C2C, `engine_median_s` = R2C) and
+//! `tcfft bench-validate` checks them in CI. See BENCHMARKS.md for the
+//! schema.
+//!
+//!     cargo bench --bench rfft_2d
+//!     TCFFT_BENCH_SMOKE=1 cargo bench --bench rfft_2d   # CI smoke
+
+use tcfft::bench_harness::{bench, bench_entry, header, smoke, update_bench_json};
+use tcfft::error::relative_rmse;
+use tcfft::hp::C64;
+use tcfft::runtime::{Backend, CpuInterpreter, PlanarBatch, VariantMeta};
+use tcfft::util::table::Table;
+use tcfft::workload::random_signal;
+
+const NX: usize = 256;
+const NY: usize = 256;
+const BATCH: usize = 8;
+/// Headline thread count recorded in BENCH_interp.json (matches the
+/// fig4_1d/fig7_batch/large_fourstep/rfft_1d entries).
+const ENGINE_THREADS: usize = 4;
+
+/// Bench-local variant descriptor (the synthesized catalog carries the
+/// b=4 serving tiers; the bench compares engines at the headline batch
+/// without perturbing the registry's tier selection — see rfft_1d).
+fn bench_meta(op: &str, key: &str) -> VariantMeta {
+    VariantMeta {
+        key: key.to_string(),
+        file: std::path::PathBuf::new(),
+        op: op.to_string(),
+        algo: "tc".to_string(),
+        n: 0,
+        nx: NX,
+        ny: NY,
+        batch: BATCH,
+        inverse: false,
+        // forward input is [b, nx, ny] real fields on both paths
+        input_shape: vec![BATCH, NX, NY],
+        stages: Vec::new(),
+        flops_per_seq: 0.0,
+        hbm_bytes_per_seq: 0.0,
+        radix2_equiv_flops: 0.0,
+    }
+}
+
+fn main() -> tcfft::error::Result<()> {
+    header("Real-input 2D R2C vs same-shape complex C2C");
+    let iters = if smoke() { 3 } else { 12 };
+
+    let c2c_meta = bench_meta("fft2d", "bench_fft2d_tc_nx256x256_b8_fwd");
+    let r2c_meta = bench_meta("rfft2d", "bench_rfft2d_tc_nx256x256_b8_fwd");
+
+    // the same real fields drive both paths: C2C sees them promoted to
+    // complex (im = 0), R2C consumes the re plane directly
+    let sig: Vec<f32> = (0..BATCH)
+        .flat_map(|b| random_signal(NX * NY, 0x2D + b as u64))
+        .map(|c| c.re)
+        .collect();
+    let input = PlanarBatch::from_real(&sig, vec![BATCH, NX, NY]);
+
+    let c2c = CpuInterpreter::with_threads(ENGINE_THREADS);
+    let r2c_serial = CpuInterpreter::with_threads(1);
+    let r2c = CpuInterpreter::with_threads(ENGINE_THREADS);
+    c2c.execute(&c2c_meta, input.clone())?; // warm all three
+    r2c_serial.execute(&r2c_meta, input.clone())?;
+    let (packed, _) = r2c.execute(&r2c_meta, input.clone())?;
+
+    // correctness gate before timing: packed field 0 vs the f64 oracle
+    let bins = NY / 2 + 1;
+    let q = input.slice_rows(0, 1).quantize_f16();
+    let qc: Vec<C64> = q
+        .to_complex()
+        .iter()
+        .map(|c| C64::new(c.re as f64, c.im as f64))
+        .collect();
+    let want_full = tcfft::fft::oracle2d(&qc, NX, NY, false);
+    let want: Vec<C64> = (0..NX)
+        .flat_map(|r| want_full[r * NY..r * NY + bins].to_vec())
+        .collect();
+    let got: Vec<C64> = packed.to_complex()[..NX * bins]
+        .iter()
+        .map(|c| C64::new(c.re as f64, c.im as f64))
+        .collect();
+    let err = relative_rmse(&want, &got);
+    tcfft::ensure!(err < 5e-3, "2D R2C rel-RMSE {err:.3e} over 5e-3");
+    println!("2D R2C vs radix2 oracle (field 0, packed bins): rel-RMSE {err:.3e}\n");
+
+    let r_c2c = bench(
+        &format!("C2C {NX}x{NY} b={BATCH} {ENGINE_THREADS}t"),
+        || {
+            c2c.execute(&c2c_meta, input.clone()).unwrap();
+        },
+        iters,
+    );
+    let r_ser = bench(
+        &format!("R2C {NX}x{NY} b={BATCH} 1t"),
+        || {
+            r2c_serial.execute(&r2c_meta, input.clone()).unwrap();
+        },
+        iters,
+    );
+    let r_par = bench(
+        &format!("R2C {NX}x{NY} b={BATCH} {ENGINE_THREADS}t"),
+        || {
+            r2c.execute(&r2c_meta, input.clone()).unwrap();
+        },
+        iters,
+    );
+    let (m_c2c, m_ser, m_par) =
+        (r_c2c.summary.median(), r_ser.summary.median(), r_par.summary.median());
+
+    let key = format!("rfft2d_tc_nx{NX}x{NY}_b{BATCH}_fwd");
+    let mut t = Table::new(&["key", "C2C ms", "R2C 1t ms", "R2C 4t ms", "R2C speedup"]);
+    t.row(vec![
+        key.clone(),
+        format!("{:.2}", m_c2c * 1e3),
+        format!("{:.2}", m_ser * 1e3),
+        format!("{:.2}", m_par * 1e3),
+        format!("{:.2}x", m_c2c / m_par),
+    ]);
+    let entries = vec![(
+        key,
+        bench_entry("rfft_2d", ENGINE_THREADS, r_par.summary.len(), m_c2c, m_ser, m_par),
+    )];
+    let path = update_bench_json(&entries)?;
+    println!(
+        "2D R2C vs same-shape C2C on real fields (recorded in {}):\n{}",
+        path.display(),
+        t.render()
+    );
+    println!("rfft_2d: OK");
+    Ok(())
+}

@@ -28,6 +28,10 @@ pub struct Metrics {
     pub large_requests: AtomicU64,
     /// real-input (`Op::Rfft1d`) requests, direct or four-step routed
     pub rfft_requests: AtomicU64,
+    /// real-input 2D (`Op::Rfft2d`) requests
+    pub rfft2d_requests: AtomicU64,
+    /// filter-bank convolution requests (the `submit_convolve` route)
+    pub conv_batch_requests: AtomicU64,
     lat: Mutex<Summary>,        // end-to-end request latency (s)
     queue_wait: Mutex<Summary>, // time spent waiting in the batcher (s)
     exec: Mutex<Summary>,       // device execution time per batch (s)
@@ -77,6 +81,11 @@ impl Metrics {
             ("rejected", Json::num(self.rejected.load(Ordering::Relaxed) as f64)),
             ("large_requests", Json::num(self.large_requests.load(Ordering::Relaxed) as f64)),
             ("rfft_requests", Json::num(self.rfft_requests.load(Ordering::Relaxed) as f64)),
+            ("rfft2d_requests", Json::num(self.rfft2d_requests.load(Ordering::Relaxed) as f64)),
+            (
+                "conv_batch_requests",
+                Json::num(self.conv_batch_requests.load(Ordering::Relaxed) as f64),
+            ),
             ("batches", Json::num(self.batches.load(Ordering::Relaxed) as f64)),
             ("padding_ratio", Json::num(self.padding_ratio())),
             ("latency_p50_ms", Json::num(lat.median() * 1e3)),

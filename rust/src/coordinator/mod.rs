@@ -5,7 +5,9 @@
 //! service: request router with a plan cache, per-plan dynamic batcher
 //! with deadline-or-full flushing and backpressure, an execution pool
 //! feeding the thread-safe PJRT engine (with an inline leader-execution
-//! fast path), metrics, and a TCP JSON front end.
+//! fast path), registered spectral filter banks served through the
+//! same queues ([`FftService::register_filter_bank`] /
+//! [`FftService::submit_convolve`]), metrics, and a TCP JSON front end.
 
 pub mod batcher;
 pub mod metrics;

@@ -9,6 +9,17 @@
 //!               n real samples in "re" ("im" may be omitted) and
 //!               returns the packed n/2+1 bins; "dir": "inv" takes the
 //!               packed bins and returns n real samples (scaled by n)
+//!             {"op": "rfft2d", "nx": 128, "ny": 128, ...}  real 2D:
+//!               fwd takes nx*ny real samples row-major ("im" may be
+//!               omitted) and returns the packed nx*(ny/2+1) bins;
+//!               "dir": "inv" takes the packed bins and returns nx*ny
+//!               real samples (scaled by nx*ny)
+//!             {"op": "register_bank", "bank": "lp", "n": 1024,
+//!              "filters": [[...], ...], "algo": "tc"} -> {"ok": true,
+//!               "k": ...}  register a spectral filter bank
+//!             {"op": "convolve", "bank": "lp", "re": [...]} -> all k
+//!               filter outputs for the n input samples, concatenated
+//!               row-major in "re" (+"k", "n" echoed)
 //!             {"op": "metrics"}        -> metrics snapshot
 //!             {"op": "ping"}           -> {"ok": true}
 //!   response: {"ok": true, "re": [...], "im": [...], "latency_ms": x}
@@ -130,7 +141,69 @@ pub fn handle_line(line: &str, svc: &FftService) -> Json {
             let snap = svc.metrics().snapshot();
             Json::obj(vec![("ok", Json::Bool(true)), ("metrics", snap)])
         }
-        "fft1d" | "fft2d" | "rfft1d" => {
+        "register_bank" => {
+            let name = match req.get("bank").and_then(|b| b.as_str()) {
+                Some(b) => b,
+                None => return err_json("missing 'bank' name"),
+            };
+            let n = match req.get("n").and_then(|v| v.as_usize()) {
+                Some(n) => n,
+                None => return err_json("missing 'n'"),
+            };
+            let algo = req.get("algo").and_then(|a| a.as_str()).unwrap_or("tc");
+            let rows = match req.get("filters").and_then(|f| f.as_arr()) {
+                Some(rows) if !rows.is_empty() => rows,
+                _ => return err_json("missing/invalid 'filters' array of tap arrays"),
+            };
+            let mut filters: Vec<Vec<f32>> = Vec::with_capacity(rows.len());
+            for row in rows {
+                let taps = row
+                    .as_arr()
+                    .map(|a| {
+                        a.iter()
+                            .map(|v| v.as_f64().map(|x| x as f32))
+                            .collect::<Option<Vec<f32>>>()
+                    })
+                    .unwrap_or(None);
+                match taps {
+                    Some(t) => filters.push(t),
+                    None => return err_json("missing/invalid 'filters' array of tap arrays"),
+                }
+            }
+            match svc.register_filter_bank(name, n, &filters, algo) {
+                Err(e) => err_json(e),
+                Ok(k) => Json::obj(vec![("ok", Json::Bool(true)), ("k", Json::num(k as f64))]),
+            }
+        }
+        "convolve" => {
+            let name = match req.get("bank").and_then(|b| b.as_str()) {
+                Some(b) => b,
+                None => return err_json("missing 'bank' name"),
+            };
+            let Some((n, k)) = svc.filter_bank_shape(name) else {
+                return err_json(format!("no filter bank named '{name}' is registered"));
+            };
+            let re = match parse_floats(&req, "re") {
+                Some(v) => v,
+                None => return err_json("missing/invalid 're' array"),
+            };
+            if re.len() != n {
+                return err_json(format!("'re' holds {} samples, bank expects {n}", re.len()));
+            }
+            let t0 = Instant::now();
+            let input = PlanarBatch::from_real(&re, vec![n]);
+            match svc.submit_convolve(name, input).and_then(|t| t.wait()) {
+                Err(e) => err_json(e),
+                Ok(out) => Json::obj(vec![
+                    ("ok", Json::Bool(true)),
+                    ("k", Json::num(k as f64)),
+                    ("n", Json::num(n as f64)),
+                    ("re", Json::Arr(out.re.iter().map(|&x| Json::num(x as f64)).collect())),
+                    ("latency_ms", Json::num(t0.elapsed().as_secs_f64() * 1e3)),
+                ]),
+            }
+        }
+        "fft1d" | "fft2d" | "rfft1d" | "rfft2d" => {
             let algo = req.get("algo").and_then(|a| a.as_str()).unwrap_or("tc");
             let dir = match req.get("dir").and_then(|d| d.as_str()).unwrap_or("fwd") {
                 "inv" => Direction::Inverse,
@@ -142,10 +215,12 @@ pub fn handle_line(line: &str, svc: &FftService) -> Json {
             };
             let im = match parse_floats(&req, "im") {
                 Some(v) => v,
-                // the R2C forward path ignores the imaginary plane by
+                // the R2C forward paths ignore the imaginary plane by
                 // contract, so real-signal clients may omit "im"
                 // entirely instead of serializing n literal zeros
-                None if op == "rfft1d" && dir == Direction::Forward => vec![0.0; re.len()],
+                None if (op == "rfft1d" || op == "rfft2d") && dir == Direction::Forward => {
+                    vec![0.0; re.len()]
+                }
                 None => return err_json("missing/invalid 'im' array"),
             };
             if re.len() != im.len() {
@@ -171,6 +246,14 @@ pub fn handle_line(line: &str, svc: &FftService) -> Json {
                     };
                     let len = if dir == Direction::Inverse { n / 2 + 1 } else { n };
                     (Op::Rfft1d { n }, vec![len])
+                }
+                "rfft2d" => {
+                    // real 2D needs the explicit shape: forward sends
+                    // nx*ny real samples, inverse the nx*(ny/2+1) bins
+                    let nx = req.get("nx").and_then(|v| v.as_usize()).unwrap_or(0);
+                    let ny = req.get("ny").and_then(|v| v.as_usize()).unwrap_or(0);
+                    let tail = if dir == Direction::Inverse { ny / 2 + 1 } else { ny };
+                    (Op::Rfft2d { nx, ny }, vec![nx, tail])
                 }
                 _ => {
                     let nx = req.get("nx").and_then(|v| v.as_usize()).unwrap_or(0);

@@ -28,6 +28,7 @@ use super::metrics::Metrics;
 use crate::large::{FourStepConfig, FourStepPlan, RealFourStepPlan};
 use crate::plan::{Direction, Plan};
 use crate::runtime::{PlanarBatch, Runtime};
+use crate::workload::SpectralConv;
 
 /// A logical FFT request (one sequence).
 #[derive(Clone, Debug)]
@@ -65,6 +66,18 @@ pub enum Op {
         /// real transform length (power of two)
         n: usize,
     },
+    /// Batched real-input 2D transform, row-major `nx` x `ny`: R2C
+    /// forward (`[nx, ny]` real fields in, packed `[nx, ny/2 + 1]`
+    /// Hermitian spectra out) or C2R inverse (the mirror image, scaled
+    /// by `nx * ny`), selected by [`FftRequest::direction`]. Served by
+    /// the catalog only — sizes without an `rfft2d` artifact fail fast
+    /// (there is no 2D four-step route).
+    Rfft2d {
+        /// first (strided) axis length
+        nx: usize,
+        /// second (contiguous, packed) axis length
+        ny: usize,
+    },
 }
 
 /// Service configuration.
@@ -95,6 +108,15 @@ pub struct ServiceConfig {
     /// twiddle memory — this bound keeps a client walking the size
     /// space from ballooning the cache.
     pub max_large_n: usize,
+    /// most filter banks that may be registered. Banks are cached and
+    /// never evicted (each holds k packed spectra, O(k*n) memory), and
+    /// `register_bank` is reachable over TCP — without this cap a
+    /// client minting fresh names could exhaust memory.
+    pub max_banks: usize,
+    /// most filters one bank may hold (bounds both the registration
+    /// cost — k R2C transforms run synchronously — and the resident
+    /// spectra).
+    pub max_bank_filters: usize,
 }
 
 impl Default for ServiceConfig {
@@ -112,6 +134,8 @@ impl Default for ServiceConfig {
             inline_exec: true,
             large_batch: 4,
             max_large_n: 1 << 24,
+            max_banks: 64,
+            max_bank_filters: 64,
         }
     }
 }
@@ -150,12 +174,15 @@ enum Route {
     Large { key: String, tail: Vec<usize> },
 }
 
-/// A cached large-size plan: the complex four-step engine, or its
-/// real-input (R2C/C2R) wrapper. Both execute whole `PlanarBatch`es.
+/// A cached batch-executing engine behind a queue key: the complex
+/// four-step engine, its real-input (R2C/C2R) wrapper, or a registered
+/// spectral filter bank. All execute whole `PlanarBatch`es, so
+/// `run_batch` dispatches them uniformly.
 #[derive(Clone)]
 enum LargePlan {
     Complex(Arc<FourStepPlan>),
     Real(Arc<RealFourStepPlan>),
+    Conv(Arc<SpectralConv>),
 }
 
 impl LargePlan {
@@ -163,6 +190,7 @@ impl LargePlan {
         match self {
             LargePlan::Complex(p) => p.execute_batch(rt, input),
             LargePlan::Real(p) => p.execute_batch(rt, input),
+            LargePlan::Conv(c) => c.convolve_batch(rt, input),
         }
     }
 }
@@ -369,6 +397,7 @@ impl FftService {
             Op::Fft1d { n } => format!("1d:{n}:{}:{}", req.algo, inverse),
             Op::Fft2d { nx, ny } => format!("2d:{nx}x{ny}:{}:{}", req.algo, inverse),
             Op::Rfft1d { n } => format!("r1d:{n}:{}:{}", req.algo, inverse),
+            Op::Rfft2d { nx, ny } => format!("r2d:{nx}x{ny}:{}:{}", req.algo, inverse),
         };
         {
             let plans = self.shared.plans.lock().unwrap();
@@ -386,6 +415,9 @@ impl FftService {
             Op::Rfft1d { n } => {
                 Plan::rfft1d_algo(&self.rt.registry, n, 1, &req.algo, req.direction)?
             }
+            Op::Rfft2d { nx, ny } => {
+                Plan::rfft2d_algo(&self.rt.registry, nx, ny, 1, &req.algo, req.direction)?
+            }
         };
         self.shared
             .plans
@@ -398,7 +430,9 @@ impl FftService {
     /// Resolve a request to its execution route: a direct artifact
     /// plan, or — for `Op::Fft1d` / `Op::Rfft1d` power-of-two sizes
     /// with no artifact — a cached four-step large-FFT plan (paper
-    /// Sec 3.1; the real wrapper for `Rfft1d`).
+    /// Sec 3.1; the real wrapper for `Rfft1d`). `Op::Fft2d` and
+    /// `Op::Rfft2d` have no large route and fail fast beyond the
+    /// catalog.
     fn route_for(&self, req: &FftRequest) -> Result<Route> {
         match self.plan_for(req) {
             Ok(plan) => Ok(Route::Direct {
@@ -476,10 +510,15 @@ impl FftService {
             return Err(TcFftError::ShuttingDown);
         }
         let route = self.route_for(&req)?;
-        let id = self.shared.next_id.fetch_add(1, Ordering::SeqCst);
         self.shared.metrics.requests.fetch_add(1, Ordering::Relaxed);
-        if matches!(req.op, Op::Rfft1d { .. }) {
-            self.shared.metrics.rfft_requests.fetch_add(1, Ordering::Relaxed);
+        match req.op {
+            Op::Rfft1d { .. } => {
+                self.shared.metrics.rfft_requests.fetch_add(1, Ordering::Relaxed);
+            }
+            Op::Rfft2d { .. } => {
+                self.shared.metrics.rfft2d_requests.fetch_add(1, Ordering::Relaxed);
+            }
+            _ => {}
         }
 
         // normalize input to [1, ...]
@@ -507,7 +546,21 @@ impl FftService {
                 (key.clone(), self.shared.cfg.large_batch.max(1), false)
             }
         };
+        self.enqueue(queue_key, capacity, pad, input)
+    }
 
+    /// Shared enqueue tail of [`submit`](Self::submit) and
+    /// [`submit_convolve`](Self::submit_convolve): queue the pending
+    /// request (backpressure-bounded) and run the leader-execution /
+    /// opportunistic-flush policy.
+    fn enqueue(
+        &self,
+        queue_key: String,
+        capacity: usize,
+        pad: bool,
+        input: PlanarBatch,
+    ) -> Result<Ticket> {
+        let id = self.shared.next_id.fetch_add(1, Ordering::SeqCst);
         let (tx, rx) = mpsc::channel();
         let pending = Pending { id, input, enqueued: Instant::now(), reply: tx };
         let mut full_queue = false;
@@ -544,9 +597,153 @@ impl FftService {
         Ok(Ticket { id, rx })
     }
 
-    /// Shared body of the blocking helpers: submit every row of `x` as
-    /// its own request (shape = the batch tail), wait in row order,
-    /// and concatenate the replies.
+    /// Register a named spectral filter bank for the batched convolve
+    /// route: `k` FIR filters over real length-`n` signals, prepared
+    /// once (one batched R2C over the taps) and applied to queued
+    /// signals by [`submit_convolve`](Self::submit_convolve).
+    ///
+    /// Registration is guarded like the four-step route, because banks
+    /// are cached, never evicted, and reachable over TCP: only known
+    /// algos (`tc` | `tc_split` | `r2`), `n` a power of two within
+    /// `ServiceConfig::max_large_n`, at most
+    /// `ServiceConfig::max_bank_filters` filters per bank and
+    /// `ServiceConfig::max_banks` banks total (each bank holds `k`
+    /// packed spectra and its registration runs `k` R2C transforms
+    /// synchronously), and a name that is not already taken
+    /// (re-registering under a live queue key would let
+    /// differently-shaped requests meet in one batch). Returns the
+    /// filter count `k`.
+    pub fn register_filter_bank<T: AsRef<[f32]>>(
+        &self,
+        name: &str,
+        n: usize,
+        filters: &[T],
+        algo: &str,
+    ) -> Result<usize> {
+        crate::ensure!(
+            !name.is_empty() && name.len() <= 64,
+            "bank name must be 1..=64 characters"
+        );
+        if !matches!(algo, "tc" | "tc_split" | "r2") {
+            return Err(TcFftError::NoArtifact(format!(
+                "filter bank '{name}': unknown algo '{algo}'"
+            )));
+        }
+        crate::ensure!(
+            n.is_power_of_two() && n >= 4 && n <= self.shared.cfg.max_large_n,
+            "filter bank '{name}': n={n} outside the served range"
+        );
+        crate::ensure!(
+            filters.len() <= self.shared.cfg.max_bank_filters,
+            "filter bank '{name}': {} filters over the {} cap",
+            filters.len(),
+            self.shared.cfg.max_bank_filters
+        );
+        let key = format!("conv:{name}");
+        {
+            let cache = self.shared.large_plans.lock().unwrap();
+            crate::ensure!(!cache.contains_key(&key), "filter bank '{name}' already registered");
+            let banks = cache.keys().filter(|b| b.starts_with("conv:")).count();
+            crate::ensure!(
+                banks < self.shared.cfg.max_banks,
+                "filter bank '{name}': bank cap ({}) reached",
+                self.shared.cfg.max_banks
+            );
+        }
+        // build outside the lock (k R2C transforms of the taps); the
+        // re-checks under the lock below catch racing registrations
+        let bank = Arc::new(SpectralConv::new_bank_algo(&self.rt, n, filters, algo)?);
+        let k = bank.k();
+        let mut cache = self.shared.large_plans.lock().unwrap();
+        crate::ensure!(!cache.contains_key(&key), "filter bank '{name}' already registered");
+        let banks = cache.keys().filter(|b| b.starts_with("conv:")).count();
+        crate::ensure!(
+            banks < self.shared.cfg.max_banks,
+            "filter bank '{name}': bank cap ({}) reached",
+            self.shared.cfg.max_banks
+        );
+        cache.insert(key, LargePlan::Conv(bank));
+        Ok(k)
+    }
+
+    /// The registered bank's (n, k), if any — the TCP front end uses
+    /// this to validate request shapes before queuing.
+    pub fn filter_bank_shape(&self, name: &str) -> Option<(usize, usize)> {
+        let cache = self.shared.large_plans.lock().unwrap();
+        match cache.get(&format!("conv:{name}")) {
+            Some(LargePlan::Conv(c)) => Some((c.n(), c.k())),
+            _ => None,
+        }
+    }
+
+    /// Submit one real signal (shape `[n]`) to a registered filter
+    /// bank. Replies carry shape `[1, k, n]` — every filter's output
+    /// for the signal, at unit scale. Requests ride the same bounded
+    /// unpadded queues as the four-step route (the bank's
+    /// `convolve_batch` takes any row count), so backpressure
+    /// (`QueueFull`) and batching behave identically.
+    pub fn submit_convolve(&self, bank: &str, input: PlanarBatch) -> Result<Ticket> {
+        if self.shared.shutting_down.load(Ordering::SeqCst) {
+            return Err(TcFftError::ShuttingDown);
+        }
+        let key = format!("conv:{bank}");
+        let n = {
+            let cache = self.shared.large_plans.lock().unwrap();
+            match cache.get(&key) {
+                Some(LargePlan::Conv(c)) => c.n(),
+                _ => {
+                    return Err(TcFftError::NoArtifact(format!(
+                        "no filter bank named '{bank}' is registered"
+                    )))
+                }
+            }
+        };
+        let mut shape = vec![1usize];
+        shape.extend_from_slice(&input.shape);
+        let input = PlanarBatch { re: input.re, im: input.im, shape };
+        crate::ensure!(
+            input.shape[1..] == [n],
+            "convolve request shape {:?} does not match bank signal length [{n}]",
+            &input.shape[1..]
+        );
+        // count only requests that actually reach a queue, mirroring
+        // submit()'s routed-then-counted ordering
+        self.shared.metrics.requests.fetch_add(1, Ordering::Relaxed);
+        self.shared.metrics.conv_batch_requests.fetch_add(1, Ordering::Relaxed);
+        self.enqueue(key, self.shared.cfg.large_batch.max(1), false, input)
+    }
+
+    /// Convenience: blocking filter-bank convolution of a (possibly
+    /// multi-row) real batch `[b, n]`; returns `[b, k, n]`.
+    pub fn convolve_blocking(&self, bank: &str, x: PlanarBatch) -> Result<PlanarBatch> {
+        crate::ensure!(x.shape.len() == 2, "expected [b, n]");
+        self.blocking_rows_with(x, |input| self.submit_convolve(bank, input))
+    }
+
+    /// Shared body of every blocking helper: submit each row of `x`
+    /// through `submit_row` (shape = the batch tail), wait in row
+    /// order, and concatenate the replies.
+    fn blocking_rows_with(
+        &self,
+        x: PlanarBatch,
+        submit_row: impl Fn(PlanarBatch) -> Result<Ticket>,
+    ) -> Result<PlanarBatch> {
+        let rows = x.shape[0];
+        let tail = x.shape[1..].to_vec();
+        let mut tickets = Vec::new();
+        for r in 0..rows {
+            let row = x.slice_rows(r, r + 1);
+            tickets.push(submit_row(PlanarBatch { re: row.re, im: row.im, shape: tail.clone() })?);
+        }
+        let outs = tickets
+            .into_iter()
+            .map(|t| t.wait())
+            .collect::<Result<Vec<_>>>()?;
+        Ok(PlanarBatch::concat(&outs))
+    }
+
+    /// [`blocking_rows_with`](Self::blocking_rows_with) for transform
+    /// requests: each row becomes its own [`FftRequest`].
     fn blocking_rows(
         &self,
         x: PlanarBatch,
@@ -554,24 +751,9 @@ impl FftService {
         algo: &str,
         dir: Direction,
     ) -> Result<PlanarBatch> {
-        let rows = x.shape[0];
-        let tail = x.shape[1..].to_vec();
-        let mut tickets = Vec::new();
-        for r in 0..rows {
-            let row = x.slice_rows(r, r + 1);
-            let req = FftRequest {
-                op,
-                algo: algo.to_string(),
-                direction: dir,
-                input: PlanarBatch { re: row.re, im: row.im, shape: tail.clone() },
-            };
-            tickets.push(self.submit(req)?);
-        }
-        let outs = tickets
-            .into_iter()
-            .map(|t| t.wait())
-            .collect::<Result<Vec<_>>>()?;
-        Ok(PlanarBatch::concat(&outs))
+        self.blocking_rows_with(x, |input| {
+            self.submit(FftRequest { op, algo: algo.to_string(), direction: dir, input })
+        })
     }
 
     /// Convenience: blocking 1D transform of a (possibly multi-row) batch.
@@ -597,8 +779,36 @@ impl FftService {
     ) -> Result<PlanarBatch> {
         crate::ensure!(x.shape.len() == 2, "expected [b, len]");
         let len = x.shape[1];
-        let n = if dir == Direction::Inverse { 2 * (len - 1) } else { len };
+        let n = if dir == Direction::Inverse {
+            crate::ensure!(len >= 2, "packed spectrum needs at least 2 bins, got {len}");
+            2 * (len - 1)
+        } else {
+            len
+        };
         self.blocking_rows(x, Op::Rfft1d { n }, algo, dir)
+    }
+
+    /// Convenience: blocking real 2D transform of a (possibly
+    /// multi-row) batch — R2C forward (`[b, nx, ny]` real fields in,
+    /// `[b, nx, ny/2 + 1]` packed spectra out) or C2R inverse (the
+    /// mirror image, output scaled by `nx * ny`). The inverse infers
+    /// `ny` from the packed tail: `ny = 2 * (bins - 1)`.
+    pub fn rfft2d_blocking(
+        &self,
+        x: PlanarBatch,
+        algo: &str,
+        dir: Direction,
+    ) -> Result<PlanarBatch> {
+        crate::ensure!(x.shape.len() == 3, "expected [b, nx, tail]");
+        let nx = x.shape[1];
+        let ny = if dir == Direction::Inverse {
+            let bins = x.shape[2];
+            crate::ensure!(bins >= 2, "packed spectrum needs at least 2 bins per row, got {bins}");
+            2 * (bins - 1)
+        } else {
+            x.shape[2]
+        };
+        self.blocking_rows(x, Op::Rfft2d { nx, ny }, algo, dir)
     }
 
     /// Same for 2D.

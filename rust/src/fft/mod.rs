@@ -10,3 +10,58 @@ pub mod mixed;
 pub mod radix2;
 pub mod refdft;
 pub mod twiddle;
+
+use crate::hp::C64;
+
+/// f64 2D DFT oracle over one row-major `[nx][ny]` field: transform
+/// the rows, then the columns. Each axis goes through the same rule
+/// the 1D conformance oracles use — the O(N^2) DFT definition
+/// ([`refdft`]) for short axes, the validated radix-2 FFT beyond that
+/// — so every 2D verifier (conformance suite, benches, CLI) shares
+/// one definition instead of re-deriving it.
+pub fn oracle2d(q: &[C64], nx: usize, ny: usize, inverse: bool) -> Vec<C64> {
+    let axis = |v: &[C64]| -> Vec<C64> {
+        if v.len() <= 64 {
+            refdft::dft(v, inverse)
+        } else {
+            radix2::fft_vec(v, inverse)
+        }
+    };
+    assert_eq!(q.len(), nx * ny, "oracle2d: field/shape mismatch");
+    let mut rows: Vec<C64> = Vec::with_capacity(nx * ny);
+    for r in 0..nx {
+        rows.extend(axis(&q[r * ny..(r + 1) * ny]));
+    }
+    let mut out = rows.clone();
+    for c in 0..ny {
+        let col: Vec<C64> = (0..nx).map(|r| rows[r * ny + c]).collect();
+        for (r, v) in axis(&col).into_iter().enumerate() {
+            out[r * ny + c] = v;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn oracle2d_matches_the_separable_definition() {
+        // a 2D DFT of a rank-1 field f[r][c] = a[r]*b[c] is the outer
+        // product of the two 1D spectra
+        let (nx, ny) = (4usize, 8usize);
+        let a: Vec<C64> = (0..nx).map(|r| C64::new(r as f64 * 0.3 - 0.5, 0.2)).collect();
+        let b: Vec<C64> = (0..ny).map(|c| C64::new(0.1 * c as f64, -0.4)).collect();
+        let field: Vec<C64> = (0..nx * ny).map(|i| a[i / ny] * b[i % ny]).collect();
+        let got = oracle2d(&field, nx, ny, false);
+        let fa = refdft::dft(&a, false);
+        let fb = refdft::dft(&b, false);
+        for r in 0..nx {
+            for c in 0..ny {
+                let want = fa[r] * fb[c];
+                assert!((got[r * ny + c] - want).abs() < 1e-9, "bin ({r},{c})");
+            }
+        }
+    }
+}

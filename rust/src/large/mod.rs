@@ -397,7 +397,12 @@ impl Node {
         }
     }
 
-    /// Transform `rows` length-`self.n()` sequences in place.
+    /// Transform `rows` length-`self.n()` sequences in place. With
+    /// `skip_final` a top-level Split stops after step 4, leaving each
+    /// sequence in the pre-read-out layout `M[j][k]` at `j*n2 + k`
+    /// (logical `X[k*n1 + j] = M[j][k]`) — the caller fuses the final
+    /// transpose into its own read-out pass. Children always run to
+    /// completion (their outputs feed steps 2/4 as finished FFTs).
     fn run(
         &self,
         rt: &Runtime,
@@ -405,6 +410,7 @@ impl Node {
         im: &mut [f32],
         rows: usize,
         ctx: &ExecCtx<'_>,
+        skip_final: bool,
     ) -> Result<()> {
         match self {
             Node::Leaf { key, cap, n, .. } => run_leaf(rt, key, *cap, *n, re, im, rows),
@@ -424,7 +430,7 @@ impl Node {
                     None,
                 );
                 // step 2: length-n1 FFTs over the rows*n2 columns
-                left.run(rt, &mut s_re[..len], &mut s_im[..len], rows * n2, ctx)?;
+                left.run(rt, &mut s_re[..len], &mut s_im[..len], rows * n2, ctx, false)?;
                 // step 3: transpose back, twiddle fused: [n2][n1] -> [n1][n2]
                 par_transpose(
                     ctx,
@@ -435,19 +441,21 @@ impl Node {
                     Some((tw_re.as_slice(), tw_im.as_slice())),
                 );
                 // step 4: length-n2 FFTs over the rows*n1 rows
-                right.run(rt, re, im, rows * n1, ctx)?;
-                // step 5: final transpose [n1][n2] -> [n2][n1] is the
-                // natural-order read-out X[k*n1 + j] = M[j][k]
-                par_transpose(
-                    ctx,
-                    (&*re, &*im),
-                    (&mut s_re[..len], &mut s_im[..len]),
-                    rows,
-                    (n2, n1),
-                    None,
-                );
-                re.copy_from_slice(&s_re[..len]);
-                im.copy_from_slice(&s_im[..len]);
+                right.run(rt, re, im, rows * n1, ctx, false)?;
+                if !skip_final {
+                    // step 5: final transpose [n1][n2] -> [n2][n1] is
+                    // the natural-order read-out X[k*n1 + j] = M[j][k]
+                    par_transpose(
+                        ctx,
+                        (&*re, &*im),
+                        (&mut s_re[..len], &mut s_im[..len]),
+                        rows,
+                        (n2, n1),
+                        None,
+                    );
+                    re.copy_from_slice(&s_re[..len]);
+                    im.copy_from_slice(&s_im[..len]);
+                }
                 ctx.give_scratch((s_re, s_im));
                 Ok(())
             }
@@ -591,6 +599,23 @@ impl FourStepPlan {
     /// Transform a whole batch of sequences (shape `[b, n]`) in one
     /// call — the batched entry point the service routes to.
     pub fn execute_batch(&self, rt: &Runtime, x: PlanarBatch) -> Result<PlanarBatch> {
+        self.run_batch(rt, x, false)
+    }
+
+    /// [`execute_batch`](Self::execute_batch) minus the final
+    /// read-out transpose: the top-level split stops after step 4, so
+    /// each output sequence arrives in the pre-read-out layout where
+    /// logical element `X[k*n1 + j]` sits at offset `j*n2 + k`
+    /// (`(n1, n2)` = [`factors`](Self::factors)). Callers that gather
+    /// anyway — the real-input wrapper's half-spectrum split — fuse
+    /// their pass into the read-out instead of paying an extra
+    /// transpose plus copy-back. The values are the exact f32s the
+    /// full `execute_batch` would have moved, just not yet permuted.
+    pub fn execute_batch_pretransposed(&self, rt: &Runtime, x: PlanarBatch) -> Result<PlanarBatch> {
+        self.run_batch(rt, x, true)
+    }
+
+    fn run_batch(&self, rt: &Runtime, x: PlanarBatch, skip_final: bool) -> Result<PlanarBatch> {
         crate::ensure!(
             x.shape.len() == 2 && x.shape[1] == self.n,
             "four-step input shape {:?} != [b, {}]",
@@ -610,7 +635,7 @@ impl FourStepPlan {
         let ctx = ExecCtx { pool, threads: self.threads, scratch: &self.scratch };
         let mut re = x.re;
         let mut im = x.im;
-        self.root.run(rt, &mut re, &mut im, b, &ctx)?;
+        self.root.run(rt, &mut re, &mut im, b, &ctx, skip_final)?;
         Ok(PlanarBatch { re, im, shape: vec![b, self.n] })
     }
 
@@ -636,6 +661,18 @@ impl FourStepPlan {
 /// image, scaled by `n` (unnormalized). The coordinator routes
 /// `Op::Rfft1d` sizes with no direct artifact to a cached plan from
 /// this type.
+///
+/// The half-spectrum pass is FUSED into the inner engine's final
+/// read-out transpose: the complex engine stops after step 4
+/// ([`FourStepPlan::execute_batch_pretransposed`]) and the split
+/// (forward) / unpack (inverse) gathers straight from the pre-read-out
+/// layout, skipping the engine's last transpose and its copy-back
+/// entirely. The gathered values are the exact f32s the separate
+/// post-pass formulation would have read, so the output is
+/// bit-identical to transposing first — enforced by
+/// `tests/conformance_rfft.rs`. Steady-state execution allocates only
+/// the returned output batch (the half-size staging pair and the inner
+/// engine's transpose scratch are retained across calls).
 pub struct RealFourStepPlan {
     n: usize,
     inverse: bool,
@@ -721,18 +758,22 @@ impl RealFourStepPlan {
         z_re.resize(b * m, 0.0);
         z_im.resize(b * m, 0.0);
         let mut z = PlanarBatch { re: z_re, im: z_im, shape: vec![b, m] };
+        // the inner engine stops after step 4; the split/unpack below
+        // gathers from the pre-read-out layout (n1, n2), fusing the
+        // half-spectrum pass into the skipped final transpose
+        let (n1, n2) = self.inner.factors();
         if self.inverse {
             self.real.merge_rows(&q.re, &q.im, &mut z.re, &mut z.im, b);
-            let z = self.inner.execute_batch(rt, z)?;
+            let z = self.inner.execute_batch_pretransposed(rt, z)?;
             let mut out = PlanarBatch::new(vec![b, self.n]);
-            self.real.unpack_rows(&z.re, &z.im, &mut out.re, b);
+            self.real.unpack_rows_fourstep(&z.re, &z.im, &mut out.re, b, (n1, n2));
             *self.scratch.lock().unwrap() = Some((z.re, z.im));
             Ok(out)
         } else {
             self.real.pack_rows(&q.re, &mut z.re, &mut z.im, b);
-            let z = self.inner.execute_batch(rt, z)?;
+            let z = self.inner.execute_batch_pretransposed(rt, z)?;
             let mut out = PlanarBatch::new(vec![b, m + 1]);
-            self.real.split_rows(&z.re, &z.im, &mut out.re, &mut out.im, b);
+            self.real.split_rows_fourstep(&z.re, &z.im, &mut out.re, &mut out.im, b, (n1, n2));
             *self.scratch.lock().unwrap() = Some((z.re, z.im));
             Ok(out)
         }

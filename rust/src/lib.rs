@@ -35,16 +35,19 @@
 //!   half-spectrum kernels ([`runtime::RealHalfSpectrum`]).
 //! * [`plan`] — cuFFT-style planner: size -> radix schedule ->
 //!   artifact, for `fft1d`/`fft2d` and the real-input
-//!   `rfft1d`/`irfft1d` pair.
+//!   `rfft1d`/`irfft1d` and `rfft2d`/`irfft2d` pairs.
 //! * [`coordinator`] — the FFT service: router, dynamic batcher,
 //!   worker scheduler, metrics, TCP server. Sizes with no direct
-//!   artifact route to a cached four-step plan (complex or real).
+//!   artifact route to a cached four-step plan (complex or real);
+//!   registered spectral filter banks serve batched convolution
+//!   through the same queues.
 //! * [`large`] — batched, multi-level four-step engine composing big
 //!   FFTs from small artifacts (tiled transposes, cached flat twiddle
 //!   tables, `TCFFT_THREADS` host parallelism), its real-input
-//!   wrapper, plus the kept per-sequence baseline.
+//!   wrapper (half-spectrum pass fused into the final read-out
+//!   transpose), plus the kept per-sequence baseline.
 //! * [`workload`] — evaluation signals and the spectral-convolution
-//!   workload (FIR/matched filtering over the real path).
+//!   filter banks (FIR/matched filtering over the real path).
 //! * [`fft`], [`hp`] — host-side oracles and numeric substrates.
 //! * [`memsim`], [`perfmodel`] — the GPU memory/roofline models that
 //!   regenerate the paper's Table 2 and Figs 4-7.

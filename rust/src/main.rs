@@ -68,14 +68,17 @@ USAGE: tcfft <SUBCOMMAND> [OPTIONS]
   info                          list loaded artifacts
   plan --n N | --nx X --ny Y    show the merging-kernel schedule
   run --n N [--batch B] [--algo tc|tc_split|r2] [--real]
+  run --real --nx X --ny Y [--batch B]
                                 execute on random input, verify vs f64
-                                oracle (--real: R2C half-spectrum path)
+                                oracle (--real: R2C half-spectrum path,
+                                1D by --n or 2D by --nx/--ny)
   serve [--addr 127.0.0.1:7070] TCP JSON FFT service
   bench --n N [--batch B]       quick wall-clock throughput
   bench-validate [--file BENCH_interp.json]
                                 validate the bench JSON emitted by
-                                fig4_1d/fig7_batch/large_fourstep/rfft_1d
-                                (run those first)
+                                fig4_1d/fig7_batch/large_fourstep/
+                                rfft_1d/rfft_2d (run those first; see
+                                BENCHMARKS.md for the schema)
   precision                     Table 4: relative error vs FFTW-f64 stand-in
   table2                        Table 2: memsim bandwidth vs continuous size
   figures                       Figs 4-7: modelled V100/A100 series
@@ -85,7 +88,7 @@ fn info() -> Result<()> {
     let rt = Runtime::load_default()?;
     let mut t = Table::new(&["key", "op", "algo", "shape", "batch", "dir", "stages"]);
     for v in rt.registry.variants.values() {
-        let shape = if v.op == "fft2d" {
+        let shape = if v.op == "fft2d" || v.op == "rfft2d" {
             format!("{}x{}", v.nx, v.ny)
         } else {
             format!("{}", v.n)
@@ -137,6 +140,11 @@ fn run_cmd(args: &Args) -> Result<()> {
     let algo = args.get_str("algo", "tc");
     let rt = Runtime::load_default()?;
     if args.has_flag("real") {
+        if let Some(nx) = args.get("nx") {
+            let nx: usize = nx.parse()?;
+            let ny = args.get_usize("ny", nx);
+            return run_real_2d_cmd(&rt, nx, ny, batch, algo);
+        }
         return run_real_cmd(&rt, n, batch, algo);
     }
     let plan = Plan::fft1d_algo(&rt.registry, n, batch, algo, Direction::Forward)?;
@@ -223,6 +231,54 @@ fn run_real_cmd(rt: &Runtime, n: usize, batch: usize, algo: &str) -> Result<()> 
     Ok(())
 }
 
+/// `run --real --nx X --ny Y`: R2C forward on random real fields,
+/// verified against the shared f64 2D oracle (`fft::oracle2d`) on the
+/// packed `[nx, ny/2 + 1]` Hermitian bins.
+fn run_real_2d_cmd(rt: &Runtime, nx: usize, ny: usize, batch: usize, algo: &str) -> Result<()> {
+    let plan = Plan::rfft2d_algo(&rt.registry, nx, ny, batch, algo, Direction::Forward)?;
+    println!("plan: {} (artifact batch {})", plan.meta.key, plan.meta.batch);
+    let sig: Vec<f32> = (0..batch)
+        .flat_map(|b| random_signal(nx * ny, 42 + b as u64))
+        .map(|c| c.re)
+        .collect();
+    let input = PlanarBatch::from_real(&sig, vec![batch, nx, ny]);
+    let t0 = std::time::Instant::now();
+    let out = plan.execute(rt, input.clone())?;
+    let dt = t0.elapsed().as_secs_f64();
+    let bins = ny / 2 + 1;
+    tcfft::ensure!(out.shape == vec![batch, nx, bins], "packed shape {:?}", out.shape);
+
+    let q = input.quantize_f16();
+    let xq: Vec<C64> = q
+        .to_complex()
+        .iter()
+        .map(|c| C64::new(c.re as f64, c.im as f64))
+        .collect();
+    let got: Vec<C64> = out
+        .to_complex()
+        .iter()
+        .map(|c| C64::new(c.re as f64, c.im as f64))
+        .collect();
+    let mut worst = 0.0f64;
+    for b in 0..batch {
+        let field = &xq[b * nx * ny..(b + 1) * nx * ny];
+        let want = tcfft::fft::oracle2d(field, nx, ny, false);
+        let want_packed: Vec<C64> = (0..nx)
+            .flat_map(|r| want[r * ny..r * ny + bins].to_vec())
+            .collect();
+        let e = relative_error(&want_packed, &got[b * nx * bins..(b + 1) * nx * bins]);
+        worst = worst.max(e);
+    }
+    println!(
+        "executed {batch}x{nx}x{ny}-point 2D R2C FFT in {:.2} ms  |  max mean-relative-error {:.3e}",
+        dt * 1e3,
+        worst
+    );
+    tcfft::ensure!(worst < 0.05, "relative error too high");
+    println!("OK");
+    Ok(())
+}
+
 fn serve_cmd(args: &Args) -> Result<()> {
     let addr = args.get_str("addr", "127.0.0.1:7070");
     let rt = Arc::new(Runtime::load_default()?);
@@ -258,10 +314,11 @@ fn bench_cmd(args: &Args) -> Result<()> {
 }
 
 /// CI smoke check: `BENCH_interp.json` (emitted by the fig4_1d,
-/// fig7_batch, large_fourstep and rfft_1d benches) parses, carries the
-/// expected schema, and holds the headline before/after entry, the
-/// batch-sweep anchor, the four-step large-FFT acceptance entry, and
-/// the R2C-vs-C2C acceptance entry.
+/// fig7_batch, large_fourstep, rfft_1d and rfft_2d benches) parses,
+/// carries the expected schema, and holds the headline before/after
+/// entry, the batch-sweep anchor, the four-step large-FFT acceptance
+/// entry, and the 1D and 2D R2C-vs-C2C acceptance entries. The schema
+/// and every entry key are documented in BENCHMARKS.md.
 fn bench_validate_cmd(args: &Args) -> Result<()> {
     use tcfft::bench_harness::BENCH_SCHEMA;
     use tcfft::util::json::Json;
@@ -270,6 +327,7 @@ fn bench_validate_cmd(args: &Args) -> Result<()> {
     const SWEEP_ANCHOR: &str = "fft1d_tc_n131072_b1_fwd";
     const FOURSTEP: &str = "fourstep_tc_n1048576_b8_fwd";
     const RFFT: &str = "rfft1d_tc_n4096_b32_fwd";
+    const RFFT2D: &str = "rfft2d_tc_nx256x256_b8_fwd";
 
     // same default resolution as the emitting benches (cwd-independent)
     let default_file = tcfft::bench_harness::bench_json_path().display().to_string();
@@ -319,6 +377,11 @@ fn bench_validate_cmd(args: &Args) -> Result<()> {
     let mr_r2c = pos(RFFT, "engine_median_s")?;
     pos(RFFT, "engine_serial_median_s")?;
     pos(RFFT, "speedup")?;
+    // the 2D real-input acceptance entry: 2D R2C vs same-shape C2C
+    let m2_c2c = pos(RFFT2D, "reference_median_s")?;
+    let m2_r2c = pos(RFFT2D, "engine_median_s")?;
+    pos(RFFT2D, "engine_serial_median_s")?;
+    pos(RFFT2D, "speedup")?;
 
     let mut t = Table::new(&["entry", "bench", "engine median ms", "speedup vs pre-PR"]);
     if let Json::Obj(m) = &entries {
@@ -356,6 +419,12 @@ fn bench_validate_cmd(args: &Args) -> Result<()> {
         mr_c2c * 1e3,
         mr_r2c * 1e3,
         mr_c2c / mr_r2c
+    );
+    println!(
+        "real-input 2D {RFFT2D}: C2C {:.2} ms -> R2C {:.2} ms ({:.2}x)",
+        m2_c2c * 1e3,
+        m2_r2c * 1e3,
+        m2_c2c / m2_r2c
     );
     println!("bench-validate: OK ({file})");
     Ok(())

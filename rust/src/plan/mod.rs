@@ -140,6 +140,66 @@ impl Plan {
         Ok(plan)
     }
 
+    /// Plan a batched R2C forward real 2D FFT of shape `nx` x `ny`
+    /// (row-major): consumes `[batch, nx, ny]` real fields (the `re`
+    /// plane; `im` is ignored) and produces the Hermitian-packed
+    /// `[batch, nx, ny/2 + 1]` half spectrum — row-wise real
+    /// transforms into packed rows, then complex column transforms
+    /// over the packed bins. Costs roughly half the same-shape complex
+    /// 2D transform.
+    ///
+    /// ```
+    /// use tcfft::plan::Plan;
+    /// use tcfft::runtime::{PlanarBatch, Runtime};
+    ///
+    /// let rt = Runtime::load_default().unwrap();
+    /// let plan = Plan::rfft2d(&rt.registry, 64, 64, 2).unwrap();
+    /// let img = PlanarBatch::from_real(&[0.0f32; 2 * 64 * 64], vec![2, 64, 64]);
+    /// let spectrum = plan.execute(&rt, img).unwrap();
+    /// assert_eq!(spectrum.shape, vec![2, 64, 33]); // bins 0..=ny/2 per row
+    /// ```
+    pub fn rfft2d(registry: &Arc<Registry>, nx: usize, ny: usize, batch: usize) -> Result<Plan> {
+        Self::rfft2d_algo(registry, nx, ny, batch, "tc", Direction::Forward)
+    }
+
+    /// Plan a batched C2R inverse real 2D FFT of shape `nx` x `ny`:
+    /// consumes the Hermitian-packed `[batch, nx, ny/2 + 1]` spectrum
+    /// and produces `[batch, nx, ny]` real fields scaled by `nx * ny`
+    /// (unnormalized, like every inverse in this crate).
+    pub fn irfft2d(registry: &Arc<Registry>, nx: usize, ny: usize, batch: usize) -> Result<Plan> {
+        Self::rfft2d_algo(registry, nx, ny, batch, "tc", Direction::Inverse)
+    }
+
+    /// [`rfft2d`](Self::rfft2d) / [`irfft2d`](Self::irfft2d) with an
+    /// explicit leaf algorithm and direction.
+    pub fn rfft2d_algo(
+        registry: &Arc<Registry>,
+        nx: usize,
+        ny: usize,
+        batch: usize,
+        algo: &str,
+        direction: Direction,
+    ) -> Result<Plan> {
+        if !nx.is_power_of_two() || !ny.is_power_of_two() || nx < 2 || ny < 4 {
+            crate::bail!(TcFftError::BadSize(nx.max(ny)));
+        }
+        let inverse = direction == Direction::Inverse;
+        let meta = registry
+            .find_rfft2d(nx, ny, batch, algo, inverse)
+            .ok_or_else(|| {
+                TcFftError::NoArtifact(format!("rfft2d {nx}x{ny} algo={algo} inverse={inverse}"))
+            })?
+            .clone();
+        let plan = Plan {
+            // the strided axis, as for fft2d (rows run at ny/2)
+            radices_1d: digitrev::radix_schedule(nx),
+            meta,
+            direction,
+        };
+        plan.validate_against_manifest()?;
+        Ok(plan)
+    }
+
     /// Plan a batched 2D FFT (tcfftPlan2D analogue). Row-major (nx, ny).
     pub fn fft2d(registry: &Arc<Registry>, nx: usize, ny: usize, batch: usize) -> Result<Plan> {
         Self::fft2d_algo(registry, nx, ny, batch, "tc", Direction::Forward)
@@ -196,9 +256,10 @@ impl Plan {
             }
             product = product.saturating_mul(st.radix);
         }
-        // rfft1d carries the half-size complex stages plus the radix-2
-        // real stage, so its product also reconstructs n
-        let want = if self.meta.op == "fft2d" {
+        // the real ops carry the half-size complex stages plus the
+        // radix-2 real stage, so their products also reconstruct the
+        // full transform size
+        let want = if self.meta.op == "fft2d" || self.meta.op == "rfft2d" {
             self.meta.nx * self.meta.ny
         } else {
             self.meta.n
@@ -297,6 +358,21 @@ mod tests {
         let inv = Plan::irfft1d(&r, 1024, 4).unwrap();
         assert_eq!(inv.meta.input_shape, vec![4, 513]);
         assert_eq!(inv.direction, Direction::Inverse);
+    }
+
+    #[test]
+    fn real_2d_plans_bind_packed_shapes() {
+        let r = Arc::new(Registry::synthesize());
+        let fwd = Plan::rfft2d(&r, 64, 128, 4).unwrap();
+        assert_eq!(fwd.meta.op, "rfft2d");
+        assert_eq!(fwd.meta.input_shape, vec![4, 64, 128]);
+        let inv = Plan::irfft2d(&r, 64, 128, 4).unwrap();
+        assert_eq!(inv.meta.input_shape, vec![4, 64, 65]);
+        assert_eq!(inv.direction, Direction::Inverse);
+        // bad shapes fail fast
+        assert!(Plan::rfft2d(&r, 100, 64, 1).is_err()); // not a power of two
+        assert!(Plan::rfft2d(&r, 64, 2, 1).is_err()); // rows too small to pack
+        assert!(Plan::rfft2d(&r, 512, 512, 1).is_err()); // beyond the ladder
     }
 
     #[test]

@@ -192,6 +192,33 @@ pub fn rfft_schedule(n: usize, lane: usize, inverse: bool) -> Vec<PlannedStage> 
     }
 }
 
+/// The real-input 2D schedule for an `nx` x `ny` transform: the
+/// row-wise real schedule of `ny` (half-size complex stages plus the
+/// half-spectrum pass, as in [`rfft_schedule`]) composed with the
+/// complex column schedule of `nx` striding over the packed
+/// `ny/2 + 1` Hermitian bins (`lane = ny/2 + 1`). Forward runs rows
+/// then columns; the inverse is the exact mirror (columns, then the
+/// `c2r_pre` merge, then the half-size rows). Stage radices multiply
+/// out to `nx * ny` either way, so manifest validation keeps working.
+pub fn rfft2d_schedule(nx: usize, ny: usize, inverse: bool) -> Vec<PlannedStage> {
+    assert!(
+        nx.is_power_of_two() && nx >= 2,
+        "real 2D nx={nx} must be a power of two >= 2"
+    );
+    let lane = ny / 2 + 1;
+    let rows = rfft_schedule(ny, 1, inverse);
+    let cols = kernel_schedule(nx, lane);
+    if inverse {
+        let mut out = cols;
+        out.extend(rows);
+        out
+    } else {
+        let mut out = rows;
+        out.extend(cols);
+        out
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -274,6 +301,29 @@ mod tests {
                     assert!(st.flops(span) > 0.0, "n={n} stage {st:?}");
                     assert!(st.vmem_bytes() <= VMEM_FUSE_BUDGET, "n={n} stage {st:?}");
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn rfft2d_schedule_orders_rows_and_columns() {
+        for (nx, ny) in [(8usize, 8usize), (64, 128), (256, 256)] {
+            let fwd = rfft2d_schedule(nx, ny, false);
+            let inv = rfft2d_schedule(nx, ny, true);
+            // forward: the real stage separates the contiguous row pass
+            // from the strided column pass; inverse mirrors it
+            let split_at = fwd.iter().position(|s| s.kernel == "r2c_post").unwrap();
+            assert!(fwd[..split_at].iter().all(|s| s.lane == 1), "{nx}x{ny}");
+            assert!(
+                fwd[split_at + 1..].iter().all(|s| s.lane == ny / 2 + 1),
+                "{nx}x{ny}"
+            );
+            let merge_at = inv.iter().position(|s| s.kernel == "c2r_pre").unwrap();
+            assert!(inv[..merge_at].iter().all(|s| s.lane == ny / 2 + 1), "{nx}x{ny}");
+            // radices reconstruct the full 2D size in both directions
+            for sts in [&fwd, &inv] {
+                let p: usize = sts.iter().map(|s| s.radix).product();
+                assert_eq!(p, nx * ny, "{nx}x{ny}");
             }
         }
     }

@@ -66,6 +66,15 @@
 //! transform costs roughly half its complex counterpart without
 //! changing the numeric model.
 //!
+//! `rfft2d` variants extend the same machinery to two dimensions:
+//! forward runs the 1D real path row-wise over all `batch * nx` rows
+//! (pack, half-size `ny/2` pipeline, split into packed
+//! `[b, nx, ny/2 + 1]` Hermitian rows) and then the complex `nx`-axis
+//! pipeline striding over the packed bins (`lane = ny/2 + 1`), exactly
+//! like the second pass of a complex 2D transform; the inverse is the
+//! mirror image (columns, merge, half-size rows, unpack), scaled by
+//! `nx * ny`.
+//!
 //! [`ReferenceInterpreter`] keeps the pre-PR row-at-a-time engine
 //! (per-row table reloads, per-call allocations, full-codec fp16
 //! rounding) as the numeric reference and the perf baseline recorded
@@ -530,9 +539,56 @@ fn run_rows(
     }
 }
 
+/// The real-transform 2D wrapper shared by both engines: forward runs
+/// the row-wise real path over all `b * nx` rows (pack, half-size
+/// pipeline, split into packed Hermitian rows) and then the complex
+/// `nx`-axis pass striding over the packed `ny/2 + 1` bins; inverse is
+/// the exact mirror (columns first, then merge/transform/unpack),
+/// scaled `nx * ny` by the unnormalized inverses. Every fp16 rounding
+/// point lives in [`RealHalfSpectrum`] and the supplied pipeline
+/// runners; this function only moves data. The half-size staging
+/// planes come from the caller (`CpuInterpreter` hands in its scratch
+/// arena); the returned output batch is a fresh allocation by design.
+fn run_real_2d(
+    real: &RealHalfSpectrum,
+    inverse: bool,
+    mut q: PlanarBatch,
+    nx: usize,
+    z: (&mut Vec<f32>, &mut Vec<f32>),
+    run_rows_half: impl FnOnce(&mut [f32], &mut [f32], usize),
+    run_cols: impl FnOnce(&mut [f32], &mut [f32], usize, usize),
+) -> PlanarBatch {
+    let (z_re, z_im) = z;
+    let b = q.shape[0];
+    let (ny, m) = (real.n(), real.m());
+    let rows = b * nx;
+    let len = rows * m;
+    if z_re.len() < len {
+        z_re.resize(len, 0.0);
+        z_im.resize(len, 0.0);
+    }
+    if inverse {
+        // undo the forward's last pass first: inverse nx-axis columns
+        // over the packed bins, then the row-wise C2R path
+        run_cols(&mut q.re, &mut q.im, b, m + 1);
+        real.merge_rows(&q.re, &q.im, &mut z_re[..len], &mut z_im[..len], rows);
+        run_rows_half(&mut z_re[..len], &mut z_im[..len], rows);
+        let mut out = PlanarBatch::new(vec![b, nx, ny]);
+        real.unpack_rows(&z_re[..len], &z_im[..len], &mut out.re, rows);
+        out
+    } else {
+        real.pack_rows(&q.re, &mut z_re[..len], &mut z_im[..len], rows);
+        run_rows_half(&mut z_re[..len], &mut z_im[..len], rows);
+        let mut out = PlanarBatch::new(vec![b, nx, m + 1]);
+        real.split_rows(&z_re[..len], &z_im[..len], &mut out.re, &mut out.im, rows);
+        run_cols(&mut out.re, &mut out.im, b, m + 1);
+        out
+    }
+}
+
 /// A fully built transform: one axis pass for 1D (over the half size
 /// for real transforms, with the half-spectrum pass attached), two
-/// for 2D.
+/// for 2D (the `rfft2d` row axis runs at the half size `ny/2`).
 struct Compiled {
     axes: Vec<AxisPipeline>,
     /// the fused half-spectrum split/merge pass (real transforms only)
@@ -548,6 +604,18 @@ impl Compiled {
             return Compiled {
                 axes: vec![AxisPipeline::build(m, &meta.algo, meta.inverse, fuse)],
                 real: Some(RealHalfSpectrum::new(meta.n)),
+            };
+        }
+        if meta.op == "rfft2d" {
+            // rows run the 1D real path at ny/2; the nx axis runs the
+            // ordinary complex pipeline over the packed bins
+            let m = meta.ny / 2;
+            return Compiled {
+                axes: vec![
+                    AxisPipeline::build(m, &meta.algo, meta.inverse, fuse),
+                    AxisPipeline::build(meta.nx, &meta.algo, meta.inverse, fuse),
+                ],
+                real: Some(RealHalfSpectrum::new(meta.ny)),
             };
         }
         let axes = if meta.op == "fft1d" {
@@ -698,11 +766,25 @@ impl Backend for CpuInterpreter {
             // the R2C side — the signal is real by contract). Staging
             // planes come from the arena; run_axis nests its own
             // scratch borrow, so the arena settles at two entries.
-            let out = self.with_scratch(|s| {
-                run_real(real, meta.inverse, &q, &mut s.z_re, &mut s.z_im, |re, im, rows| {
-                    self.run_axis(&compiled.axes[0], re, im, rows, 1);
+            let out = if meta.op == "rfft2d" {
+                self.with_scratch(|s| {
+                    run_real_2d(
+                        real,
+                        meta.inverse,
+                        q,
+                        meta.nx,
+                        (&mut s.z_re, &mut s.z_im),
+                        |re, im, rows| self.run_axis(&compiled.axes[0], re, im, rows, 1),
+                        |re, im, rows, lane| self.run_axis(&compiled.axes[1], re, im, rows, lane),
+                    )
                 })
-            });
+            } else {
+                self.with_scratch(|s| {
+                    run_real(real, meta.inverse, &q, &mut s.z_re, &mut s.z_im, |re, im, rows| {
+                        self.run_axis(&compiled.axes[0], re, im, rows, 1);
+                    })
+                })
+            };
             let exec_seconds = te.elapsed().as_secs_f64();
             return Ok((out, ExecStats { exec_seconds, marshal_seconds, compiled: fresh }));
         }
@@ -863,9 +945,21 @@ impl Backend for ReferenceInterpreter {
             // the reference engine allocates per call on purpose (the
             // honest pre-PR baseline), so its staging is local
             let (mut z_re, mut z_im) = (Vec::new(), Vec::new());
-            let out = run_real(real, meta.inverse, &q, &mut z_re, &mut z_im, |re, im, rows| {
-                reference_run_axis(&compiled.axes[0], re, im, rows, 1);
-            });
+            let out = if meta.op == "rfft2d" {
+                run_real_2d(
+                    real,
+                    meta.inverse,
+                    q,
+                    meta.nx,
+                    (&mut z_re, &mut z_im),
+                    |re, im, rows| reference_run_axis(&compiled.axes[0], re, im, rows, 1),
+                    |re, im, rows, lane| reference_run_axis(&compiled.axes[1], re, im, rows, lane),
+                )
+            } else {
+                run_real(real, meta.inverse, &q, &mut z_re, &mut z_im, |re, im, rows| {
+                    reference_run_axis(&compiled.axes[0], re, im, rows, 1);
+                })
+            };
             let exec_seconds = te.elapsed().as_secs_f64();
             return Ok((out, ExecStats { exec_seconds, marshal_seconds, compiled: fresh }));
         }
@@ -1090,6 +1184,94 @@ mod tests {
                 q.re[i]
             );
             assert_eq!(back.im[i], 0.0, "C2R output must be real");
+        }
+    }
+
+    #[test]
+    fn rfft2d_impulse_gives_flat_packed_spectrum() {
+        let reg = Registry::synthesize();
+        let meta = reg.get("rfft2d_tc_nx16x16_b4_fwd").unwrap();
+        let be = CpuInterpreter::new();
+        let mut x = PlanarBatch::new(vec![4, 16, 16]);
+        x.re[0] = 1.0; // real impulse at (0, 0) of field 0
+        let (y, _) = be.execute(meta, x).unwrap();
+        assert_eq!(y.shape, vec![4, 16, 9]);
+        for i in 0..16 * 9 {
+            assert!((y.re[i] - 1.0).abs() < 0.02, "bin {i}: {}", y.re[i]);
+            assert!(y.im[i].abs() < 0.02, "bin {i}: {}", y.im[i]);
+        }
+        // remaining fields were zero and stay zero
+        assert!(y.re[16 * 9..].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn rfft2d_matches_the_2d_dft_definition() {
+        let reg = Registry::synthesize();
+        let be = CpuInterpreter::new();
+        let meta = reg.get("rfft2d_tc_nx16x16_b4_fwd").unwrap();
+        let sig: Vec<f32> = random_signal(16 * 16, 23).iter().map(|c| c.re).collect();
+        let input = PlanarBatch::from_real(&sig, vec![1, 16, 16]).pad_batch(4);
+        let (out, _) = be.execute(meta, input.clone()).unwrap();
+        let q = input.quantize_f16();
+        let want = crate::fft::oracle2d(&widen(&q.to_complex()[..256]), 16, 16, false);
+        let got = widen(&out.to_complex()[..16 * 9]);
+        for r in 0..16 {
+            for c in 0..9 {
+                let (w, g) = (want[r * 16 + c], got[r * 9 + c]);
+                assert!((w - g).abs() < 0.4, "bin ({r},{c}): {g:?} vs {w:?}");
+            }
+        }
+        let err = relative_rmse(
+            &(0..16).flat_map(|r| want[r * 16..r * 16 + 9].to_vec()).collect::<Vec<_>>(),
+            &got,
+        );
+        assert!(err < 5e-3, "rfft2d rmse {err}");
+    }
+
+    #[test]
+    fn irfft2d_of_rfft2d_recovers_the_field() {
+        let reg = Registry::synthesize();
+        let be = CpuInterpreter::new();
+        let fwd = reg.get("rfft2d_tc_nx32x32_b4_fwd").unwrap();
+        let inv = reg.get("rfft2d_tc_nx32x32_b4_inv").unwrap();
+        let sig: Vec<f32> = random_signal(4 * 32 * 32, 31).iter().map(|c| c.re).collect();
+        let input = PlanarBatch::from_real(&sig, vec![4, 32, 32]);
+        let (spec, _) = be.execute(fwd, input.clone()).unwrap();
+        assert_eq!(spec.shape, vec![4, 32, 17]);
+        let (back, _) = be.execute(inv, spec).unwrap();
+        assert_eq!(back.shape, vec![4, 32, 32]);
+        let q = input.quantize_f16();
+        let scale = (32 * 32) as f32;
+        for i in 0..4 * 32 * 32 {
+            // unnormalized 2D inverse: back = nx * ny * x
+            assert!(
+                (back.re[i] / scale - q.re[i]).abs() < 0.02,
+                "sample {i}: {} vs {}",
+                back.re[i] / scale,
+                q.re[i]
+            );
+            assert_eq!(back.im[i], 0.0, "C2R output must be real");
+        }
+    }
+
+    #[test]
+    fn rfft2d_engine_tracks_reference_closely() {
+        let reg = Registry::synthesize();
+        for key in ["rfft2d_tc_nx32x32_b4_fwd", "rfft2d_tc_nx32x32_b4_inv"] {
+            let meta = reg.get(key).unwrap();
+            let tail: usize = meta.input_shape[1..].iter().product();
+            let x: Vec<f32> = (0..4 * tail)
+                .map(|i| ((i * 31 + 7) % 43) as f32 / 43.0 - 0.5)
+                .collect();
+            let mut input = PlanarBatch::new(meta.input_shape.clone());
+            input.re.copy_from_slice(&x);
+            if meta.inverse {
+                input.im.copy_from_slice(&x);
+            }
+            let (y_new, _) = CpuInterpreter::new().execute(meta, input.clone()).unwrap();
+            let (y_ref, _) = ReferenceInterpreter::new().execute(meta, input).unwrap();
+            let err = relative_rmse(&widen(&y_ref.to_complex()), &widen(&y_new.to_complex()));
+            assert!(err < 1e-3, "{key}: engine vs reference rmse {err}");
         }
     }
 

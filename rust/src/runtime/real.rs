@@ -110,10 +110,19 @@ impl RealHalfSpectrum {
         }
     }
 
-    /// Unpack `rows` complex rows (length `m`) back into real rows
-    /// (length `n`): `x[2j] = Re z[j]`, `x[2j+1] = Im z[j]`, written to
-    /// the `out_re` plane. Pure data movement — no rounding.
-    pub fn unpack_rows(&self, z_re: &[f32], z_im: &[f32], out_re: &mut [f32], rows: usize) {
+    /// The shared unpack body: `map(j)` is the in-row offset complex
+    /// sample `j` is read from (identity for the contiguous layout, the
+    /// transpose gather for the four-step pre-read-out layout). Pure
+    /// data movement either way — no rounding.
+    #[inline]
+    fn unpack_rows_mapped(
+        &self,
+        z_re: &[f32],
+        z_im: &[f32],
+        out_re: &mut [f32],
+        rows: usize,
+        map: impl Fn(usize) -> usize,
+    ) {
         let (n, m) = (2 * self.m, self.m);
         assert_eq!(z_re.len(), rows * m, "unpack: source/shape mismatch");
         assert_eq!(out_re.len(), rows * n, "unpack: dest/shape mismatch");
@@ -121,8 +130,77 @@ impl RealHalfSpectrum {
             let base = row * m;
             let dst = &mut out_re[row * n..(row + 1) * n];
             for j in 0..m {
-                dst[2 * j] = z_re[base + j];
-                dst[2 * j + 1] = z_im[base + j];
+                let s = base + map(j);
+                dst[2 * j] = z_re[s];
+                dst[2 * j + 1] = z_im[s];
+            }
+        }
+    }
+
+    /// Unpack `rows` complex rows (length `m`) back into real rows
+    /// (length `n`): `x[2j] = Re z[j]`, `x[2j + 1] = Im z[j]`, written
+    /// to the `out_re` plane. Pure data movement — no rounding.
+    pub fn unpack_rows(&self, z_re: &[f32], z_im: &[f32], out_re: &mut [f32], rows: usize) {
+        self.unpack_rows_mapped(z_re, z_im, out_re, rows, |j| j);
+    }
+
+    /// [`unpack_rows`](Self::unpack_rows) fused with the four-step
+    /// engine's final read-out transpose: sample `j = k*n1 + jj` of a
+    /// length-`m = n1*n2` time-domain sequence is gathered from in-row
+    /// offset `jj*n2 + k` (see
+    /// [`split_rows_fourstep`](Self::split_rows_fourstep) for the
+    /// layout), so the inverse path also skips the engine's final
+    /// transpose and copy-back. Bit-identical to transposing first.
+    pub fn unpack_rows_fourstep(
+        &self,
+        z_re: &[f32],
+        z_im: &[f32],
+        out_re: &mut [f32],
+        rows: usize,
+        (n1, n2): (usize, usize),
+    ) {
+        assert_eq!(n1 * n2, self.m, "unpack: four-step factors must multiply to m");
+        self.unpack_rows_mapped(z_re, z_im, out_re, rows, move |j| (j % n1) * n2 + j / n1);
+    }
+
+    /// The shared split body: identical arithmetic for the contiguous
+    /// and the four-step-layout variants, differing only in where bin
+    /// `i` of `Z` is READ from (`map(i)`, an in-row offset). Writes are
+    /// always to the contiguous packed `G` layout. Keeping one body
+    /// guarantees the fused four-step read-out is bit-identical to the
+    /// transpose-then-split formulation it replaces.
+    #[inline]
+    fn split_rows_mapped(
+        &self,
+        z_re: &[f32],
+        z_im: &[f32],
+        g_re: &mut [f32],
+        g_im: &mut [f32],
+        rows: usize,
+        map: impl Fn(usize) -> usize,
+    ) {
+        let m = self.m;
+        assert_eq!(z_re.len(), rows * m, "split: source/shape mismatch");
+        assert_eq!(g_re.len(), rows * (m + 1), "split: dest/shape mismatch");
+        for row in 0..rows {
+            let zb = row * m;
+            let gb = row * (m + 1);
+            for k in 0..=m / 2 {
+                // a = Z[k], b = Z[m-k] (Z[m] wraps to Z[0])
+                let ia = zb + map(k % m);
+                let ib = zb + map((m - k) % m);
+                let (ar, ai) = (z_re[ia], z_im[ia]);
+                let (br, bi) = (z_re[ib], z_im[ib]);
+                let (er, ei) = (0.5 * (ar + br), 0.5 * (ai - bi));
+                let (or_, oi) = (0.5 * (ai + bi), 0.5 * (br - ar));
+                let (wr, wi) = (self.w_re[k], self.w_im[k]);
+                let (tr, ti) = (wr * or_ - wi * oi, wr * oi + wi * or_);
+                g_re[gb + k] = rnd16(er + tr);
+                g_im[gb + k] = rnd16(ei + ti);
+                // k = m/2 writes its own (self-paired) bin twice with
+                // the identical value, so no guard is needed
+                g_re[gb + m - k] = rnd16(er - tr);
+                g_im[gb + m - k] = rnd16(ti - ei);
             }
         }
     }
@@ -140,28 +218,30 @@ impl RealHalfSpectrum {
         g_im: &mut [f32],
         rows: usize,
     ) {
-        let m = self.m;
-        assert_eq!(z_re.len(), rows * m, "split: source/shape mismatch");
-        assert_eq!(g_re.len(), rows * (m + 1), "split: dest/shape mismatch");
-        for row in 0..rows {
-            let zb = row * m;
-            let gb = row * (m + 1);
-            for k in 0..=m / 2 {
-                // a = Z[k], b = Z[m-k] (Z[m] wraps to Z[0])
-                let (ar, ai) = (z_re[zb + k % m], z_im[zb + k % m]);
-                let (br, bi) = (z_re[zb + (m - k) % m], z_im[zb + (m - k) % m]);
-                let (er, ei) = (0.5 * (ar + br), 0.5 * (ai - bi));
-                let (or_, oi) = (0.5 * (ai + bi), 0.5 * (br - ar));
-                let (wr, wi) = (self.w_re[k], self.w_im[k]);
-                let (tr, ti) = (wr * or_ - wi * oi, wr * oi + wi * or_);
-                g_re[gb + k] = rnd16(er + tr);
-                g_im[gb + k] = rnd16(ei + ti);
-                // k = m/2 writes its own (self-paired) bin twice with
-                // the identical value, so no guard is needed
-                g_re[gb + m - k] = rnd16(er - tr);
-                g_im[gb + m - k] = rnd16(ti - ei);
-            }
-        }
+        self.split_rows_mapped(z_re, z_im, g_re, g_im, rows, |i| i);
+    }
+
+    /// [`split_rows`](Self::split_rows) fused with the four-step
+    /// engine's final read-out transpose: `Z` arrives in the engine's
+    /// pre-read-out layout for top-level factors `(n1, n2)`, where
+    /// logical bin `i = k*n1 + j` of a length-`m = n1*n2` sequence
+    /// sits at in-row offset `j*n2 + k` (i.e. row-major `M[j][k]` with
+    /// `X[k*n1 + j] = M[j][k]`). The split gathers straight from that
+    /// layout, so the engine's final transpose pass and its copy-back
+    /// are skipped entirely. Same arithmetic, same fp16 rounding
+    /// points, bit-identical output to transposing first and then
+    /// calling `split_rows`.
+    pub fn split_rows_fourstep(
+        &self,
+        z_re: &[f32],
+        z_im: &[f32],
+        g_re: &mut [f32],
+        g_im: &mut [f32],
+        rows: usize,
+        (n1, n2): (usize, usize),
+    ) {
+        assert_eq!(n1 * n2, self.m, "split: four-step factors must multiply to m");
+        self.split_rows_mapped(z_re, z_im, g_re, g_im, rows, move |i| (i % n1) * n2 + i / n1);
     }
 
     /// Inverse merge: turn `rows` Hermitian-packed spectra `G` (length
@@ -301,5 +381,52 @@ mod tests {
     #[should_panic(expected = "power of two")]
     fn rejects_tiny_sizes() {
         RealHalfSpectrum::new(2);
+    }
+
+    /// Write a contiguous length-`m` row into the four-step
+    /// pre-read-out layout: logical bin `k*n1 + j` lands at `j*n2 + k`.
+    fn to_fourstep_layout(x: &[f32], n1: usize, n2: usize) -> Vec<f32> {
+        let m = n1 * n2;
+        assert_eq!(x.len(), m);
+        let mut out = vec![0f32; m];
+        for i in 0..m {
+            out[(i % n1) * n2 + i / n1] = x[i];
+        }
+        out
+    }
+
+    #[test]
+    fn fourstep_split_is_bitwise_identical_to_transpose_then_split() {
+        let n = 64;
+        let (m, n1, n2) = (n / 2, 8usize, 4usize);
+        let z_re: Vec<f32> = (0..m).map(|j| fp16v((j as f64 * 0.61).sin())).collect();
+        let z_im: Vec<f32> = (0..m).map(|j| fp16v((j as f64 * 1.37).cos())).collect();
+        let rs = RealHalfSpectrum::new(n);
+        let mut want_re = vec![0f32; m + 1];
+        let mut want_im = vec![0f32; m + 1];
+        rs.split_rows(&z_re, &z_im, &mut want_re, &mut want_im, 1);
+        let (t_re, t_im) = (to_fourstep_layout(&z_re, n1, n2), to_fourstep_layout(&z_im, n1, n2));
+        let mut got_re = vec![0f32; m + 1];
+        let mut got_im = vec![0f32; m + 1];
+        rs.split_rows_fourstep(&t_re, &t_im, &mut got_re, &mut got_im, 1, (n1, n2));
+        for k in 0..=m {
+            assert_eq!(want_re[k].to_bits(), got_re[k].to_bits(), "re[{k}]");
+            assert_eq!(want_im[k].to_bits(), got_im[k].to_bits(), "im[{k}]");
+        }
+    }
+
+    #[test]
+    fn fourstep_unpack_is_bitwise_identical_to_transpose_then_unpack() {
+        let n = 32;
+        let (m, n1, n2) = (n / 2, 4usize, 4usize);
+        let z_re: Vec<f32> = (0..m).map(|j| j as f32 * 0.125 - 1.0).collect();
+        let z_im: Vec<f32> = (0..m).map(|j| 2.0 - j as f32 * 0.25).collect();
+        let rs = RealHalfSpectrum::new(n);
+        let mut want = vec![0f32; n];
+        rs.unpack_rows(&z_re, &z_im, &mut want, 1);
+        let (t_re, t_im) = (to_fourstep_layout(&z_re, n1, n2), to_fourstep_layout(&z_im, n1, n2));
+        let mut got = vec![0f32; n];
+        rs.unpack_rows_fourstep(&t_re, &t_im, &mut got, 1, (n1, n2));
+        assert_eq!(want, got);
     }
 }

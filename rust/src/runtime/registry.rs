@@ -13,7 +13,8 @@ use std::path::{Path, PathBuf};
 
 use crate::error::{Result, TcFftError};
 use crate::plan::schedule::{
-    kernel_schedule, radix2_equivalent_flops, rfft_schedule, split_schedule, PlannedStage,
+    kernel_schedule, radix2_equivalent_flops, rfft2d_schedule, rfft_schedule, split_schedule,
+    PlannedStage,
 };
 use crate::util::json::Json;
 
@@ -50,9 +51,11 @@ pub struct VariantMeta {
 
 impl VariantMeta {
     /// Logical transform length per batch element (the real length `n`
-    /// for `rfft1d`, whose packed spectrum holds `n/2 + 1` bins).
+    /// for `rfft1d`, whose packed spectrum holds `n/2 + 1` bins, and
+    /// `nx * ny` for the 2D ops, where `rfft2d` packs `ny/2 + 1` bins
+    /// per row).
     pub fn seq_len(&self) -> usize {
-        if self.op == "fft2d" {
+        if self.op == "fft2d" || self.op == "rfft2d" {
             self.nx * self.ny
         } else {
             self.n
@@ -215,6 +218,17 @@ impl Registry {
             add(synth_rfft1d(&dir, "tc", n, 4, false));
             add(synth_rfft1d(&dir, "tc", n, 4, true));
         }
+        // real-input 2D ladder (square 8x8..256x256 plus the
+        // rectangular shapes the conformance suite exercises), fwd+inv
+        for t in 3..=8usize {
+            let n = 1usize << t;
+            add(synth_rfft2d(&dir, "tc", n, n, 4, false));
+            add(synth_rfft2d(&dir, "tc", n, n, 4, true));
+        }
+        for (nx, ny) in [(64usize, 128usize), (128, 64)] {
+            add(synth_rfft2d(&dir, "tc", nx, ny, 4, false));
+            add(synth_rfft2d(&dir, "tc", nx, ny, 4, true));
+        }
         // 2D shapes (Fig 5, Table 4)
         for (nx, ny) in [(128usize, 128usize), (256, 256), (256, 512), (512, 256), (512, 512)] {
             add(synth_fft2d(&dir, "tc", nx, ny, 2, false));
@@ -290,6 +304,22 @@ impl Registry {
     ) -> Option<&VariantMeta> {
         self.find_tier(batch, |v| {
             v.op == "fft1d" && v.n == n && v.algo == algo && v.inverse == inverse
+        })
+    }
+
+    /// Find a real-input 2D variant (R2C when `inverse` is false, C2R
+    /// when true): exact shape/algo/direction, same batch-tier
+    /// selection as [`find_fft1d`](Self::find_fft1d).
+    pub fn find_rfft2d(
+        &self,
+        nx: usize,
+        ny: usize,
+        batch: usize,
+        algo: &str,
+        inverse: bool,
+    ) -> Option<&VariantMeta> {
+        self.find_tier(batch, |v| {
+            v.op == "rfft2d" && v.nx == nx && v.ny == ny && v.algo == algo && v.inverse == inverse
         })
     }
 
@@ -433,6 +463,62 @@ fn synth_rfft1d(dir: &Path, algo: &str, n: usize, batch: usize, inverse: bool) -
     }
 }
 
+/// Real-input 2D variant: an `nx` x `ny` real transform served by
+/// row-wise `ny`-point real transforms (half-size complex stages plus
+/// the fused half-spectrum pass) followed by `nx`-point complex column
+/// transforms over the packed `ny/2 + 1` Hermitian bins. Forward (R2C)
+/// consumes `[batch, nx, ny]` real fields and emits the packed
+/// `[batch, nx, ny/2 + 1]` spectrum; inverse (C2R) is the mirror
+/// image, scaled by `nx * ny` (unnormalized).
+fn synth_rfft2d(
+    dir: &Path,
+    algo: &str,
+    nx: usize,
+    ny: usize,
+    batch: usize,
+    inverse: bool,
+) -> VariantMeta {
+    let d = if inverse { "inv" } else { "fwd" };
+    let key = format!("rfft2d_{algo}_nx{nx}x{ny}_b{batch}_{d}");
+    let m = ny / 2;
+    let stages: Vec<StageMeta> = rfft2d_schedule(nx, ny, inverse)
+        .iter()
+        .map(|s| {
+            // the half-spectrum pass spans the full row length ny; the
+            // other row stages live inside the half-size transform;
+            // column stages (lane > 1) span the nx axis
+            let span = if s.kernel == "r2c_post" || s.kernel == "c2r_pre" {
+                ny
+            } else if s.lane == 1 {
+                m
+            } else {
+                nx
+            };
+            stage_meta_from_planned(s, span)
+        })
+        .collect();
+    let flops_per_seq: f64 = stages.iter().map(|s| s.flops).sum();
+    let hbm_bytes_per_seq: f64 = stages.iter().map(|s| s.hbm_bytes).sum();
+    let input_shape = if inverse { vec![batch, nx, m + 1] } else { vec![batch, nx, ny] };
+    VariantMeta {
+        file: dir.join(format!("{key}.hlo.txt")),
+        key,
+        op: "rfft2d".to_string(),
+        algo: algo.to_string(),
+        n: 0,
+        nx,
+        ny,
+        batch,
+        inverse,
+        input_shape,
+        stages,
+        flops_per_seq,
+        hbm_bytes_per_seq,
+        // a real transform carries half the equivalent complex work
+        radix2_equiv_flops: radix2_equivalent_flops(nx * ny, batch) / 2.0,
+    }
+}
+
 fn synth_fft2d(
     dir: &Path,
     algo: &str,
@@ -573,6 +659,26 @@ mod tests {
         assert!(r.find_rfft1d(1 << 20, 1, "tc", false).is_none());
         // and does not leak into complex lookups
         assert_eq!(r.find_fft1d(4096, 4, "tc", false).unwrap().op, "fft1d");
+    }
+
+    #[test]
+    fn synthesized_catalog_has_the_real_2d_ladder() {
+        let r = Registry::synthesize();
+        for t in 3..=8usize {
+            let n = 1usize << t;
+            let fwd = r.find_rfft2d(n, n, 1, "tc", false).expect("fwd rfft2d variant");
+            assert_eq!(fwd.input_shape, vec![4, n, n], "{n}x{n}");
+            assert_eq!(fwd.seq_len(), n * n);
+            let inv = r.find_rfft2d(n, n, 1, "tc", true).expect("inv rfft2d variant");
+            assert_eq!(inv.input_shape, vec![4, n, n / 2 + 1], "{n}x{n}");
+        }
+        // the rectangular shapes are distinct variants
+        assert!(r.find_rfft2d(64, 128, 1, "tc", false).is_some());
+        assert!(r.find_rfft2d(128, 64, 1, "tc", false).is_some());
+        // no catalog entry beyond the ladder, and no leakage into the
+        // complex 2D lookups
+        assert!(r.find_rfft2d(512, 512, 1, "tc", false).is_none());
+        assert_eq!(r.find_fft2d(128, 128, 1, "tc", false).unwrap().op, "fft2d");
     }
 
     #[test]

@@ -3,12 +3,29 @@
 //! `irfft(rfft(x) * H)` with both transforms running through the
 //! half-precision real-FFT plans.
 //!
-//! The filter spectrum `H` is computed once at build time (one R2C
-//! pass over the zero-padded taps); each [`SpectralConv::convolve`]
-//! call then costs one R2C, one O(n) pointwise complex multiply on the
-//! host (f32, scaled by `1/n` so the unnormalized C2R lands at unit
-//! scale), and one C2R — against two full-size complex transforms for
-//! the promote-to-complex alternative.
+//! A [`SpectralConv`] is a **filter bank**: `k >= 1` filters whose
+//! packed spectra `H_f` are computed once at build time (one batched
+//! R2C pass over the zero-padded tap rows). Each
+//! [`convolve_batch`](SpectralConv::convolve_batch) call then applies
+//! every filter to every input signal in ONE planar round trip: one
+//! R2C over the `b` input rows, one O(b*k*n) pointwise complex
+//! multiply on the host, and one C2R over the `b*k` product rows —
+//! against `2*b*k` full-size complex transforms for the
+//! promote-to-complex alternative.
+//!
+//! # The 1/n normalization folding
+//!
+//! Every inverse in this crate is UNNORMALIZED (`irfft(rfft(x)) =
+//! n * x`, the cuFFT convention), so a naive spectral convolution
+//! would come back scaled by `n`. The `1/n` correction is folded into
+//! the pointwise multiply — each product bin is scaled by `1/n` before
+//! the C2R — which (a) lands the output at unit scale with zero extra
+//! passes and (b) keeps the C2R *input* inside fp16 range: the product
+//! spectrum of unit-scale operands grows like `n`, and fp16 overflows
+//! at 65504, so dividing after the inverse would already have clipped
+//! on the device for large `n`. The multiply itself runs in f32 on the
+//! host (it models the f32 epilogue of a fused device kernel, not an
+//! fp16 store).
 //!
 //! Convolution is CIRCULAR (period `n`), the native product of the
 //! DFT; callers wanting linear convolution zero-pad in the usual way.
@@ -17,29 +34,88 @@ use crate::error::Result;
 use crate::plan::Plan;
 use crate::runtime::{PlanarBatch, Runtime};
 
-/// A prepared circular convolution of real length-`n` signals with a
-/// fixed real filter, evaluated in the frequency domain.
+/// A prepared circular-convolution filter bank: `k` fixed real filters
+/// applied to real length-`n` signals in the frequency domain.
+///
+/// Built by [`new`](Self::new) (one filter), [`matched_filter`](Self::matched_filter)
+/// (one correlation filter), or [`new_bank`](Self::new_bank) (`k`
+/// filters sharing one R2C/C2R plan pair).
 pub struct SpectralConv {
     n: usize,
+    k: usize,
     fwd: Plan,
     inv: Plan,
-    /// packed filter spectrum, bins 0..=n/2 (real plane)
+    /// packed filter spectra, row-major `[k, n/2 + 1]` (real plane)
     h_re: Vec<f32>,
-    /// packed filter spectrum, bins 0..=n/2 (imaginary plane)
+    /// packed filter spectra, row-major `[k, n/2 + 1]` (imaginary plane)
     h_im: Vec<f32>,
 }
 
 impl SpectralConv {
-    /// Build the convolver for signal length `n` (power of two >= 4)
-    /// and the given FIR taps (`taps.len() <= n`; zero-padded).
+    /// Build a single-filter convolver for signal length `n` (power of
+    /// two >= 4) and the given FIR taps (`taps.len() <= n`;
+    /// zero-padded).
     pub fn new(rt: &Runtime, n: usize, taps: &[f32]) -> Result<SpectralConv> {
-        crate::ensure!(taps.len() <= n, "filter ({}) longer than signal ({n})", taps.len());
-        let fwd = Plan::rfft1d(&rt.registry, n, 1)?;
-        let inv = Plan::irfft1d(&rt.registry, n, 1)?;
-        let mut h = PlanarBatch::new(vec![1, n]);
-        h.re[..taps.len()].copy_from_slice(taps);
+        Self::new_bank(rt, n, &[taps])
+    }
+
+    /// Build a `k`-filter bank: every filter's packed spectrum is
+    /// computed in one batched R2C pass, and
+    /// [`convolve_batch`](Self::convolve_batch) applies all `k` to a
+    /// whole signal batch per call. Each tap row may be any length
+    /// `<= n` (zero-padded independently).
+    ///
+    /// ```
+    /// use tcfft::runtime::{PlanarBatch, Runtime};
+    /// use tcfft::workload::SpectralConv;
+    ///
+    /// let rt = Runtime::load_default().unwrap();
+    /// let bank = SpectralConv::new_bank(
+    ///     &rt,
+    ///     256,
+    ///     &[vec![0.25f32, 0.5, 0.25], vec![1.0, -1.0]], // smooth + edge
+    /// )
+    /// .unwrap();
+    /// let x = PlanarBatch::from_real(&[0.0f32; 2 * 256], vec![2, 256]);
+    /// let y = bank.convolve_batch(&rt, x).unwrap();
+    /// assert_eq!(y.shape, vec![2, 2, 256]); // [batch, filter, samples]
+    /// ```
+    pub fn new_bank<T: AsRef<[f32]>>(
+        rt: &Runtime,
+        n: usize,
+        filters: &[T],
+    ) -> Result<SpectralConv> {
+        Self::new_bank_algo(rt, n, filters, "tc")
+    }
+
+    /// [`new_bank`](Self::new_bank) with an explicit leaf algorithm
+    /// (`"tc"` | `"tc_split"` | `"r2"`) for both transform plans — the
+    /// constructor the service's guarded bank registration calls.
+    pub fn new_bank_algo<T: AsRef<[f32]>>(
+        rt: &Runtime,
+        n: usize,
+        filters: &[T],
+        algo: &str,
+    ) -> Result<SpectralConv> {
+        use crate::plan::Direction;
+        let k = filters.len();
+        crate::ensure!(k >= 1, "filter bank must hold at least one filter");
+        for (f, taps) in filters.iter().enumerate() {
+            crate::ensure!(
+                taps.as_ref().len() <= n,
+                "filter {f} ({}) longer than signal ({n})",
+                taps.as_ref().len()
+            );
+        }
+        let fwd = Plan::rfft1d_algo(&rt.registry, n, k, algo, Direction::Forward)?;
+        let inv = Plan::rfft1d_algo(&rt.registry, n, k, algo, Direction::Inverse)?;
+        let mut h = PlanarBatch::new(vec![k, n]);
+        for (f, taps) in filters.iter().enumerate() {
+            let taps = taps.as_ref();
+            h.re[f * n..f * n + taps.len()].copy_from_slice(taps);
+        }
         let spec = fwd.execute(rt, h)?;
-        Ok(SpectralConv { n, fwd, inv, h_re: spec.re, h_im: spec.im })
+        Ok(SpectralConv { n, k, fwd, inv, h_re: spec.re, h_im: spec.im })
     }
 
     /// Build a matched filter for a real template: circular correlation
@@ -60,11 +136,18 @@ impl SpectralConv {
         self.n
     }
 
+    /// The number of filters in the bank.
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
     /// Circularly convolve a batch of real rows (`[b, n]`, samples in
-    /// the `re` plane) with the prepared filter. Output has the same
-    /// shape with the result in the `re` plane at unit scale (the
-    /// `1/n` of the unnormalized inverse is folded into the pointwise
-    /// multiply, which also keeps the C2R input inside fp16 range).
+    /// the `re` plane) with every filter of the bank, in one planar
+    /// round trip: one R2C over the `b` rows, the pointwise product
+    /// against all `k` filter spectra (f32, `1/n` folded in — see the
+    /// module docs), one C2R over the `b*k` product rows. Output shape
+    /// `[b, k, n]`, results in the `re` plane at unit scale, ordered
+    /// `[signal][filter]`.
     pub fn convolve_batch(&self, rt: &Runtime, x: PlanarBatch) -> Result<PlanarBatch> {
         crate::ensure!(
             x.shape.len() == 2 && x.shape[1] == self.n,
@@ -73,26 +156,35 @@ impl SpectralConv {
             self.n
         );
         let b = x.shape[0];
-        let mut spec = self.fwd.execute(rt, x)?;
+        let spec = self.fwd.execute(rt, x)?;
         let bins = self.n / 2 + 1;
         let scale = 1.0 / self.n as f32;
+        // the [b*k, bins] product spectra: row (row*k + f) = X_row * H_f
+        let mut prod = PlanarBatch::new(vec![b * self.k, bins]);
         for row in 0..b {
-            let base = row * bins;
-            for k in 0..bins {
-                let (xr, xi) = (spec.re[base + k], spec.im[base + k]);
-                let (hr, hi) = (self.h_re[k], self.h_im[k]);
-                spec.re[base + k] = (xr * hr - xi * hi) * scale;
-                spec.im[base + k] = (xr * hi + xi * hr) * scale;
+            let sb = row * bins;
+            for f in 0..self.k {
+                let hb = f * bins;
+                let pb = (row * self.k + f) * bins;
+                for kk in 0..bins {
+                    let (xr, xi) = (spec.re[sb + kk], spec.im[sb + kk]);
+                    let (hr, hi) = (self.h_re[hb + kk], self.h_im[hb + kk]);
+                    prod.re[pb + kk] = (xr * hr - xi * hi) * scale;
+                    prod.im[pb + kk] = (xr * hi + xi * hr) * scale;
+                }
             }
         }
-        self.inv.execute(rt, spec)
+        let out = self.inv.execute(rt, prod)?;
+        Ok(PlanarBatch { re: out.re, im: out.im, shape: vec![b, self.k, self.n] })
     }
 
-    /// Single-signal convenience over
+    /// Single-signal, single-filter convenience over
     /// [`convolve_batch`](Self::convolve_batch): returns the real
-    /// output samples.
+    /// output samples. Errors on multi-filter banks — address those
+    /// through the batch API, whose output carries the filter axis.
     pub fn convolve(&self, rt: &Runtime, x: &[f32]) -> Result<Vec<f32>> {
         crate::ensure!(x.len() == self.n, "length {} != {}", x.len(), self.n);
+        crate::ensure!(self.k == 1, "convolve() is for single-filter banks (k = {})", self.k);
         let out = self.convolve_batch(rt, PlanarBatch::from_real(x, vec![1, self.n]))?;
         Ok(out.re)
     }
@@ -129,6 +221,7 @@ mod tests {
         let rt = rt();
         // h = delta: convolution is the identity
         let conv = SpectralConv::new(&rt, 64, &[1.0]).unwrap();
+        assert_eq!(conv.k(), 1);
         let x: Vec<f32> = random_signal(64, 3).iter().map(|c| c.re).collect();
         let y = conv.convolve(&rt, &x).unwrap();
         for i in 0..64 {
@@ -163,6 +256,79 @@ mod tests {
     }
 
     #[test]
+    fn bank_matches_per_filter_single_convolutions() {
+        // a k-filter bank over a b-signal batch must reproduce each
+        // (signal, filter) pair's single-filter result exactly — the
+        // bank batches the SAME plans, it does not change the math
+        let rt = rt();
+        let n = 128;
+        let filters: Vec<Vec<f32>> = vec![
+            vec![1.0],
+            vec![0.25, 0.5, 0.25],
+            (0..16).map(|i| 0.4 / (1.0 + i as f32)).collect(),
+        ];
+        let bank = SpectralConv::new_bank(&rt, n, &filters).unwrap();
+        assert_eq!(bank.k(), 3);
+        let x: Vec<f32> = (0..2)
+            .flat_map(|b| random_signal(n, 90 + b as u64))
+            .map(|c| c.re)
+            .collect();
+        let out = bank
+            .convolve_batch(&rt, PlanarBatch::from_real(&x, vec![2, n]))
+            .unwrap();
+        assert_eq!(out.shape, vec![2, 3, n]);
+        for (f, taps) in filters.iter().enumerate() {
+            let single = SpectralConv::new(&rt, n, taps).unwrap();
+            for row in 0..2 {
+                let want = single.convolve(&rt, &x[row * n..(row + 1) * n]).unwrap();
+                let got = &out.re[(row * 3 + f) * n..(row * 3 + f + 1) * n];
+                for i in 0..n {
+                    assert!(
+                        (got[i] - want[i]).abs() < 1e-3,
+                        "row {row} filter {f} sample {i}: {} vs {}",
+                        got[i],
+                        want[i]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn bank_filters_match_the_oracle_per_filter() {
+        // each filter of the bank against the O(n^2) time-domain
+        // oracle on the fp16-quantized operands
+        let rt = rt();
+        let n = 256;
+        let filters: Vec<Vec<f32>> = vec![
+            vec![0.5, 0.25, 0.125],
+            vec![1.0, -1.0],
+        ];
+        let bank = SpectralConv::new_bank(&rt, n, &filters).unwrap();
+        let x: Vec<f32> = random_signal(n, 44).iter().map(|c| c.re).collect();
+        let out = bank
+            .convolve_batch(&rt, PlanarBatch::from_real(&x, vec![1, n]))
+            .unwrap();
+        let xq: Vec<f64> = x.iter().map(|&v| F16::from_f32(v).to_f32() as f64).collect();
+        for (f, taps) in filters.iter().enumerate() {
+            let mut hq = vec![0.0f64; n];
+            for (i, &t) in taps.iter().enumerate() {
+                hq[i] = F16::from_f32(t).to_f32() as f64;
+            }
+            let want = circular_convolve_ref(&xq, &hq);
+            let got = &out.re[f * n..(f + 1) * n];
+            let num: f64 = got
+                .iter()
+                .zip(&want)
+                .map(|(&a, &b)| (a as f64 - b) * (a as f64 - b))
+                .sum();
+            let den: f64 = want.iter().map(|&w| w * w).sum();
+            let rmse = (num / den.max(f64::MIN_POSITIVE)).sqrt();
+            assert!(rmse < 1e-2, "filter {f} vs oracle rel-RMSE {rmse:.3e}");
+        }
+    }
+
+    #[test]
     fn matched_filter_peaks_at_the_injected_lag() {
         let rt = rt();
         let n = 256;
@@ -190,8 +356,12 @@ mod tests {
     }
 
     #[test]
-    fn rejects_oversized_filters() {
+    fn rejects_oversized_filters_and_empty_banks() {
         let rt = rt();
         assert!(SpectralConv::new(&rt, 16, &[0.0; 17]).is_err());
+        assert!(SpectralConv::new_bank::<Vec<f32>>(&rt, 16, &[]).is_err());
+        let bank = SpectralConv::new_bank(&rt, 16, &[vec![1.0], vec![0.5]]).unwrap();
+        let x = vec![0f32; 16];
+        assert!(bank.convolve(&rt, &x).is_err(), "convolve() must reject k > 1");
     }
 }

@@ -1,25 +1,31 @@
 //! Conformance of the real-input (R2C/C2R) path against the host f64
-//! oracles, for BOTH engines: the interpreter's `rfft1d` plans (every
-//! power-of-two size 2^4..=2^16 at request batches {1, 4, 32}) and the
-//! `large::RealFourStepPlan` four-step composition. Checked by relative
-//! RMSE over the Hermitian-packed bins, plus the packed-layout property
-//! tests (Hermitian symmetry, real endpoints), the irfft(rfft(x))
-//! round trip, and R2C-vs-C2C agreement on promoted real inputs.
+//! oracles, for BOTH engines: the interpreter's `rfft1d`/`rfft2d`
+//! plans (1D: every power-of-two size 2^4..=2^16; 2D: squares
+//! 8x8..256x256 plus rectangles — each at request batches {1, 4, 32})
+//! and the `large::RealFourStepPlan` four-step composition. Checked by
+//! relative RMSE over the Hermitian-packed bins, plus the
+//! packed-layout property tests (Hermitian symmetry, real endpoints,
+//! the 2D conjugate mirror against the C2C `fft2d` spectrum), the
+//! irfft(rfft(x)) / irfft2d(rfft2d(x)) round trips, R2C-vs-C2C
+//! agreement on promoted real inputs, and the bitwise equivalence of
+//! the fused four-step read-out with the separate post-pass
+//! formulation it replaced.
 //!
 //! Oracle strategy matches `conformance_interpreter.rs`: sizes <= 512
 //! go straight to the O(N^2) DFT definition (`fft::refdft`); larger
-//! sizes use the f64 radix-2 FFT. The fp16 pipeline simulation of this
-//! path measures forward rel-RMSE 4e-4..6e-4 over 2^4..2^16, so the
-//! 5e-3 bound keeps ~10x margin while failing on structural errors.
+//! sizes use the f64 radix-2 FFT (2D oracles apply the same rule per
+//! axis, rows then columns). The fp16 pipeline simulation of this path
+//! measures forward rel-RMSE 4e-4..6e-4 over 2^4..2^16, so the 5e-3
+//! bound keeps ~10x margin while failing on structural errors.
 
 use std::sync::{Arc, OnceLock};
 
 use tcfft::error::relative_rmse;
 use tcfft::fft::{radix2, refdft};
 use tcfft::hp::{C32, C64};
-use tcfft::large::RealFourStepPlan;
+use tcfft::large::{FourStepPlan, RealFourStepPlan};
 use tcfft::plan::Plan;
-use tcfft::runtime::{PlanarBatch, Registry, Runtime};
+use tcfft::runtime::{PlanarBatch, RealHalfSpectrum, Registry, Runtime};
 use tcfft::workload::random_signal;
 
 const RMSE_TOL: f64 = 5e-3;
@@ -93,6 +99,145 @@ fn r2c_all_sizes_batch_4() {
 fn r2c_all_sizes_batch_32() {
     for t in 4..=16usize {
         check_r2c(1 << t, 32, 0x3C00 + t as u64);
+    }
+}
+
+// ---------------------------------------------------------------------
+// 2D real transforms
+// ---------------------------------------------------------------------
+
+fn check_r2c2d(rt: &Runtime, nx: usize, ny: usize, batch: usize, seed: u64) {
+    let plan = Plan::rfft2d(&rt.registry, nx, ny, batch).unwrap();
+    let input = PlanarBatch::from_real(&real_rows(nx * ny, batch, seed), vec![batch, nx, ny]);
+    let out = plan.execute(rt, input.clone()).unwrap();
+    let bins = ny / 2 + 1;
+    assert_eq!(out.shape, vec![batch, nx, bins]);
+
+    let q = widen(&input.quantize_f16().to_complex());
+    let got = widen(&out.to_complex());
+    for b in 0..batch {
+        let want = tcfft::fft::oracle2d(&q[b * nx * ny..(b + 1) * nx * ny], nx, ny, false);
+        // the packed output holds bins 0..=ny/2 of every row
+        let want_packed: Vec<C64> = (0..nx)
+            .flat_map(|r| want[r * ny..r * ny + bins].to_vec())
+            .collect();
+        let rmse = relative_rmse(&want_packed, &got[b * nx * bins..(b + 1) * nx * bins]);
+        assert!(
+            rmse < RMSE_TOL,
+            "{nx}x{ny} batch={batch} field={b}: packed rel-RMSE {rmse:.3e} over {RMSE_TOL:.1e}"
+        );
+    }
+}
+
+#[test]
+fn r2c2d_all_sizes_batch_1() {
+    for t in 3..=8usize {
+        check_r2c2d(runtime(), 1 << t, 1 << t, 1, 0x7100 + t as u64);
+    }
+}
+
+#[test]
+fn r2c2d_all_sizes_batch_4() {
+    for t in 3..=8usize {
+        check_r2c2d(runtime(), 1 << t, 1 << t, 4, 0x7200 + t as u64);
+    }
+    // the rectangular shapes exercise nx != ny routing
+    check_r2c2d(runtime(), 64, 128, 4, 0x72F0);
+    check_r2c2d(runtime(), 128, 64, 4, 0x72F1);
+}
+
+#[test]
+fn r2c2d_all_sizes_batch_32() {
+    for t in 3..=8usize {
+        check_r2c2d(runtime(), 1 << t, 1 << t, 32, 0x7300 + t as u64);
+    }
+}
+
+#[test]
+fn r2c2d_matches_the_oracle_on_the_reference_engine_too() {
+    // the acceptance criterion names BOTH engines: the batch-major
+    // CpuInterpreter (every test above) and the kept pre-PR
+    // ReferenceInterpreter must each match the f64 oracle
+    let reference = Runtime::with_backend(
+        Arc::new(Registry::synthesize()),
+        Box::new(tcfft::runtime::ReferenceInterpreter::new()),
+    );
+    check_r2c2d(&reference, 16, 16, 4, 0x7400);
+    check_r2c2d(&reference, 64, 128, 2, 0x7401);
+}
+
+#[test]
+fn packed_2d_output_mirrors_the_c2c_spectrum() {
+    // the packed rfft2d bins must agree with the full fft2d spectrum
+    // of the promoted input on the stored half, and with its conjugate
+    // mirror X[(nx-r)%nx, (ny-c)%ny] = conj X[r, c] on the half the
+    // packing never materializes; the four corner bins (kx and ky both
+    // 0 or the Nyquist) are real up to fp16 noise
+    let rt = runtime();
+    let (nx, ny) = (128usize, 128usize);
+    let bins = ny / 2 + 1;
+    let sig = real_rows(nx * ny, 1, 0xE1);
+    let rplan = Plan::rfft2d(&rt.registry, nx, ny, 1).unwrap();
+    let packed = rplan
+        .execute(rt, PlanarBatch::from_real(&sig, vec![1, nx, ny]))
+        .unwrap();
+    let cplan = Plan::fft2d(&rt.registry, nx, ny, 1).unwrap();
+    let full = cplan
+        .execute(rt, PlanarBatch::from_real(&sig, vec![1, nx, ny]))
+        .unwrap();
+    let fullc = widen(&full.to_complex());
+    let packc = widen(&packed.to_complex());
+    let scale = fullc.iter().map(|c| c.abs()).fold(0.0, f64::max);
+    for r in 0..nx {
+        for c in 0..bins {
+            let p = packc[r * bins + c];
+            let direct = fullc[r * ny + c];
+            let mirror = fullc[((nx - r) % nx) * ny + (ny - c) % ny].conj();
+            assert!(
+                (p - direct).abs() < 0.02 * scale,
+                "bin ({r},{c}): packed vs full"
+            );
+            assert!(
+                (p - mirror).abs() < 0.02 * scale,
+                "bin ({r},{c}): packed vs conj mirror"
+            );
+        }
+    }
+    for (r, c) in [(0usize, 0usize), (nx / 2, 0), (0, ny / 2), (nx / 2, ny / 2)] {
+        assert!(
+            packc[r * bins + c].im.abs() < 1e-2 * scale,
+            "corner bin ({r},{c}) must be real up to fp16 noise"
+        );
+    }
+}
+
+#[test]
+fn irfft2d_of_rfft2d_round_trips() {
+    // forward then unnormalized inverse, scaled back by 1/(nx*ny),
+    // recovers the quantized field
+    let rt = runtime();
+    for (nx, ny) in [(16usize, 16usize), (64, 64), (64, 128)] {
+        let fwd = Plan::rfft2d(&rt.registry, nx, ny, 4).unwrap();
+        let inv = Plan::irfft2d(&rt.registry, nx, ny, 4).unwrap();
+        let input = PlanarBatch::from_real(
+            &real_rows(nx * ny, 4, 0xF000 + (nx * ny) as u64),
+            vec![4, nx, ny],
+        );
+        let spec = fwd.execute(rt, input.clone()).unwrap();
+        let back = inv.execute(rt, spec).unwrap();
+        assert_eq!(back.shape, vec![4, nx, ny]);
+        let q = input.quantize_f16();
+        let scale = (nx * ny) as f64;
+        let mut num = 0.0f64;
+        let mut den = 0.0f64;
+        for i in 0..4 * nx * ny {
+            let d = back.re[i] as f64 / scale - q.re[i] as f64;
+            num += d * d;
+            den += (q.re[i] as f64) * (q.re[i] as f64);
+            assert_eq!(back.im[i], 0.0, "C2R output must be real");
+        }
+        let rmse = (num / den).sqrt();
+        assert!(rmse < 2.0 * RMSE_TOL, "{nx}x{ny}: round-trip rmse {rmse:.3e}");
     }
 }
 
@@ -239,6 +384,72 @@ fn large_four_step_real_round_trips() {
 }
 
 #[test]
+fn fused_four_step_readout_is_bitwise_identical_to_the_post_pass_path() {
+    // the half-spectrum split is now fused into the inner engine's
+    // final read-out transpose; the PR-4 formulation — run the
+    // half-size complex engine to completion, then split as a separate
+    // post-pass — must produce the exact same bits
+    let rt = runtime();
+    let n = 1 << 12;
+    let m = n / 2;
+    let plan = RealFourStepPlan::new(rt, n, false).unwrap();
+    let input = PlanarBatch::from_real(&real_rows(n, 2, 0x9D), vec![2, n]);
+    let fused = plan.execute_batch(rt, input.clone()).unwrap();
+
+    // PR-4 post-pass path, reconstructed from the public parts
+    let rs = RealHalfSpectrum::new(n);
+    let mut q = input;
+    q.quantize_f16_mut();
+    let mut z = PlanarBatch::new(vec![2, m]);
+    rs.pack_rows(&q.re, &mut z.re, &mut z.im, 2);
+    let inner = FourStepPlan::new(rt, m, false).unwrap();
+    let z = inner.execute_batch(rt, z).unwrap();
+    let mut want = PlanarBatch::new(vec![2, m + 1]);
+    rs.split_rows(&z.re, &z.im, &mut want.re, &mut want.im, 2);
+
+    assert_eq!(fused.shape, want.shape);
+    for i in 0..fused.len() {
+        assert_eq!(fused.re[i].to_bits(), want.re[i].to_bits(), "re[{i}]");
+        assert_eq!(fused.im[i].to_bits(), want.im[i].to_bits(), "im[{i}]");
+    }
+}
+
+#[test]
+fn fused_four_step_inverse_readout_is_bitwise_identical_too() {
+    // same property for C2R: the unpack gather from the pre-read-out
+    // layout equals transpose-then-unpack, bit for bit
+    let rt = runtime();
+    let n = 1 << 12;
+    let m = n / 2;
+    let plan = RealFourStepPlan::new(rt, n, true).unwrap();
+    // a plausible packed spectrum, pre-scaled into fp16 range
+    let mut input = PlanarBatch::new(vec![1, m + 1]);
+    for k in 0..=m {
+        input.re[k] = ((k * 13 + 5) % 37) as f32 / 37.0 - 0.5;
+        input.im[k] = ((k * 7 + 2) % 29) as f32 / 29.0 - 0.5;
+    }
+    input.im[0] = 0.0;
+    input.im[m] = 0.0;
+    let fused = plan.execute_batch(rt, input.clone()).unwrap();
+
+    let rs = RealHalfSpectrum::new(n);
+    let mut q = input;
+    q.quantize_f16_mut();
+    let mut z = PlanarBatch::new(vec![1, m]);
+    rs.merge_rows(&q.re, &q.im, &mut z.re, &mut z.im, 1);
+    let inner = FourStepPlan::with_algo(rt, m, "tc", true).unwrap();
+    let z = inner.execute_batch(rt, z).unwrap();
+    let mut want = PlanarBatch::new(vec![1, n]);
+    rs.unpack_rows(&z.re, &z.im, &mut want.re, 1);
+
+    assert_eq!(fused.shape, want.shape);
+    for i in 0..fused.len() {
+        assert_eq!(fused.re[i].to_bits(), want.re[i].to_bits(), "re[{i}]");
+        assert_eq!(fused.im[i], 0.0, "C2R output must be real");
+    }
+}
+
+#[test]
 fn rfft_convolution_matches_the_time_domain_oracle() {
     // the acceptance workload: rfft -> pointwise multiply -> irfft
     // equals direct circular convolution of the quantized operands
@@ -265,4 +476,48 @@ fn rfft_convolution_matches_the_time_domain_oracle() {
     }
     let rmse = (num / den).sqrt();
     assert!(rmse < 1e-2, "spectral conv vs oracle rmse {rmse:.3e}");
+}
+
+#[test]
+fn filter_bank_matches_the_time_domain_oracle_per_filter() {
+    // the batched filter-bank API: every (signal, filter) pair of the
+    // [b, k, n] output must match its own O(n^2) circular convolution
+    use tcfft::hp::F16;
+    use tcfft::workload::spectral::{circular_convolve_ref, SpectralConv};
+    let rt = runtime();
+    let n = 512;
+    let filters: Vec<Vec<f32>> = vec![
+        vec![1.0],
+        vec![0.25, 0.5, 0.25],
+        (0..24).map(|i| 0.3 * (1.0 - i as f32 / 24.0)).collect(),
+    ];
+    let bank = SpectralConv::new_bank(rt, n, &filters).unwrap();
+    let x = real_rows(n, 2, 0xB7);
+    let out = bank
+        .convolve_batch(rt, PlanarBatch::from_real(&x, vec![2, n]))
+        .unwrap();
+    assert_eq!(out.shape, vec![2, 3, n]);
+    for row in 0..2 {
+        let xq: Vec<f64> = x[row * n..(row + 1) * n]
+            .iter()
+            .map(|&v| F16::from_f32(v).to_f32() as f64)
+            .collect();
+        for (f, taps) in filters.iter().enumerate() {
+            let mut hq = vec![0.0f64; n];
+            for (i, &t) in taps.iter().enumerate() {
+                hq[i] = F16::from_f32(t).to_f32() as f64;
+            }
+            let want = circular_convolve_ref(&xq, &hq);
+            let got = &out.re[(row * 3 + f) * n..(row * 3 + f + 1) * n];
+            let mut num = 0.0f64;
+            let mut den = 0.0f64;
+            for i in 0..n {
+                let d = got[i] as f64 - want[i];
+                num += d * d;
+                den += want[i] * want[i];
+            }
+            let rmse = (num / den).sqrt();
+            assert!(rmse < 1e-2, "row {row} filter {f} vs oracle rmse {rmse:.3e}");
+        }
+    }
 }

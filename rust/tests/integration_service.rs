@@ -214,6 +214,140 @@ fn large_rfft_routes_through_the_real_four_step() {
 }
 
 #[test]
+fn rfft2d_requests_route_direct_and_round_trip() {
+    // forward R2C 2D through submit(), inverse through the blocking
+    // helper; /(nx*ny) recovers the quantized field
+    let svc = service();
+    let (nx, ny) = (64usize, 64usize);
+    let bins = ny / 2 + 1;
+    let sig: Vec<f32> = random_signal(nx * ny, 45).iter().map(|c| c.re).collect();
+    let t = svc
+        .submit(FftRequest {
+            op: Op::Rfft2d { nx, ny },
+            algo: "tc".into(),
+            direction: Direction::Forward,
+            input: PlanarBatch::from_real(&sig, vec![nx, ny]),
+        })
+        .unwrap();
+    let spec = t.wait().unwrap();
+    assert_eq!(spec.shape, vec![1, nx, bins]);
+    let back = svc
+        .rfft2d_blocking(spec, "tc", Direction::Inverse)
+        .unwrap();
+    assert_eq!(back.shape, vec![1, nx, ny]);
+    let q = PlanarBatch::from_real(&sig, vec![1, nx, ny]).quantize_f16();
+    let scale = (nx * ny) as f32;
+    for i in 0..nx * ny {
+        assert!(
+            (back.re[i] / scale - q.re[i]).abs() < 0.02,
+            "sample {i}: {} vs {}",
+            back.re[i] / scale,
+            q.re[i]
+        );
+    }
+    let snap = svc.metrics().snapshot();
+    assert_eq!(snap.get("rfft2d_requests").unwrap().as_i64(), Some(2));
+    assert_eq!(snap.get("large_requests").unwrap().as_i64(), Some(0));
+    svc.shutdown();
+}
+
+#[test]
+fn convolve_route_applies_every_filter_of_the_bank() {
+    use tcfft::hp::F16;
+    use tcfft::workload::spectral::circular_convolve_ref;
+    let svc = service();
+    let n = 256;
+    let filters: Vec<Vec<f32>> = vec![vec![1.0], vec![0.5, 0.25, -0.125]];
+    assert_eq!(svc.register_filter_bank("test", n, &filters, "tc").unwrap(), 2);
+    // guards: duplicate names, unknown algos, out-of-range sizes, and
+    // unknown banks all fail fast instead of minting cache entries
+    assert!(svc.register_filter_bank("test", n, &filters, "tc").is_err());
+    assert!(svc.register_filter_bank("x", n, &filters, "nonsense").is_err());
+    assert!(svc.register_filter_bank("x", 1000, &filters, "tc").is_err());
+    assert!(svc
+        .register_filter_bank("x", 1 << 30, &filters, "tc")
+        .is_err());
+    // resource caps: oversized banks are refused (banks are cached
+    // forever and registration is reachable over TCP)
+    let too_many: Vec<Vec<f32>> = (0..65).map(|_| vec![1.0f32]).collect();
+    assert!(svc.register_filter_bank("x", n, &too_many, "tc").is_err());
+    assert!(svc.submit_convolve("nope", PlanarBatch::new(vec![n])).is_err());
+    // wrong signal length fails before queuing
+    assert!(svc.submit_convolve("test", PlanarBatch::new(vec![n / 2])).is_err());
+
+    let sig: Vec<f32> = (0..2)
+        .flat_map(|b| random_signal(n, 80 + b as u64))
+        .map(|c| c.re)
+        .collect();
+    let out = svc
+        .convolve_blocking("test", PlanarBatch::from_real(&sig, vec![2, n]))
+        .unwrap();
+    assert_eq!(out.shape, vec![2, 2, n]);
+    for row in 0..2 {
+        let xq: Vec<f64> = sig[row * n..(row + 1) * n]
+            .iter()
+            .map(|&v| F16::from_f32(v).to_f32() as f64)
+            .collect();
+        for (f, taps) in filters.iter().enumerate() {
+            let mut hq = vec![0.0f64; n];
+            for (i, &t) in taps.iter().enumerate() {
+                hq[i] = F16::from_f32(t).to_f32() as f64;
+            }
+            let want = circular_convolve_ref(&xq, &hq);
+            let got = &out.re[(row * 2 + f) * n..(row * 2 + f + 1) * n];
+            let mut num = 0.0f64;
+            let mut den = 0.0f64;
+            for i in 0..n {
+                let d = got[i] as f64 - want[i];
+                num += d * d;
+                den += want[i] * want[i];
+            }
+            let rmse = (num / den.max(f64::MIN_POSITIVE)).sqrt();
+            assert!(rmse < 1e-2, "row {row} filter {f}: rmse {rmse:.3e}");
+        }
+    }
+    let snap = svc.metrics().snapshot();
+    assert_eq!(snap.get("conv_batch_requests").unwrap().as_i64(), Some(2));
+    svc.shutdown();
+}
+
+#[test]
+fn convolve_queue_backpressure_rejects_when_full() {
+    // the convolve route rides the same bounded queues: with the
+    // flusher effectively disabled, overflow submissions get QueueFull
+    let svc = Arc::new(FftService::start(
+        Arc::clone(shared_runtime()),
+        ServiceConfig {
+            max_wait: Duration::from_secs(3600), // never deadline-flush
+            max_queue: 2,
+            inline_exec: false, // keep queued requests queued
+            ..ServiceConfig::default()
+        },
+    ));
+    let n = 1024;
+    svc.register_filter_bank("bp", n, &[vec![1.0f32]], "tc").unwrap();
+    let mut errors = 0;
+    let mut tickets = Vec::new();
+    for i in 0..4 {
+        let sig: Vec<f32> = random_signal(n, i as u64).iter().map(|c| c.re).collect();
+        let t = svc
+            .submit_convolve("bp", PlanarBatch::from_real(&sig, vec![n]))
+            .unwrap();
+        tickets.push(t);
+    }
+    for t in tickets {
+        if t.wait_timeout(Duration::from_millis(200)).is_err() {
+            errors += 1;
+        }
+    }
+    assert!(errors >= 2, "expected convolve-queue rejections, got {errors}");
+    let snap = svc.metrics().snapshot();
+    assert!(snap.get("rejected").unwrap().as_i64().unwrap() >= 2);
+    assert_eq!(snap.get("conv_batch_requests").unwrap().as_i64(), Some(4));
+    svc.shutdown();
+}
+
+#[test]
 fn rfft_blocking_helper_round_trips() {
     // R2C then C2R through the service helpers recovers the signal
     // (unnormalized inverse: divide by n on the host)
@@ -277,6 +411,21 @@ fn unroutable_requests_fail_fast() {
         input: PlanarBatch::new(vec![1000]),
     });
     assert!(r.is_err(), "non-power-of-two rfft must fail fast");
+    // real 2D sizes beyond the catalog have no large route either
+    let r = svc.submit(FftRequest {
+        op: Op::Rfft2d { nx: 512, ny: 512 },
+        algo: "tc".into(),
+        direction: Direction::Forward,
+        input: PlanarBatch::new(vec![512, 512]),
+    });
+    assert!(r.is_err(), "unknown rfft2d size must fail fast");
+    let r = svc.submit(FftRequest {
+        op: Op::Rfft2d { nx: 100, ny: 100 },
+        algo: "tc".into(),
+        direction: Direction::Forward,
+        input: PlanarBatch::new(vec![100, 100]),
+    });
+    assert!(r.is_err(), "non-power-of-two rfft2d must fail fast");
     svc.shutdown();
 }
 
@@ -382,11 +531,52 @@ fn tcp_server_round_trip() {
     assert_eq!(resp.get("ok").and_then(|b| b.as_bool()), Some(true), "{line}");
     assert_eq!(resp.get("re").unwrap().as_arr().unwrap().len(), 17);
 
+    // small rfft2d over the wire: 16x16 real samples -> 16x9 bins
+    let sig: Vec<f32> = random_signal(256, 7).iter().map(|c| c.re).collect();
+    let re: Vec<String> = sig.iter().map(|v| format!("{v:.4}")).collect();
+    let req = format!(
+        "{{\"op\":\"rfft2d\",\"nx\":16,\"ny\":16,\"re\":[{}]}}\n",
+        re.join(",")
+    );
+    conn.write_all(req.as_bytes()).unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    let resp = tcfft::util::json::Json::parse(line.trim()).unwrap();
+    assert_eq!(resp.get("ok").and_then(|b| b.as_bool()), Some(true), "{line}");
+    assert_eq!(resp.get("re").unwrap().as_arr().unwrap().len(), 16 * 9);
+
+    // register a 2-filter bank and convolve over the wire
+    let req = "{\"op\":\"register_bank\",\"bank\":\"w\",\"n\":64,\
+               \"filters\":[[1.0],[0.5,0.25]]}\n";
+    conn.write_all(req.as_bytes()).unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    let resp = tcfft::util::json::Json::parse(line.trim()).unwrap();
+    assert_eq!(resp.get("ok").and_then(|b| b.as_bool()), Some(true), "{line}");
+    assert_eq!(resp.get("k").and_then(|v| v.as_usize()), Some(2));
+    let sig: Vec<f32> = random_signal(64, 8).iter().map(|c| c.re).collect();
+    let re: Vec<String> = sig.iter().map(|v| format!("{v:.4}")).collect();
+    let req = format!("{{\"op\":\"convolve\",\"bank\":\"w\",\"re\":[{}]}}\n", re.join(","));
+    conn.write_all(req.as_bytes()).unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    let resp = tcfft::util::json::Json::parse(line.trim()).unwrap();
+    assert_eq!(resp.get("ok").and_then(|b| b.as_bool()), Some(true), "{line}");
+    // all k=2 filter outputs back, concatenated
+    assert_eq!(resp.get("re").unwrap().as_arr().unwrap().len(), 2 * 64);
+    // unknown banks fail over the wire too
+    conn.write_all(b"{\"op\":\"convolve\",\"bank\":\"zz\",\"re\":[0.0]}\n")
+        .unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("false"), "unknown bank must error: {line}");
+
     // metrics op
     conn.write_all(b"{\"op\":\"metrics\"}\n").unwrap();
     line.clear();
     reader.read_line(&mut line).unwrap();
     assert!(line.contains("latency_p50_ms"), "{line}");
+    assert!(line.contains("conv_batch_requests"), "{line}");
 
     stop.store(true, std::sync::atomic::Ordering::SeqCst);
     // drop BOTH fds (conn and its clone inside reader) so the server's
