@@ -20,6 +20,7 @@ fn main() -> tcfft::error::Result<()> {
     let args = Args::parse(std::env::args().skip(1));
     let horizon = args.get_f64("seconds", 10.0);
     let rate = args.get_f64("rate", 120.0);
+    let n_clients = args.get_f64("clients", 4.0).max(1.0) as usize;
 
     let rt = Arc::new(Runtime::load_default()?);
     // warm the artifacts the workload uses (compile once, off the clock)
@@ -61,7 +62,6 @@ fn main() -> tcfft::error::Result<()> {
     let mut issued = 0u64;
     let mut failed = 0u64;
     let mut workers: Vec<std::thread::JoinHandle<(Summary, u64)>> = Vec::new();
-    let n_clients = 4usize;
     for c in 0..n_clients {
         let svc = Arc::clone(&svc);
         let mut crng = rng.fork();
@@ -87,7 +87,10 @@ fn main() -> tcfft::error::Result<()> {
                         .collect();
                     let t_req = Instant::now();
                     let input = PlanarBatch::from_real(&sig, vec![1024]);
-                    match svc.submit_convolve("demo", input).and_then(|t| t.wait()) {
+                    match svc
+                        .submit_convolve_as(c as u64, "demo", input)
+                        .and_then(|t| t.wait())
+                    {
                         Ok(_) => lat.add(t_req.elapsed().as_secs_f64()),
                         Err(e) => {
                             failed += 1;
@@ -123,7 +126,7 @@ fn main() -> tcfft::error::Result<()> {
                     input: PlanarBatch::from_complex(&sig, shape),
                 };
                 let t_req = Instant::now();
-                match svc.submit(req).and_then(|t| t.wait()) {
+                match svc.submit_as(c as u64, req).and_then(|t| t.wait()) {
                     Ok(_) => lat.add(t_req.elapsed().as_secs_f64()),
                     Err(e) => {
                         failed += 1;

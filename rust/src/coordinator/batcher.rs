@@ -5,9 +5,9 @@
 //! (padding is tracked in metrics; the padding-ratio ablation is one of
 //! the serving benches).
 
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 use std::sync::mpsc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::error::Result;
 use crate::runtime::PlanarBatch;
@@ -138,10 +138,37 @@ impl PlanQueue {
     }
 }
 
+/// Drain every due batch from a shard's queue map (`force` drains
+/// everything pending, the shutdown path), then drop queues left
+/// empty: a queue is cheap to recreate on the next submit, and under a
+/// key-space-walking client the map would otherwise grow one entry per
+/// key ever seen — the same unbounded-growth bug the plan caches had.
+pub fn drain_due(
+    queues: &mut HashMap<String, PlanQueue>,
+    now: Instant,
+    max_wait: Duration,
+    force: bool,
+) -> Vec<(String, ReadyBatch)> {
+    let mut ready = Vec::new();
+    for q in queues.values_mut() {
+        loop {
+            let due = if force { !q.is_empty() } else { q.should_flush(now, max_wait) };
+            if !due {
+                break;
+            }
+            match q.flush() {
+                Some(b) => ready.push((q.key.clone(), b)),
+                None => break,
+            }
+        }
+    }
+    queues.retain(|_, q| !q.is_empty());
+    ready
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::time::Duration;
 
     fn req(id: u64, n: usize) -> (Pending, mpsc::Receiver<Result<PlanarBatch>>) {
         let (tx, rx) = mpsc::channel();
@@ -218,6 +245,31 @@ mod tests {
         }
         let (p, _rx) = req(9, 4);
         assert!(q.push(p).is_err(), "4th push must be rejected");
+    }
+
+    #[test]
+    fn drain_due_removes_empty_queues() {
+        let mut queues = HashMap::new();
+        let mut q = PlanQueue::new("full", 1, 64);
+        let (p, _rx) = req(0, 4);
+        q.push(p).map_err(|_| ()).unwrap();
+        queues.insert("full".to_string(), q);
+        let mut idle = PlanQueue::new("idle", 4, 64);
+        let (p, _rx2) = req(1, 4);
+        idle.push(p).map_err(|_| ()).unwrap();
+        queues.insert("idle".to_string(), idle);
+        queues.insert("empty".to_string(), PlanQueue::new("empty", 4, 64));
+        let ready = drain_due(&mut queues, Instant::now(), Duration::from_secs(3600), false);
+        // "full" hit capacity and flushed; "empty" was reaped; "idle"
+        // still holds its not-yet-due request
+        assert_eq!(ready.len(), 1);
+        assert_eq!(ready[0].0, "full");
+        assert_eq!(queues.len(), 1);
+        assert!(queues.contains_key("idle"));
+        // force drains the rest and leaves the map empty
+        let ready = drain_due(&mut queues, Instant::now(), Duration::from_secs(3600), true);
+        assert_eq!(ready.len(), 1);
+        assert!(queues.is_empty());
     }
 
     #[test]

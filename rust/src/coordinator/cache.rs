@@ -1,0 +1,316 @@
+//! Byte-budgeted LRU cache for the service's plan / large-plan /
+//! filter-bank stores.
+//!
+//! The pre-shard service kept three `HashMap`s that only ever grew
+//! ("never evicted by design"), with a hard registration cap standing
+//! in for a memory bound. Under a key-space-walking client that is an
+//! unbounded leak; under the old cap it is a denial of service (the
+//! 65th bank is refused forever). This cache replaces both with the
+//! standard serving-cache contract:
+//!
+//! - every entry carries an explicit byte cost (`memory_bytes()` on
+//!   the cached plan types);
+//! - inserting evicts least-recently-used entries until the configured
+//!   budget holds;
+//! - hit / miss / eviction / byte / entry counters are shared with
+//!   `Metrics::snapshot()` so operators can see churn.
+//!
+//! Keys are deterministic content fingerprints (see `util::fnv`): the
+//! human-readable descriptor suffixed with `#<fnv1a64>` of the
+//! canonical content, so identity survives eviction and process
+//! restarts — an evicted plan rebuilt from the same descriptor lands
+//! under the same key.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Shared hit/miss/eviction counters for one cache, snapshot by
+/// `Metrics`. All counters are monotonically increasing except
+/// `bytes`/`entries`, which track current occupancy.
+#[derive(Debug, Default)]
+pub struct CacheStats {
+    pub hits: AtomicU64,
+    pub misses: AtomicU64,
+    pub evictions: AtomicU64,
+    pub bytes: AtomicU64,
+    pub entries: AtomicU64,
+}
+
+impl CacheStats {
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+    pub fn evictions(&self) -> u64 {
+        self.evictions.load(Ordering::Relaxed)
+    }
+    pub fn bytes(&self) -> u64 {
+        self.bytes.load(Ordering::Relaxed)
+    }
+    pub fn entries(&self) -> u64 {
+        self.entries.load(Ordering::Relaxed)
+    }
+}
+
+struct Entry<V> {
+    value: V,
+    bytes: usize,
+    /// logical access clock stamp; smallest = least recently used
+    stamp: u64,
+}
+
+struct Inner<V> {
+    map: HashMap<String, Entry<V>>,
+    clock: u64,
+    bytes: usize,
+}
+
+/// LRU cache with a byte budget. Values are cloned out on access, so
+/// `V` is expected to be cheap to clone — in the service every cached
+/// value is an `Arc` (or a small struct of `Arc`s), making eviction
+/// safe while executions still hold a reference.
+pub struct LruCache<V: Clone> {
+    budget: usize,
+    stats: std::sync::Arc<CacheStats>,
+    inner: Mutex<Inner<V>>,
+}
+
+impl<V: Clone> LruCache<V> {
+    /// Cache bounded to `budget` bytes of accounted content.
+    pub fn new(budget: usize) -> Self {
+        Self::with_stats(budget, std::sync::Arc::new(CacheStats::default()))
+    }
+
+    /// [`new`](Self::new) with externally owned counters — the service
+    /// hands in the `Arc<CacheStats>` its `Metrics` snapshot reads.
+    pub fn with_stats(budget: usize, stats: std::sync::Arc<CacheStats>) -> Self {
+        LruCache {
+            budget,
+            stats,
+            inner: Mutex::new(Inner { map: HashMap::new(), clock: 0, bytes: 0 }),
+        }
+    }
+
+    /// The configured byte budget.
+    pub fn budget(&self) -> usize {
+        self.budget
+    }
+
+    /// Shared counters (cloned `Arc`) for wiring into `Metrics`.
+    pub fn stats(&self) -> std::sync::Arc<CacheStats> {
+        self.stats.clone()
+    }
+
+    /// Look up and touch (counts a hit or a miss).
+    pub fn get(&self, key: &str) -> Option<V> {
+        let mut inner = self.inner.lock().unwrap();
+        inner.clock += 1;
+        let clock = inner.clock;
+        match inner.map.get_mut(key) {
+            Some(e) => {
+                e.stamp = clock;
+                self.stats.hits.fetch_add(1, Ordering::Relaxed);
+                Some(e.value.clone())
+            }
+            None => {
+                self.stats.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Peek without touching LRU order or counting a hit/miss (used by
+    /// validation paths that should not distort churn statistics).
+    pub fn peek(&self, key: &str) -> Option<V> {
+        let inner = self.inner.lock().unwrap();
+        inner.map.get(key).map(|e| e.value.clone())
+    }
+
+    /// Insert `value` under `key`, evicting LRU entries until the
+    /// budget holds. Returns `false` (and caches nothing) when the
+    /// entry alone exceeds the whole budget — evicting everything else
+    /// would still not make it fit, so callers must be able to work
+    /// uncached.
+    pub fn insert(&self, key: &str, value: V, bytes: usize) -> bool {
+        self.insert_inner(key, value, bytes).is_some()
+    }
+
+    /// Racing-builder insert: if `key` is already present (someone
+    /// else built it first), return the existing value and `false`;
+    /// otherwise insert and return `(value, true)`. Like `insert`,
+    /// an over-budget entry is handed back uncached (`false`).
+    pub fn get_or_insert(&self, key: &str, value: V, bytes: usize) -> (V, bool) {
+        {
+            let mut inner = self.inner.lock().unwrap();
+            inner.clock += 1;
+            let clock = inner.clock;
+            if let Some(e) = inner.map.get_mut(key) {
+                e.stamp = clock;
+                self.stats.hits.fetch_add(1, Ordering::Relaxed);
+                return (e.value.clone(), false);
+            }
+        }
+        match self.insert_inner(key, value.clone(), bytes) {
+            Some(v) => (v, true),
+            None => (value, false),
+        }
+    }
+
+    fn insert_inner(&self, key: &str, value: V, bytes: usize) -> Option<V> {
+        if bytes > self.budget {
+            return None;
+        }
+        let mut inner = self.inner.lock().unwrap();
+        inner.clock += 1;
+        let clock = inner.clock;
+        if let Some(old) = inner.map.remove(key) {
+            inner.bytes -= old.bytes;
+        }
+        // Evict least-recently-used until the new entry fits.
+        while inner.bytes + bytes > self.budget {
+            let victim = inner
+                .map
+                .iter()
+                .min_by_key(|(_, e)| e.stamp)
+                .map(|(k, _)| k.clone());
+            match victim {
+                Some(k) => {
+                    let e = inner.map.remove(&k).unwrap();
+                    inner.bytes -= e.bytes;
+                    self.stats.evictions.fetch_add(1, Ordering::Relaxed);
+                }
+                None => break,
+            }
+        }
+        inner.bytes += bytes;
+        inner
+            .map
+            .insert(key.to_string(), Entry { value: value.clone(), bytes, stamp: clock });
+        self.stats.bytes.store(inner.bytes as u64, Ordering::Relaxed);
+        self.stats.entries.store(inner.map.len() as u64, Ordering::Relaxed);
+        Some(value)
+    }
+
+    /// Remove an entry (used by re-registration conflict handling).
+    pub fn remove(&self, key: &str) -> Option<V> {
+        let mut inner = self.inner.lock().unwrap();
+        let e = inner.map.remove(key)?;
+        inner.bytes -= e.bytes;
+        self.stats.bytes.store(inner.bytes as u64, Ordering::Relaxed);
+        self.stats.entries.store(inner.map.len() as u64, Ordering::Relaxed);
+        Some(e.value)
+    }
+
+    /// Current entry count.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().map.len()
+    }
+
+    /// True when the cache holds no entries.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Currently accounted bytes (always <= budget).
+    pub fn bytes(&self) -> usize {
+        self.inner.lock().unwrap().bytes
+    }
+
+    /// Snapshot of the keys currently cached (diagnostics/tests).
+    pub fn keys(&self) -> Vec<String> {
+        self.inner.lock().unwrap().map.keys().cloned().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hit_miss_and_touch() {
+        let c: LruCache<u32> = LruCache::new(100);
+        assert!(c.get("a").is_none());
+        assert!(c.insert("a", 1, 10));
+        assert_eq!(c.get("a"), Some(1));
+        let s = c.stats();
+        assert_eq!(s.hits(), 1);
+        assert_eq!(s.misses(), 1);
+        assert_eq!(s.bytes(), 10);
+        assert_eq!(s.entries(), 1);
+    }
+
+    #[test]
+    fn evicts_lru_to_fit_budget() {
+        let c: LruCache<u32> = LruCache::new(30);
+        c.insert("a", 1, 10);
+        c.insert("b", 2, 10);
+        c.insert("c", 3, 10);
+        // Touch "a" so "b" becomes the LRU victim.
+        c.get("a");
+        c.insert("d", 4, 10);
+        assert_eq!(c.get("b"), None);
+        assert_eq!(c.get("a"), Some(1));
+        assert_eq!(c.get("c"), Some(3));
+        assert_eq!(c.get("d"), Some(4));
+        assert_eq!(c.stats().evictions(), 1);
+        assert!(c.bytes() <= 30);
+    }
+
+    #[test]
+    fn oversized_entry_is_refused() {
+        let c: LruCache<u32> = LruCache::new(30);
+        c.insert("a", 1, 10);
+        assert!(!c.insert("big", 9, 31));
+        // Nothing was evicted to make room for an impossible fit.
+        assert_eq!(c.get("a"), Some(1));
+        assert_eq!(c.stats().evictions(), 0);
+        let (v, inserted) = c.get_or_insert("big", 9, 31);
+        assert_eq!(v, 9);
+        assert!(!inserted);
+        assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn get_or_insert_returns_existing() {
+        let c: LruCache<u32> = LruCache::new(100);
+        let (v, inserted) = c.get_or_insert("k", 1, 10);
+        assert_eq!((v, inserted), (1, true));
+        let (v, inserted) = c.get_or_insert("k", 2, 10);
+        assert_eq!((v, inserted), (1, false));
+        assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn reinsert_same_key_replaces_bytes() {
+        let c: LruCache<u32> = LruCache::new(30);
+        c.insert("a", 1, 10);
+        c.insert("a", 2, 20);
+        assert_eq!(c.bytes(), 20);
+        assert_eq!(c.get("a"), Some(2));
+        assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn remove_releases_bytes() {
+        let c: LruCache<u32> = LruCache::new(30);
+        c.insert("a", 1, 10);
+        assert_eq!(c.remove("a"), Some(1));
+        assert_eq!(c.bytes(), 0);
+        assert!(c.is_empty());
+        assert_eq!(c.remove("a"), None);
+    }
+
+    #[test]
+    fn budget_holds_under_key_walk() {
+        let c: LruCache<u64> = LruCache::new(64);
+        for i in 0..1000u64 {
+            c.insert(&format!("k{i}"), i, 8);
+            assert!(c.bytes() <= 64);
+        }
+        assert_eq!(c.len(), 8);
+        assert_eq!(c.stats().evictions(), 1000 - 8);
+    }
+}

@@ -1,16 +1,26 @@
-//! Service metrics: counters + latency histograms, snapshot as JSON.
+//! Service metrics: counters + bounded latency reservoirs, snapshot as
+//! JSON.
+//!
+//! Latency, queue-wait and execution samples go into fixed-capacity
+//! [`Reservoir`] rings, not unbounded `Summary` vecs: a long-running
+//! server must not grow 24 bytes per request forever, and a snapshot
+//! must not clone-and-sort the full request history while holding the
+//! mutex. Percentiles are therefore windowed over the most recent
+//! `capacity` samples (`latency_total` still counts every request).
+//! Benches keep the exact `Summary` type from `util::stats`.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
+use super::cache::CacheStats;
 use crate::util::json::Json;
-use crate::util::stats::Summary;
+use crate::util::stats::{Reservoir, DEFAULT_RESERVOIR};
 
-/// Service-wide counters and latency summaries, snapshot as JSON by
+/// Service-wide counters and latency reservoirs, snapshot as JSON by
 /// the `metrics` TCP op and the tests.
-#[derive(Default)]
 pub struct Metrics {
-    /// total submitted requests (accepted or rejected)
+    /// total submitted requests (accepted or rejected by backpressure;
+    /// counted only after routing + shape validation succeed)
     pub requests: AtomicU64,
     /// requests answered successfully
     pub completed: AtomicU64,
@@ -24,6 +34,9 @@ pub struct Metrics {
     pub busy_slots: AtomicU64,
     /// requests rejected by queue backpressure
     pub rejected: AtomicU64,
+    /// requests rejected by the per-client admission quota (these never
+    /// reach routing, so they are NOT in `requests`)
+    pub quota_rejected: AtomicU64,
     /// requests that resolved to the four-step large-FFT route
     pub large_requests: AtomicU64,
     /// real-input (`Op::Rfft1d`) requests, direct or four-step routed
@@ -32,15 +45,60 @@ pub struct Metrics {
     pub rfft2d_requests: AtomicU64,
     /// filter-bank convolution requests (the `submit_convolve` route)
     pub conv_batch_requests: AtomicU64,
-    lat: Mutex<Summary>,        // end-to-end request latency (s)
-    queue_wait: Mutex<Summary>, // time spent waiting in the batcher (s)
-    exec: Mutex<Summary>,       // device execution time per batch (s)
+    /// ready batches drained from a sibling shard's queues by another
+    /// shard's flusher (work stealing)
+    pub stolen_batches: AtomicU64,
+    /// four-step plans rebuilt transparently at execution time after a
+    /// cache eviction raced an in-flight batch
+    pub large_rebuilds: AtomicU64,
+    /// direct-plan cache counters (shared with the service's LruCache)
+    pub plan_cache: Arc<CacheStats>,
+    /// four-step plan cache counters
+    pub large_cache: Arc<CacheStats>,
+    /// filter-bank cache counters
+    pub bank_cache: Arc<CacheStats>,
+    lat: Mutex<Reservoir>,        // end-to-end request latency (s)
+    queue_wait: Mutex<Reservoir>, // time spent waiting in the batcher (s)
+    exec: Mutex<Reservoir>,       // device execution time per batch (s)
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Metrics::with_reservoir(DEFAULT_RESERVOIR)
+    }
 }
 
 impl Metrics {
-    /// Fresh zeroed metrics.
+    /// Fresh zeroed metrics with the default reservoir capacity.
     pub fn new() -> Metrics {
         Metrics::default()
+    }
+
+    /// Fresh zeroed metrics with an explicit per-reservoir sample
+    /// capacity (`ServiceConfig::metrics_reservoir`).
+    pub fn with_reservoir(capacity: usize) -> Metrics {
+        Metrics {
+            requests: AtomicU64::new(0),
+            completed: AtomicU64::new(0),
+            failed: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            padded_slots: AtomicU64::new(0),
+            busy_slots: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+            quota_rejected: AtomicU64::new(0),
+            large_requests: AtomicU64::new(0),
+            rfft_requests: AtomicU64::new(0),
+            rfft2d_requests: AtomicU64::new(0),
+            conv_batch_requests: AtomicU64::new(0),
+            stolen_batches: AtomicU64::new(0),
+            large_rebuilds: AtomicU64::new(0),
+            plan_cache: Arc::new(CacheStats::default()),
+            large_cache: Arc::new(CacheStats::default()),
+            bank_cache: Arc::new(CacheStats::default()),
+            lat: Mutex::new(Reservoir::with_capacity(capacity)),
+            queue_wait: Mutex::new(Reservoir::with_capacity(capacity)),
+            exec: Mutex::new(Reservoir::with_capacity(capacity)),
+        }
     }
 
     /// Record one end-to-end request latency sample.
@@ -58,6 +116,13 @@ impl Metrics {
         self.exec.lock().unwrap().add(seconds);
     }
 
+    /// Samples currently held in the latency reservoir (bounded by its
+    /// capacity) and the lifetime sample count.
+    pub fn latency_counts(&self) -> (usize, u64) {
+        let lat = self.lat.lock().unwrap();
+        (lat.len(), lat.total())
+    }
+
     /// Fraction of executed batch slots that were padding.
     pub fn padding_ratio(&self) -> f64 {
         let pad = self.padded_slots.load(Ordering::Relaxed) as f64;
@@ -69,7 +134,17 @@ impl Metrics {
         }
     }
 
-    /// One JSON snapshot of every counter and summary statistic.
+    fn cache_json(stats: &CacheStats) -> Json {
+        Json::obj(vec![
+            ("hits", Json::num(stats.hits() as f64)),
+            ("misses", Json::num(stats.misses() as f64)),
+            ("evictions", Json::num(stats.evictions() as f64)),
+            ("bytes", Json::num(stats.bytes() as f64)),
+            ("entries", Json::num(stats.entries() as f64)),
+        ])
+    }
+
+    /// One JSON snapshot of every counter and reservoir statistic.
     pub fn snapshot(&self) -> Json {
         let lat = self.lat.lock().unwrap();
         let qw = self.queue_wait.lock().unwrap();
@@ -79,6 +154,7 @@ impl Metrics {
             ("completed", Json::num(self.completed.load(Ordering::Relaxed) as f64)),
             ("failed", Json::num(self.failed.load(Ordering::Relaxed) as f64)),
             ("rejected", Json::num(self.rejected.load(Ordering::Relaxed) as f64)),
+            ("quota_rejected", Json::num(self.quota_rejected.load(Ordering::Relaxed) as f64)),
             ("large_requests", Json::num(self.large_requests.load(Ordering::Relaxed) as f64)),
             ("rfft_requests", Json::num(self.rfft_requests.load(Ordering::Relaxed) as f64)),
             ("rfft2d_requests", Json::num(self.rfft2d_requests.load(Ordering::Relaxed) as f64)),
@@ -87,12 +163,20 @@ impl Metrics {
                 Json::num(self.conv_batch_requests.load(Ordering::Relaxed) as f64),
             ),
             ("batches", Json::num(self.batches.load(Ordering::Relaxed) as f64)),
+            ("stolen_batches", Json::num(self.stolen_batches.load(Ordering::Relaxed) as f64)),
+            ("large_rebuilds", Json::num(self.large_rebuilds.load(Ordering::Relaxed) as f64)),
             ("padding_ratio", Json::num(self.padding_ratio())),
             ("latency_p50_ms", Json::num(lat.median() * 1e3)),
+            ("latency_p95_ms", Json::num(lat.p95() * 1e3)),
             ("latency_p99_ms", Json::num(lat.p99() * 1e3)),
             ("latency_mean_ms", Json::num(lat.mean() * 1e3)),
+            ("latency_samples", Json::num(lat.len() as f64)),
+            ("latency_total", Json::num(lat.total() as f64)),
             ("queue_wait_p50_ms", Json::num(qw.median() * 1e3)),
             ("exec_mean_ms", Json::num(ex.mean() * 1e3)),
+            ("plan_cache", Self::cache_json(&self.plan_cache)),
+            ("large_cache", Self::cache_json(&self.large_cache)),
+            ("bank_cache", Self::cache_json(&self.bank_cache)),
         ])
     }
 }
@@ -119,5 +203,33 @@ mod tests {
     #[test]
     fn empty_ratio_is_zero() {
         assert_eq!(Metrics::new().padding_ratio(), 0.0);
+    }
+
+    #[test]
+    fn reservoirs_stay_bounded() {
+        let m = Metrics::with_reservoir(64);
+        for i in 0..1000 {
+            m.record_latency(i as f64 * 1e-3);
+        }
+        let (held, total) = m.latency_counts();
+        assert_eq!(held, 64, "reservoir must cap retained samples");
+        assert_eq!(total, 1000, "lifetime count must keep every sample");
+        let snap = m.snapshot();
+        assert_eq!(snap.get("latency_samples").unwrap().as_i64(), Some(64));
+        assert_eq!(snap.get("latency_total").unwrap().as_i64(), Some(1000));
+        // the window holds the most recent 64 samples (936..999 ms)
+        let p50 = snap.get("latency_p50_ms").unwrap().as_f64().unwrap();
+        assert!(p50 > 900.0, "windowed p50 {p50} should reflect recent samples");
+    }
+
+    #[test]
+    fn snapshot_carries_cache_sections() {
+        let m = Metrics::new();
+        m.plan_cache.hits.fetch_add(3, Ordering::Relaxed);
+        let snap = m.snapshot();
+        let pc = snap.get("plan_cache").unwrap();
+        assert_eq!(pc.get("hits").unwrap().as_i64(), Some(3));
+        assert!(snap.get("large_cache").is_some());
+        assert!(snap.get("bank_cache").is_some());
     }
 }

@@ -2,18 +2,26 @@
 //!
 //! The paper ships tcFFT as a library (plan/execute); production users
 //! embed such libraries behind a service.  This module supplies that
-//! service: request router with a plan cache, per-plan dynamic batcher
-//! with deadline-or-full flushing and backpressure, an execution pool
-//! feeding the thread-safe PJRT engine (with an inline leader-execution
-//! fast path), registered spectral filter banks served through the
-//! same queues ([`FftService::register_filter_bank`] /
-//! [`FftService::submit_convolve`]), metrics, and a TCP JSON front end.
+//! service: a sharded request router (queue keys hash to independent
+//! shards, each with its own queue map, deadline flusher and execution
+//! workers, with work-stealing of due batches between shards), plan /
+//! large-plan / filter-bank stores behind byte-budgeted LRU caches
+//! keyed by deterministic content fingerprints ([`cache`],
+//! `util::fnv`), per-plan dynamic batching with deadline-or-full
+//! flushing and backpressure, per-client token-bucket admission
+//! control ([`quota`]), registered spectral filter banks served
+//! through the same queues ([`FftService::register_filter_bank`] /
+//! [`FftService::submit_convolve`]), bounded-reservoir metrics, and a
+//! TCP JSON front end on a bounded worker pool with request
+//! pipelining.
 
 pub mod batcher;
+pub mod cache;
 pub mod metrics;
+pub mod quota;
 pub mod server;
 pub mod service;
 
 pub use metrics::Metrics;
-pub use server::Server;
+pub use server::{Server, ServerConfig};
 pub use service::{FftRequest, FftService, Op, ServiceConfig, Ticket};

@@ -24,19 +24,69 @@
 //!             {"op": "ping"}           -> {"ok": true}
 //!   response: {"ok": true, "re": [...], "im": [...], "latency_ms": x}
 //!           | {"ok": false, "error": "..."}
+//!
+//! Connections are served by a BOUNDED worker pool (the pre-pool
+//! server spawned one thread per accepted socket and kept every join
+//! handle forever — an unbounded resource under a reconnect storm).
+//! Accepted sockets queue on a bounded channel; when both the pool and
+//! the backlog are full, the accept loop itself blocks, which is the
+//! correct backpressure (the kernel listen queue absorbs the burst).
+//!
+//! Each connection is read with a timeout, so an idle client no longer
+//! pins its worker past a stop request: every `read_timeout` the
+//! reader re-checks the stop flag (the pre-pool server blocked in
+//! `lines()` until the client spoke). Requests are PIPELINED: the
+//! reader thread parses and submits, and a per-connection writer
+//! thread waits on tickets and writes replies in request order — a
+//! client may have up to `pipeline_depth` requests in flight, so
+//! same-connection requests can share a batch.
+//!
+//! Every connection gets a distinct client id, passed to the service
+//! as the admission-quota key (`ServiceConfig::quota_rate`).
 
-use std::io::{BufRead, BufReader, Write};
+use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
-use std::time::Instant;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
 
 use crate::error::Result;
 
-use super::service::{FftRequest, FftService, Op};
+use super::service::{FftRequest, FftService, Op, Ticket};
 use crate::plan::Direction;
 use crate::runtime::PlanarBatch;
 use crate::util::json::Json;
+
+/// Hard cap on one protocol line (a 2^24-point transform serializes to
+/// tens of MB of JSON; anything past this is a hostile or broken peer).
+const MAX_LINE_BYTES: usize = 32 << 20;
+
+/// TCP front-end configuration.
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    /// connection worker threads (each serves one connection at a time)
+    pub workers: usize,
+    /// accepted-but-unserved connections queued before the accept loop
+    /// blocks (the kernel listen queue backstops beyond that)
+    pub backlog: usize,
+    /// socket read timeout; also the stop-flag poll period for idle
+    /// connections
+    pub read_timeout: Duration,
+    /// requests one connection may have in flight before its reader
+    /// blocks (replies always return in request order)
+    pub pipeline_depth: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            workers: 16,
+            backlog: 32,
+            read_timeout: Duration::from_millis(100),
+            pipeline_depth: 32,
+        }
+    }
+}
 
 /// The TCP front end: accepts line-delimited JSON connections and
 /// forwards transform requests to an [`FftService`].
@@ -44,18 +94,27 @@ pub struct Server {
     listener: TcpListener,
     svc: Arc<FftService>,
     stop: Arc<AtomicBool>,
+    cfg: ServerConfig,
+    next_conn_id: Arc<AtomicU64>,
 }
 
 impl Server {
     /// Bind the listener (e.g. `"127.0.0.1:7070"`, port 0 for
-    /// ephemeral) over a running service.
+    /// ephemeral) over a running service, with the default pool sizes.
     pub fn bind(addr: &str, svc: Arc<FftService>) -> Result<Server> {
+        Self::bind_with(addr, svc, ServerConfig::default())
+    }
+
+    /// [`bind`](Self::bind) with explicit pool / timeout configuration.
+    pub fn bind_with(addr: &str, svc: Arc<FftService>, cfg: ServerConfig) -> Result<Server> {
         let listener = TcpListener::bind(addr)?;
         listener.set_nonblocking(true)?;
         Ok(Server {
             listener,
             svc,
             stop: Arc::new(AtomicBool::new(false)),
+            cfg,
+            next_conn_id: Arc::new(AtomicU64::new(1)),
         })
     }
 
@@ -64,54 +123,167 @@ impl Server {
         Ok(self.listener.local_addr()?)
     }
 
-    /// A flag that stops [`run`](Self::run) when set to true.
+    /// A flag that stops [`run`](Self::run) when set to true. Workers
+    /// notice within `ServerConfig::read_timeout` even when every
+    /// client is idle.
     pub fn stop_handle(&self) -> Arc<AtomicBool> {
         Arc::clone(&self.stop)
     }
 
-    /// Accept loop; one thread per connection (fine at service scale —
-    /// heavy lifting is batched behind the PJRT actor anyway).
+    /// Accept loop over the bounded worker pool. Returns once the stop
+    /// flag is set and every worker has drained.
     pub fn run(&self) -> Result<()> {
-        let mut handles = Vec::new();
+        let cfg = self.cfg.clone();
+        let (conn_tx, conn_rx) = mpsc::sync_channel::<TcpStream>(cfg.backlog.max(1));
+        let conn_rx = Arc::new(Mutex::new(conn_rx));
+        let mut workers = Vec::with_capacity(cfg.workers.max(1));
+        for wi in 0..cfg.workers.max(1) {
+            let rx = Arc::clone(&conn_rx);
+            let svc = Arc::clone(&self.svc);
+            let stop = Arc::clone(&self.stop);
+            let wcfg = cfg.clone();
+            let ids = Arc::clone(&self.next_conn_id);
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("tcfft-conn-{wi}"))
+                    .spawn(move || loop {
+                        let conn = {
+                            rx.lock()
+                                .unwrap()
+                                .recv_timeout(Duration::from_millis(50))
+                        };
+                        match conn {
+                            Ok(stream) => {
+                                let id = ids.fetch_add(1, Ordering::SeqCst);
+                                let _ = handle_conn(stream, &svc, &stop, &wcfg, id);
+                            }
+                            Err(mpsc::RecvTimeoutError::Timeout) => {
+                                if stop.load(Ordering::SeqCst) {
+                                    break;
+                                }
+                            }
+                            Err(mpsc::RecvTimeoutError::Disconnected) => break,
+                        }
+                    })
+                    .expect("spawn connection worker"),
+            );
+        }
+        let mut result = Ok(());
         while !self.stop.load(Ordering::SeqCst) {
             match self.listener.accept() {
+                // send() blocking on a full backlog IS the accept
+                // backpressure; Err means every worker exited
                 Ok((stream, _)) => {
-                    let svc = Arc::clone(&self.svc);
-                    let stop = Arc::clone(&self.stop);
-                    handles.push(std::thread::spawn(move || {
-                        let _ = handle_conn(stream, svc, stop);
-                    }));
+                    if conn_tx.send(stream).is_err() {
+                        break;
+                    }
                 }
                 Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                    std::thread::sleep(std::time::Duration::from_millis(5));
+                    std::thread::sleep(Duration::from_millis(5));
                 }
-                Err(e) => return Err(e.into()),
+                Err(e) => {
+                    result = Err(e.into());
+                    break;
+                }
             }
         }
-        for h in handles {
-            let _ = h.join();
+        drop(conn_tx); // workers see Disconnected once the queue drains
+        for w in workers {
+            let _ = w.join();
         }
-        Ok(())
+        result
     }
 }
 
-fn handle_conn(stream: TcpStream, svc: Arc<FftService>, stop: Arc<AtomicBool>) -> Result<()> {
+/// A reply in the per-connection pipeline: already-final JSON (errors,
+/// ping, metrics, register), or a submitted ticket the writer thread
+/// resolves in request order.
+enum Reply {
+    Ready(Json),
+    Fft { ticket: Ticket, t0: Instant },
+    Conv { ticket: Ticket, t0: Instant, n: usize, k: usize },
+}
+
+/// Pull the first complete `\n`-terminated line out of `buf` (the
+/// manual framing that lets reads time out without losing buffered
+/// bytes — `BufRead::lines` drops its buffer state on an error return,
+/// so a timed-out read would corrupt the stream).
+fn take_line(buf: &mut Vec<u8>) -> Option<String> {
+    let pos = buf.iter().position(|&b| b == b'\n')?;
+    let mut line: Vec<u8> = buf.drain(..=pos).collect();
+    line.pop(); // the newline
+    if line.last() == Some(&b'\r') {
+        line.pop();
+    }
+    Some(String::from_utf8_lossy(&line).into_owned())
+}
+
+fn handle_conn(
+    stream: TcpStream,
+    svc: &Arc<FftService>,
+    stop: &AtomicBool,
+    cfg: &ServerConfig,
+    conn_id: u64,
+) -> Result<()> {
     stream.set_nodelay(true)?;
+    stream.set_read_timeout(Some(cfg.read_timeout))?;
     let mut writer = stream.try_clone()?;
-    let reader = BufReader::new(stream);
-    for line in reader.lines() {
-        if stop.load(Ordering::SeqCst) {
+    let (reply_tx, reply_rx) = mpsc::sync_channel::<Reply>(cfg.pipeline_depth.max(1));
+    let writer_thread = std::thread::Builder::new()
+        .name(format!("tcfft-conn-{conn_id}-w"))
+        .spawn(move || {
+            // replies resolve and write in request order; a dead socket
+            // ends the loop, and the reader notices via send() failing
+            while let Ok(reply) = reply_rx.recv() {
+                let json = resolve_reply(reply);
+                if writer
+                    .write_all(json.to_string().as_bytes())
+                    .and_then(|_| writer.write_all(b"\n"))
+                    .and_then(|_| writer.flush())
+                    .is_err()
+                {
+                    break;
+                }
+            }
+        })
+        .expect("spawn connection writer");
+
+    let mut stream = stream;
+    let mut buf: Vec<u8> = Vec::new();
+    let mut chunk = [0u8; 16 * 1024];
+    'conn: while !stop.load(Ordering::SeqCst) {
+        while let Some(line) = take_line(&mut buf) {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let reply = handle_request(&line, svc, Some(conn_id));
+            if reply_tx.send(reply).is_err() {
+                break 'conn; // writer died (client hung up mid-reply)
+            }
+        }
+        if buf.len() > MAX_LINE_BYTES {
+            let _ = reply_tx.send(Reply::Ready(err_json(format!(
+                "request line exceeds {MAX_LINE_BYTES} bytes"
+            ))));
             break;
         }
-        let line = line?;
-        if line.trim().is_empty() {
-            continue;
+        match stream.read(&mut chunk) {
+            Ok(0) => break, // EOF
+            Ok(n) => buf.extend_from_slice(&chunk[..n]),
+            // timeout: nothing arrived within read_timeout — loop back
+            // to re-check the stop flag (this is what lets an idle
+            // connection release its worker on shutdown)
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                continue;
+            }
+            Err(_) => break,
         }
-        let resp = handle_line(&line, &svc);
-        writer.write_all(resp.to_string().as_bytes())?;
-        writer.write_all(b"\n")?;
-        writer.flush()?;
     }
+    drop(reply_tx);
+    let _ = writer_thread.join();
     Ok(())
 }
 
@@ -127,33 +299,72 @@ fn parse_floats(j: &Json, key: &str) -> Option<Vec<f32>> {
         .collect()
 }
 
+/// Wait out a pipelined reply and format the response line.
+fn resolve_reply(reply: Reply) -> Json {
+    match reply {
+        Reply::Ready(j) => j,
+        Reply::Fft { ticket, t0 } => match ticket.wait() {
+            Err(e) => err_json(e),
+            Ok(out) => Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("re", Json::Arr(out.re.iter().map(|&x| Json::num(x as f64)).collect())),
+                ("im", Json::Arr(out.im.iter().map(|&x| Json::num(x as f64)).collect())),
+                ("latency_ms", Json::num(t0.elapsed().as_secs_f64() * 1e3)),
+            ]),
+        },
+        Reply::Conv { ticket, t0, n, k } => match ticket.wait() {
+            Err(e) => err_json(e),
+            Ok(out) => Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("k", Json::num(k as f64)),
+                ("n", Json::num(n as f64)),
+                ("re", Json::Arr(out.re.iter().map(|&x| Json::num(x as f64)).collect())),
+                ("latency_ms", Json::num(t0.elapsed().as_secs_f64() * 1e3)),
+            ]),
+        },
+    }
+}
+
 /// Handle one protocol line against the service and build the reply
-/// (exposed for in-process protocol tests).
+/// (exposed for in-process protocol tests). Blocking: submits and
+/// waits. The TCP path uses [`handle_request`] + [`resolve_reply`]
+/// instead so the reader never blocks on a ticket.
 pub fn handle_line(line: &str, svc: &FftService) -> Json {
+    resolve_reply(handle_request(line, svc, None))
+}
+
+/// Parse one protocol line, submit any transform it carries (tagged
+/// with `client` for admission control), and return the reply — final
+/// JSON, or a ticket to resolve later.
+fn handle_request(line: &str, svc: &FftService, client: Option<u64>) -> Reply {
     let req = match Json::parse(line) {
         Ok(j) => j,
-        Err(e) => return err_json(format!("bad json: {e}")),
+        Err(e) => return Reply::Ready(err_json(format!("bad json: {e}"))),
     };
     let op = req.get("op").and_then(|o| o.as_str()).unwrap_or("");
     match op {
-        "ping" => Json::obj(vec![("ok", Json::Bool(true))]),
+        "ping" => Reply::Ready(Json::obj(vec![("ok", Json::Bool(true))])),
         "metrics" => {
             let snap = svc.metrics().snapshot();
-            Json::obj(vec![("ok", Json::Bool(true)), ("metrics", snap)])
+            Reply::Ready(Json::obj(vec![("ok", Json::Bool(true)), ("metrics", snap)]))
         }
         "register_bank" => {
             let name = match req.get("bank").and_then(|b| b.as_str()) {
                 Some(b) => b,
-                None => return err_json("missing 'bank' name"),
+                None => return Reply::Ready(err_json("missing 'bank' name")),
             };
             let n = match req.get("n").and_then(|v| v.as_usize()) {
                 Some(n) => n,
-                None => return err_json("missing 'n'"),
+                None => return Reply::Ready(err_json("missing 'n'")),
             };
             let algo = req.get("algo").and_then(|a| a.as_str()).unwrap_or("tc");
             let rows = match req.get("filters").and_then(|f| f.as_arr()) {
                 Some(rows) if !rows.is_empty() => rows,
-                _ => return err_json("missing/invalid 'filters' array of tap arrays"),
+                _ => {
+                    return Reply::Ready(err_json(
+                        "missing/invalid 'filters' array of tap arrays",
+                    ))
+                }
             };
             let mut filters: Vec<Vec<f32>> = Vec::with_capacity(rows.len());
             for row in rows {
@@ -167,40 +378,47 @@ pub fn handle_line(line: &str, svc: &FftService) -> Json {
                     .unwrap_or(None);
                 match taps {
                     Some(t) => filters.push(t),
-                    None => return err_json("missing/invalid 'filters' array of tap arrays"),
+                    None => {
+                        return Reply::Ready(err_json(
+                            "missing/invalid 'filters' array of tap arrays",
+                        ))
+                    }
                 }
             }
-            match svc.register_filter_bank(name, n, &filters, algo) {
+            Reply::Ready(match svc.register_filter_bank(name, n, &filters, algo) {
                 Err(e) => err_json(e),
                 Ok(k) => Json::obj(vec![("ok", Json::Bool(true)), ("k", Json::num(k as f64))]),
-            }
+            })
         }
         "convolve" => {
             let name = match req.get("bank").and_then(|b| b.as_str()) {
                 Some(b) => b,
-                None => return err_json("missing 'bank' name"),
+                None => return Reply::Ready(err_json("missing 'bank' name")),
             };
             let Some((n, k)) = svc.filter_bank_shape(name) else {
-                return err_json(format!("no filter bank named '{name}' is registered"));
+                return Reply::Ready(err_json(format!(
+                    "no filter bank named '{name}' is registered"
+                )));
             };
             let re = match parse_floats(&req, "re") {
                 Some(v) => v,
-                None => return err_json("missing/invalid 're' array"),
+                None => return Reply::Ready(err_json("missing/invalid 're' array")),
             };
             if re.len() != n {
-                return err_json(format!("'re' holds {} samples, bank expects {n}", re.len()));
+                return Reply::Ready(err_json(format!(
+                    "'re' holds {} samples, bank expects {n}",
+                    re.len()
+                )));
             }
             let t0 = Instant::now();
             let input = PlanarBatch::from_real(&re, vec![n]);
-            match svc.submit_convolve(name, input).and_then(|t| t.wait()) {
-                Err(e) => err_json(e),
-                Ok(out) => Json::obj(vec![
-                    ("ok", Json::Bool(true)),
-                    ("k", Json::num(k as f64)),
-                    ("n", Json::num(n as f64)),
-                    ("re", Json::Arr(out.re.iter().map(|&x| Json::num(x as f64)).collect())),
-                    ("latency_ms", Json::num(t0.elapsed().as_secs_f64() * 1e3)),
-                ]),
+            let submitted = match client {
+                Some(c) => svc.submit_convolve_as(c, name, input),
+                None => svc.submit_convolve(name, input),
+            };
+            match submitted {
+                Err(e) => Reply::Ready(err_json(e)),
+                Ok(ticket) => Reply::Conv { ticket, t0, n, k },
             }
         }
         "fft1d" | "fft2d" | "rfft1d" | "rfft2d" => {
@@ -211,7 +429,7 @@ pub fn handle_line(line: &str, svc: &FftService) -> Json {
             };
             let re = match parse_floats(&req, "re") {
                 Some(v) => v,
-                None => return err_json("missing/invalid 're' array"),
+                None => return Reply::Ready(err_json("missing/invalid 're' array")),
             };
             let im = match parse_floats(&req, "im") {
                 Some(v) => v,
@@ -221,10 +439,10 @@ pub fn handle_line(line: &str, svc: &FftService) -> Json {
                 None if (op == "rfft1d" || op == "rfft2d") && dir == Direction::Forward => {
                     vec![0.0; re.len()]
                 }
-                None => return err_json("missing/invalid 'im' array"),
+                None => return Reply::Ready(err_json("missing/invalid 'im' array")),
             };
             if re.len() != im.len() {
-                return err_json("re/im length mismatch");
+                return Reply::Ready(err_json("re/im length mismatch"));
             }
             let (op, shape) = match op {
                 "fft1d" => {
@@ -239,9 +457,7 @@ pub fn handle_line(line: &str, svc: &FftService) -> Json {
                     // packed n/2+1 bins, so n defaults to 2*(len-1)
                     let n = match req.get("n").and_then(|v| v.as_usize()) {
                         Some(n) => n,
-                        None if dir == Direction::Inverse => {
-                            2 * re.len().saturating_sub(1)
-                        }
+                        None if dir == Direction::Inverse => 2 * re.len().saturating_sub(1),
                         None => re.len(),
                     };
                     let len = if dir == Direction::Inverse { n / 2 + 1 } else { n };
@@ -262,7 +478,7 @@ pub fn handle_line(line: &str, svc: &FftService) -> Json {
                 }
             };
             if shape.iter().product::<usize>() != re.len() {
-                return err_json("data length does not match shape");
+                return Reply::Ready(err_json("data length does not match shape"));
             }
             let t0 = Instant::now();
             let fftreq = FftRequest {
@@ -271,17 +487,16 @@ pub fn handle_line(line: &str, svc: &FftService) -> Json {
                 direction: dir,
                 input: PlanarBatch { re, im, shape },
             };
-            match svc.submit(fftreq).and_then(|t| t.wait()) {
-                Err(e) => err_json(e),
-                Ok(out) => Json::obj(vec![
-                    ("ok", Json::Bool(true)),
-                    ("re", Json::Arr(out.re.iter().map(|&x| Json::num(x as f64)).collect())),
-                    ("im", Json::Arr(out.im.iter().map(|&x| Json::num(x as f64)).collect())),
-                    ("latency_ms", Json::num(t0.elapsed().as_secs_f64() * 1e3)),
-                ]),
+            let submitted = match client {
+                Some(c) => svc.submit_as(c, fftreq),
+                None => svc.submit(fftreq),
+            };
+            match submitted {
+                Err(e) => Reply::Ready(err_json(e)),
+                Ok(ticket) => Reply::Fft { ticket, t0 },
             }
         }
-        other => err_json(format!("unknown op '{other}'")),
+        other => Reply::Ready(err_json(format!("unknown op '{other}'"))),
     }
 }
 
@@ -295,5 +510,18 @@ mod tests {
         assert!(Json::parse("nope").is_err());
         let e = err_json("x");
         assert_eq!(e.get("ok"), Some(&Json::Bool(false)));
+    }
+
+    #[test]
+    fn take_line_frames_and_preserves_remainder() {
+        let mut buf = b"{\"op\":\"ping\"}\r\n{\"op\":".to_vec();
+        assert_eq!(take_line(&mut buf).as_deref(), Some("{\"op\":\"ping\"}"));
+        assert_eq!(buf, b"{\"op\":");
+        // no complete line yet: nothing is consumed
+        assert_eq!(take_line(&mut buf), None);
+        assert_eq!(buf, b"{\"op\":");
+        buf.extend_from_slice(b"\"x\"}\n");
+        assert_eq!(take_line(&mut buf).as_deref(), Some("{\"op\":\"x\"}"));
+        assert!(buf.is_empty());
     }
 }

@@ -1,33 +1,54 @@
-//! The FFT service: router + dynamic batcher + execution scheduler.
+//! The FFT service: sharded router + dynamic batcher + execution
+//! scheduler.
 //!
 //! Architecture (vLLM-router-like, on OS threads since the offline
 //! image has no tokio):
 //!
 //! ```text
-//!   clients ──submit()──> [router: plan cache] ──> per-plan queues
-//!                │                                     │
-//!                │ (leader: batch filled?  run inline) │
-//!                │                                     │
-//!                └──> event-driven flusher (deadline) ─┤
-//!                                                      │
-//!                          execution pool ──> PJRT engine (thread-safe)
-//!                                                      │
-//!                              replies via per-request channels
+//!   clients ──submit()/submit_as()──> [quota gate] ──> [router: plan caches]
+//!                │                                          │
+//!                │              hash(queue key) picks a shard
+//!                │                                          │
+//!            ┌── shard 0 ──┐  ┌── shard 1 ──┐ ... ┌── shard N-1 ──┐
+//!            │ queues + cv │  │ queues + cv │     │ queues + cv   │
+//!            │ flusher ────┼──┼─ work-steals due batches ─────────┤
+//!            │ exec pool   │  │ exec pool   │     │ exec pool     │
+//!            └──────┬──────┘  └──────┬──────┘     └──────┬────────┘
+//!                   └────────> PJRT engine (thread-safe) <┘
+//!                                      │
+//!                      replies via per-request channels
 //! ```
+//!
+//! Each shard owns its queue map, condvar, deadline flusher and exec
+//! workers; requests hash to a shard by queue key, so one plan's queue
+//! always lives on one shard (batches never fragment). Flushers steal
+//! due batches from sibling shards so a loaded shard's deadline work
+//! drains even while its own flusher is parked or behind.
+//!
+//! All three plan stores — direct plans, four-step large plans and
+//! registered filter banks — are byte-budgeted LRU caches keyed by
+//! deterministic content fingerprints (`{descriptor}#{fnv1a64}`), with
+//! hit/miss/eviction counters in the metrics snapshot. An evicted
+//! four-step plan is rebuilt transparently at execution time from its
+//! own key; an evicted filter bank must be re-registered (its taps are
+//! client content the service cannot reconstruct).
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::thread;
 use std::time::{Duration, Instant};
 
 use crate::error::{Result, TcFftError};
 
-use super::batcher::{Pending, PlanQueue, ReadyBatch};
+use super::batcher::{drain_due, Pending, PlanQueue, ReadyBatch};
+use super::cache::LruCache;
 use super::metrics::Metrics;
+use super::quota::QuotaGate;
 use crate::large::{FourStepConfig, FourStepPlan, RealFourStepPlan};
 use crate::plan::{Direction, Plan};
 use crate::runtime::{PlanarBatch, Runtime};
+use crate::util::fnv::{fnv1a64, Fnv1a};
 use crate::workload::SpectralConv;
 
 /// A logical FFT request (one sequence).
@@ -87,15 +108,17 @@ pub struct ServiceConfig {
     pub max_wait: Duration,
     /// per-plan queue bound (backpressure)
     pub max_queue: usize,
-    /// execution pool size (overlaps marshalling with PJRT execution)
+    /// execution workers PER SHARD (overlaps marshalling with PJRT
+    /// execution; the engine is thread-safe)
     pub exec_threads: usize,
     /// legacy flusher scan period — ignored since the flusher became
     /// deadline-driven (it now parks until the earliest pending
     /// deadline instead of polling); kept so existing configs build
     pub tick: Duration,
     /// leader execution: the submit() call that fills a batch runs it
-    /// inline on the submitting thread, skipping two thread hand-offs
-    /// (perf iteration 4). Deadline flushes still go through the pool.
+    /// here and now on the submitting thread, skipping two thread
+    /// hand-offs (perf iteration 4). Deadline flushes still go through
+    /// the shard pools.
     pub inline_exec: bool,
     /// batch capacity of the four-step large-FFT queues (`Op::Fft1d` /
     /// `Op::Rfft1d` sizes with no direct artifact). Flushed unpadded —
@@ -103,20 +126,38 @@ pub struct ServiceConfig {
     /// 2^20-point slot would burn a whole transform's worth of work on
     /// zeros.
     pub large_batch: usize,
-    /// largest size the four-step route will serve. Plans are cached
-    /// per (n, algo, dir) and never evicted, and each costs O(n)
-    /// twiddle memory — this bound keeps a client walking the size
-    /// space from ballooning the cache.
+    /// largest size the four-step route will serve (bounds the cost of
+    /// building any single plan; the byte budget below bounds the
+    /// aggregate)
     pub max_large_n: usize,
-    /// most filter banks that may be registered. Banks are cached and
-    /// never evicted (each holds k packed spectra, O(k*n) memory), and
-    /// `register_bank` is reachable over TCP — without this cap a
-    /// client minting fresh names could exhaust memory.
-    pub max_banks: usize,
-    /// most filters one bank may hold (bounds both the registration
-    /// cost — k R2C transforms run synchronously — and the resident
-    /// spectra).
+    /// most filters one bank may hold (bounds the registration cost —
+    /// `k` R2C transforms run synchronously on the registering thread)
     pub max_bank_filters: usize,
+    /// number of independent service shards (queue maps + flushers +
+    /// exec pools); requests hash to a shard by queue key
+    pub shards: usize,
+    /// upper bound on a flusher's park between deadline scans; also
+    /// the worst-case latency for noticing shutdown from a fully idle
+    /// park (shutdown additionally notifies every shard's condvar)
+    pub park_cap: Duration,
+    /// byte budget of the direct-plan cache (metadata-sized entries)
+    pub plan_cache_bytes: usize,
+    /// byte budget of the four-step plan cache (each plan holds O(n)
+    /// twiddles + scratch; evicted plans rebuild transparently)
+    pub large_cache_bytes: usize,
+    /// byte budget of the filter-bank cache (each bank holds `k`
+    /// packed spectra; evicted banks must be re-registered)
+    pub bank_cache_bytes: usize,
+    /// per-client admission quota: sustained requests/sec per client
+    /// id. `<= 0` disables admission control (the default) — quota
+    /// applies only to `submit_as`/`submit_convolve_as` callers with a
+    /// client id (the TCP front end tags each connection)
+    pub quota_rate: f64,
+    /// token-bucket burst size per client (max requests admitted
+    /// back-to-back before the rate limit bites)
+    pub quota_burst: f64,
+    /// per-reservoir sample capacity of the metrics windows
+    pub metrics_reservoir: usize,
 }
 
 impl Default for ServiceConfig {
@@ -127,15 +168,22 @@ impl Default for ServiceConfig {
             // PJRT executions are thread-safe, but on the CPU backend
             // concurrent executes contend for the same Eigen pool and
             // lose ~2x (measured, EXPERIMENTS.md SPerf iteration 3) —
-            // default to one execution worker; raise on real multi-die
-            // hardware
+            // default to one execution worker per shard; raise on real
+            // multi-die hardware
             exec_threads: 1,
             tick: Duration::from_micros(200),
             inline_exec: true,
             large_batch: 4,
             max_large_n: 1 << 24,
-            max_banks: 64,
             max_bank_filters: 64,
+            shards: 4,
+            park_cap: Duration::from_millis(20),
+            plan_cache_bytes: 1 << 20,
+            large_cache_bytes: 512 << 20,
+            bank_cache_bytes: 64 << 20,
+            quota_rate: 0.0,
+            quota_burst: 32.0,
+            metrics_reservoir: crate::util::stats::DEFAULT_RESERVOIR,
         }
     }
 }
@@ -174,15 +222,13 @@ enum Route {
     Large { key: String, tail: Vec<usize> },
 }
 
-/// A cached batch-executing engine behind a queue key: the complex
-/// four-step engine, its real-input (R2C/C2R) wrapper, or a registered
-/// spectral filter bank. All execute whole `PlanarBatch`es, so
-/// `run_batch` dispatches them uniformly.
+/// A cached batch-executing four-step engine behind a queue key: the
+/// complex engine or its real-input (R2C/C2R) wrapper. Filter banks
+/// live in their own cache (`Shared::banks`).
 #[derive(Clone)]
 enum LargePlan {
     Complex(Arc<FourStepPlan>),
     Real(Arc<RealFourStepPlan>),
-    Conv(Arc<SpectralConv>),
 }
 
 impl LargePlan {
@@ -190,60 +236,130 @@ impl LargePlan {
         match self {
             LargePlan::Complex(p) => p.execute_batch(rt, input),
             LargePlan::Real(p) => p.execute_batch(rt, input),
-            LargePlan::Conv(c) => c.convolve_batch(rt, input),
+        }
+    }
+
+    fn memory_bytes(&self) -> usize {
+        match self {
+            LargePlan::Complex(p) => p.memory_bytes(),
+            LargePlan::Real(p) => p.memory_bytes(),
         }
     }
 }
 
-struct Shared {
+/// A registered filter bank plus the content fingerprint that makes
+/// re-registration idempotent (same name + same content = same bank).
+#[derive(Clone)]
+struct BankEntry {
+    conv: Arc<SpectralConv>,
+    fingerprint: u64,
+}
+
+/// One service shard: its own queue map and wakeup condvar. The
+/// shard's flusher parks on `pending_cv`; `enqueue` and `shutdown`
+/// notify it.
+struct Shard {
     queues: Mutex<HashMap<String, PlanQueue>>,
-    /// signalled when a request is enqueued; the flusher parks on this
-    /// instead of polling (perf iteration 5: a 200 us polling loop
-    /// stole cycles from XLA's execution pool and slowed device time
-    /// by ~15%)
-    pending_cv: std::sync::Condvar,
-    plans: Mutex<HashMap<String, Plan>>,
-    /// cached four-step plans for large sizes, keyed by the queue key
-    /// (`4step:{n}:{algo}:{dir}` complex, `4stepr:...` real).
-    /// `run_batch` consults this map to decide whether a ready batch
-    /// executes through a batched four-step engine or directly through
-    /// the runtime.
-    large_plans: Mutex<HashMap<String, LargePlan>>,
+    pending_cv: Condvar,
+}
+
+struct Shared {
+    shards: Vec<Shard>,
+    /// direct-plan cache (artifact-bound `Plan`s, metadata-sized)
+    plans: LruCache<Plan>,
+    /// four-step plan cache, keyed `4step:{n}:{algo}:{dir}#{fp}`
+    /// (complex) / `4stepr:...` (real). `run_batch` consults this to
+    /// decide whether a ready batch executes through a batched
+    /// four-step engine or directly through the runtime — and rebuilds
+    /// the plan from its key on a post-eviction miss.
+    large_plans: LruCache<LargePlan>,
+    /// registered filter banks, keyed `conv:{name}`
+    banks: LruCache<BankEntry>,
+    quota: QuotaGate,
     metrics: Arc<Metrics>,
     next_id: AtomicU64,
     shutting_down: AtomicBool,
     cfg: ServiceConfig,
 }
 
-/// Collect all due batches (queue lock held only while draining).
-fn collect_due(shared: &Shared, force: bool) -> Vec<(String, ReadyBatch)> {
-    let now = Instant::now();
-    let mut ready = Vec::new();
-    let mut queues = shared.queues.lock().unwrap();
-    for q in queues.values_mut() {
-        loop {
-            let due = if force {
-                !q.is_empty()
-            } else {
-                q.should_flush(now, shared.cfg.max_wait)
-            };
-            if !due {
-                break;
-            }
-            match q.flush() {
-                Some(b) => ready.push((q.key.clone(), b)),
-                None => break,
-            }
-        }
+impl Shared {
+    /// The shard a queue key lives on (stable hash, so every request
+    /// for one plan always lands on the same shard's queues).
+    fn shard_for(&self, key: &str) -> usize {
+        (fnv1a64(key.as_bytes()) % self.shards.len() as u64) as usize
     }
-    ready
 }
 
-/// Scan all queues and ship due batches to the execution pool.
-fn flush_due(shared: &Shared, tx: &mpsc::Sender<(String, ReadyBatch)>, force: bool) {
-    for item in collect_due(shared, force) {
-        let _ = tx.send(item);
+/// Suffix a human-readable cache descriptor with its own FNV-1a 64
+/// fingerprint — the deterministic content-fingerprint key contract:
+/// the same descriptor always mints the same key, across processes and
+/// across an eviction/rebuild cycle.
+fn fingerprint_key(desc: &str) -> String {
+    format!("{desc}#{:016x}", fnv1a64(desc.as_bytes()))
+}
+
+/// Drain every due batch from one shard (`force` drains everything).
+fn collect_due_shard(shared: &Shared, si: usize, force: bool) -> Vec<(String, ReadyBatch)> {
+    let mut queues = shared.shards[si].queues.lock().unwrap();
+    drain_due(&mut queues, Instant::now(), shared.cfg.max_wait, force)
+}
+
+/// Rebuild an evicted four-step plan from its queue key (the key IS
+/// the plan descriptor — that is what the fingerprint-key contract
+/// buys) and re-insert it.
+fn rebuild_large(rt: &Runtime, shared: &Shared, key: &str) -> Result<LargePlan> {
+    let desc = key.split('#').next().unwrap_or(key);
+    let parts: Vec<&str> = desc.split(':').collect();
+    crate::ensure!(parts.len() == 4, "malformed four-step queue key '{key}'");
+    let real = parts[0] == "4stepr";
+    let n: usize = parts[1].parse()?;
+    let inverse = parts[3] == "inv";
+    let cfg = FourStepConfig { algo: parts[2].to_string(), ..FourStepConfig::default() };
+    let plan = if real {
+        LargePlan::Real(Arc::new(RealFourStepPlan::with_config(rt, n, inverse, cfg)?))
+    } else {
+        LargePlan::Complex(Arc::new(FourStepPlan::with_config(rt, n, inverse, cfg)?))
+    };
+    shared.metrics.large_rebuilds.fetch_add(1, Ordering::Relaxed);
+    let bytes = plan.memory_bytes();
+    let (plan, _inserted) = shared.large_plans.get_or_insert(key, plan, bytes);
+    Ok(plan)
+}
+
+/// Execute a ready batch through whatever its key routes to: a filter
+/// bank, a four-step engine (rebuilt transparently if evicted), or a
+/// direct artifact.
+fn execute_routed(
+    rt: &Runtime,
+    shared: &Shared,
+    key: &str,
+    input: PlanarBatch,
+) -> Result<PlanarBatch> {
+    if let Some(name) = key.strip_prefix("conv:") {
+        let entry = shared.banks.get(key).ok_or_else(|| {
+            TcFftError::NoArtifact(format!(
+                "filter bank '{name}' was evicted from the bank cache; re-register it"
+            ))
+        })?;
+        // Re-validate at execution time: the bank may have been
+        // evicted and re-registered with a different signal length
+        // while these requests sat in the queue.
+        crate::ensure!(
+            input.shape.len() == 2 && input.shape[1] == entry.conv.n(),
+            "queued convolve batch shape {:?} no longer matches bank '{name}' (n = {})",
+            input.shape,
+            entry.conv.n()
+        );
+        return entry.conv.convolve_batch(rt, input);
     }
+    if key.starts_with("4step") {
+        let plan = match shared.large_plans.get(key) {
+            Some(p) => p,
+            None => rebuild_large(rt, shared, key)?,
+        };
+        return plan.execute_batch(rt, input);
+    }
+    rt.execute(key, input).map(|(out, _stats)| out)
 }
 
 fn run_batch(rt: &Runtime, shared: &Shared, key: &str, batch: ReadyBatch) {
@@ -256,14 +372,8 @@ fn run_batch(rt: &Runtime, shared: &Shared, key: &str, batch: ReadyBatch) {
         .metrics
         .padded_slots
         .fetch_add(batch.padded as u64, Ordering::Relaxed);
-    // four-step queues execute through the cached batched engine; every
-    // other key is a direct artifact execution
-    let large = shared.large_plans.lock().unwrap().get(key).cloned();
     let t_exec = Instant::now();
-    let result = match large {
-        Some(plan) => plan.execute_batch(rt, batch.input),
-        None => rt.execute(key, batch.input).map(|(out, _stats)| out),
-    };
+    let result = execute_routed(rt, shared, key, batch.input);
     let exec_s = t_exec.elapsed().as_secs_f64();
     shared.metrics.record_exec(exec_s);
     match result {
@@ -292,95 +402,153 @@ fn run_batch(rt: &Runtime, shared: &Shared, key: &str, batch: ReadyBatch) {
     }
 }
 
+/// One shard's flusher loop: flush own due batches, steal due batches
+/// from sibling shards, park until the earliest pending deadline.
+fn flusher_loop(sh: &Shared, si: usize, tx: &mpsc::Sender<(String, ReadyBatch)>) {
+    const PARK_FLOOR: Duration = Duration::from_micros(50);
+    let n = sh.shards.len();
+    while !sh.shutting_down.load(Ordering::SeqCst) {
+        for item in collect_due_shard(sh, si, false) {
+            let _ = tx.send(item);
+        }
+        // Work stealing: drain due batches a sibling's flusher has not
+        // picked up yet (it may be parked, or behind on a burst) into
+        // THIS shard's exec channel. try_lock only — if the sibling's
+        // own flusher or a leader holds the lock, the work is already
+        // being handled. Never holds two queue locks at once.
+        for j in (0..n).filter(|&j| j != si) {
+            let stolen = match sh.shards[j].queues.try_lock() {
+                Ok(mut queues) => drain_due(&mut queues, Instant::now(), sh.cfg.max_wait, false),
+                Err(_) => continue,
+            };
+            if !stolen.is_empty() {
+                sh.metrics
+                    .stolen_batches
+                    .fetch_add(stolen.len() as u64, Ordering::Relaxed);
+                for item in stolen {
+                    let _ = tx.send(item);
+                }
+            }
+        }
+        // Park until the earliest pending deadline across ALL shards
+        // (sibling deadlines bound the next steal scan). Sibling maps
+        // are snapshotted briefly first; the own-shard lock is the one
+        // the condvar parks on.
+        let now = Instant::now();
+        let mut next: Option<Duration> = None;
+        for j in (0..n).filter(|&j| j != si) {
+            if let Ok(queues) = sh.shards[j].queues.try_lock() {
+                for q in queues.values() {
+                    if let Some(age) = q.oldest_age(now) {
+                        let d = sh.cfg.max_wait.saturating_sub(age);
+                        next = Some(next.map_or(d, |x| x.min(d)));
+                    }
+                }
+            }
+        }
+        let guard = sh.shards[si].queues.lock().unwrap();
+        // shutdown() sets the flag BEFORE taking this lock to notify,
+        // so re-checking here (under the lock, right before parking)
+        // closes the lost-wakeup window where the notify fires while
+        // this thread is still in the scan above
+        if sh.shutting_down.load(Ordering::SeqCst) {
+            break;
+        }
+        for q in guard.values() {
+            if let Some(age) = q.oldest_age(now) {
+                let d = sh.cfg.max_wait.saturating_sub(age);
+                next = Some(next.map_or(d, |x| x.min(d)));
+            }
+        }
+        let park = next
+            .unwrap_or(sh.cfg.park_cap)
+            .min(sh.cfg.park_cap)
+            .max(PARK_FLOOR);
+        let _ = sh.shards[si].pending_cv.wait_timeout(guard, park).unwrap();
+    }
+    // final drain: ship everything still pending on this shard
+    for item in collect_due_shard(sh, si, true) {
+        let _ = tx.send(item);
+    }
+}
+
 /// The FFT service. Create with [`FftService::start`].
 pub struct FftService {
     rt: Arc<Runtime>,
     shared: Arc<Shared>,
-    batch_tx: mpsc::Sender<(String, ReadyBatch)>,
-    flusher: Mutex<Option<thread::JoinHandle<()>>>,
+    /// per-shard senders into the exec pools. NOT inside `Shared`:
+    /// exec workers hold `Arc<Shared>`, and a sender living there
+    /// would keep its own channel open forever (workers would never
+    /// see disconnect on drop).
+    shard_txs: Vec<mpsc::Sender<(String, ReadyBatch)>>,
+    flushers: Mutex<Vec<thread::JoinHandle<()>>>,
     exec_threads: Mutex<Vec<thread::JoinHandle<()>>>,
 }
 
 impl FftService {
-    /// Spawn the service threads (flusher + execution workers) over a
-    /// runtime. Shut down with [`shutdown`](Self::shutdown) or by
-    /// dropping the service.
+    /// Spawn the service threads (per-shard flushers + execution
+    /// workers) over a runtime. Shut down with
+    /// [`shutdown`](Self::shutdown) or by dropping the service.
     pub fn start(rt: Arc<Runtime>, cfg: ServiceConfig) -> FftService {
+        let metrics = Arc::new(Metrics::with_reservoir(cfg.metrics_reservoir));
+        let n_shards = cfg.shards.max(1);
+        let shards = (0..n_shards)
+            .map(|_| Shard { queues: Mutex::new(HashMap::new()), pending_cv: Condvar::new() })
+            .collect();
         let shared = Arc::new(Shared {
-            queues: Mutex::new(HashMap::new()),
-            pending_cv: std::sync::Condvar::new(),
-            plans: Mutex::new(HashMap::new()),
-            large_plans: Mutex::new(HashMap::new()),
-            metrics: Arc::new(Metrics::new()),
+            shards,
+            plans: LruCache::with_stats(cfg.plan_cache_bytes, metrics.plan_cache.clone()),
+            large_plans: LruCache::with_stats(cfg.large_cache_bytes, metrics.large_cache.clone()),
+            banks: LruCache::with_stats(cfg.bank_cache_bytes, metrics.bank_cache.clone()),
+            quota: QuotaGate::new(cfg.quota_rate, cfg.quota_burst),
+            metrics,
             next_id: AtomicU64::new(1),
             shutting_down: AtomicBool::new(false),
             cfg,
         });
-        let (batch_tx, batch_rx) = mpsc::channel::<(String, ReadyBatch)>();
-
-        // execution workers: drain ready batches onto the PJRT actor
-        let batch_rx = Arc::new(Mutex::new(batch_rx));
-        let n_exec = shared.cfg.exec_threads;
-        let exec_threads = (0..n_exec)
-            .map(|i| {
-                let rx = Arc::clone(&batch_rx);
+        let mut shard_txs = Vec::with_capacity(n_shards);
+        let mut flushers = Vec::with_capacity(n_shards);
+        let mut exec_threads = Vec::new();
+        for si in 0..n_shards {
+            let (tx, rx) = mpsc::channel::<(String, ReadyBatch)>();
+            let rx = Arc::new(Mutex::new(rx));
+            for wi in 0..shared.cfg.exec_threads.max(1) {
+                let rx = Arc::clone(&rx);
                 let rt2 = Arc::clone(&rt);
                 let sh = Arc::clone(&shared);
+                exec_threads.push(
+                    thread::Builder::new()
+                        .name(format!("tcfft-exec-{si}-{wi}"))
+                        .spawn(move || loop {
+                            let msg = { rx.lock().unwrap().recv() };
+                            match msg {
+                                Err(_) => break,
+                                Ok((key, batch)) => run_batch(&rt2, &sh, &key, batch),
+                            }
+                        })
+                        .expect("spawn exec worker"),
+                );
+            }
+            let sh = Arc::clone(&shared);
+            let ftx = tx.clone();
+            flushers.push(
                 thread::Builder::new()
-                    .name(format!("tcfft-exec-{i}"))
-                    .spawn(move || loop {
-                        let msg = { rx.lock().unwrap().recv() };
-                        match msg {
-                            Err(_) => break,
-                            Ok((key, batch)) => run_batch(&rt2, &sh, &key, batch),
-                        }
-                    })
-                    .expect("spawn exec worker")
-            })
-            .collect();
-
-        // flusher thread: owns only Shared + the batch sender (no Arc
-        // cycle with the service)
-        let sh = Arc::clone(&shared);
-        let tx = batch_tx.clone();
-        let flusher = thread::Builder::new()
-            .name("tcfft-flusher".into())
-            .spawn(move || {
-                // Deadline-driven: flush everything already due, THEN
-                // park until the earliest pending deadline (the pre-PR
-                // flusher slept a full tick before flushing, taxing
-                // batches already past max_wait with up to a tick of
-                // extra latency). The park is capped so shutdown stays
-                // responsive and floored so a deadline landing mid-scan
-                // cannot spin the thread.
-                const PARK_CAP: Duration = Duration::from_millis(20);
-                const PARK_FLOOR: Duration = Duration::from_micros(50);
-                while !sh.shutting_down.load(Ordering::SeqCst) {
-                    flush_due(&sh, &tx, false);
-                    let now = Instant::now();
-                    let guard = sh.queues.lock().unwrap();
-                    let next_deadline = guard
-                        .values()
-                        .filter_map(|q| q.oldest_age(now))
-                        .map(|age| sh.cfg.max_wait.saturating_sub(age))
-                        .min();
-                    let park = next_deadline.unwrap_or(PARK_CAP).min(PARK_CAP).max(PARK_FLOOR);
-                    let _ = sh.pending_cv.wait_timeout(guard, park).unwrap();
-                }
-                flush_due(&sh, &tx, true); // final drain
-            })
-            .expect("spawn flusher");
-
+                    .name(format!("tcfft-flusher-{si}"))
+                    .spawn(move || flusher_loop(&sh, si, &ftx))
+                    .expect("spawn flusher"),
+            );
+            shard_txs.push(tx);
+        }
         FftService {
             rt,
             shared,
-            batch_tx,
-            flusher: Mutex::new(Some(flusher)),
+            shard_txs,
+            flushers: Mutex::new(flushers),
             exec_threads: Mutex::new(exec_threads),
         }
     }
 
-    /// The service's live metrics (counters + latency summaries).
+    /// The service's live metrics (counters + latency reservoirs).
     pub fn metrics(&self) -> Arc<Metrics> {
         Arc::clone(&self.shared.metrics)
     }
@@ -390,20 +558,23 @@ impl FftService {
         Arc::clone(&self.rt)
     }
 
+    /// Number of shards the service is running.
+    pub fn shards(&self) -> usize {
+        self.shared.shards.len()
+    }
+
     /// Resolve (and cache) the plan for a request shape.
     fn plan_for(&self, req: &FftRequest) -> Result<Plan> {
         let inverse = req.direction == Direction::Inverse;
-        let cache_key = match req.op {
+        let desc = match req.op {
             Op::Fft1d { n } => format!("1d:{n}:{}:{}", req.algo, inverse),
             Op::Fft2d { nx, ny } => format!("2d:{nx}x{ny}:{}:{}", req.algo, inverse),
             Op::Rfft1d { n } => format!("r1d:{n}:{}:{}", req.algo, inverse),
             Op::Rfft2d { nx, ny } => format!("r2d:{nx}x{ny}:{}:{}", req.algo, inverse),
         };
-        {
-            let plans = self.shared.plans.lock().unwrap();
-            if let Some(p) = plans.get(&cache_key) {
-                return Ok(p.clone());
-            }
+        let cache_key = fingerprint_key(&desc);
+        if let Some(p) = self.shared.plans.get(&cache_key) {
+            return Ok(p);
         }
         let plan = match req.op {
             Op::Fft1d { n } => {
@@ -419,11 +590,8 @@ impl FftService {
                 Plan::rfft2d_algo(&self.rt.registry, nx, ny, 1, &req.algo, req.direction)?
             }
         };
-        self.shared
-            .plans
-            .lock()
-            .unwrap()
-            .insert(cache_key, plan.clone());
+        let bytes = plan.memory_bytes();
+        let (plan, _inserted) = self.shared.plans.get_or_insert(&cache_key, plan, bytes);
         Ok(plan)
     }
 
@@ -459,11 +627,10 @@ impl FftService {
 
     /// Find or build the cached four-step plan for (op, n, algo, dir).
     fn large_route_for(&self, n: usize, req: &FftRequest) -> Result<Route> {
-        // Only known algos may mint cache entries: plans cost megabytes
-        // of twiddle tables and are never evicted, so an unvalidated
-        // string from the TCP surface must not grow `large_plans` (and
-        // a typo should fail loudly, like the direct-artifact path,
-        // instead of silently computing with the tc fallback).
+        // Only known algos may mint cache entries: a typo should fail
+        // loudly, like the direct-artifact path, instead of silently
+        // computing with the tc fallback — and an unvalidated string
+        // from the TCP surface must not mint cache keys.
         if !matches!(req.algo.as_str(), "tc" | "tc_split" | "r2") {
             return Err(TcFftError::NoArtifact(format!(
                 "n={n} algo={} (unknown algo has no four-step route)",
@@ -473,44 +640,82 @@ impl FftService {
         let inverse = req.direction == Direction::Inverse;
         let real = matches!(req.op, Op::Rfft1d { .. });
         let dir = if inverse { "inv" } else { "fwd" };
-        let key = if real {
+        let desc = if real {
             format!("4stepr:{n}:{}:{dir}", req.algo)
         } else {
             format!("4step:{n}:{}:{dir}", req.algo)
         };
+        let key = fingerprint_key(&desc);
         // the per-request shape the submit path validates against:
         // C2R consumes packed spectra, everything else full rows
         let tail = if real && inverse { vec![n / 2 + 1] } else { vec![n] };
-        {
-            let cache = self.shared.large_plans.lock().unwrap();
-            if cache.contains_key(&key) {
-                return Ok(Route::Large { key, tail });
-            }
+        if self.shared.large_plans.get(&key).is_some() {
+            return Ok(Route::Large { key, tail });
         }
-        // build outside the lock (twiddle precompute is real work);
-        // a racing builder just loses to or_insert
+        // build outside any lock (twiddle precompute is real work); a
+        // racing builder loses to get_or_insert and drops its copy
         let cfg = FourStepConfig { algo: req.algo.clone(), ..FourStepConfig::default() };
         let plan = if real {
             LargePlan::Real(Arc::new(RealFourStepPlan::with_config(&self.rt, n, inverse, cfg)?))
         } else {
             LargePlan::Complex(Arc::new(FourStepPlan::with_config(&self.rt, n, inverse, cfg)?))
         };
-        self.shared
-            .large_plans
-            .lock()
-            .unwrap()
-            .entry(key.clone())
-            .or_insert(plan);
+        let bytes = plan.memory_bytes();
+        let _ = self.shared.large_plans.get_or_insert(&key, plan, bytes);
         Ok(Route::Large { key, tail })
     }
 
-    /// Submit one request; returns a ticket to wait on.
+    /// Submit one request; returns a ticket to wait on. Unmetered (no
+    /// client id): in-process callers bypass admission control.
     pub fn submit(&self, req: FftRequest) -> Result<Ticket> {
+        self.submit_from(None, req)
+    }
+
+    /// [`submit`](Self::submit) on behalf of a client id (the TCP
+    /// front end passes its connection id). Subject to the per-client
+    /// admission quota when `ServiceConfig::quota_rate` is set.
+    pub fn submit_as(&self, client: u64, req: FftRequest) -> Result<Ticket> {
+        self.submit_from(Some(client), req)
+    }
+
+    fn submit_from(&self, client: Option<u64>, req: FftRequest) -> Result<Ticket> {
         if self.shared.shutting_down.load(Ordering::SeqCst) {
             return Err(TcFftError::ShuttingDown);
         }
+        self.admit(client)?;
         let route = self.route_for(&req)?;
+
+        // normalize input to [1, ...]
+        let mut shape = vec![1usize];
+        shape.extend_from_slice(&req.input.shape);
+        let input = PlanarBatch { re: req.input.re, im: req.input.im, shape };
+        let (queue_key, capacity, pad, large) = match &route {
+            Route::Direct { key, capacity, tail } => {
+                crate::ensure!(
+                    input.shape[1..] == tail[..],
+                    "request shape {:?} does not match plan {:?}",
+                    &input.shape[1..],
+                    &tail[..]
+                );
+                (key.clone(), *capacity, true, false)
+            }
+            Route::Large { key, tail } => {
+                crate::ensure!(
+                    input.shape[1..] == tail[..],
+                    "request shape {:?} does not match four-step tail {:?}",
+                    &input.shape[1..],
+                    &tail[..]
+                );
+                (key.clone(), self.shared.cfg.large_batch.max(1), false, true)
+            }
+        };
+        // routed AND shape-validated: only now may counters move — a
+        // malformed request must leave every counter untouched (the
+        // ordering submit_convolve() documents; regression-tested)
         self.shared.metrics.requests.fetch_add(1, Ordering::Relaxed);
+        if large {
+            self.shared.metrics.large_requests.fetch_add(1, Ordering::Relaxed);
+        }
         match req.op {
             Op::Rfft1d { .. } => {
                 self.shared.metrics.rfft_requests.fetch_add(1, Ordering::Relaxed);
@@ -520,39 +725,26 @@ impl FftService {
             }
             _ => {}
         }
-
-        // normalize input to [1, ...]
-        let mut shape = vec![1usize];
-        shape.extend_from_slice(&req.input.shape);
-        let input = PlanarBatch { re: req.input.re, im: req.input.im, shape };
-        let (queue_key, capacity, pad) = match &route {
-            Route::Direct { key, capacity, tail } => {
-                crate::ensure!(
-                    input.shape[1..] == tail[..],
-                    "request shape {:?} does not match plan {:?}",
-                    &input.shape[1..],
-                    &tail[..]
-                );
-                (key.clone(), *capacity, true)
-            }
-            Route::Large { key, tail } => {
-                crate::ensure!(
-                    input.shape[1..] == tail[..],
-                    "request shape {:?} does not match four-step tail {:?}",
-                    &input.shape[1..],
-                    &tail[..]
-                );
-                self.shared.metrics.large_requests.fetch_add(1, Ordering::Relaxed);
-                (key.clone(), self.shared.cfg.large_batch.max(1), false)
-            }
-        };
         self.enqueue(queue_key, capacity, pad, input)
+    }
+
+    /// Token-bucket admission for metered callers; `None` (in-process)
+    /// is always admitted. Quota rejections are counted separately
+    /// from backpressure and never reach routing.
+    fn admit(&self, client: Option<u64>) -> Result<()> {
+        if let Some(c) = client {
+            if !self.shared.quota.admit(c) {
+                self.shared.metrics.quota_rejected.fetch_add(1, Ordering::Relaxed);
+                return Err(TcFftError::QuotaExceeded);
+            }
+        }
+        Ok(())
     }
 
     /// Shared enqueue tail of [`submit`](Self::submit) and
     /// [`submit_convolve`](Self::submit_convolve): queue the pending
-    /// request (backpressure-bounded) and run the leader-execution /
-    /// opportunistic-flush policy.
+    /// request on its key's shard (backpressure-bounded) and run the
+    /// leader-execution / opportunistic-flush policy.
     fn enqueue(
         &self,
         queue_key: String,
@@ -563,9 +755,11 @@ impl FftService {
         let id = self.shared.next_id.fetch_add(1, Ordering::SeqCst);
         let (tx, rx) = mpsc::channel();
         let pending = Pending { id, input, enqueued: Instant::now(), reply: tx };
+        let si = self.shared.shard_for(&queue_key);
+        let shard = &self.shared.shards[si];
         let mut full_queue = false;
         {
-            let mut queues = self.shared.queues.lock().unwrap();
+            let mut queues = shard.queues.lock().unwrap();
             let q = queues.entry(queue_key.clone()).or_insert_with(|| {
                 if pad {
                     PlanQueue::new(queue_key.clone(), capacity, self.shared.cfg.max_queue)
@@ -578,20 +772,22 @@ impl FftService {
                 self.shared.metrics.rejected.fetch_add(1, Ordering::Relaxed);
                 let _ = reject.reply.send(Err(TcFftError::QueueFull));
             }
-            self.shared.pending_cv.notify_one();
+            shard.pending_cv.notify_one();
         }
         if !full_queue {
             if self.shared.cfg.inline_exec {
-                // leader execution: if this submit filled a batch, run it
-                // here and now — no hand-off, no wakeups
-                let ready = collect_due(&self.shared, false);
+                // leader execution: if this submit filled a batch, run
+                // it here and now — no hand-off, no wakeups
+                let ready = collect_due_shard(&self.shared, si, false);
                 for (key, batch) in ready {
                     run_batch(&self.rt, &self.shared, &key, batch);
                 }
             } else {
-                // opportunistic flush for full batches (next tick would
-                // add latency)
-                flush_due(&self.shared, &self.batch_tx, false);
+                // opportunistic flush for full batches (the deadline
+                // park would add latency)
+                for item in collect_due_shard(&self.shared, si, false) {
+                    let _ = self.shard_txs[si].send(item);
+                }
             }
         }
         Ok(Ticket { id, rx })
@@ -602,15 +798,21 @@ impl FftService {
     /// once (one batched R2C over the taps) and applied to queued
     /// signals by [`submit_convolve`](Self::submit_convolve).
     ///
-    /// Registration is guarded like the four-step route, because banks
-    /// are cached, never evicted, and reachable over TCP: only known
-    /// algos (`tc` | `tc_split` | `r2`), `n` a power of two within
-    /// `ServiceConfig::max_large_n`, at most
-    /// `ServiceConfig::max_bank_filters` filters per bank and
-    /// `ServiceConfig::max_banks` banks total (each bank holds `k`
-    /// packed spectra and its registration runs `k` R2C transforms
-    /// synchronously), and a name that is not already taken
-    /// (re-registering under a live queue key would let
+    /// Registration is guarded because it is reachable over TCP: only
+    /// known algos (`tc` | `tc_split` | `r2`), `n` a power of two
+    /// within `ServiceConfig::max_large_n`, and at most
+    /// `ServiceConfig::max_bank_filters` filters per bank (each
+    /// registration runs `k` R2C transforms synchronously). Aggregate
+    /// memory is bounded by the bank cache's byte budget
+    /// (`ServiceConfig::bank_cache_bytes`) — LRU banks are evicted to
+    /// admit new ones, and a single bank larger than the whole budget
+    /// is refused outright.
+    ///
+    /// Identity follows the content-fingerprint contract:
+    /// re-registering the same name with the SAME content (n, algo,
+    /// taps) is an idempotent success — the natural recovery after an
+    /// eviction — while the same name with DIFFERENT content is an
+    /// error (replacing a bank under a live queue key would let
     /// differently-shaped requests meet in one batch). Returns the
     /// filter count `k`.
     pub fn register_filter_bank<T: AsRef<[f32]>>(
@@ -640,40 +842,43 @@ impl FftService {
             self.shared.cfg.max_bank_filters
         );
         let key = format!("conv:{name}");
-        {
-            let cache = self.shared.large_plans.lock().unwrap();
-            crate::ensure!(!cache.contains_key(&key), "filter bank '{name}' already registered");
-            let banks = cache.keys().filter(|b| b.starts_with("conv:")).count();
-            crate::ensure!(
-                banks < self.shared.cfg.max_banks,
-                "filter bank '{name}': bank cap ({}) reached",
-                self.shared.cfg.max_banks
-            );
+        let fp = bank_fingerprint(n, algo, filters);
+        if let Some(existing) = self.shared.banks.peek(&key) {
+            if existing.fingerprint == fp {
+                return Ok(existing.conv.k()); // idempotent re-registration
+            }
+            crate::bail!("filter bank '{name}' already registered with different content");
         }
-        // build outside the lock (k R2C transforms of the taps); the
-        // re-checks under the lock below catch racing registrations
+        // build outside any lock (k R2C transforms of the taps); a
+        // racing same-content registration loses to get_or_insert
         let bank = Arc::new(SpectralConv::new_bank_algo(&self.rt, n, filters, algo)?);
-        let k = bank.k();
-        let mut cache = self.shared.large_plans.lock().unwrap();
-        crate::ensure!(!cache.contains_key(&key), "filter bank '{name}' already registered");
-        let banks = cache.keys().filter(|b| b.starts_with("conv:")).count();
+        let bytes = bank.memory_bytes();
         crate::ensure!(
-            banks < self.shared.cfg.max_banks,
-            "filter bank '{name}': bank cap ({}) reached",
-            self.shared.cfg.max_banks
+            bytes <= self.shared.cfg.bank_cache_bytes,
+            "filter bank '{name}': ~{bytes} bytes exceeds the whole bank budget ({})",
+            self.shared.cfg.bank_cache_bytes
         );
-        cache.insert(key, LargePlan::Conv(bank));
+        let k = bank.k();
+        let entry = BankEntry { conv: bank, fingerprint: fp };
+        let (existing, inserted) = self.shared.banks.get_or_insert(&key, entry, bytes);
+        if !inserted {
+            // racing registration landed first; same content is fine
+            if existing.fingerprint == fp {
+                return Ok(existing.conv.k());
+            }
+            crate::bail!("filter bank '{name}' already registered with different content");
+        }
         Ok(k)
     }
 
     /// The registered bank's (n, k), if any — the TCP front end uses
-    /// this to validate request shapes before queuing.
+    /// this to validate request shapes before queuing. Does not touch
+    /// LRU order or hit/miss counters.
     pub fn filter_bank_shape(&self, name: &str) -> Option<(usize, usize)> {
-        let cache = self.shared.large_plans.lock().unwrap();
-        match cache.get(&format!("conv:{name}")) {
-            Some(LargePlan::Conv(c)) => Some((c.n(), c.k())),
-            _ => None,
-        }
+        self.shared
+            .banks
+            .peek(&format!("conv:{name}"))
+            .map(|e| (e.conv.n(), e.conv.k()))
     }
 
     /// Submit one real signal (shape `[n]`) to a registered filter
@@ -681,21 +886,36 @@ impl FftService {
     /// for the signal, at unit scale. Requests ride the same bounded
     /// unpadded queues as the four-step route (the bank's
     /// `convolve_batch` takes any row count), so backpressure
-    /// (`QueueFull`) and batching behave identically.
+    /// (`QueueFull`) and batching behave identically. Unmetered; see
+    /// [`submit_convolve_as`](Self::submit_convolve_as).
     pub fn submit_convolve(&self, bank: &str, input: PlanarBatch) -> Result<Ticket> {
+        self.submit_convolve_from(None, bank, input)
+    }
+
+    /// [`submit_convolve`](Self::submit_convolve) on behalf of a
+    /// client id, subject to the same admission quota as
+    /// [`submit_as`](Self::submit_as).
+    pub fn submit_convolve_as(&self, client: u64, bank: &str, input: PlanarBatch) -> Result<Ticket> {
+        self.submit_convolve_from(Some(client), bank, input)
+    }
+
+    fn submit_convolve_from(
+        &self,
+        client: Option<u64>,
+        bank: &str,
+        input: PlanarBatch,
+    ) -> Result<Ticket> {
         if self.shared.shutting_down.load(Ordering::SeqCst) {
             return Err(TcFftError::ShuttingDown);
         }
+        self.admit(client)?;
         let key = format!("conv:{bank}");
-        let n = {
-            let cache = self.shared.large_plans.lock().unwrap();
-            match cache.get(&key) {
-                Some(LargePlan::Conv(c)) => c.n(),
-                _ => {
-                    return Err(TcFftError::NoArtifact(format!(
-                        "no filter bank named '{bank}' is registered"
-                    )))
-                }
+        let n = match self.shared.banks.get(&key) {
+            Some(entry) => entry.conv.n(),
+            None => {
+                return Err(TcFftError::NoArtifact(format!(
+                    "no filter bank named '{bank}' is registered"
+                )))
             }
         };
         let mut shape = vec![1usize];
@@ -823,21 +1043,47 @@ impl FftService {
         self.blocking_rows(x, Op::Fft2d { nx, ny }, algo, dir)
     }
 
-    /// Graceful shutdown: drain queues, stop threads.
+    /// Graceful shutdown: wake every parked flusher immediately (a
+    /// flusher otherwise finishes its up-to-`park_cap` park before
+    /// noticing the flag — the pre-shard service had exactly that bug),
+    /// let each run its final drain, and join them.
     pub fn shutdown(&self) {
         self.shared.shutting_down.store(true, Ordering::SeqCst);
-        if let Some(j) = self.flusher.lock().unwrap().take() {
+        for shard in &self.shared.shards {
+            // take the queues lock so the notify cannot slip into the
+            // window between a flusher's flag check and its park
+            let _guard = shard.queues.lock().unwrap();
+            shard.pending_cv.notify_all();
+        }
+        for j in self.flushers.lock().unwrap().drain(..) {
             let _ = j.join();
         }
     }
 }
 
+/// Deterministic content fingerprint of a filter bank: the transform
+/// size, algo, and every tap's f32 bit pattern (per-filter lengths
+/// separate the digests of `[[a, b]]` and `[[a], [b]]`).
+fn bank_fingerprint<T: AsRef<[f32]>>(n: usize, algo: &str, filters: &[T]) -> u64 {
+    let mut h = Fnv1a::new();
+    h.write_u64(n as u64).write_str(algo);
+    for taps in filters {
+        let taps = taps.as_ref();
+        h.write_u64(taps.len() as u64);
+        for &t in taps {
+            h.write_f32(t);
+        }
+    }
+    h.finish()
+}
+
 impl Drop for FftService {
     fn drop(&mut self) {
         self.shutdown();
-        // closing batch_tx by replacing it ends the exec workers
-        let (dead_tx, _) = mpsc::channel();
-        self.batch_tx = dead_tx;
+        // the flushers are joined (their sender clones are gone);
+        // dropping ours closes every shard channel, which ends the
+        // exec workers once they drain
+        self.shard_txs.clear();
         for j in self.exec_threads.lock().unwrap().drain(..) {
             let _ = j.join();
         }

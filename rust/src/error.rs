@@ -21,6 +21,8 @@ pub enum TcFftError {
     ShuttingDown,
     /// Request queue is full (backpressure).
     QueueFull,
+    /// Per-client admission quota exhausted (token bucket empty).
+    QuotaExceeded,
     /// Anything else (I/O, parse, shape mismatches, backend failures).
     Msg(String),
 }
@@ -41,6 +43,7 @@ impl std::fmt::Display for TcFftError {
             TcFftError::NoArtifact(what) => write!(f, "no artifact available for {what}"),
             TcFftError::ShuttingDown => write!(f, "service is shutting down"),
             TcFftError::QueueFull => write!(f, "request queue is full (backpressure)"),
+            TcFftError::QuotaExceeded => write!(f, "client admission quota exceeded"),
             TcFftError::Msg(m) => write!(f, "{m}"),
         }
     }
@@ -168,6 +171,7 @@ mod tests {
         assert!(TcFftError::BadSize(7).to_string().contains("7"));
         assert!(TcFftError::NoArtifact("x".into()).to_string().contains("x"));
         assert!(TcFftError::msg("boom").to_string().contains("boom"));
+        assert!(TcFftError::QuotaExceeded.to_string().contains("quota"));
         let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
         assert!(TcFftError::from(io).to_string().contains("gone"));
     }

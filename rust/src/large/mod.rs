@@ -397,6 +397,19 @@ impl Node {
         }
     }
 
+    /// Resident bytes of this subtree's cached twiddle tables.
+    fn memory_bytes(&self) -> usize {
+        match self {
+            Node::Leaf { key, .. } => key.len() + 64,
+            Node::Split { left, right, tw_re, tw_im, .. } => {
+                (tw_re.len() + tw_im.len()) * std::mem::size_of::<f32>()
+                    + left.memory_bytes()
+                    + right.memory_bytes()
+                    + 64
+            }
+        }
+    }
+
     /// Transform `rows` length-`self.n()` sequences in place. With
     /// `skip_final` a top-level Split stops after step 4, leaving each
     /// sequence in the pre-read-out layout `M[j][k]` at `j*n2 + k`
@@ -588,6 +601,17 @@ impl FourStepPlan {
         self.root.describe()
     }
 
+    /// Estimated resident bytes for cache accounting: the twiddle
+    /// tables held by the decomposition tree plus the retained
+    /// transpose scratch at its steady-state size (one `[n]` planar
+    /// pair per buffer of the pair, `2 * 2 * 4 = 16` bytes/element for
+    /// a single-row batch — multi-row scratch grows with the batch, but
+    /// the nominal single-row figure is the stable floor every cached
+    /// plan reaches).
+    pub fn memory_bytes(&self) -> usize {
+        self.root.memory_bytes() + 16 * self.n
+    }
+
     fn pool(&self) -> Arc<ThreadPool> {
         if !self.explicit_pool {
             return shared_pool();
@@ -731,6 +755,14 @@ impl RealFourStepPlan {
     /// Human-readable decomposition of the inner half-size engine.
     pub fn describe(&self) -> String {
         format!("r2c({} x {})", self.n, self.inner.describe())
+    }
+
+    /// Estimated resident bytes for cache accounting: the inner
+    /// half-size engine plus the split/merge twiddle table (about
+    /// `n/4 + 1` complex f32 entries) and the retained half-size
+    /// staging pair (16 bytes per half-size element = `8 * n`).
+    pub fn memory_bytes(&self) -> usize {
+        self.inner.memory_bytes() + (self.n / 4 + 1) * 8 + 8 * self.n
     }
 
     /// Transform a whole batch in one call: forward `[b, n]` real rows

@@ -314,11 +314,12 @@ fn bench_cmd(args: &Args) -> Result<()> {
 }
 
 /// CI smoke check: `BENCH_interp.json` (emitted by the fig4_1d,
-/// fig7_batch, large_fourstep, rfft_1d and rfft_2d benches) parses,
-/// carries the expected schema, and holds the headline before/after
-/// entry, the batch-sweep anchor, the four-step large-FFT acceptance
-/// entry, and the 1D and 2D R2C-vs-C2C acceptance entries. The schema
-/// and every entry key are documented in BENCHMARKS.md.
+/// fig7_batch, large_fourstep, rfft_1d, rfft_2d and e2e_serve
+/// benches) parses, carries the expected schema, and holds the
+/// headline before/after entry, the batch-sweep anchor, the four-step
+/// large-FFT acceptance entry, the 1D and 2D R2C-vs-C2C acceptance
+/// entries, and the 64-client serving entry. The schema and every
+/// entry key are documented in BENCHMARKS.md.
 fn bench_validate_cmd(args: &Args) -> Result<()> {
     use tcfft::bench_harness::BENCH_SCHEMA;
     use tcfft::util::json::Json;
@@ -328,6 +329,7 @@ fn bench_validate_cmd(args: &Args) -> Result<()> {
     const FOURSTEP: &str = "fourstep_tc_n1048576_b8_fwd";
     const RFFT: &str = "rfft1d_tc_n4096_b32_fwd";
     const RFFT2D: &str = "rfft2d_tc_nx256x256_b8_fwd";
+    const E2E: &str = "e2e_serve_tc_n4096_c64";
 
     // same default resolution as the emitting benches (cwd-independent)
     let default_file = tcfft::bench_harness::bench_json_path().display().to_string();
@@ -382,6 +384,12 @@ fn bench_validate_cmd(args: &Args) -> Result<()> {
     let m2_r2c = pos(RFFT2D, "engine_median_s")?;
     pos(RFFT2D, "engine_serial_median_s")?;
     pos(RFFT2D, "speedup")?;
+    // the serving acceptance entry: 64 closed-loop clients through the
+    // sharded service core vs the raw batch-4 runtime path
+    let me_raw = pos(E2E, "reference_median_s")?;
+    let me_c64 = pos(E2E, "engine_median_s")?;
+    pos(E2E, "engine_serial_median_s")?;
+    pos(E2E, "speedup")?;
 
     let mut t = Table::new(&["entry", "bench", "engine median ms", "speedup vs pre-PR"]);
     if let Json::Obj(m) = &entries {
@@ -425,6 +433,12 @@ fn bench_validate_cmd(args: &Args) -> Result<()> {
         m2_c2c * 1e3,
         m2_r2c * 1e3,
         m2_c2c / m2_r2c
+    );
+    println!(
+        "serving {E2E}: raw per-seq {:.2} ms -> 64-client per-seq {:.2} ms ({:.2}x)",
+        me_raw * 1e3,
+        me_c64 * 1e3,
+        me_raw / me_c64
     );
     println!("bench-validate: OK ({file})");
     Ok(())

@@ -278,6 +278,25 @@ impl Plan {
         self.meta.batch
     }
 
+    /// Estimated resident bytes of this plan for cache accounting:
+    /// metadata strings plus a nominal per-stage descriptor cost. Plans
+    /// hold no twiddle tables host-side (those live in the artifact),
+    /// so this is small — the estimate exists so `Plan` satisfies the
+    /// same byte-budget contract as the large-plan and bank caches.
+    pub fn memory_bytes(&self) -> usize {
+        let strings = self.meta.key.len()
+            + self.meta.file.as_os_str().len()
+            + self.meta.op.len()
+            + self.meta.algo.len();
+        let stages: usize = self
+            .meta
+            .stages
+            .iter()
+            .map(|st| st.kernel.len() + 64)
+            .sum();
+        strings + stages + (self.meta.input_shape.len() + self.radices_1d.len()) * 8 + 256
+    }
+
     /// Execute on a batch; pads/splits to the artifact batch size.
     /// Input shape: [b, n] (1D) or [b, nx, ny] (2D) with any b >= 1.
     pub fn execute(&self, rt: &Runtime, input: PlanarBatch) -> Result<PlanarBatch> {

@@ -1,0 +1,104 @@
+//! Deterministic 64-bit FNV-1a hashing for cache fingerprints.
+//!
+//! Cache identity in the coordinator follows the content-fingerprint
+//! rule from ROADMAP item 3: a cache key must be a pure function of
+//! the *content* it names (transform descriptor, filter taps), stable
+//! across processes and runs. `std::hash::DefaultHasher` explicitly
+//! does not guarantee a stable algorithm between releases, so we roll
+//! FNV-1a 64 — tiny, allocation-free, and fully specified.
+
+/// FNV-1a 64-bit offset basis.
+pub const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+/// FNV-1a 64-bit prime.
+pub const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// Incremental FNV-1a 64 hasher for fingerprinting structured content
+/// (mixed strings, integers and float bit patterns) without building
+/// an intermediate byte buffer.
+#[derive(Clone, Debug)]
+pub struct Fnv1a(u64);
+
+impl Default for Fnv1a {
+    fn default() -> Self {
+        Fnv1a::new()
+    }
+}
+
+impl Fnv1a {
+    pub fn new() -> Self {
+        Fnv1a(FNV_OFFSET)
+    }
+
+    /// Absorb raw bytes.
+    pub fn write(&mut self, bytes: &[u8]) -> &mut Self {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(FNV_PRIME);
+        }
+        self
+    }
+
+    /// Absorb a string, then a NUL separator so `("ab","c")` and
+    /// `("a","bc")` fingerprint differently.
+    pub fn write_str(&mut self, s: &str) -> &mut Self {
+        self.write(s.as_bytes()).write(&[0])
+    }
+
+    /// Absorb a u64 as little-endian bytes.
+    pub fn write_u64(&mut self, x: u64) -> &mut Self {
+        self.write(&x.to_le_bytes())
+    }
+
+    /// Absorb an f32 by bit pattern (so -0.0 != 0.0 and NaNs are
+    /// distinguished — content identity, not numeric equality).
+    pub fn write_f32(&mut self, x: f32) -> &mut Self {
+        self.write(&x.to_bits().to_le_bytes())
+    }
+
+    /// The digest so far.
+    pub fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+/// One-shot FNV-1a 64 of a byte slice.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = Fnv1a::new();
+    h.write(bytes);
+    h.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_vectors() {
+        // Published FNV-1a 64 test vectors.
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a64(b"foobar"), 0x85dd_1e2d_6b87_7f63);
+    }
+
+    #[test]
+    fn deterministic_and_separated() {
+        let mut a = Fnv1a::new();
+        a.write_str("ab").write_str("c");
+        let mut b = Fnv1a::new();
+        b.write_str("a").write_str("bc");
+        assert_ne!(a.finish(), b.finish());
+
+        let mut c = Fnv1a::new();
+        c.write_str("ab").write_str("c");
+        assert_eq!(a.finish(), c.finish());
+    }
+
+    #[test]
+    fn float_bit_patterns() {
+        let mut a = Fnv1a::new();
+        a.write_f32(0.0);
+        let mut b = Fnv1a::new();
+        b.write_f32(-0.0);
+        assert_ne!(a.finish(), b.finish());
+    }
+}

@@ -2,6 +2,7 @@
 //! serde, rand, criterion or tokio — see DESIGN.md system inventory #14).
 
 pub mod cli;
+pub mod fnv;
 pub mod json;
 pub mod rng;
 pub mod stats;

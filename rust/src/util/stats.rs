@@ -79,6 +79,115 @@ impl Summary {
     }
 }
 
+/// Default sample capacity of a [`Reservoir`] (the service metrics'
+/// bounded window).
+pub const DEFAULT_RESERVOIR: usize = 4096;
+
+/// Bounded sample store for long-running services: a fixed-capacity
+/// ring holding the most recent `capacity` samples, plus a lifetime
+/// counter. Unlike [`Summary`], which keeps every sample forever (fine
+/// for benches, a memory leak for a server), a `Reservoir` caps both
+/// memory and the cost of a percentile query: `add` is O(1) and
+/// percentiles copy-and-sort at most `capacity` values.
+///
+/// Percentiles are therefore *windowed* — they describe the most
+/// recent `capacity` samples, which is what a serving dashboard wants
+/// anyway (a p99 diluted by last week's traffic hides a regression).
+#[derive(Clone, Debug)]
+pub struct Reservoir {
+    capacity: usize,
+    buf: Vec<f64>,
+    /// ring write cursor (valid once `buf` is full)
+    next: usize,
+    /// lifetime sample count (not capped)
+    total: u64,
+}
+
+impl Default for Reservoir {
+    fn default() -> Self {
+        Reservoir::with_capacity(DEFAULT_RESERVOIR)
+    }
+}
+
+impl Reservoir {
+    /// Ring of at most `capacity` samples (clamped to >= 1).
+    pub fn with_capacity(capacity: usize) -> Self {
+        let capacity = capacity.max(1);
+        Reservoir { capacity, buf: Vec::new(), next: 0, total: 0 }
+    }
+
+    /// Record one sample, overwriting the oldest once full. O(1).
+    pub fn add(&mut self, x: f64) {
+        self.total += 1;
+        if self.buf.len() < self.capacity {
+            self.buf.push(x);
+        } else {
+            self.buf[self.next] = x;
+            self.next = (self.next + 1) % self.capacity;
+        }
+    }
+
+    /// Samples currently held (<= capacity).
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// True when no sample has been recorded yet.
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// The configured capacity bound.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Lifetime samples recorded (including overwritten ones).
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    /// Mean of the retained window.
+    pub fn mean(&self) -> f64 {
+        if self.buf.is_empty() {
+            return f64::NAN;
+        }
+        self.buf.iter().sum::<f64>() / self.buf.len() as f64
+    }
+
+    /// Windowed percentile by linear interpolation (q in [0, 1]).
+    pub fn percentile(&self, q: f64) -> f64 {
+        if self.buf.is_empty() {
+            return f64::NAN;
+        }
+        let mut s = self.buf.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let pos = q.clamp(0.0, 1.0) * (s.len() - 1) as f64;
+        let lo = pos.floor() as usize;
+        let hi = pos.ceil() as usize;
+        if lo == hi {
+            s[lo]
+        } else {
+            s[lo] + (pos - lo as f64) * (s[hi] - s[lo])
+        }
+    }
+
+    /// Windowed median.
+    pub fn median(&self) -> f64 {
+        self.percentile(0.5)
+    }
+
+    /// Windowed 95th percentile.
+    pub fn p95(&self) -> f64 {
+        self.percentile(0.95)
+    }
+
+    /// Windowed 99th percentile.
+    pub fn p99(&self) -> f64 {
+        self.percentile(0.99)
+    }
+}
+
 /// Measure a closure `iters` times after `warmup` runs; returns seconds
 /// per iteration samples.
 pub fn time_iters<F: FnMut()>(mut f: F, warmup: usize, iters: usize) -> Summary {

@@ -141,6 +141,15 @@ impl SpectralConv {
         self.k
     }
 
+    /// Estimated resident bytes for cache accounting: the packed
+    /// filter spectra (the dominant term, `2 * k * (n/2 + 1)` f32s)
+    /// plus the two bound plans.
+    pub fn memory_bytes(&self) -> usize {
+        (self.h_re.len() + self.h_im.len()) * std::mem::size_of::<f32>()
+            + self.fwd.memory_bytes()
+            + self.inv.memory_bytes()
+    }
+
     /// Circularly convolve a batch of real rows (`[b, n]`, samples in
     /// the `re` plane) with every filter of the bank, in one planar
     /// round trip: one R2C over the `b` rows, the pointwise product

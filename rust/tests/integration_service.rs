@@ -259,9 +259,13 @@ fn convolve_route_applies_every_filter_of_the_bank() {
     let n = 256;
     let filters: Vec<Vec<f32>> = vec![vec![1.0], vec![0.5, 0.25, -0.125]];
     assert_eq!(svc.register_filter_bank("test", n, &filters, "tc").unwrap(), 2);
-    // guards: duplicate names, unknown algos, out-of-range sizes, and
-    // unknown banks all fail fast instead of minting cache entries
-    assert!(svc.register_filter_bank("test", n, &filters, "tc").is_err());
+    // re-registering the same name with the SAME content is an
+    // idempotent success (the natural recovery after a cache eviction)
+    assert_eq!(svc.register_filter_bank("test", n, &filters, "tc").unwrap(), 2);
+    // guards: same name with DIFFERENT content, unknown algos,
+    // out-of-range sizes, and unknown banks all fail fast instead of
+    // minting or replacing cache entries
+    assert!(svc.register_filter_bank("test", n, &[vec![0.9f32]], "tc").is_err());
     assert!(svc.register_filter_bank("x", n, &filters, "nonsense").is_err());
     assert!(svc.register_filter_bank("x", 1000, &filters, "tc").is_err());
     assert!(svc

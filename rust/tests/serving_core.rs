@@ -1,0 +1,495 @@
+//! Tests of the sharded, evicting service core: concurrent-client
+//! soak through the shard router, LRU eviction of all three plan
+//! stores, per-client admission quota, bounded metrics reservoirs, the
+//! shutdown-latency fix, counter-after-validation ordering, and the
+//! bounded TCP worker pool with pipelining. All over the interpreter
+//! backend (no artifacts on disk required).
+
+use std::sync::{Arc, OnceLock};
+use std::time::{Duration, Instant};
+
+use tcfft::coordinator::{FftRequest, FftService, Op, Server, ServiceConfig};
+use tcfft::error::{relative_error, relative_rmse, TcFftError};
+use tcfft::fft::{mixed, radix2};
+use tcfft::hp::{C32, C64};
+use tcfft::plan::Direction;
+use tcfft::runtime::{PlanarBatch, Runtime};
+use tcfft::workload::random_signal;
+
+fn shared_runtime() -> &'static Arc<Runtime> {
+    static RT: OnceLock<Arc<Runtime>> = OnceLock::new();
+    RT.get_or_init(|| {
+        Arc::new(Runtime::load_default().expect("runtime must load without artifacts"))
+    })
+}
+
+fn service_with(cfg: ServiceConfig) -> Arc<FftService> {
+    Arc::new(FftService::start(Arc::clone(shared_runtime()), cfg))
+}
+
+fn service() -> Arc<FftService> {
+    service_with(ServiceConfig::default())
+}
+
+fn widen(x: &[C32]) -> Vec<C64> {
+    x.iter().map(|c| C64::new(c.re as f64, c.im as f64)).collect()
+}
+
+fn fwd_req(n: usize, sig: &[C32]) -> FftRequest {
+    FftRequest {
+        op: Op::Fft1d { n },
+        algo: "tc".into(),
+        direction: Direction::Forward,
+        input: PlanarBatch::from_complex(sig, vec![n]),
+    }
+}
+
+/// Submit one forward complex request and check the reply against the
+/// mixed-radix oracle.
+fn check_fft1d(svc: &FftService, client: u64, n: usize, seed: u64) {
+    let sig = random_signal(n, seed);
+    let out = svc.submit_as(client, fwd_req(n, &sig)).unwrap().wait().unwrap();
+    let q = PlanarBatch::from_complex(&sig, vec![1, n]).quantize_f16();
+    let want = mixed::fft_mixed_batch(&widen(&q.to_complex()), 1, n, false);
+    let err = relative_error(&want, &widen(&out.to_complex()));
+    assert!(err < 5e-3, "client {client} n={n}: err {err}");
+}
+
+/// Submit one forward R2C request and check the packed reply.
+fn check_rfft1d(svc: &FftService, client: u64, n: usize, seed: u64) {
+    let bins = n / 2 + 1;
+    let sig: Vec<f32> = random_signal(n, seed).iter().map(|c| c.re).collect();
+    let out = svc
+        .submit_as(
+            client,
+            FftRequest {
+                op: Op::Rfft1d { n },
+                algo: "tc".into(),
+                direction: Direction::Forward,
+                input: PlanarBatch::from_real(&sig, vec![n]),
+            },
+        )
+        .unwrap()
+        .wait()
+        .unwrap();
+    assert_eq!(out.shape, vec![1, bins]);
+    let q = PlanarBatch::from_real(&sig, vec![1, n]).quantize_f16();
+    let want = mixed::fft_mixed_batch(&widen(&q.to_complex()), 1, n, false);
+    let rmse = relative_rmse(&want[..bins], &widen(&out.to_complex()));
+    assert!(rmse < 5e-3, "client {client} rfft n={n}: rmse {rmse:.3e}");
+}
+
+#[test]
+fn soak_64_concurrent_clients_through_the_shard_router() {
+    // 64 client threads, mixed ops, every reply checked against its
+    // oracle row — the router must never cross rows between shards,
+    // steal-drained batches included
+    let svc = service();
+    assert!(svc.shards() >= 2, "default config must actually shard");
+    let per_client = 4;
+    let handles: Vec<_> = (0..64u64)
+        .map(|c| {
+            let svc = Arc::clone(&svc);
+            std::thread::spawn(move || {
+                for i in 0..per_client {
+                    let seed = c * 1000 + i;
+                    match (c + i) % 3 {
+                        0 => check_fft1d(&svc, c, 1024, seed),
+                        1 => check_fft1d(&svc, c, 4096, seed),
+                        _ => check_rfft1d(&svc, c, 1024, seed),
+                    }
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().expect("client thread panicked");
+    }
+    let snap = svc.metrics().snapshot();
+    let total = 64 * per_client as i64;
+    assert_eq!(snap.get("completed").unwrap().as_i64(), Some(total));
+    assert_eq!(snap.get("requests").unwrap().as_i64(), Some(total));
+    assert_eq!(snap.get("failed").unwrap().as_i64(), Some(0));
+    assert_eq!(snap.get("rejected").unwrap().as_i64(), Some(0));
+    svc.shutdown();
+}
+
+#[test]
+fn direct_plan_cache_stays_within_budget_under_key_walk() {
+    // a client walking (n, dir) space must not grow the plan cache
+    // past its byte budget — entries evict and every request still
+    // completes (plans rebuild from the registry transparently)
+    let svc = service_with(ServiceConfig {
+        plan_cache_bytes: 4096, // holds a few plan metadata entries
+        ..ServiceConfig::default()
+    });
+    for n in [256usize, 512, 1024, 2048, 4096] {
+        for dir in [Direction::Forward, Direction::Inverse] {
+            let sig = random_signal(n, n as u64);
+            let t = svc
+                .submit(FftRequest {
+                    op: Op::Fft1d { n },
+                    algo: "tc".into(),
+                    direction: dir,
+                    input: PlanarBatch::from_complex(&sig, vec![n]),
+                })
+                .unwrap();
+            t.wait().unwrap();
+            let m = svc.metrics();
+            assert!(
+                m.plan_cache.bytes() <= 4096,
+                "plan cache {} bytes over the 4096 budget",
+                m.plan_cache.bytes()
+            );
+        }
+    }
+    let m = svc.metrics();
+    assert!(
+        m.plan_cache.evictions() > 0,
+        "10 distinct plans through a few-entry budget must evict"
+    );
+    assert_eq!(
+        svc.metrics().snapshot().get("completed").unwrap().as_i64(),
+        Some(10)
+    );
+    svc.shutdown();
+}
+
+#[test]
+fn evicted_large_plan_is_rebuilt_transparently_on_resubmit() {
+    // budget sized to hold EITHER the complex 2^18 four-step plan
+    // (~6.3 MB) OR the real one (~5.8 MB), not both: the second build
+    // evicts the first, and resubmitting the first kind must rebuild
+    // it transparently with a correct result
+    let svc = service_with(ServiceConfig {
+        large_cache_bytes: 10 << 20,
+        ..ServiceConfig::default()
+    });
+    let n = 1 << 18;
+
+    let run_complex = |seed: u64| {
+        let sig = random_signal(n, seed);
+        let out = svc.submit(fwd_req(n, &sig)).unwrap().wait().unwrap();
+        let q = PlanarBatch::from_complex(&sig, vec![1, n]).quantize_f16();
+        let want = radix2::fft_vec(&widen(&q.to_complex()), false);
+        let rmse = relative_rmse(&want, &widen(&out.to_complex()));
+        assert!(rmse <= 5e-3, "four-step rel-RMSE {rmse:.3e}");
+    };
+    run_complex(1);
+    let m = svc.metrics();
+    assert_eq!(m.large_cache.entries(), 1);
+    assert!(m.large_cache.bytes() <= 10 << 20);
+
+    // the real 2^18 plan lands on a different key and evicts the
+    // complex one (both don't fit in 10 MB)
+    check_rfft1d(&svc, 0, n, 2);
+    let m = svc.metrics();
+    assert!(
+        m.large_cache.evictions() >= 1,
+        "second large plan must evict the first"
+    );
+    assert!(m.large_cache.bytes() <= 10 << 20);
+
+    // resubmit the complex transform: cache miss, transparent rebuild,
+    // same deterministic fingerprint key, correct result
+    run_complex(3);
+    let m = svc.metrics();
+    assert!(m.large_cache.bytes() <= 10 << 20);
+    assert!(m.large_cache.evictions() >= 2);
+    assert_eq!(svc.metrics().snapshot().get("failed").unwrap().as_i64(), Some(0));
+    svc.shutdown();
+}
+
+#[test]
+fn eviction_racing_a_queued_batch_rebuilds_at_execution_time() {
+    // a request is parked in its queue while its plan gets evicted by
+    // a competing build; the executor must rebuild the plan from the
+    // queue key instead of failing the batch (`large_rebuilds` counts)
+    let svc = service_with(ServiceConfig {
+        large_cache_bytes: 10 << 20,
+        max_wait: Duration::from_secs(3600), // requests park until shutdown
+        inline_exec: false,                  // the submitter must not execute
+        ..ServiceConfig::default()
+    });
+    let n = 1 << 18;
+    let sig = random_signal(n, 11);
+    let t_complex = svc.submit(fwd_req(n, &sig)).unwrap();
+
+    // competing real-plan build evicts the (cached, but in-queue-use)
+    // complex plan
+    let rsig: Vec<f32> = random_signal(n, 12).iter().map(|c| c.re).collect();
+    let t_real = svc
+        .submit(FftRequest {
+            op: Op::Rfft1d { n },
+            algo: "tc".into(),
+            direction: Direction::Forward,
+            input: PlanarBatch::from_real(&rsig, vec![n]),
+        })
+        .unwrap();
+    assert!(svc.metrics().large_cache.evictions() >= 1);
+
+    // shutdown force-drains both queues through the exec workers
+    svc.shutdown();
+    let out = t_complex.wait().unwrap();
+    let q = PlanarBatch::from_complex(&sig, vec![1, n]).quantize_f16();
+    let want = radix2::fft_vec(&widen(&q.to_complex()), false);
+    let rmse = relative_rmse(&want, &widen(&out.to_complex()));
+    assert!(rmse <= 5e-3, "rebuilt-plan rel-RMSE {rmse:.3e}");
+    let out = t_real.wait().unwrap();
+    assert_eq!(out.shape, vec![1, n / 2 + 1]);
+
+    let m = svc.metrics();
+    assert!(
+        m.large_rebuilds.load(std::sync::atomic::Ordering::Relaxed) >= 1,
+        "at least one batch must have rebuilt its evicted plan at exec time"
+    );
+    assert_eq!(svc.metrics().snapshot().get("failed").unwrap().as_i64(), Some(0));
+}
+
+#[test]
+fn bank_cache_honors_its_byte_budget_under_racing_registrations() {
+    let budget = 16 << 10; // a handful of small banks
+    let svc = service_with(ServiceConfig {
+        bank_cache_bytes: budget,
+        ..ServiceConfig::default()
+    });
+    let n = 256;
+    let handles: Vec<_> = (0..4)
+        .map(|t| {
+            let svc = Arc::clone(&svc);
+            std::thread::spawn(move || {
+                for i in 0..3 {
+                    let taps = vec![1.0f32, 0.5 + t as f32, i as f32 * 0.25];
+                    svc.register_filter_bank(&format!("bank-{t}-{i}"), n, &[taps], "tc")
+                        .expect("each bank fits the budget alone");
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().expect("registering thread panicked");
+    }
+    let m = svc.metrics();
+    assert!(
+        m.bank_cache.bytes() <= budget as u64,
+        "bank cache {} bytes over the {budget} budget",
+        m.bank_cache.bytes()
+    );
+    assert!(
+        m.bank_cache.evictions() > 0,
+        "12 banks through a {budget}-byte budget must evict"
+    );
+    // an evicted bank re-registers cleanly (idempotent recovery), and
+    // convolving through it works end to end
+    let taps = vec![1.0f32, 0.5, 0.0];
+    svc.register_filter_bank("bank-0-0", n, &[taps], "tc").unwrap();
+    let sig: Vec<f32> = random_signal(n, 9).iter().map(|c| c.re).collect();
+    let out = svc
+        .submit_convolve("bank-0-0", PlanarBatch::from_real(&sig, vec![n]))
+        .unwrap()
+        .wait()
+        .unwrap();
+    assert_eq!(out.shape, vec![1, 1, n]);
+    assert!(m.bank_cache.bytes() <= budget as u64);
+    svc.shutdown();
+}
+
+#[test]
+fn per_client_quota_rejects_bursts_independently() {
+    let svc = service_with(ServiceConfig {
+        quota_rate: 1e-9, // effectively no refill within the test
+        quota_burst: 3.0,
+        ..ServiceConfig::default()
+    });
+    let n = 1024;
+    let mut ok = 0;
+    let mut rejected = 0;
+    let mut tickets = Vec::new();
+    for i in 0..5 {
+        let sig = random_signal(n, i);
+        match svc.submit_as(7, fwd_req(n, &sig)) {
+            Ok(t) => {
+                ok += 1;
+                tickets.push(t);
+            }
+            Err(e) => {
+                assert!(
+                    matches!(e, TcFftError::QuotaExceeded),
+                    "expected QuotaExceeded, got: {e}"
+                );
+                rejected += 1;
+            }
+        }
+    }
+    assert_eq!((ok, rejected), (3, 2), "burst of 3 admits exactly 3 of 5");
+    // a different client has its own bucket
+    let sig = random_signal(n, 99);
+    tickets.push(svc.submit_as(8, fwd_req(n, &sig)).unwrap());
+    for t in tickets {
+        t.wait().unwrap();
+    }
+    let snap = svc.metrics().snapshot();
+    // quota rejections never reach routing: they are counted apart
+    // from `requests`, and nothing was queued for them
+    assert_eq!(snap.get("quota_rejected").unwrap().as_i64(), Some(2));
+    assert_eq!(snap.get("requests").unwrap().as_i64(), Some(4));
+    assert_eq!(snap.get("completed").unwrap().as_i64(), Some(4));
+    // unmetered in-process submits bypass the gate entirely
+    let sig = random_signal(n, 100);
+    svc.submit(fwd_req(n, &sig)).unwrap().wait().unwrap();
+    svc.shutdown();
+}
+
+#[test]
+fn metrics_reservoirs_stay_bounded_at_service_level() {
+    let svc = service_with(ServiceConfig {
+        metrics_reservoir: 16,
+        ..ServiceConfig::default()
+    });
+    let n = 256;
+    for i in 0..40 {
+        let sig = random_signal(n, i);
+        svc.submit(fwd_req(n, &sig)).unwrap().wait().unwrap();
+    }
+    let snap = svc.metrics().snapshot();
+    assert_eq!(snap.get("completed").unwrap().as_i64(), Some(40));
+    assert_eq!(
+        snap.get("latency_samples").unwrap().as_i64(),
+        Some(16),
+        "reservoir must cap held samples at the configured capacity"
+    );
+    assert_eq!(
+        snap.get("latency_total").unwrap().as_i64(),
+        Some(40),
+        "lifetime sample count must still cover every request"
+    );
+    svc.shutdown();
+}
+
+#[test]
+fn shutdown_returns_promptly_from_an_idle_park() {
+    // flushers park up to park_cap between deadline scans; shutdown
+    // must notify them out of the park instead of waiting it out (the
+    // pre-shard service set the flag without notifying)
+    let svc = service_with(ServiceConfig {
+        park_cap: Duration::from_millis(500),
+        ..ServiceConfig::default()
+    });
+    // let every flusher reach its (empty-queue) park
+    std::thread::sleep(Duration::from_millis(100));
+    let t0 = Instant::now();
+    svc.shutdown();
+    let took = t0.elapsed();
+    assert!(
+        took < Duration::from_millis(250),
+        "shutdown took {took:?}; flushers must be notified out of a {:?} park",
+        Duration::from_millis(500)
+    );
+}
+
+#[test]
+fn counters_move_only_after_validation() {
+    // a malformed request must leave every counter untouched: count
+    // only what was actually routed and queued (regression: counters
+    // used to increment before the shape check)
+    let svc = service();
+    let r = svc.submit(FftRequest {
+        op: Op::Fft1d { n: 1024 },
+        algo: "tc".into(),
+        direction: Direction::Forward,
+        input: PlanarBatch::new(vec![512]), // wrong tail for n=1024
+    });
+    assert!(r.is_err());
+    let r = svc.submit(FftRequest {
+        op: Op::Rfft1d { n: 1024 },
+        algo: "tc".into(),
+        direction: Direction::Forward,
+        input: PlanarBatch::new(vec![100]), // wrong tail for rfft 1024
+    });
+    assert!(r.is_err());
+    let snap = svc.metrics().snapshot();
+    assert_eq!(snap.get("requests").unwrap().as_i64(), Some(0));
+    assert_eq!(snap.get("rfft_requests").unwrap().as_i64(), Some(0));
+    assert_eq!(snap.get("rfft2d_requests").unwrap().as_i64(), Some(0));
+    assert_eq!(snap.get("large_requests").unwrap().as_i64(), Some(0));
+    // a valid request after the failures counts normally
+    let sig = random_signal(1024, 5);
+    svc.submit(fwd_req(1024, &sig)).unwrap().wait().unwrap();
+    let snap = svc.metrics().snapshot();
+    assert_eq!(snap.get("requests").unwrap().as_i64(), Some(1));
+    svc.shutdown();
+}
+
+#[test]
+fn server_stops_with_an_idle_connection_open() {
+    // an idle client used to pin its handler thread in a blocking
+    // read forever; with read timeouts the server must join promptly
+    let svc = service();
+    let server = Server::bind("127.0.0.1:0", Arc::clone(&svc)).unwrap();
+    let addr = server.local_addr().unwrap();
+    let stop = server.stop_handle();
+    let run = std::thread::spawn(move || server.run());
+
+    let conn = std::net::TcpStream::connect(addr).unwrap();
+    // the connection says nothing at all; give a worker time to adopt it
+    std::thread::sleep(Duration::from_millis(150));
+    stop.store(true, std::sync::atomic::Ordering::SeqCst);
+
+    let (done_tx, done_rx) = std::sync::mpsc::channel();
+    std::thread::spawn(move || {
+        let _ = done_tx.send(run.join());
+    });
+    done_rx
+        .recv_timeout(Duration::from_secs(2))
+        .expect("server.run() must return despite the idle connection")
+        .unwrap()
+        .unwrap();
+    drop(conn);
+    svc.shutdown();
+}
+
+#[test]
+fn pipelined_requests_get_replies_in_order() {
+    use std::io::{BufRead, BufReader, Write};
+    let svc = service();
+    let server = Server::bind("127.0.0.1:0", Arc::clone(&svc)).unwrap();
+    let addr = server.local_addr().unwrap();
+    let stop = server.stop_handle();
+    let run = std::thread::spawn(move || server.run());
+
+    let mut conn = std::net::TcpStream::connect(addr).unwrap();
+    // three requests written back-to-back before reading any reply;
+    // n marks each request so reply order is observable
+    let mut expected = Vec::new();
+    let mut batch = String::new();
+    for n in [256usize, 512, 1024] {
+        let sig = random_signal(n, n as u64);
+        let re: Vec<String> = sig.iter().map(|c| format!("{:.4}", c.re)).collect();
+        let im: Vec<String> = sig.iter().map(|c| format!("{:.4}", c.im)).collect();
+        batch.push_str(&format!(
+            "{{\"op\":\"fft1d\",\"n\":{n},\"re\":[{}],\"im\":[{}]}}\n",
+            re.join(","),
+            im.join(",")
+        ));
+        expected.push(n);
+    }
+    conn.write_all(batch.as_bytes()).unwrap();
+    let mut reader = BufReader::new(conn.try_clone().unwrap());
+    for n in expected {
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let resp = tcfft::util::json::Json::parse(line.trim()).unwrap();
+        assert_eq!(resp.get("ok").and_then(|b| b.as_bool()), Some(true), "{line}");
+        assert_eq!(
+            resp.get("re").unwrap().as_arr().unwrap().len(),
+            n,
+            "replies must come back in request order"
+        );
+    }
+
+    stop.store(true, std::sync::atomic::Ordering::SeqCst);
+    drop(reader);
+    drop(conn);
+    let _ = run.join();
+    svc.shutdown();
+}
