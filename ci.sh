@@ -35,12 +35,34 @@ md_link_check() {
   echo "markdown cross-references OK"
 }
 
+# Static gate: every mutex in the coordinator must be taken through the
+# poison-recovering helpers (coordinator::lock::LockExt), so one
+# panicking holder can never wedge the serving layer behind a
+# PoisonError. Bare `.lock()` is allowed only inside lock.rs itself
+# (the helper's implementation and its poison tests need it).
+lock_gate() {
+  local hits
+  hits=$(grep -rn '\.lock()' rust/src/coordinator/ --include='*.rs' | grep -v 'coordinator/lock\.rs' || true)
+  if [ -n "$hits" ]; then
+    echo "bare Mutex::lock() in coordinator/ — use .plock()/.try_plock() from coordinator::lock:"
+    echo "$hits"
+    return 1
+  fi
+  echo "no bare .lock() outside coordinator/lock.rs"
+}
+
 core() {
   echo "== cargo build --release =="
   cargo build --release
 
   echo "== cargo test -q =="
   cargo test -q
+
+  echo "== chaos suite (fault injection) =="
+  cargo test -q --test chaos_service
+
+  echo "== poison-safe lock gate (rust/src/coordinator) =="
+  lock_gate
 
   echo "== cargo doc --no-deps (warnings are errors) =="
   RUSTDOCFLAGS="-D warnings" cargo doc --no-deps

@@ -21,8 +21,21 @@ pub struct Pending {
     pub input: PlanarBatch,
     /// when the request entered the queue (drives the deadline flush)
     pub enqueued: Instant,
+    /// end-to-end expiry (`ServiceConfig::request_deadline` stamped at
+    /// submit time); `None` = the request never expires. Expired
+    /// requests are shed with `DeadlineExceeded` at flush time
+    /// ([`PlanQueue::shed_expired`]) and again at batch-assembly time
+    /// (`run_batch`) — never silently executed late.
+    pub deadline: Option<Instant>,
     /// per-request reply channel
     pub reply: mpsc::Sender<Result<PlanarBatch>>,
+}
+
+impl Pending {
+    /// True once the request's deadline has passed.
+    pub fn expired(&self, now: Instant) -> bool {
+        self.deadline.is_some_and(|d| d <= now)
+    }
 }
 
 /// A batch ready for execution.
@@ -97,6 +110,19 @@ impl PlanQueue {
         self.queue.front().map(|p| now.duration_since(p.enqueued))
     }
 
+    /// Pop every already-expired request off the front of the queue.
+    /// The caller replies `DeadlineExceeded` to each OUTSIDE the shard
+    /// lock. Front-popping is exact because a queue is strict FIFO and
+    /// every member shares the same service-wide deadline offset, so
+    /// expiry order equals arrival order.
+    pub fn shed_expired(&mut self, now: Instant) -> Vec<Pending> {
+        let mut shed = Vec::new();
+        while self.queue.front().is_some_and(|p| p.expired(now)) {
+            shed.push(self.queue.pop_front().unwrap());
+        }
+        shed
+    }
+
     /// Should we flush now under the given deadline?
     pub fn should_flush(&self, now: Instant, max_wait: std::time::Duration) -> bool {
         if self.queue.is_empty() {
@@ -143,14 +169,21 @@ impl PlanQueue {
 /// empty: a queue is cheap to recreate on the next submit, and under a
 /// key-space-walking client the map would otherwise grow one entry per
 /// key ever seen — the same unbounded-growth bug the plan caches had.
+///
+/// Expired requests are shed from each queue before its flush check
+/// and returned separately; the caller replies `DeadlineExceeded` to
+/// them outside the shard lock. Shedding first keeps a dead request
+/// from holding `oldest_age` hostage or wasting a padded batch slot.
 pub fn drain_due(
     queues: &mut HashMap<String, PlanQueue>,
     now: Instant,
     max_wait: Duration,
     force: bool,
-) -> Vec<(String, ReadyBatch)> {
+) -> (Vec<(String, ReadyBatch)>, Vec<Pending>) {
     let mut ready = Vec::new();
+    let mut shed = Vec::new();
     for q in queues.values_mut() {
+        shed.extend(q.shed_expired(now));
         loop {
             let due = if force { !q.is_empty() } else { q.should_flush(now, max_wait) };
             if !due {
@@ -163,7 +196,7 @@ pub fn drain_due(
         }
     }
     queues.retain(|_, q| !q.is_empty());
-    ready
+    (ready, shed)
 }
 
 #[cfg(test)]
@@ -171,12 +204,21 @@ mod tests {
     use super::*;
 
     fn req(id: u64, n: usize) -> (Pending, mpsc::Receiver<Result<PlanarBatch>>) {
+        req_deadline(id, n, None)
+    }
+
+    fn req_deadline(
+        id: u64,
+        n: usize,
+        deadline: Option<Instant>,
+    ) -> (Pending, mpsc::Receiver<Result<PlanarBatch>>) {
         let (tx, rx) = mpsc::channel();
         (
             Pending {
                 id,
                 input: PlanarBatch::new(vec![1, n]),
                 enqueued: Instant::now(),
+                deadline,
                 reply: tx,
             },
             rx,
@@ -259,17 +301,65 @@ mod tests {
         idle.push(p).map_err(|_| ()).unwrap();
         queues.insert("idle".to_string(), idle);
         queues.insert("empty".to_string(), PlanQueue::new("empty", 4, 64));
-        let ready = drain_due(&mut queues, Instant::now(), Duration::from_secs(3600), false);
+        let (ready, shed) =
+            drain_due(&mut queues, Instant::now(), Duration::from_secs(3600), false);
         // "full" hit capacity and flushed; "empty" was reaped; "idle"
         // still holds its not-yet-due request
         assert_eq!(ready.len(), 1);
+        assert!(shed.is_empty());
         assert_eq!(ready[0].0, "full");
         assert_eq!(queues.len(), 1);
         assert!(queues.contains_key("idle"));
         // force drains the rest and leaves the map empty
-        let ready = drain_due(&mut queues, Instant::now(), Duration::from_secs(3600), true);
+        let (ready, _) = drain_due(&mut queues, Instant::now(), Duration::from_secs(3600), true);
         assert_eq!(ready.len(), 1);
         assert!(queues.is_empty());
+    }
+
+    #[test]
+    fn shed_expired_pops_only_expired_front() {
+        let now = Instant::now();
+        let mut q = PlanQueue::new("k", 8, 64);
+        let (p, _rx0) = req_deadline(0, 4, Some(now - Duration::from_millis(1)));
+        q.push(p).map_err(|_| ()).unwrap();
+        let (p, _rx1) = req_deadline(1, 4, Some(now - Duration::from_millis(1)));
+        q.push(p).map_err(|_| ()).unwrap();
+        let (p, _rx2) = req_deadline(2, 4, Some(now + Duration::from_secs(60)));
+        q.push(p).map_err(|_| ()).unwrap();
+        let (p, _rx3) = req(3, 4); // no deadline: never expires
+        q.push(p).map_err(|_| ()).unwrap();
+        let shed = q.shed_expired(now);
+        assert_eq!(shed.iter().map(|p| p.id).collect::<Vec<_>>(), vec![0, 1]);
+        assert_eq!(q.len(), 2);
+        // nothing further to shed
+        assert!(q.shed_expired(now).is_empty());
+    }
+
+    #[test]
+    fn drain_due_sheds_before_flushing() {
+        let now = Instant::now();
+        let mut queues = HashMap::new();
+        let mut q = PlanQueue::new("k", 2, 64);
+        // expired front request would otherwise hold a batch slot and
+        // trip the age-based flush
+        let (p, _rx0) = req_deadline(0, 4, Some(now - Duration::from_millis(1)));
+        q.push(p).map_err(|_| ()).unwrap();
+        let (p, _rx1) = req_deadline(1, 4, Some(now + Duration::from_secs(60)));
+        q.push(p).map_err(|_| ()).unwrap();
+        queues.insert("k".to_string(), q);
+        let (ready, shed) = drain_due(&mut queues, now, Duration::from_secs(3600), false);
+        assert!(ready.is_empty(), "live request alone is not due yet");
+        assert_eq!(shed.len(), 1);
+        assert_eq!(shed[0].id, 0);
+        assert_eq!(queues["k"].len(), 1);
+        // a fully-shed queue is reaped like any other empty queue
+        let mut q2 = PlanQueue::new("gone", 4, 64);
+        let (p, _rx2) = req_deadline(9, 4, Some(now - Duration::from_millis(1)));
+        q2.push(p).map_err(|_| ()).unwrap();
+        queues.insert("gone".to_string(), q2);
+        let (_, shed) = drain_due(&mut queues, now, Duration::from_secs(3600), false);
+        assert_eq!(shed.len(), 1);
+        assert!(!queues.contains_key("gone"));
     }
 
     #[test]

@@ -25,6 +25,8 @@ use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
+use super::lock::LockExt;
+
 /// Shared hit/miss/eviction counters for one cache, snapshot by
 /// `Metrics`. All counters are monotonically increasing except
 /// `bytes`/`entries`, which track current occupancy.
@@ -106,7 +108,7 @@ impl<V: Clone> LruCache<V> {
 
     /// Look up and touch (counts a hit or a miss).
     pub fn get(&self, key: &str) -> Option<V> {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = self.inner.plock();
         inner.clock += 1;
         let clock = inner.clock;
         match inner.map.get_mut(key) {
@@ -125,7 +127,7 @@ impl<V: Clone> LruCache<V> {
     /// Peek without touching LRU order or counting a hit/miss (used by
     /// validation paths that should not distort churn statistics).
     pub fn peek(&self, key: &str) -> Option<V> {
-        let inner = self.inner.lock().unwrap();
+        let inner = self.inner.plock();
         inner.map.get(key).map(|e| e.value.clone())
     }
 
@@ -144,7 +146,7 @@ impl<V: Clone> LruCache<V> {
     /// an over-budget entry is handed back uncached (`false`).
     pub fn get_or_insert(&self, key: &str, value: V, bytes: usize) -> (V, bool) {
         {
-            let mut inner = self.inner.lock().unwrap();
+            let mut inner = self.inner.plock();
             inner.clock += 1;
             let clock = inner.clock;
             if let Some(e) = inner.map.get_mut(key) {
@@ -163,7 +165,7 @@ impl<V: Clone> LruCache<V> {
         if bytes > self.budget {
             return None;
         }
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = self.inner.plock();
         inner.clock += 1;
         let clock = inner.clock;
         if let Some(old) = inner.map.remove(key) {
@@ -194,9 +196,29 @@ impl<V: Clone> LruCache<V> {
         Some(value)
     }
 
+    /// Force-evict the current least-recently-used entry regardless of
+    /// budget headroom, returning its key. Used by the fault injector
+    /// (`forced cache eviction`) to exercise the eviction-rebuild path
+    /// under load; counts in the eviction statistics like any other
+    /// eviction. No-op on an empty cache.
+    pub fn evict_oldest(&self) -> Option<String> {
+        let mut inner = self.inner.plock();
+        let victim = inner
+            .map
+            .iter()
+            .min_by_key(|(_, e)| e.stamp)
+            .map(|(k, _)| k.clone())?;
+        let e = inner.map.remove(&victim).unwrap();
+        inner.bytes -= e.bytes;
+        self.stats.evictions.fetch_add(1, Ordering::Relaxed);
+        self.stats.bytes.store(inner.bytes as u64, Ordering::Relaxed);
+        self.stats.entries.store(inner.map.len() as u64, Ordering::Relaxed);
+        Some(victim)
+    }
+
     /// Remove an entry (used by re-registration conflict handling).
     pub fn remove(&self, key: &str) -> Option<V> {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = self.inner.plock();
         let e = inner.map.remove(key)?;
         inner.bytes -= e.bytes;
         self.stats.bytes.store(inner.bytes as u64, Ordering::Relaxed);
@@ -206,7 +228,7 @@ impl<V: Clone> LruCache<V> {
 
     /// Current entry count.
     pub fn len(&self) -> usize {
-        self.inner.lock().unwrap().map.len()
+        self.inner.plock().map.len()
     }
 
     /// True when the cache holds no entries.
@@ -216,12 +238,12 @@ impl<V: Clone> LruCache<V> {
 
     /// Currently accounted bytes (always <= budget).
     pub fn bytes(&self) -> usize {
-        self.inner.lock().unwrap().bytes
+        self.inner.plock().bytes
     }
 
     /// Snapshot of the keys currently cached (diagnostics/tests).
     pub fn keys(&self) -> Vec<String> {
-        self.inner.lock().unwrap().map.keys().cloned().collect()
+        self.inner.plock().map.keys().cloned().collect()
     }
 }
 
@@ -301,6 +323,20 @@ mod tests {
         assert_eq!(c.bytes(), 0);
         assert!(c.is_empty());
         assert_eq!(c.remove("a"), None);
+    }
+
+    #[test]
+    fn evict_oldest_pops_lru_and_counts() {
+        let c: LruCache<u32> = LruCache::new(100);
+        c.insert("a", 1, 10);
+        c.insert("b", 2, 10);
+        c.get("a"); // "b" is now the LRU entry
+        assert_eq!(c.evict_oldest().as_deref(), Some("b"));
+        assert_eq!(c.stats().evictions(), 1);
+        assert_eq!(c.bytes(), 10);
+        assert_eq!(c.evict_oldest().as_deref(), Some("a"));
+        assert_eq!(c.evict_oldest(), None, "empty cache is a no-op");
+        assert_eq!(c.stats().entries(), 0);
     }
 
     #[test]

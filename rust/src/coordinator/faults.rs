@@ -1,0 +1,428 @@
+//! Deterministic fault injection for the serving layer.
+//!
+//! Robustness claims are only as good as the faults they were tested
+//! against, and ad-hoc "kill a thread and see" experiments do not
+//! reproduce. [`FaultInjector`] makes the failure modes the coordinator
+//! defends against *injectable on a schedule*:
+//!
+//! - **exec panic** — panic inside batch execution for every Nth batch
+//!   whose queue key matches a pattern, exercising `catch_unwind`
+//!   isolation and `ExecPanic` fan-out;
+//! - **worker kill** — panic *outside* the isolation boundary after a
+//!   worker finishes a batch, exercising supervisor respawn
+//!   (`worker_restarts`);
+//! - **exec delay** — artificial pre-execution sleep with a seeded
+//!   probability, exercising deadline shedding and bounded waits;
+//! - **forced cache eviction** — pop the LRU plan every Nth batch,
+//!   exercising the eviction-rebuild path under load;
+//! - **TCP frame chop** — split a reply frame into two partial writes,
+//!   exercising client-side reassembly.
+//!
+//! Counting faults (`panic_every`, `kill_worker_every`, `evict_every`)
+//! are fully deterministic: global atomic counters, independent of
+//! thread interleaving, so a chaos test can assert *exact* injected
+//! totals against `exec_panics` / `worker_restarts`. Probabilistic
+//! faults (`exec_delay_prob`, `chop_prob`) draw from one
+//! [`SplitMix64`] seeded stream — reproducible per seed up to thread
+//! scheduling. The default plan is a no-op and the hot path pays a
+//! single `bool` load when no faults are configured.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, Once};
+use std::time::Duration;
+
+use super::lock::LockExt;
+use crate::util::rng::SplitMix64;
+
+/// Marker embedded in every injected panic payload. The quiet panic
+/// hook ([`install_quiet_panic_hook`]) suppresses the default stderr
+/// backtrace for payloads carrying this tag so a 100-panic chaos soak
+/// does not drown test output; real (non-injected) panics still print.
+pub const INJECTED_PANIC_TAG: &str = "[chaos-injected]";
+
+/// What to inject and when. `Default` is a complete no-op.
+#[derive(Clone, Debug)]
+pub struct FaultPlan {
+    /// seed for the probabilistic faults' random stream
+    pub seed: u64,
+    /// panic inside batch execution on every Nth batch whose queue key
+    /// contains [`panic_key_pattern`](Self::panic_key_pattern)
+    /// (`0` = never)
+    pub panic_every: u64,
+    /// substring of the queue key that arms `panic_every` (empty
+    /// matches every key)
+    pub panic_key_pattern: String,
+    /// stop injecting exec panics after this many (`0` = unlimited)
+    pub panic_limit: u64,
+    /// kill the exec worker thread (panic OUTSIDE the batch isolation
+    /// boundary) after every Nth worker-executed batch (`0` = never)
+    pub kill_worker_every: u64,
+    /// stop killing workers after this many (`0` = unlimited)
+    pub kill_worker_limit: u64,
+    /// artificial delay inserted before batch execution...
+    pub exec_delay: Duration,
+    /// ...with this probability per batch (`0.0` = never)
+    pub exec_delay_prob: f64,
+    /// force one LRU eviction from the direct-plan cache every Nth
+    /// executed batch (`0` = never)
+    pub evict_every: u64,
+    /// probability a TCP reply frame is chopped into two partial
+    /// writes with a flush between (`0.0` = never)
+    pub chop_prob: f64,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        FaultPlan {
+            seed: 0x7c3a_11e5,
+            panic_every: 0,
+            panic_key_pattern: String::new(),
+            panic_limit: 0,
+            kill_worker_every: 0,
+            kill_worker_limit: 0,
+            exec_delay: Duration::ZERO,
+            exec_delay_prob: 0.0,
+            evict_every: 0,
+            chop_prob: 0.0,
+        }
+    }
+}
+
+impl FaultPlan {
+    fn is_noop(&self) -> bool {
+        self.panic_every == 0
+            && self.kill_worker_every == 0
+            && self.exec_delay_prob <= 0.0
+            && self.evict_every == 0
+            && self.chop_prob <= 0.0
+    }
+}
+
+/// Scheduled fault source shared by the service, its workers, and the
+/// TCP server (`ServiceConfig::faults`). All methods are cheap no-ops
+/// when the plan is empty.
+#[derive(Debug)]
+pub struct FaultInjector {
+    active: bool,
+    plan: FaultPlan,
+    panic_matches: AtomicU64,
+    panics_injected: AtomicU64,
+    worker_batches: AtomicU64,
+    kills_injected: AtomicU64,
+    exec_batches: AtomicU64,
+    evicts_forced: AtomicU64,
+    delays_injected: AtomicU64,
+    chops_injected: AtomicU64,
+    rng: Mutex<SplitMix64>,
+}
+
+impl Default for FaultInjector {
+    fn default() -> Self {
+        FaultInjector::disabled()
+    }
+}
+
+impl FaultInjector {
+    /// The no-op injector every production config carries by default.
+    pub fn disabled() -> FaultInjector {
+        FaultInjector::new(FaultPlan::default())
+    }
+
+    /// Injector following `plan`.
+    pub fn new(plan: FaultPlan) -> FaultInjector {
+        FaultInjector {
+            active: !plan.is_noop(),
+            rng: Mutex::new(SplitMix64::new(plan.seed)),
+            plan,
+            panic_matches: AtomicU64::new(0),
+            panics_injected: AtomicU64::new(0),
+            worker_batches: AtomicU64::new(0),
+            kills_injected: AtomicU64::new(0),
+            exec_batches: AtomicU64::new(0),
+            evicts_forced: AtomicU64::new(0),
+            delays_injected: AtomicU64::new(0),
+            chops_injected: AtomicU64::new(0),
+        }
+    }
+
+    /// True when any fault is scheduled (one branch on the hot path).
+    pub fn is_active(&self) -> bool {
+        self.active
+    }
+
+    /// The plan this injector follows.
+    pub fn plan(&self) -> &FaultPlan {
+        &self.plan
+    }
+
+    fn chance(&self, p: f64) -> bool {
+        if p <= 0.0 {
+            return false;
+        }
+        if p >= 1.0 {
+            return true;
+        }
+        self.rng.plock().next_f64() < p
+    }
+
+    /// Call at the top of batch execution, INSIDE the `catch_unwind`
+    /// boundary. May sleep (`exec_delay`) and may panic
+    /// (`panic_every`); an injected panic is tagged with
+    /// [`INJECTED_PANIC_TAG`] and must surface to every batch member
+    /// as `ExecPanic`.
+    pub fn before_exec(&self, queue_key: &str) {
+        if !self.active {
+            return;
+        }
+        if self.chance(self.plan.exec_delay_prob) {
+            self.delays_injected.fetch_add(1, Ordering::Relaxed);
+            std::thread::sleep(self.plan.exec_delay);
+        }
+        if self.plan.panic_every > 0 && queue_key.contains(&self.plan.panic_key_pattern) {
+            let nth = self.panic_matches.fetch_add(1, Ordering::Relaxed) + 1;
+            if nth % self.plan.panic_every == 0 {
+                // reserve a slot under the limit atomically so
+                // concurrent workers never overshoot it
+                let mine = self.panics_injected.fetch_add(1, Ordering::Relaxed) + 1;
+                if self.plan.panic_limit == 0 || mine <= self.plan.panic_limit {
+                    panic!("{INJECTED_PANIC_TAG} exec panic #{mine} (batch key {queue_key})");
+                }
+                self.panics_injected.fetch_sub(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Call from the exec-worker loop after a batch completes, OUTSIDE
+    /// the batch isolation boundary — never from the inline-exec
+    /// (leader) path, where the "worker" is a client thread. An
+    /// injected panic here kills the worker thread so the supervisor's
+    /// respawn path is exercised.
+    pub fn after_worker_batch(&self) {
+        if !self.active || self.plan.kill_worker_every == 0 {
+            return;
+        }
+        let nth = self.worker_batches.fetch_add(1, Ordering::Relaxed) + 1;
+        if nth % self.plan.kill_worker_every == 0 {
+            let mine = self.kills_injected.fetch_add(1, Ordering::Relaxed) + 1;
+            if self.plan.kill_worker_limit == 0 || mine <= self.plan.kill_worker_limit {
+                panic!("{INJECTED_PANIC_TAG} worker kill #{mine}");
+            }
+            self.kills_injected.fetch_sub(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Should this executed batch force one LRU eviction from the plan
+    /// cache? Counted per executed batch, deterministic.
+    pub fn should_force_evict(&self) -> bool {
+        if !self.active || self.plan.evict_every == 0 {
+            return false;
+        }
+        let nth = self.exec_batches.fetch_add(1, Ordering::Relaxed) + 1;
+        let fire = nth % self.plan.evict_every == 0;
+        if fire {
+            self.evicts_forced.fetch_add(1, Ordering::Relaxed);
+        }
+        fire
+    }
+
+    /// Should this TCP reply frame be chopped into two partial writes?
+    pub fn should_chop(&self) -> bool {
+        if !self.active {
+            return false;
+        }
+        let fire = self.chance(self.plan.chop_prob);
+        if fire {
+            self.chops_injected.fetch_add(1, Ordering::Relaxed);
+        }
+        fire
+    }
+
+    /// Exec panics injected so far (== expected `exec_panics` metric).
+    pub fn panics_injected(&self) -> u64 {
+        let n = self.panics_injected.load(Ordering::Relaxed);
+        if self.plan.panic_limit > 0 {
+            n.min(self.plan.panic_limit)
+        } else {
+            n
+        }
+    }
+
+    /// Worker kills injected so far (== expected `worker_restarts`
+    /// from this fault; flusher restarts add on top).
+    pub fn kills_injected(&self) -> u64 {
+        let n = self.kills_injected.load(Ordering::Relaxed);
+        if self.plan.kill_worker_limit > 0 {
+            n.min(self.plan.kill_worker_limit)
+        } else {
+            n
+        }
+    }
+
+    /// Forced evictions fired so far.
+    pub fn evicts_forced(&self) -> u64 {
+        self.evicts_forced.load(Ordering::Relaxed)
+    }
+
+    /// Artificial delays inserted so far.
+    pub fn delays_injected(&self) -> u64 {
+        self.delays_injected.load(Ordering::Relaxed)
+    }
+
+    /// Reply frames chopped so far.
+    pub fn chops_injected(&self) -> u64 {
+        self.chops_injected.load(Ordering::Relaxed)
+    }
+}
+
+/// Install (once, process-wide) a panic hook that suppresses the
+/// default report for panics tagged [`INJECTED_PANIC_TAG`], chaining
+/// to the previous hook for everything else. Chaos tests and
+/// `serve_demo --chaos` call this so hundreds of *expected* panics do
+/// not bury real output; untagged panics keep the standard report.
+pub fn install_quiet_panic_hook() {
+    static INSTALL: Once = Once::new();
+    INSTALL.call_once(|| {
+        let previous = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            let tagged = info
+                .payload()
+                .downcast_ref::<String>()
+                .map(|s| s.contains(INJECTED_PANIC_TAG))
+                .or_else(|| {
+                    info.payload()
+                        .downcast_ref::<&str>()
+                        .map(|s| s.contains(INJECTED_PANIC_TAG))
+                })
+                .unwrap_or(false);
+            if !tagged {
+                previous(info);
+            }
+        }));
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_plan_is_inert() {
+        let f = FaultInjector::disabled();
+        assert!(!f.is_active());
+        f.before_exec("fft1d:n=4096:tc:fwd"); // must not panic
+        f.after_worker_batch();
+        assert!(!f.should_force_evict());
+        assert!(!f.should_chop());
+        assert_eq!(f.panics_injected(), 0);
+        assert_eq!(f.kills_injected(), 0);
+    }
+
+    #[test]
+    fn panics_on_schedule_for_matching_keys() {
+        install_quiet_panic_hook();
+        let f = FaultInjector::new(FaultPlan {
+            panic_every: 3,
+            panic_key_pattern: "n=4096".into(),
+            panic_limit: 2,
+            ..FaultPlan::default()
+        });
+        assert!(f.is_active());
+        let mut panicked = 0;
+        for i in 0..12 {
+            let key = if i % 2 == 0 { "fft1d:n=4096:tc:fwd" } else { "fft1d:n=64:tc:fwd" };
+            let hit = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                f.before_exec(key);
+            }))
+            .is_err();
+            if hit {
+                panicked += 1;
+                assert_eq!(i % 2, 0, "only matching keys may panic");
+            }
+        }
+        // 6 matching batches, every 3rd panics -> 2; limit 2 also caps it
+        assert_eq!(panicked, 2);
+        assert_eq!(f.panics_injected(), 2);
+    }
+
+    #[test]
+    fn panic_limit_is_respected_and_counters_stay_exact() {
+        install_quiet_panic_hook();
+        let f = FaultInjector::new(FaultPlan {
+            panic_every: 1,
+            panic_limit: 4,
+            ..FaultPlan::default()
+        });
+        let mut panicked = 0;
+        for _ in 0..50 {
+            if std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f.before_exec("k")))
+                .is_err()
+            {
+                panicked += 1;
+            }
+        }
+        assert_eq!(panicked, 4);
+        assert_eq!(f.panics_injected(), 4);
+    }
+
+    #[test]
+    fn worker_kills_fire_on_their_own_schedule() {
+        install_quiet_panic_hook();
+        let f = FaultInjector::new(FaultPlan {
+            kill_worker_every: 5,
+            kill_worker_limit: 2,
+            ..FaultPlan::default()
+        });
+        let mut killed = 0;
+        for _ in 0..30 {
+            if std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f.after_worker_batch()))
+                .is_err()
+            {
+                killed += 1;
+            }
+        }
+        assert_eq!(killed, 2);
+        assert_eq!(f.kills_injected(), 2);
+    }
+
+    #[test]
+    fn evictions_count_batches_deterministically() {
+        let f = FaultInjector::new(FaultPlan { evict_every: 4, ..FaultPlan::default() });
+        let fired: Vec<bool> = (0..8).map(|_| f.should_force_evict()).collect();
+        assert_eq!(fired, [false, false, false, true, false, false, false, true]);
+        assert_eq!(f.evicts_forced(), 2);
+    }
+
+    #[test]
+    fn chop_probability_extremes() {
+        let always = FaultInjector::new(FaultPlan { chop_prob: 1.0, ..FaultPlan::default() });
+        let never = FaultInjector::new(FaultPlan { chop_prob: 1.0, ..FaultPlan::default() });
+        assert!(always.should_chop());
+        assert_eq!(always.chops_injected(), 1);
+        // active via chop_prob, but other faults must stay quiet
+        never.before_exec("any");
+        assert!(!never.should_force_evict());
+    }
+
+    #[test]
+    fn delay_fires_with_certainty_probability() {
+        let f = FaultInjector::new(FaultPlan {
+            exec_delay: Duration::from_millis(1),
+            exec_delay_prob: 1.0,
+            ..FaultPlan::default()
+        });
+        let t0 = std::time::Instant::now();
+        f.before_exec("k");
+        assert!(t0.elapsed() >= Duration::from_millis(1));
+        assert_eq!(f.delays_injected(), 1);
+    }
+
+    #[test]
+    fn seeded_chance_is_reproducible() {
+        let a = FaultInjector::new(FaultPlan { chop_prob: 0.5, seed: 9, ..FaultPlan::default() });
+        let b = FaultInjector::new(FaultPlan { chop_prob: 0.5, seed: 9, ..FaultPlan::default() });
+        let sa: Vec<bool> = (0..64).map(|_| a.should_chop()).collect();
+        let sb: Vec<bool> = (0..64).map(|_| b.should_chop()).collect();
+        assert_eq!(sa, sb, "same seed must give the same fault schedule");
+        assert!(sa.iter().any(|x| *x) && sa.iter().any(|x| !*x));
+    }
+}

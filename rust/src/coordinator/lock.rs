@@ -1,0 +1,112 @@
+//! Poison-recovering lock helpers — the only sanctioned way to take a
+//! mutex in `coordinator/`.
+//!
+//! `std::sync::Mutex` poisons itself when a thread panics while
+//! holding the guard. The serving layer isolates panics per batch
+//! ([`catch_unwind`][std::panic::catch_unwind] in `run_batch`) and
+//! respawns dead workers, so a poisoned mutex is an *expected, already
+//! handled* condition — the data under the lock is counters, queue
+//! maps and cache entries whose invariants hold between statements,
+//! not mid-panic partial writes. A bare `lock().unwrap()` would turn
+//! one isolated panic into a cascade: every later lock attempt
+//! panics, every worker dies, and the whole service wedges. These
+//! helpers recover the guard instead (`PoisonError::into_inner`), so
+//! one fault stays one fault.
+//!
+//! CI enforces the contract: `./ci.sh` greps `rust/src/coordinator/`
+//! and rejects any new bare `lock().unwrap()`.
+
+use std::sync::{Condvar, Mutex, MutexGuard, TryLockError};
+use std::time::Duration;
+
+/// Poison-recovering extension methods for [`Mutex`].
+pub trait LockExt<T> {
+    /// [`Mutex::lock`], recovering the guard from a poisoned mutex
+    /// instead of panicking.
+    fn plock(&self) -> MutexGuard<'_, T>;
+
+    /// [`Mutex::try_lock`], recovering a poisoned guard; `None` only
+    /// when the lock is genuinely contended (`WouldBlock`).
+    fn try_plock(&self) -> Option<MutexGuard<'_, T>>;
+}
+
+impl<T> LockExt<T> for Mutex<T> {
+    fn plock(&self) -> MutexGuard<'_, T> {
+        self.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+    }
+
+    fn try_plock(&self) -> Option<MutexGuard<'_, T>> {
+        match self.try_lock() {
+            Ok(guard) => Some(guard),
+            Err(TryLockError::Poisoned(poisoned)) => Some(poisoned.into_inner()),
+            Err(TryLockError::WouldBlock) => None,
+        }
+    }
+}
+
+/// [`Condvar::wait_timeout`] with poison recovery on the re-acquired
+/// guard. The timed-out/notified distinction is dropped on purpose:
+/// every caller in the coordinator re-derives its condition from the
+/// guarded state after waking (condvar waits are always loop-guarded).
+pub fn wait_timeout_recover<'a, T>(
+    cv: &Condvar,
+    guard: MutexGuard<'a, T>,
+    timeout: Duration,
+) -> MutexGuard<'a, T> {
+    match cv.wait_timeout(guard, timeout) {
+        Ok((guard, _timed_out)) => guard,
+        Err(poisoned) => poisoned.into_inner().0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn plock_recovers_a_poisoned_mutex() {
+        let m = Arc::new(Mutex::new(7u32));
+        let m2 = Arc::clone(&m);
+        // poison it: panic while holding the guard
+        let _ = std::thread::spawn(move || {
+            let _guard = m2.lock().unwrap();
+            panic!("poison");
+        })
+        .join();
+        assert!(m.lock().is_err(), "mutex must actually be poisoned");
+        assert_eq!(*m.plock(), 7, "plock must hand back the guarded value");
+        *m.plock() = 8;
+        assert_eq!(*m.plock(), 8);
+    }
+
+    #[test]
+    fn try_plock_recovers_poison_but_respects_contention() {
+        let m = Arc::new(Mutex::new(1u32));
+        let m2 = Arc::clone(&m);
+        let _ = std::thread::spawn(move || {
+            let _guard = m2.lock().unwrap();
+            panic!("poison");
+        })
+        .join();
+        assert_eq!(m.try_plock().map(|g| *g), Some(1));
+        // held elsewhere -> None (WouldBlock), poisoned or not
+        let held = m.plock();
+        assert!(m.try_plock().is_none());
+        drop(held);
+    }
+
+    #[test]
+    fn wait_timeout_recover_survives_poisoned_condvar_pair() {
+        let pair = Arc::new((Mutex::new(false), Condvar::new()));
+        let pair2 = Arc::clone(&pair);
+        let _ = std::thread::spawn(move || {
+            let _guard = pair2.0.lock().unwrap();
+            panic!("poison");
+        })
+        .join();
+        let guard = pair.0.plock();
+        let guard = wait_timeout_recover(&pair.1, guard, Duration::from_millis(1));
+        assert!(!*guard);
+    }
+}

@@ -13,6 +13,8 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 use super::cache::CacheStats;
+use super::lock::LockExt;
+use crate::error::{TcFftError, ERROR_CODES};
 use crate::util::json::Json;
 use crate::util::stats::{Reservoir, DEFAULT_RESERVOIR};
 
@@ -51,6 +53,18 @@ pub struct Metrics {
     /// four-step plans rebuilt transparently at execution time after a
     /// cache eviction raced an in-flight batch
     pub large_rebuilds: AtomicU64,
+    /// batches whose execution panicked (the panic was caught and
+    /// isolated; every member got an `ExecPanic` reply)
+    pub exec_panics: AtomicU64,
+    /// exec workers / flushers respawned by the supervisor after dying
+    /// to an uncaught panic
+    pub worker_restarts: AtomicU64,
+    /// requests shed with `DeadlineExceeded` before execution (at flush
+    /// time or at batch-assembly time)
+    pub deadline_shed: AtomicU64,
+    /// error replies by stable code, indexed as [`ERROR_CODES`]
+    /// (recorded at every serving-path reject/fail choke point)
+    pub errors_by_code: [AtomicU64; ERROR_CODES.len()],
     /// direct-plan cache counters (shared with the service's LruCache)
     pub plan_cache: Arc<CacheStats>,
     /// four-step plan cache counters
@@ -92,6 +106,10 @@ impl Metrics {
             conv_batch_requests: AtomicU64::new(0),
             stolen_batches: AtomicU64::new(0),
             large_rebuilds: AtomicU64::new(0),
+            exec_panics: AtomicU64::new(0),
+            worker_restarts: AtomicU64::new(0),
+            deadline_shed: AtomicU64::new(0),
+            errors_by_code: std::array::from_fn(|_| AtomicU64::new(0)),
             plan_cache: Arc::new(CacheStats::default()),
             large_cache: Arc::new(CacheStats::default()),
             bank_cache: Arc::new(CacheStats::default()),
@@ -103,23 +121,40 @@ impl Metrics {
 
     /// Record one end-to-end request latency sample.
     pub fn record_latency(&self, seconds: f64) {
-        self.lat.lock().unwrap().add(seconds);
+        self.lat.plock().add(seconds);
     }
 
     /// Record one batcher queue-wait sample.
     pub fn record_queue_wait(&self, seconds: f64) {
-        self.queue_wait.lock().unwrap().add(seconds);
+        self.queue_wait.plock().add(seconds);
     }
 
     /// Record one per-batch execution-time sample.
     pub fn record_exec(&self, seconds: f64) {
-        self.exec.lock().unwrap().add(seconds);
+        self.exec.plock().add(seconds);
+    }
+
+    /// Tally one error reply under its stable code (the errors-by-code
+    /// section of the snapshot). Call once per *reply sent*, at the
+    /// serving-path choke point that produced the error.
+    pub fn record_error(&self, e: &TcFftError) {
+        self.errors_by_code[e.code_index()].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Total error replies recorded under `code` (`0` for unknown
+    /// codes — keeps test assertions total even if a code is renamed).
+    pub fn errors_for(&self, code: &str) -> u64 {
+        ERROR_CODES
+            .iter()
+            .position(|c| *c == code)
+            .map(|i| self.errors_by_code[i].load(Ordering::Relaxed))
+            .unwrap_or(0)
     }
 
     /// Samples currently held in the latency reservoir (bounded by its
     /// capacity) and the lifetime sample count.
     pub fn latency_counts(&self) -> (usize, u64) {
-        let lat = self.lat.lock().unwrap();
+        let lat = self.lat.plock();
         (lat.len(), lat.total())
     }
 
@@ -146,9 +181,16 @@ impl Metrics {
 
     /// One JSON snapshot of every counter and reservoir statistic.
     pub fn snapshot(&self) -> Json {
-        let lat = self.lat.lock().unwrap();
-        let qw = self.queue_wait.lock().unwrap();
-        let ex = self.exec.lock().unwrap();
+        let lat = self.lat.plock();
+        let qw = self.queue_wait.plock();
+        let ex = self.exec.plock();
+        let errors = Json::obj(
+            ERROR_CODES
+                .iter()
+                .zip(&self.errors_by_code)
+                .map(|(code, n)| (*code, Json::num(n.load(Ordering::Relaxed) as f64)))
+                .collect(),
+        );
         Json::obj(vec![
             ("requests", Json::num(self.requests.load(Ordering::Relaxed) as f64)),
             ("completed", Json::num(self.completed.load(Ordering::Relaxed) as f64)),
@@ -165,6 +207,10 @@ impl Metrics {
             ("batches", Json::num(self.batches.load(Ordering::Relaxed) as f64)),
             ("stolen_batches", Json::num(self.stolen_batches.load(Ordering::Relaxed) as f64)),
             ("large_rebuilds", Json::num(self.large_rebuilds.load(Ordering::Relaxed) as f64)),
+            ("exec_panics", Json::num(self.exec_panics.load(Ordering::Relaxed) as f64)),
+            ("worker_restarts", Json::num(self.worker_restarts.load(Ordering::Relaxed) as f64)),
+            ("deadline_shed", Json::num(self.deadline_shed.load(Ordering::Relaxed) as f64)),
+            ("errors_by_code", errors),
             ("padding_ratio", Json::num(self.padding_ratio())),
             ("latency_p50_ms", Json::num(lat.median() * 1e3)),
             ("latency_p95_ms", Json::num(lat.p95() * 1e3)),
@@ -220,6 +266,31 @@ mod tests {
         // the window holds the most recent 64 samples (936..999 ms)
         let p50 = snap.get("latency_p50_ms").unwrap().as_f64().unwrap();
         assert!(p50 > 900.0, "windowed p50 {p50} should reflect recent samples");
+    }
+
+    #[test]
+    fn errors_by_code_tallies_and_snapshots() {
+        let m = Metrics::new();
+        m.record_error(&TcFftError::DeadlineExceeded);
+        m.record_error(&TcFftError::DeadlineExceeded);
+        m.record_error(&TcFftError::ExecPanic("boom".into()));
+        m.record_error(&TcFftError::QueueFull);
+        assert_eq!(m.errors_for("deadline_exceeded"), 2);
+        assert_eq!(m.errors_for("exec_panic"), 1);
+        assert_eq!(m.errors_for("queue_full"), 1);
+        assert_eq!(m.errors_for("bad_size"), 0);
+        assert_eq!(m.errors_for("not_a_code"), 0);
+        let snap = m.snapshot();
+        let errs = snap.get("errors_by_code").unwrap();
+        assert_eq!(errs.get("deadline_exceeded").unwrap().as_i64(), Some(2));
+        assert_eq!(errs.get("exec_panic").unwrap().as_i64(), Some(1));
+        // every stable code appears, even at zero
+        for code in ERROR_CODES {
+            assert!(errs.get(code).is_some(), "missing code {code}");
+        }
+        assert_eq!(snap.get("exec_panics").unwrap().as_i64(), Some(0));
+        assert_eq!(snap.get("worker_restarts").unwrap().as_i64(), Some(0));
+        assert_eq!(snap.get("deadline_shed").unwrap().as_i64(), Some(0));
     }
 
     #[test]

@@ -14,14 +14,28 @@
 //! [`FftService::submit_convolve`]), bounded-reservoir metrics, and a
 //! TCP JSON front end on a bounded worker pool with request
 //! pipelining.
+//!
+//! The layer is fault-tolerant by construction: batch execution is
+//! panic-isolated (`catch_unwind` → structured [`TcFftError::ExecPanic`]
+//! replies to every batch member), dead workers and flushers are
+//! respawned by a supervisor, every request carries an end-to-end
+//! deadline shed at flush and pre-execution time, and every mutex in
+//! this module is taken through the poison-recovering [`lock`]
+//! helpers. The [`faults`] injector makes those paths deterministic to
+//! test (see `tests/chaos_service.rs`).
+//!
+//! [`TcFftError::ExecPanic`]: crate::error::TcFftError::ExecPanic
 
 pub mod batcher;
 pub mod cache;
+pub mod faults;
+pub mod lock;
 pub mod metrics;
 pub mod quota;
 pub mod server;
 pub mod service;
 
+pub use faults::{FaultInjector, FaultPlan};
 pub use metrics::Metrics;
 pub use server::{Server, ServerConfig};
 pub use service::{FftRequest, FftService, Op, ServiceConfig, Ticket};

@@ -10,12 +10,22 @@
 //! never consumes queue capacity.
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Instant;
+
+use super::lock::LockExt;
 
 struct Bucket {
     tokens: f64,
     last: Instant,
+}
+
+struct Buckets {
+    map: HashMap<u64, Bucket>,
+    /// next instant a prune scan is allowed — pruning is amortized to
+    /// at most one O(clients) scan per refill interval (see `admit`)
+    next_prune: Option<Instant>,
 }
 
 /// Token-bucket admission gate. `rate <= 0` disables metering (every
@@ -24,7 +34,10 @@ struct Bucket {
 pub struct QuotaGate {
     rate: f64,
     burst: f64,
-    buckets: Mutex<HashMap<u64, Bucket>>,
+    buckets: Mutex<Buckets>,
+    /// prune scans actually run (diagnostics; the amortization
+    /// regression test asserts this stays far below the admit count)
+    prune_scans: AtomicU64,
 }
 
 /// Prune bookkeeping for clients idle long enough to have fully
@@ -35,7 +48,12 @@ impl QuotaGate {
     /// Gate admitting `rate` requests/sec sustained with bursts up to
     /// `burst` per client. Non-positive `rate` disables the gate.
     pub fn new(rate: f64, burst: f64) -> Self {
-        QuotaGate { rate, burst: burst.max(1.0), buckets: Mutex::new(HashMap::new()) }
+        QuotaGate {
+            rate,
+            burst: burst.max(1.0),
+            buckets: Mutex::new(Buckets { map: HashMap::new(), next_prune: None }),
+            prune_scans: AtomicU64::new(0),
+        }
     }
 
     /// True when the gate admits everything (rate <= 0).
@@ -45,17 +63,40 @@ impl QuotaGate {
 
     /// Try to take one token for `client`; `false` means the request
     /// must be rejected with `QuotaExceeded`.
+    ///
+    /// Bookkeeping for idle clients is pruned lazily, and the scan is
+    /// **amortized**: past `PRUNE_LEN` tracked clients, at most one
+    /// O(clients) `retain` runs per refill interval (`burst / rate`
+    /// seconds — any bucket idle that long is fully refilled, i.e.
+    /// indistinguishable from a fresh one). The pre-fix pathology:
+    /// with `> PRUNE_LEN` *active* buckets the scan freed nothing and
+    /// ran again on the very next admit, turning every admit into an
+    /// O(clients) walk.
     pub fn admit(&self, client: u64) -> bool {
         if self.disabled() {
             return true;
         }
         let now = Instant::now();
-        let mut buckets = self.buckets.lock().unwrap();
-        if buckets.len() > PRUNE_LEN {
+        let mut buckets = self.buckets.plock();
+        if buckets.map.len() > PRUNE_LEN {
             let refill_secs = self.burst / self.rate;
-            buckets.retain(|_, b| now.duration_since(b.last).as_secs_f64() < refill_secs);
+            let due = match buckets.next_prune {
+                None => true,
+                Some(t) => now >= t,
+            };
+            if due {
+                self.prune_scans.fetch_add(1, Ordering::Relaxed);
+                buckets
+                    .map
+                    .retain(|_, b| now.duration_since(b.last).as_secs_f64() < refill_secs);
+                // whether or not the scan shrank the map, the next one
+                // can wait a full refill interval: nothing admitted
+                // before then can have become prunable
+                buckets.next_prune = Some(now + std::time::Duration::from_secs_f64(refill_secs));
+            }
         }
         let b = buckets
+            .map
             .entry(client)
             .or_insert(Bucket { tokens: self.burst, last: now });
         let dt = now.duration_since(b.last).as_secs_f64();
@@ -71,7 +112,12 @@ impl QuotaGate {
 
     /// Number of clients currently tracked (diagnostics/tests).
     pub fn tracked(&self) -> usize {
-        self.buckets.lock().unwrap().len()
+        self.buckets.plock().map.len()
+    }
+
+    /// Number of O(clients) prune scans run so far (diagnostics/tests).
+    pub fn prune_scans(&self) -> u64 {
+        self.prune_scans.load(Ordering::Relaxed)
     }
 }
 
@@ -107,5 +153,53 @@ mod tests {
         assert!(!g.admit(1));
         std::thread::sleep(std::time::Duration::from_millis(20));
         assert!(g.admit(1));
+    }
+
+    #[test]
+    fn prune_is_amortized_under_all_active_clients() {
+        // Regression for the prune pathology: with > PRUNE_LEN tracked,
+        // ALL-ACTIVE buckets (nothing is idle long enough to free),
+        // every admit used to run an O(clients) retain that freed
+        // nothing. Amortized pruning bounds the scans to one per
+        // refill interval — here the interval is huge (burst/rate =
+        // 3e4 s), so across thousands of admits at 2048 active clients
+        // at most ONE scan may run.
+        let g = QuotaGate::new(1e-4, 3.0);
+        let clients = 2 * PRUNE_LEN as u64; // 2048 — well past the threshold
+        for c in 0..clients {
+            g.admit(c);
+        }
+        assert!(g.tracked() > PRUNE_LEN, "test must exercise the over-threshold path");
+        let scans_before = g.prune_scans();
+        // a second full round: every admit sees len > PRUNE_LEN
+        for c in 0..clients {
+            g.admit(c);
+        }
+        let scans = g.prune_scans() - scans_before;
+        assert!(
+            scans <= 1,
+            "{scans} prune scans across {clients} admits — pruning must be amortized"
+        );
+        // all buckets stayed (every client is active within the
+        // refill window): pruning must not evict live state
+        assert_eq!(g.tracked(), clients as usize);
+    }
+
+    #[test]
+    fn prune_still_frees_idle_clients() {
+        // short refill interval (burst/rate = 10ms): after sleeping it
+        // out, a fresh admit past the threshold prunes the idle herd
+        let g = QuotaGate::new(100.0, 1.0);
+        for c in 0..(PRUNE_LEN as u64 + 8) {
+            g.admit(c);
+        }
+        assert!(g.tracked() > PRUNE_LEN);
+        std::thread::sleep(std::time::Duration::from_millis(25));
+        g.admit(999_999);
+        assert!(
+            g.tracked() < PRUNE_LEN,
+            "idle clients must still be pruned ({} tracked)",
+            g.tracked()
+        );
     }
 }

@@ -23,7 +23,12 @@
 //!             {"op": "metrics"}        -> metrics snapshot
 //!             {"op": "ping"}           -> {"ok": true}
 //!   response: {"ok": true, "re": [...], "im": [...], "latency_ms": x}
-//!           | {"ok": false, "error": "..."}
+//!           | {"ok": false, "error": "...", "code": "..."}
+//!
+//! Error replies carry a stable machine-readable `"code"` — one of
+//! `crate::error::ERROR_CODES` for service failures, or
+//! `"bad_request"` for protocol-level problems (malformed JSON,
+//! missing fields, shape mismatches caught before submission).
 //!
 //! Connections are served by a BOUNDED worker pool (the pre-pool
 //! server spawned one thread per accepted socket and kept every join
@@ -50,8 +55,10 @@ use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
 
-use crate::error::Result;
+use crate::error::{Result, TcFftError};
 
+use super::faults::FaultInjector;
+use super::lock::LockExt;
 use super::service::{FftRequest, FftService, Op, Ticket};
 use crate::plan::Direction;
 use crate::runtime::PlanarBatch;
@@ -75,6 +82,13 @@ pub struct ServerConfig {
     /// requests one connection may have in flight before its reader
     /// blocks (replies always return in request order)
     pub pipeline_depth: usize,
+    /// upper bound on one pipelined reply's ticket wait. The writer
+    /// used to block on `ticket.wait()` forever, so one lost batch
+    /// wedged its connection (and its pool worker) permanently; now it
+    /// emits a coded `deadline_exceeded` error line and moves on.
+    /// Generous by default — the service-side request deadline is the
+    /// primary bound; this is the last-ditch connection protector.
+    pub resolve_timeout: Duration,
 }
 
 impl Default for ServerConfig {
@@ -84,6 +98,7 @@ impl Default for ServerConfig {
             backlog: 32,
             read_timeout: Duration::from_millis(100),
             pipeline_depth: 32,
+            resolve_timeout: Duration::from_secs(60),
         }
     }
 }
@@ -147,11 +162,7 @@ impl Server {
                 std::thread::Builder::new()
                     .name(format!("tcfft-conn-{wi}"))
                     .spawn(move || loop {
-                        let conn = {
-                            rx.lock()
-                                .unwrap()
-                                .recv_timeout(Duration::from_millis(50))
-                        };
+                        let conn = { rx.plock().recv_timeout(Duration::from_millis(50)) };
                         match conn {
                             Ok(stream) => {
                                 let id = ids.fetch_add(1, Ordering::SeqCst);
@@ -229,19 +240,18 @@ fn handle_conn(
     stream.set_read_timeout(Some(cfg.read_timeout))?;
     let mut writer = stream.try_clone()?;
     let (reply_tx, reply_rx) = mpsc::sync_channel::<Reply>(cfg.pipeline_depth.max(1));
+    let resolve_timeout = cfg.resolve_timeout;
+    let faults = svc.faults();
     let writer_thread = std::thread::Builder::new()
         .name(format!("tcfft-conn-{conn_id}-w"))
         .spawn(move || {
-            // replies resolve and write in request order; a dead socket
-            // ends the loop, and the reader notices via send() failing
+            // replies resolve and write in request order, each wait
+            // bounded by resolve_timeout so one lost batch cannot
+            // wedge the connection; a dead socket ends the loop, and
+            // the reader notices via send() failing
             while let Ok(reply) = reply_rx.recv() {
-                let json = resolve_reply(reply);
-                if writer
-                    .write_all(json.to_string().as_bytes())
-                    .and_then(|_| writer.write_all(b"\n"))
-                    .and_then(|_| writer.flush())
-                    .is_err()
-                {
+                let json = resolve_reply(reply, resolve_timeout);
+                if write_frame(&mut writer, &json, &faults).is_err() {
                     break;
                 }
             }
@@ -287,8 +297,41 @@ fn handle_conn(
     Ok(())
 }
 
+/// Write one reply line. Under an injected chop fault the frame goes
+/// out as two partial writes with a flush between — a client must
+/// reassemble on the `\n` framing, never on write boundaries.
+fn write_frame(writer: &mut TcpStream, json: &Json, faults: &FaultInjector) -> std::io::Result<()> {
+    let mut frame = json.to_string().into_bytes();
+    frame.push(b'\n');
+    if faults.is_active() && frame.len() >= 2 && faults.should_chop() {
+        let mid = frame.len() / 2;
+        writer.write_all(&frame[..mid])?;
+        writer.flush()?;
+        writer.write_all(&frame[mid..])?;
+    } else {
+        writer.write_all(&frame)?;
+    }
+    writer.flush()
+}
+
+/// Protocol-level error reply (bad JSON, missing fields, shape
+/// mismatches caught before submission): stable code `bad_request`.
 fn err_json(msg: impl std::fmt::Display) -> Json {
-    Json::obj(vec![("ok", Json::Bool(false)), ("error", Json::str(msg.to_string()))])
+    Json::obj(vec![
+        ("ok", Json::Bool(false)),
+        ("error", Json::str(msg.to_string())),
+        ("code", Json::str("bad_request")),
+    ])
+}
+
+/// Service-error reply carrying the error's own stable code (the
+/// machine-readable half of the error taxonomy contract).
+fn err_coded(e: &TcFftError) -> Json {
+    Json::obj(vec![
+        ("ok", Json::Bool(false)),
+        ("error", Json::str(e.to_string())),
+        ("code", Json::str(e.code())),
+    ])
 }
 
 fn parse_floats(j: &Json, key: &str) -> Option<Vec<f32>> {
@@ -299,12 +342,14 @@ fn parse_floats(j: &Json, key: &str) -> Option<Vec<f32>> {
         .collect()
 }
 
-/// Wait out a pipelined reply and format the response line.
-fn resolve_reply(reply: Reply) -> Json {
+/// Wait out a pipelined reply (bounded by `timeout` — an overdue
+/// ticket becomes a coded `deadline_exceeded` error line, never a
+/// wedged writer) and format the response line.
+fn resolve_reply(reply: Reply, timeout: Duration) -> Json {
     match reply {
         Reply::Ready(j) => j,
-        Reply::Fft { ticket, t0 } => match ticket.wait() {
-            Err(e) => err_json(e),
+        Reply::Fft { ticket, t0 } => match ticket.wait_timeout(timeout) {
+            Err(e) => err_coded(&e),
             Ok(out) => Json::obj(vec![
                 ("ok", Json::Bool(true)),
                 ("re", Json::Arr(out.re.iter().map(|&x| Json::num(x as f64)).collect())),
@@ -312,8 +357,8 @@ fn resolve_reply(reply: Reply) -> Json {
                 ("latency_ms", Json::num(t0.elapsed().as_secs_f64() * 1e3)),
             ]),
         },
-        Reply::Conv { ticket, t0, n, k } => match ticket.wait() {
-            Err(e) => err_json(e),
+        Reply::Conv { ticket, t0, n, k } => match ticket.wait_timeout(timeout) {
+            Err(e) => err_coded(&e),
             Ok(out) => Json::obj(vec![
                 ("ok", Json::Bool(true)),
                 ("k", Json::num(k as f64)),
@@ -327,10 +372,14 @@ fn resolve_reply(reply: Reply) -> Json {
 
 /// Handle one protocol line against the service and build the reply
 /// (exposed for in-process protocol tests). Blocking: submits and
-/// waits. The TCP path uses [`handle_request`] + [`resolve_reply`]
-/// instead so the reader never blocks on a ticket.
+/// waits (bounded by the default `resolve_timeout`). The TCP path uses
+/// [`handle_request`] + [`resolve_reply`] instead so the reader never
+/// blocks on a ticket.
 pub fn handle_line(line: &str, svc: &FftService) -> Json {
-    resolve_reply(handle_request(line, svc, None))
+    resolve_reply(
+        handle_request(line, svc, None),
+        ServerConfig::default().resolve_timeout,
+    )
 }
 
 /// Parse one protocol line, submit any transform it carries (tagged
@@ -386,7 +435,7 @@ fn handle_request(line: &str, svc: &FftService, client: Option<u64>) -> Reply {
                 }
             }
             Reply::Ready(match svc.register_filter_bank(name, n, &filters, algo) {
-                Err(e) => err_json(e),
+                Err(e) => err_coded(&e),
                 Ok(k) => Json::obj(vec![("ok", Json::Bool(true)), ("k", Json::num(k as f64))]),
             })
         }
@@ -417,7 +466,7 @@ fn handle_request(line: &str, svc: &FftService, client: Option<u64>) -> Reply {
                 None => svc.submit_convolve(name, input),
             };
             match submitted {
-                Err(e) => Reply::Ready(err_json(e)),
+                Err(e) => Reply::Ready(err_coded(&e)),
                 Ok(ticket) => Reply::Conv { ticket, t0, n, k },
             }
         }
@@ -492,7 +541,7 @@ fn handle_request(line: &str, svc: &FftService, client: Option<u64>) -> Reply {
                 None => svc.submit(fftreq),
             };
             match submitted {
-                Err(e) => Reply::Ready(err_json(e)),
+                Err(e) => Reply::Ready(err_coded(&e)),
                 Ok(ticket) => Reply::Fft { ticket, t0 },
             }
         }
@@ -510,6 +559,17 @@ mod tests {
         assert!(Json::parse("nope").is_err());
         let e = err_json("x");
         assert_eq!(e.get("ok"), Some(&Json::Bool(false)));
+        assert_eq!(e.get("code").and_then(|c| c.as_str()), Some("bad_request"));
+    }
+
+    #[test]
+    fn coded_errors_carry_their_stable_code() {
+        let e = err_coded(&TcFftError::DeadlineExceeded);
+        assert_eq!(e.get("ok"), Some(&Json::Bool(false)));
+        assert_eq!(e.get("code").and_then(|c| c.as_str()), Some("deadline_exceeded"));
+        let e = err_coded(&TcFftError::ExecPanic("boom".into()));
+        assert_eq!(e.get("code").and_then(|c| c.as_str()), Some("exec_panic"));
+        assert!(e.get("error").and_then(|m| m.as_str()).unwrap().contains("boom"));
     }
 
     #[test]

@@ -32,8 +32,22 @@
 //! four-step plan is rebuilt transparently at execution time from its
 //! own key; an evicted filter bank must be re-registered (its taps are
 //! client content the service cannot reconstruct).
+//!
+//! ## Fault tolerance
+//!
+//! Batch execution is panic-isolated: `run_batch` wraps the engine
+//! call in `catch_unwind`, so a panicking kernel produces one
+//! [`TcFftError::ExecPanic`] reply per batch member instead of a dead
+//! worker and hung tickets. Workers and flushers that die to a panic
+//! *outside* that boundary are respawned by a supervisor thread
+//! (metrics `worker_restarts`). Every request carries an end-to-end
+//! deadline ([`ServiceConfig::request_deadline`]) shed at flush time
+//! and again at batch-assembly time, so an expired request is answered
+//! `DeadlineExceeded` promptly rather than executed late. All locks go
+//! through the poison-recovering [`super::lock`] helpers.
 
 use std::collections::HashMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::thread;
@@ -43,6 +57,8 @@ use crate::error::{Result, TcFftError};
 
 use super::batcher::{drain_due, Pending, PlanQueue, ReadyBatch};
 use super::cache::LruCache;
+use super::faults::FaultInjector;
+use super::lock::{wait_timeout_recover, LockExt};
 use super::metrics::Metrics;
 use super::quota::QuotaGate;
 use crate::large::{FourStepConfig, FourStepPlan, RealFourStepPlan};
@@ -158,6 +174,14 @@ pub struct ServiceConfig {
     pub quota_burst: f64,
     /// per-reservoir sample capacity of the metrics windows
     pub metrics_reservoir: usize,
+    /// end-to-end deadline stamped into every request at submit time.
+    /// Expired requests are shed with `DeadlineExceeded` at flush time
+    /// and again just before execution — never executed late. `None`
+    /// disables expiry (requests wait forever, the pre-PR-7 behavior)
+    pub request_deadline: Option<Duration>,
+    /// scheduled fault injection (chaos tests, `serve_demo --chaos`);
+    /// the default injector is inert and costs one branch per batch
+    pub faults: Arc<FaultInjector>,
 }
 
 impl Default for ServiceConfig {
@@ -184,6 +208,12 @@ impl Default for ServiceConfig {
             quota_rate: 0.0,
             quota_burst: 32.0,
             metrics_reservoir: crate::util::stats::DEFAULT_RESERVOIR,
+            // generous production default: far above any sane batch
+            // latency (a 2^24 four-step transform completes in
+            // seconds), tight enough that a wedged batch releases its
+            // clients rather than holding them forever
+            request_deadline: Some(Duration::from_secs(30)),
+            faults: Arc::new(FaultInjector::disabled()),
         }
     }
 }
@@ -196,19 +226,20 @@ pub struct Ticket {
 }
 
 impl Ticket {
-    /// Block until the transform completes.
+    /// Block until the transform completes. `Dropped` if the service
+    /// tore down the reply channel without answering.
     pub fn wait(self) -> Result<PlanarBatch> {
-        self.rx
-            .recv()
-            .map_err(|_| TcFftError::msg("service dropped the request"))?
+        self.rx.recv().map_err(|_| TcFftError::Dropped)?
     }
 
-    /// [`wait`](Self::wait) with a timeout.
+    /// [`wait`](Self::wait) with a timeout: `DeadlineExceeded` if no
+    /// reply arrived in time (the request may still execute; its reply
+    /// is discarded), `Dropped` on a torn-down channel.
     pub fn wait_timeout(self, d: Duration) -> Result<PlanarBatch> {
         match self.rx.recv_timeout(d) {
             Ok(r) => r,
-            Err(mpsc::RecvTimeoutError::Timeout) => Err(TcFftError::msg("request timed out")),
-            Err(_) => Err(TcFftError::msg("service dropped the request")),
+            Err(mpsc::RecvTimeoutError::Timeout) => Err(TcFftError::DeadlineExceeded),
+            Err(_) => Err(TcFftError::Dropped),
         }
     }
 }
@@ -298,10 +329,32 @@ fn fingerprint_key(desc: &str) -> String {
     format!("{desc}#{:016x}", fnv1a64(desc.as_bytes()))
 }
 
-/// Drain every due batch from one shard (`force` drains everything).
+/// Reply `DeadlineExceeded` to requests shed from the queues. Always
+/// called OUTSIDE the shard lock (reply channels are unbounded sends,
+/// but metrics and the client wakeup need not serialize queue access).
+fn shed_replies(shared: &Shared, shed: Vec<Pending>) {
+    for m in shed {
+        shared.metrics.deadline_shed.fetch_add(1, Ordering::Relaxed);
+        reply_error(shared, &m, TcFftError::DeadlineExceeded);
+    }
+}
+
+/// Send one error reply, keeping the failure counters consistent.
+fn reply_error(shared: &Shared, m: &Pending, e: TcFftError) {
+    shared.metrics.failed.fetch_add(1, Ordering::Relaxed);
+    shared.metrics.record_error(&e);
+    let _ = m.reply.send(Err(e));
+}
+
+/// Drain every due batch from one shard (`force` drains everything),
+/// answering deadline-shed requests on the way out.
 fn collect_due_shard(shared: &Shared, si: usize, force: bool) -> Vec<(String, ReadyBatch)> {
-    let mut queues = shared.shards[si].queues.lock().unwrap();
-    drain_due(&mut queues, Instant::now(), shared.cfg.max_wait, force)
+    let (ready, shed) = {
+        let mut queues = shared.shards[si].queues.plock();
+        drain_due(&mut queues, Instant::now(), shared.cfg.max_wait, force)
+    };
+    shed_replies(shared, shed);
+    ready
 }
 
 /// Rebuild an evicted four-step plan from its queue key (the key IS
@@ -362,24 +415,83 @@ fn execute_routed(
     rt.execute(key, input).map(|(out, _stats)| out)
 }
 
+/// Render a caught panic payload for the `ExecPanic` reply.
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// Execute one ready batch and reply to every member exactly once.
+///
+/// This is the panic-isolation boundary: the engine call (plus any
+/// injected faults) runs under `catch_unwind`, so a panicking kernel
+/// becomes one `ExecPanic` reply per member — no dropped senders, no
+/// hung `Ticket::wait`, and the calling thread (exec worker OR
+/// inline-exec client thread) survives. Members whose deadline passed
+/// while the batch was assembled are answered `DeadlineExceeded`
+/// up front; their rows ride along as padding-equivalent work unless
+/// the whole batch expired, in which case execution is skipped.
 fn run_batch(rt: &Runtime, shared: &Shared, key: &str, batch: ReadyBatch) {
+    let ReadyBatch { input, members, padded } = batch;
     shared.metrics.batches.fetch_add(1, Ordering::Relaxed);
     shared
         .metrics
         .busy_slots
-        .fetch_add(batch.members.len() as u64, Ordering::Relaxed);
+        .fetch_add(members.len() as u64, Ordering::Relaxed);
     shared
         .metrics
         .padded_slots
-        .fetch_add(batch.padded as u64, Ordering::Relaxed);
+        .fetch_add(padded as u64, Ordering::Relaxed);
+    // pre-execution shed: the flush-time shed cannot catch a deadline
+    // that expires between assembly and this worker picking the batch
+    // up (queue backlog, injected delay)
+    let now = Instant::now();
+    let expired: Vec<bool> = members.iter().map(|m| m.expired(now)).collect();
+    for (m, _) in members.iter().zip(&expired).filter(|(_, ex)| **ex) {
+        shared.metrics.deadline_shed.fetch_add(1, Ordering::Relaxed);
+        reply_error(shared, m, TcFftError::DeadlineExceeded);
+    }
+    if expired.iter().all(|ex| *ex) {
+        return;
+    }
+    let faults = &shared.cfg.faults;
     let t_exec = Instant::now();
-    let result = execute_routed(rt, shared, key, batch.input);
+    let result = catch_unwind(AssertUnwindSafe(|| {
+        if faults.is_active() {
+            faults.before_exec(key);
+        }
+        execute_routed(rt, shared, key, input)
+    }));
     let exec_s = t_exec.elapsed().as_secs_f64();
     shared.metrics.record_exec(exec_s);
+    if faults.is_active() && faults.should_force_evict() {
+        // chaos: evict the coldest plan of whichever store serves this
+        // key, forcing the rebuild / re-register recovery path
+        if key.starts_with("4step") {
+            let _ = shared.large_plans.evict_oldest();
+        } else {
+            let _ = shared.plans.evict_oldest();
+        }
+    }
+    let result = match result {
+        Ok(r) => r,
+        Err(payload) => {
+            shared.metrics.exec_panics.fetch_add(1, Ordering::Relaxed);
+            Err(TcFftError::ExecPanic(panic_message(payload.as_ref())))
+        }
+    };
     match result {
         Ok(out) => {
             let now = Instant::now();
-            for (i, m) in batch.members.iter().enumerate() {
+            for (i, m) in members.iter().enumerate() {
+                if expired[i] {
+                    continue;
+                }
                 let row = out.slice_rows(i, i + 1);
                 shared
                     .metrics
@@ -392,11 +504,13 @@ fn run_batch(rt: &Runtime, shared: &Shared, key: &str, batch: ReadyBatch) {
             }
         }
         Err(e) => {
-            for m in &batch.members {
-                shared.metrics.failed.fetch_add(1, Ordering::Relaxed);
-                let _ = m
-                    .reply
-                    .send(Err(TcFftError::msg(format!("batch execution failed: {e}"))));
+            // the typed error (with its stable code) fans out to every
+            // live member — ExecPanic and engine errors alike
+            for (i, m) in members.iter().enumerate() {
+                if expired[i] {
+                    continue;
+                }
+                reply_error(shared, m, e.clone());
             }
         }
     }
@@ -417,10 +531,14 @@ fn flusher_loop(sh: &Shared, si: usize, tx: &mpsc::Sender<(String, ReadyBatch)>)
         // own flusher or a leader holds the lock, the work is already
         // being handled. Never holds two queue locks at once.
         for j in (0..n).filter(|&j| j != si) {
-            let stolen = match sh.shards[j].queues.try_lock() {
-                Ok(mut queues) => drain_due(&mut queues, Instant::now(), sh.cfg.max_wait, false),
-                Err(_) => continue,
+            let (stolen, shed) = {
+                let mut queues = match sh.shards[j].queues.try_plock() {
+                    Some(guard) => guard,
+                    None => continue,
+                };
+                drain_due(&mut queues, Instant::now(), sh.cfg.max_wait, false)
             };
+            shed_replies(sh, shed);
             if !stolen.is_empty() {
                 sh.metrics
                     .stolen_batches
@@ -437,7 +555,7 @@ fn flusher_loop(sh: &Shared, si: usize, tx: &mpsc::Sender<(String, ReadyBatch)>)
         let now = Instant::now();
         let mut next: Option<Duration> = None;
         for j in (0..n).filter(|&j| j != si) {
-            if let Ok(queues) = sh.shards[j].queues.try_lock() {
+            if let Some(queues) = sh.shards[j].queues.try_plock() {
                 for q in queues.values() {
                     if let Some(age) = q.oldest_age(now) {
                         let d = sh.cfg.max_wait.saturating_sub(age);
@@ -446,7 +564,7 @@ fn flusher_loop(sh: &Shared, si: usize, tx: &mpsc::Sender<(String, ReadyBatch)>)
                 }
             }
         }
-        let guard = sh.shards[si].queues.lock().unwrap();
+        let guard = sh.shards[si].queues.plock();
         // shutdown() sets the flag BEFORE taking this lock to notify,
         // so re-checking here (under the lock, right before parking)
         // closes the lost-wakeup window where the notify fires while
@@ -464,12 +582,87 @@ fn flusher_loop(sh: &Shared, si: usize, tx: &mpsc::Sender<(String, ReadyBatch)>)
             .unwrap_or(sh.cfg.park_cap)
             .min(sh.cfg.park_cap)
             .max(PARK_FLOOR);
-        let _ = sh.shards[si].pending_cv.wait_timeout(guard, park).unwrap();
+        let _ = wait_timeout_recover(&sh.shards[si].pending_cv, guard, park);
     }
     // final drain: ship everything still pending on this shard
     for item in collect_due_shard(sh, si, true) {
         let _ = tx.send(item);
     }
+}
+
+/// Obituary a dying worker sends its supervisor. `Shutdown` is the
+/// sentinel `shutdown()` uses to end the supervisor (it cannot rely on
+/// channel disconnect: it holds a sender clone of its own to hand to
+/// respawned workers).
+enum Died {
+    Exec { si: usize, wi: usize },
+    Flusher { si: usize },
+    Shutdown,
+}
+
+type BatchRx = Arc<Mutex<mpsc::Receiver<(String, ReadyBatch)>>>;
+type BatchTx = mpsc::Sender<(String, ReadyBatch)>;
+
+/// One exec worker's receive loop. `after_worker_batch` is the
+/// worker-kill fault hook — OUTSIDE run_batch's `catch_unwind`, so an
+/// injected kill here dies for real and exercises supervisor respawn.
+/// It must never run on the inline-exec path, where the "worker" is a
+/// client thread.
+fn exec_worker_loop(rt: &Runtime, shared: &Shared, rx: &BatchRx) {
+    loop {
+        let msg = { rx.plock().recv() };
+        match msg {
+            Err(_) => break,
+            Ok((key, batch)) => {
+                run_batch(rt, shared, &key, batch);
+                let faults = &shared.cfg.faults;
+                if faults.is_active() {
+                    faults.after_worker_batch();
+                }
+            }
+        }
+    }
+}
+
+/// Spawn one supervised exec worker: the loop runs under
+/// `catch_unwind`, and a panicking worker reports to the supervisor
+/// (unless the service is shutting down) instead of dying silently.
+fn spawn_exec_worker(
+    rt: Arc<Runtime>,
+    shared: Arc<Shared>,
+    rx: BatchRx,
+    si: usize,
+    wi: usize,
+    sup: mpsc::Sender<Died>,
+) -> thread::JoinHandle<()> {
+    thread::Builder::new()
+        .name(format!("tcfft-exec-{si}-{wi}"))
+        .spawn(move || {
+            let outcome = catch_unwind(AssertUnwindSafe(|| exec_worker_loop(&rt, &shared, &rx)));
+            if outcome.is_err() && !shared.shutting_down.load(Ordering::SeqCst) {
+                let _ = sup.send(Died::Exec { si, wi });
+            }
+        })
+        .expect("spawn exec worker")
+}
+
+/// Spawn one supervised flusher (same contract as
+/// [`spawn_exec_worker`]).
+fn spawn_flusher(
+    shared: Arc<Shared>,
+    si: usize,
+    tx: BatchTx,
+    sup: mpsc::Sender<Died>,
+) -> thread::JoinHandle<()> {
+    thread::Builder::new()
+        .name(format!("tcfft-flusher-{si}"))
+        .spawn(move || {
+            let outcome = catch_unwind(AssertUnwindSafe(|| flusher_loop(&shared, si, &tx)));
+            if outcome.is_err() && !shared.shutting_down.load(Ordering::SeqCst) {
+                let _ = sup.send(Died::Flusher { si });
+            }
+        })
+        .expect("spawn flusher")
 }
 
 /// The FFT service. Create with [`FftService::start`].
@@ -479,16 +672,23 @@ pub struct FftService {
     /// per-shard senders into the exec pools. NOT inside `Shared`:
     /// exec workers hold `Arc<Shared>`, and a sender living there
     /// would keep its own channel open forever (workers would never
-    /// see disconnect on drop).
-    shard_txs: Vec<mpsc::Sender<(String, ReadyBatch)>>,
-    flushers: Mutex<Vec<thread::JoinHandle<()>>>,
-    exec_threads: Mutex<Vec<thread::JoinHandle<()>>>,
+    /// see disconnect on drop). The supervisor holds its own clones,
+    /// which is why `shutdown()` must join it before `Drop` can rely
+    /// on clearing these to disconnect the exec channels.
+    shard_txs: Vec<BatchTx>,
+    /// shared with the supervisor: respawned handles land here so
+    /// shutdown/drop join every generation, not just the first
+    flushers: Arc<Mutex<Vec<thread::JoinHandle<()>>>>,
+    exec_threads: Arc<Mutex<Vec<thread::JoinHandle<()>>>>,
+    sup_tx: mpsc::Sender<Died>,
+    supervisor: Mutex<Option<thread::JoinHandle<()>>>,
 }
 
 impl FftService {
     /// Spawn the service threads (per-shard flushers + execution
-    /// workers) over a runtime. Shut down with
-    /// [`shutdown`](Self::shutdown) or by dropping the service.
+    /// workers, plus the supervisor that respawns whichever of them
+    /// dies to a panic). Shut down with [`shutdown`](Self::shutdown)
+    /// or by dropping the service.
     pub fn start(rt: Arc<Runtime>, cfg: ServiceConfig) -> FftService {
         let metrics = Arc::new(Metrics::with_reservoir(cfg.metrics_reservoir));
         let n_shards = cfg.shards.max(1);
@@ -506,45 +706,89 @@ impl FftService {
             shutting_down: AtomicBool::new(false),
             cfg,
         });
+        let (sup_tx, sup_rx) = mpsc::channel::<Died>();
         let mut shard_txs = Vec::with_capacity(n_shards);
-        let mut flushers = Vec::with_capacity(n_shards);
-        let mut exec_threads = Vec::new();
+        let mut shard_rxs: Vec<BatchRx> = Vec::with_capacity(n_shards);
+        let flushers = Arc::new(Mutex::new(Vec::with_capacity(n_shards)));
+        let exec_threads = Arc::new(Mutex::new(Vec::new()));
         for si in 0..n_shards {
             let (tx, rx) = mpsc::channel::<(String, ReadyBatch)>();
             let rx = Arc::new(Mutex::new(rx));
             for wi in 0..shared.cfg.exec_threads.max(1) {
-                let rx = Arc::clone(&rx);
-                let rt2 = Arc::clone(&rt);
-                let sh = Arc::clone(&shared);
-                exec_threads.push(
-                    thread::Builder::new()
-                        .name(format!("tcfft-exec-{si}-{wi}"))
-                        .spawn(move || loop {
-                            let msg = { rx.lock().unwrap().recv() };
-                            match msg {
-                                Err(_) => break,
-                                Ok((key, batch)) => run_batch(&rt2, &sh, &key, batch),
-                            }
-                        })
-                        .expect("spawn exec worker"),
-                );
+                exec_threads.plock().push(spawn_exec_worker(
+                    Arc::clone(&rt),
+                    Arc::clone(&shared),
+                    Arc::clone(&rx),
+                    si,
+                    wi,
+                    sup_tx.clone(),
+                ));
             }
-            let sh = Arc::clone(&shared);
-            let ftx = tx.clone();
-            flushers.push(
-                thread::Builder::new()
-                    .name(format!("tcfft-flusher-{si}"))
-                    .spawn(move || flusher_loop(&sh, si, &ftx))
-                    .expect("spawn flusher"),
-            );
+            flushers.plock().push(spawn_flusher(
+                Arc::clone(&shared),
+                si,
+                tx.clone(),
+                sup_tx.clone(),
+            ));
             shard_txs.push(tx);
+            shard_rxs.push(rx);
         }
+        // Supervisor: respawn whatever dies, bump `worker_restarts`.
+        // Ends on the `Died::Shutdown` sentinel from shutdown(); its
+        // tx clones (needed to equip respawned flushers) die with it,
+        // which is what lets Drop's shard_txs.clear() actually
+        // disconnect the exec channels.
+        let supervisor = {
+            let rt = Arc::clone(&rt);
+            let shared = Arc::clone(&shared);
+            let txs = shard_txs.clone();
+            let rxs = shard_rxs;
+            let flushers = Arc::clone(&flushers);
+            let exec_threads = Arc::clone(&exec_threads);
+            let sup_tx = sup_tx.clone();
+            thread::Builder::new()
+                .name("tcfft-supervisor".to_string())
+                .spawn(move || loop {
+                    match sup_rx.recv() {
+                        Err(_) | Ok(Died::Shutdown) => break,
+                        Ok(Died::Exec { si, wi }) => {
+                            if shared.shutting_down.load(Ordering::SeqCst) {
+                                continue;
+                            }
+                            shared.metrics.worker_restarts.fetch_add(1, Ordering::Relaxed);
+                            exec_threads.plock().push(spawn_exec_worker(
+                                Arc::clone(&rt),
+                                Arc::clone(&shared),
+                                Arc::clone(&rxs[si]),
+                                si,
+                                wi,
+                                sup_tx.clone(),
+                            ));
+                        }
+                        Ok(Died::Flusher { si }) => {
+                            if shared.shutting_down.load(Ordering::SeqCst) {
+                                continue;
+                            }
+                            shared.metrics.worker_restarts.fetch_add(1, Ordering::Relaxed);
+                            flushers.plock().push(spawn_flusher(
+                                Arc::clone(&shared),
+                                si,
+                                txs[si].clone(),
+                                sup_tx.clone(),
+                            ));
+                        }
+                    }
+                })
+                .expect("spawn supervisor")
+        };
         FftService {
             rt,
             shared,
             shard_txs,
-            flushers: Mutex::new(flushers),
-            exec_threads: Mutex::new(exec_threads),
+            flushers,
+            exec_threads,
+            sup_tx,
+            supervisor: Mutex::new(Some(supervisor)),
         }
     }
 
@@ -561,6 +805,13 @@ impl FftService {
     /// Number of shards the service is running.
     pub fn shards(&self) -> usize {
         self.shared.shards.len()
+    }
+
+    /// The fault injector this service was configured with (the TCP
+    /// front end consults it for frame-chop faults; chaos tests read
+    /// its injection counters).
+    pub fn faults(&self) -> Arc<FaultInjector> {
+        Arc::clone(&self.shared.cfg.faults)
     }
 
     /// Resolve (and cache) the plan for a request shape.
@@ -678,7 +929,21 @@ impl FftService {
         self.submit_from(Some(client), req)
     }
 
+    /// Tally a submit-path rejection in the errors-by-code counters on
+    /// its way back to the caller.
+    fn track_err<T>(&self, r: Result<T>) -> Result<T> {
+        if let Err(e) = &r {
+            self.shared.metrics.record_error(e);
+        }
+        r
+    }
+
     fn submit_from(&self, client: Option<u64>, req: FftRequest) -> Result<Ticket> {
+        let r = self.submit_from_inner(client, req);
+        self.track_err(r)
+    }
+
+    fn submit_from_inner(&self, client: Option<u64>, req: FftRequest) -> Result<Ticket> {
         if self.shared.shutting_down.load(Ordering::SeqCst) {
             return Err(TcFftError::ShuttingDown);
         }
@@ -754,12 +1019,19 @@ impl FftService {
     ) -> Result<Ticket> {
         let id = self.shared.next_id.fetch_add(1, Ordering::SeqCst);
         let (tx, rx) = mpsc::channel();
-        let pending = Pending { id, input, enqueued: Instant::now(), reply: tx };
+        let enqueued = Instant::now();
+        let pending = Pending {
+            id,
+            input,
+            enqueued,
+            deadline: self.shared.cfg.request_deadline.map(|d| enqueued + d),
+            reply: tx,
+        };
         let si = self.shared.shard_for(&queue_key);
         let shard = &self.shared.shards[si];
         let mut full_queue = false;
         {
-            let mut queues = shard.queues.lock().unwrap();
+            let mut queues = shard.queues.plock();
             let q = queues.entry(queue_key.clone()).or_insert_with(|| {
                 if pad {
                     PlanQueue::new(queue_key.clone(), capacity, self.shared.cfg.max_queue)
@@ -770,6 +1042,7 @@ impl FftService {
             if let Err(reject) = q.push(pending) {
                 full_queue = true;
                 self.shared.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                self.shared.metrics.record_error(&TcFftError::QueueFull);
                 let _ = reject.reply.send(Err(TcFftError::QueueFull));
             }
             shard.pending_cv.notify_one();
@@ -900,6 +1173,16 @@ impl FftService {
     }
 
     fn submit_convolve_from(
+        &self,
+        client: Option<u64>,
+        bank: &str,
+        input: PlanarBatch,
+    ) -> Result<Ticket> {
+        let r = self.submit_convolve_inner(client, bank, input);
+        self.track_err(r)
+    }
+
+    fn submit_convolve_inner(
         &self,
         client: Option<u64>,
         bank: &str,
@@ -1046,16 +1329,25 @@ impl FftService {
     /// Graceful shutdown: wake every parked flusher immediately (a
     /// flusher otherwise finishes its up-to-`park_cap` park before
     /// noticing the flag — the pre-shard service had exactly that bug),
-    /// let each run its final drain, and join them.
+    /// retire the supervisor, let each flusher run its final drain, and
+    /// join them. Idempotent.
     pub fn shutdown(&self) {
         self.shared.shutting_down.store(true, Ordering::SeqCst);
         for shard in &self.shared.shards {
             // take the queues lock so the notify cannot slip into the
             // window between a flusher's flag check and its park
-            let _guard = shard.queues.lock().unwrap();
+            let _guard = shard.queues.plock();
             shard.pending_cv.notify_all();
         }
-        for j in self.flushers.lock().unwrap().drain(..) {
+        // Retire the supervisor BEFORE joining flushers: once it is
+        // gone no new flusher can be pushed (so the drain below is
+        // complete) and its exec-channel sender clones are dropped (so
+        // Drop's shard_txs.clear() actually disconnects the workers).
+        if let Some(sup) = self.supervisor.plock().take() {
+            let _ = self.sup_tx.send(Died::Shutdown);
+            let _ = sup.join();
+        }
+        for j in self.flushers.plock().drain(..) {
             let _ = j.join();
         }
     }
@@ -1080,11 +1372,12 @@ fn bank_fingerprint<T: AsRef<[f32]>>(n: usize, algo: &str, filters: &[T]) -> u64
 impl Drop for FftService {
     fn drop(&mut self) {
         self.shutdown();
-        // the flushers are joined (their sender clones are gone);
-        // dropping ours closes every shard channel, which ends the
-        // exec workers once they drain
+        // the flushers and the supervisor are joined (their sender
+        // clones are gone); dropping ours closes every shard channel,
+        // which ends the exec workers — every generation, including
+        // supervisor respawns — once they drain
         self.shard_txs.clear();
-        for j in self.exec_threads.lock().unwrap().drain(..) {
+        for j in self.exec_threads.plock().drain(..) {
             let _ = j.join();
         }
     }

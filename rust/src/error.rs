@@ -4,14 +4,35 @@
 //! the crate's single error substrate: a typed enum for the failure
 //! classes the service distinguishes, a `Msg` catch-all for everything
 //! else, and `bail!`/`ensure!` macros mirroring the anyhow idiom.
+//!
+//! Every variant carries a **stable machine-readable code**
+//! ([`TcFftError::code`]) that the TCP protocol exposes as a `"code"`
+//! field in error replies and the metrics snapshot aggregates into
+//! errors-by-code counters. Codes are part of the wire contract: new
+//! failure classes get new codes; existing codes never change meaning.
 
 use crate::hp::C64;
 
 /// Crate-wide result alias.
 pub type Result<T> = std::result::Result<T, TcFftError>;
 
-/// Library error type.
-#[derive(Debug)]
+/// Every stable error code, in [`TcFftError::code_index`] order — the
+/// index the metrics errors-by-code counters are keyed by.
+pub const ERROR_CODES: [&str; 9] = [
+    "bad_size",
+    "no_artifact",
+    "shutting_down",
+    "queue_full",
+    "quota_exceeded",
+    "deadline_exceeded",
+    "exec_panic",
+    "dropped",
+    "internal",
+];
+
+/// Library error type. `Clone` so one batch-level failure can fan out
+/// to every batch member's reply channel.
+#[derive(Debug, Clone)]
 pub enum TcFftError {
     /// Unsupported FFT size: must be a power of two >= 2.
     BadSize(usize),
@@ -23,6 +44,16 @@ pub enum TcFftError {
     QueueFull,
     /// Per-client admission quota exhausted (token bucket empty).
     QuotaExceeded,
+    /// The request's end-to-end deadline elapsed before execution
+    /// (shed at flush time or just before execution) or before a
+    /// bounded wait observed a reply.
+    DeadlineExceeded,
+    /// Batch execution panicked; the panic was isolated to the batch
+    /// (every member gets this reply) and the service keeps serving.
+    ExecPanic(String),
+    /// The service dropped the request's reply channel without
+    /// answering (e.g. torn down mid-flight).
+    Dropped,
     /// Anything else (I/O, parse, shape mismatches, backend failures).
     Msg(String),
 }
@@ -31,6 +62,28 @@ impl TcFftError {
     /// Build the catch-all variant from any displayable value.
     pub fn msg(m: impl std::fmt::Display) -> TcFftError {
         TcFftError::Msg(m.to_string())
+    }
+
+    /// The stable machine-readable code for this failure class — the
+    /// `"code"` field of TCP error replies and the key of the metrics
+    /// errors-by-code counters.
+    pub fn code(&self) -> &'static str {
+        ERROR_CODES[self.code_index()]
+    }
+
+    /// Index of [`code`](Self::code) within [`ERROR_CODES`].
+    pub fn code_index(&self) -> usize {
+        match self {
+            TcFftError::BadSize(_) => 0,
+            TcFftError::NoArtifact(_) => 1,
+            TcFftError::ShuttingDown => 2,
+            TcFftError::QueueFull => 3,
+            TcFftError::QuotaExceeded => 4,
+            TcFftError::DeadlineExceeded => 5,
+            TcFftError::ExecPanic(_) => 6,
+            TcFftError::Dropped => 7,
+            TcFftError::Msg(_) => 8,
+        }
     }
 }
 
@@ -44,6 +97,11 @@ impl std::fmt::Display for TcFftError {
             TcFftError::ShuttingDown => write!(f, "service is shutting down"),
             TcFftError::QueueFull => write!(f, "request queue is full (backpressure)"),
             TcFftError::QuotaExceeded => write!(f, "client admission quota exceeded"),
+            TcFftError::DeadlineExceeded => write!(f, "request deadline exceeded"),
+            TcFftError::ExecPanic(what) => {
+                write!(f, "batch execution panicked (isolated): {what}")
+            }
+            TcFftError::Dropped => write!(f, "service dropped the request"),
             TcFftError::Msg(m) => write!(f, "{m}"),
         }
     }
@@ -172,8 +230,35 @@ mod tests {
         assert!(TcFftError::NoArtifact("x".into()).to_string().contains("x"));
         assert!(TcFftError::msg("boom").to_string().contains("boom"));
         assert!(TcFftError::QuotaExceeded.to_string().contains("quota"));
+        assert!(TcFftError::DeadlineExceeded.to_string().contains("deadline"));
+        assert!(TcFftError::ExecPanic("kaboom".into()).to_string().contains("kaboom"));
         let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
         assert!(TcFftError::from(io).to_string().contains("gone"));
+    }
+
+    #[test]
+    fn codes_are_stable_and_cover_every_variant() {
+        let all = [
+            TcFftError::BadSize(2),
+            TcFftError::NoArtifact("x".into()),
+            TcFftError::ShuttingDown,
+            TcFftError::QueueFull,
+            TcFftError::QuotaExceeded,
+            TcFftError::DeadlineExceeded,
+            TcFftError::ExecPanic("p".into()),
+            TcFftError::Dropped,
+            TcFftError::msg("m"),
+        ];
+        assert_eq!(all.len(), ERROR_CODES.len());
+        for (i, e) in all.iter().enumerate() {
+            assert_eq!(e.code_index(), i, "{e}");
+            assert_eq!(e.code(), ERROR_CODES[i]);
+        }
+        // the wire contract: these strings never change meaning
+        assert_eq!(TcFftError::ExecPanic(String::new()).code(), "exec_panic");
+        assert_eq!(TcFftError::DeadlineExceeded.code(), "deadline_exceeded");
+        assert_eq!(TcFftError::QueueFull.code(), "queue_full");
+        assert_eq!(TcFftError::ShuttingDown.code(), "shutting_down");
     }
 
     #[test]

@@ -1,0 +1,385 @@
+//! Chaos suite: deterministic fault injection against the live
+//! service. Every scenario here drives a *scheduled* fault through
+//! `coordinator::faults::FaultInjector` and asserts the documented
+//! recovery: panics isolate to `ExecPanic` replies, killed workers
+//! respawn, expired requests shed with `DeadlineExceeded`, forced
+//! evictions rebuild transparently, and chopped TCP frames reassemble.
+//! The cardinal rule being tested: **no request ever hangs** — every
+//! ticket resolves with a success or a coded error, bounded by
+//! `wait_timeout` (a timeout in this file is a bug, not flakiness).
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use tcfft::coordinator::faults::install_quiet_panic_hook;
+use tcfft::coordinator::{
+    FaultInjector, FaultPlan, FftRequest, FftService, Op, Server, ServiceConfig,
+};
+use tcfft::error::TcFftError;
+use tcfft::plan::Direction;
+use tcfft::runtime::{PlanarBatch, Runtime};
+use tcfft::workload::random_signal;
+
+fn shared_runtime() -> &'static Arc<Runtime> {
+    use std::sync::OnceLock;
+    static RT: OnceLock<Arc<Runtime>> = OnceLock::new();
+    RT.get_or_init(|| {
+        Arc::new(Runtime::load_default().expect("runtime must load without artifacts"))
+    })
+}
+
+fn chaos_service(plan: FaultPlan, tweak: impl FnOnce(&mut ServiceConfig)) -> Arc<FftService> {
+    install_quiet_panic_hook();
+    let mut cfg = ServiceConfig {
+        faults: Arc::new(FaultInjector::new(plan)),
+        ..ServiceConfig::default()
+    };
+    tweak(&mut cfg);
+    Arc::new(FftService::start(Arc::clone(shared_runtime()), cfg))
+}
+
+fn fwd_req(n: usize, seed: u64) -> FftRequest {
+    let sig = random_signal(n, seed);
+    FftRequest {
+        op: Op::Fft1d { n },
+        algo: "tc".into(),
+        direction: Direction::Forward,
+        input: PlanarBatch::from_complex(&sig, vec![n]),
+    }
+}
+
+fn real_row(n: usize, seed: u64) -> PlanarBatch {
+    let sig: Vec<f32> = random_signal(n, seed).iter().map(|c| c.re).collect();
+    PlanarBatch::from_real(&sig, vec![n])
+}
+
+/// The headline soak: 64 clients push 512 convolve requests through a
+/// service scheduled to panic inside every 2nd batch execution, capped
+/// at 100 injected panics. Every request must resolve — success or a
+/// coded error — with zero hangs, and the `exec_panics` metric must
+/// equal the injector's own exact count (100: 256 fire candidates,
+/// limit-capped).
+#[test]
+fn soak_64_clients_through_100_injected_panics_without_hangs() {
+    let n = 256;
+    let svc = chaos_service(
+        FaultPlan {
+            panic_every: 2,
+            panic_key_pattern: "conv:".into(),
+            panic_limit: 100,
+            ..FaultPlan::default()
+        },
+        |cfg| cfg.large_batch = 1, // one request per batch: 512 batches exactly
+    );
+    svc.register_filter_bank("chaos", n, &[vec![0.25f32, 0.5, 0.25]], "tc")
+        .unwrap();
+
+    let per_client = 8u64;
+    let handles: Vec<_> = (0..64u64)
+        .map(|c| {
+            let svc = Arc::clone(&svc);
+            std::thread::spawn(move || {
+                let (mut ok, mut panicked) = (0u64, 0u64);
+                for i in 0..per_client {
+                    let t = svc
+                        .submit_convolve("chaos", real_row(n, c * 1000 + i))
+                        .expect("submission itself never fails under exec faults");
+                    // the no-hang contract: a generous bound that only
+                    // trips if a reply channel was dropped on the floor
+                    match t.wait_timeout(Duration::from_secs(30)) {
+                        Ok(out) => {
+                            assert_eq!(out.shape, vec![1, 1, n]);
+                            ok += 1;
+                        }
+                        Err(TcFftError::ExecPanic(msg)) => {
+                            assert!(
+                                msg.contains("chaos-injected"),
+                                "ExecPanic must carry the injected payload, got: {msg}"
+                            );
+                            panicked += 1;
+                        }
+                        Err(e) => panic!("client {c} got unexpected error: {e}"),
+                    }
+                }
+                (ok, panicked)
+            })
+        })
+        .collect();
+    let (mut ok, mut panicked) = (0u64, 0u64);
+    for h in handles {
+        let (o, p) = h.join().expect("client thread must survive injected panics");
+        ok += o;
+        panicked += p;
+    }
+
+    let total = 64 * per_client;
+    assert_eq!(ok + panicked, total, "every request resolved exactly once");
+    let faults = svc.faults();
+    assert_eq!(faults.panics_injected(), 100, "512 batches, every 2nd, capped at 100");
+    assert_eq!(panicked, 100, "each 1-member batch maps one panic to one ExecPanic reply");
+    let m = svc.metrics();
+    assert_eq!(
+        m.exec_panics.load(std::sync::atomic::Ordering::Relaxed),
+        faults.panics_injected(),
+        "exec_panics metric must match the injection plan exactly"
+    );
+    assert_eq!(m.errors_for("exec_panic"), 100);
+    let snap = m.snapshot();
+    assert_eq!(snap.get("completed").unwrap().as_i64(), Some(ok as i64));
+    assert_eq!(snap.get("failed").unwrap().as_i64(), Some(100));
+    svc.shutdown();
+}
+
+/// A panic in one batch must fan the SAME coded error out to every
+/// batchmate — the rows rode the same engine call, so they share its
+/// fate, but their reply channels must all fire.
+#[test]
+fn batchmates_of_a_panicked_batch_all_get_exec_panic() {
+    let n = 256;
+    let svc = chaos_service(
+        FaultPlan {
+            panic_every: 1,
+            panic_key_pattern: "conv:".into(),
+            ..FaultPlan::default()
+        },
+        |cfg| {
+            cfg.inline_exec = false; // batch runs on an exec worker
+            cfg.max_wait = Duration::from_secs(3600); // flush on full only
+            cfg.large_batch = 4;
+        },
+    );
+    svc.register_filter_bank("mates", n, &[vec![1.0f32, -1.0]], "tc")
+        .unwrap();
+    let tickets: Vec<_> = (0..4)
+        .map(|i| svc.submit_convolve("mates", real_row(n, i)).unwrap())
+        .collect();
+    for t in tickets {
+        match t.wait_timeout(Duration::from_secs(10)) {
+            Err(TcFftError::ExecPanic(_)) => {}
+            other => panic!("batchmate expected ExecPanic, got {other:?}"),
+        }
+    }
+    let m = svc.metrics();
+    assert_eq!(m.exec_panics.load(std::sync::atomic::Ordering::Relaxed), 1);
+    assert_eq!(m.errors_for("exec_panic"), 4, "one panic, four member replies");
+    svc.shutdown();
+}
+
+/// Killing the exec worker OUTSIDE the isolation boundary must fire
+/// the supervisor: the dead worker is respawned (`worker_restarts`)
+/// and the service keeps answering requests throughout.
+#[test]
+fn supervisor_respawns_killed_workers_and_service_keeps_serving() {
+    let svc = chaos_service(
+        FaultPlan {
+            kill_worker_every: 1,
+            kill_worker_limit: 3,
+            ..FaultPlan::default()
+        },
+        |cfg| {
+            cfg.inline_exec = false; // batches must run on killable workers
+            cfg.shards = 1;
+            cfg.exec_threads = 1;
+        },
+    );
+    let n = 1024;
+    for i in 0..10u64 {
+        let out = svc
+            .submit(fwd_req(n, i))
+            .unwrap()
+            .wait_timeout(Duration::from_secs(30))
+            .expect("requests must keep completing across worker kills");
+        assert_eq!(out.shape, vec![1, n]);
+    }
+    let faults = svc.faults();
+    assert_eq!(faults.kills_injected(), 3, "kill schedule: first 3 worker batches");
+    // the supervisor processes obituaries asynchronously; give it a
+    // bounded window to log the last respawn
+    let m = svc.metrics();
+    let deadline = Instant::now() + Duration::from_secs(5);
+    while m.worker_restarts.load(std::sync::atomic::Ordering::Relaxed) < 3 {
+        assert!(Instant::now() < deadline, "supervisor never logged 3 respawns");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    assert_eq!(
+        m.worker_restarts.load(std::sync::atomic::Ordering::Relaxed),
+        faults.kills_injected(),
+        "worker_restarts must match the injection plan"
+    );
+    let snap = m.snapshot();
+    assert_eq!(snap.get("completed").unwrap().as_i64(), Some(10));
+    assert_eq!(snap.get("failed").unwrap().as_i64(), Some(0));
+    svc.shutdown(); // must join every worker generation cleanly
+}
+
+/// Flush-time shedding: a request parked past its deadline (batch
+/// never fills, `max_wait` is an hour) is answered `DeadlineExceeded`
+/// by the flusher's shed scan — not held until shutdown.
+#[test]
+fn parked_request_past_deadline_is_shed_at_flush_time() {
+    let n = 256;
+    let svc = chaos_service(FaultPlan::default(), |cfg| {
+        cfg.inline_exec = false;
+        cfg.max_wait = Duration::from_secs(3600);
+        cfg.large_batch = 4; // a single request never fills the batch
+        cfg.request_deadline = Some(Duration::from_millis(50));
+    });
+    svc.register_filter_bank("shed", n, &[vec![1.0f32]], "tc").unwrap();
+    let t = svc.submit_convolve("shed", real_row(n, 1)).unwrap();
+    match t.wait_timeout(Duration::from_secs(5)) {
+        Err(TcFftError::DeadlineExceeded) => {}
+        other => panic!("expected DeadlineExceeded from the shed scan, got {other:?}"),
+    }
+    let m = svc.metrics();
+    assert!(m.deadline_shed.load(std::sync::atomic::Ordering::Relaxed) >= 1);
+    assert!(m.errors_for("deadline_exceeded") >= 1);
+    svc.shutdown();
+}
+
+/// Pre-execution shedding: a batch flushed in time but picked up late
+/// (the worker is stuck behind an injected 200 ms delay) must shed its
+/// now-expired members instead of executing them past the deadline.
+#[test]
+fn batch_picked_up_past_deadline_is_shed_before_execution() {
+    let n = 256;
+    let svc = chaos_service(
+        FaultPlan {
+            exec_delay: Duration::from_millis(200),
+            exec_delay_prob: 1.0,
+            ..FaultPlan::default()
+        },
+        |cfg| {
+            cfg.inline_exec = false;
+            cfg.shards = 1;
+            cfg.exec_threads = 1; // one worker: batch B queues behind A's delay
+            cfg.large_batch = 1;
+            cfg.request_deadline = Some(Duration::from_millis(80));
+        },
+    );
+    svc.register_filter_bank("late", n, &[vec![1.0f32]], "tc").unwrap();
+    // A flushes immediately and starts its 200 ms injected delay; its
+    // shed check already passed, so it completes (late replies are
+    // delivered, not dropped)
+    let ta = svc.submit_convolve("late", real_row(n, 1)).unwrap();
+    // B flushes right behind A but is not picked up until ~200 ms — by
+    // then its 80 ms deadline is gone, so run_batch sheds it up front
+    let tb = svc.submit_convolve("late", real_row(n, 2)).unwrap();
+    assert!(ta.wait_timeout(Duration::from_secs(10)).is_ok(), "A passed its shed check");
+    match tb.wait_timeout(Duration::from_secs(10)) {
+        Err(TcFftError::DeadlineExceeded) => {}
+        other => panic!("expected pre-exec shed of B, got {other:?}"),
+    }
+    let faults = svc.faults();
+    assert!(faults.delays_injected() >= 1, "the delay fault must have fired");
+    assert!(
+        svc.metrics().deadline_shed.load(std::sync::atomic::Ordering::Relaxed) >= 1,
+        "pre-exec shed must count in deadline_shed"
+    );
+    svc.shutdown();
+}
+
+/// Forced LRU evictions every single batch must never surface to
+/// clients: direct plans rebuild from the registry on the next submit,
+/// and the eviction shows up only in the cache counters.
+#[test]
+fn forced_evictions_every_batch_stay_invisible_to_clients() {
+    let svc = chaos_service(FaultPlan { evict_every: 1, ..FaultPlan::default() }, |_| {});
+    let n = 1024;
+    for i in 0..12u64 {
+        let out = svc
+            .submit(fwd_req(n, i))
+            .unwrap()
+            .wait_timeout(Duration::from_secs(30))
+            .expect("eviction chaos must not fail requests");
+        assert_eq!(out.shape, vec![1, n]);
+    }
+    let faults = svc.faults();
+    assert!(faults.evicts_forced() >= 12, "every executed batch forces one eviction");
+    let m = svc.metrics();
+    assert!(
+        m.plan_cache.evictions() >= 1,
+        "forced evictions must register in the plan-cache counters"
+    );
+    let snap = m.snapshot();
+    assert_eq!(snap.get("completed").unwrap().as_i64(), Some(12));
+    assert_eq!(snap.get("failed").unwrap().as_i64(), Some(0));
+    svc.shutdown();
+}
+
+/// The TCP acceptance scenario: a client pipelines requests through a
+/// service scheduled to panic on its first executed batch, with every
+/// reply frame chopped into two partial writes. All replies must
+/// arrive on `\n` framing, in order, each either `ok` or carrying a
+/// stable `"code"` — and at least one must be the `exec_panic` the
+/// schedule guarantees.
+#[test]
+fn tcp_pipeline_through_a_panic_gets_coded_error_lines() {
+    use std::io::{BufRead, BufReader, Write};
+    let n = 256;
+    let svc = chaos_service(
+        FaultPlan {
+            panic_every: 1,
+            panic_limit: 1, // exactly the first executed batch panics
+            chop_prob: 1.0, // every reply frame goes out in two writes
+            ..FaultPlan::default()
+        },
+        |_| {},
+    );
+    let server = Server::bind("127.0.0.1:0", Arc::clone(&svc)).unwrap();
+    let addr = server.local_addr().unwrap();
+    let stop = server.stop_handle();
+    let run = std::thread::spawn(move || server.run());
+
+    let mut conn = std::net::TcpStream::connect(addr).unwrap();
+    conn.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    let mut batch = String::new();
+    for i in 0..3u64 {
+        let sig = random_signal(n, i);
+        let re: Vec<String> = sig.iter().map(|c| format!("{:.4}", c.re)).collect();
+        let im: Vec<String> = sig.iter().map(|c| format!("{:.4}", c.im)).collect();
+        batch.push_str(&format!(
+            "{{\"op\":\"fft1d\",\"n\":{n},\"re\":[{}],\"im\":[{}]}}\n",
+            re.join(","),
+            im.join(",")
+        ));
+    }
+    conn.write_all(batch.as_bytes()).unwrap();
+    let mut reader = BufReader::new(conn.try_clone().unwrap());
+    let mut oks = 0;
+    let mut exec_panics = 0;
+    for _ in 0..3 {
+        let mut line = String::new();
+        reader
+            .read_line(&mut line)
+            .expect("every pipelined request must get a reply line within the deadline");
+        let resp = tcfft::util::json::Json::parse(line.trim()).unwrap();
+        match resp.get("ok").and_then(|b| b.as_bool()) {
+            Some(true) => oks += 1,
+            _ => {
+                let code = resp
+                    .get("code")
+                    .and_then(|c| c.as_str())
+                    .expect("error lines must carry a stable code");
+                assert_eq!(code, "exec_panic", "{line}");
+                assert!(
+                    resp.get("error").and_then(|e| e.as_str()).unwrap().contains("isolated"),
+                    "{line}"
+                );
+                exec_panics += 1;
+            }
+        }
+    }
+    // the panicked batch held 1..=3 of the pipelined requests; however
+    // it sliced, every request resolved and the panic surfaced
+    assert!(exec_panics >= 1, "the scheduled panic must reach the client as a coded line");
+    assert_eq!(oks + exec_panics, 3);
+    let faults = svc.faults();
+    assert_eq!(faults.panics_injected(), 1);
+    assert!(faults.chops_injected() >= 3, "every reply frame was chop-scheduled");
+
+    stop.store(true, std::sync::atomic::Ordering::SeqCst);
+    drop(reader);
+    drop(conn);
+    let _ = run.join();
+    svc.shutdown();
+}

@@ -421,6 +421,73 @@ fn counters_move_only_after_validation() {
 }
 
 #[test]
+fn shutdown_drains_queued_requests_and_rejects_new_submits() {
+    // requests parked in a never-due queue when shutdown() lands must
+    // be force-drained and answered — and anything submitted after the
+    // flag flips gets a prompt coded ShuttingDown, never a hang
+    let svc = service_with(ServiceConfig {
+        inline_exec: false,
+        max_wait: Duration::from_secs(3600), // batches park until shutdown
+        ..ServiceConfig::default()
+    });
+    let n = 256;
+    svc.register_filter_bank("drain", n, &[vec![1.0f32, 0.5]], "tc").unwrap();
+    let sig: Vec<f32> = random_signal(n, 3).iter().map(|c| c.re).collect();
+    let tickets: Vec<_> = (0..2)
+        .map(|_| {
+            svc.submit_convolve("drain", PlanarBatch::from_real(&sig, vec![n]))
+                .unwrap()
+        })
+        .collect();
+    svc.shutdown();
+    for t in tickets {
+        let out = t
+            .wait_timeout(Duration::from_secs(10))
+            .expect("queued requests must be drained and answered by shutdown");
+        assert_eq!(out.shape, vec![1, 1, n]);
+    }
+    match svc.submit_convolve("drain", PlanarBatch::from_real(&sig, vec![n])) {
+        Err(TcFftError::ShuttingDown) => {}
+        other => panic!("post-shutdown submit must be ShuttingDown, got {other:?}"),
+    }
+    assert!(svc.metrics().errors_for("shutting_down") >= 1);
+    // idempotent: a second shutdown must return immediately
+    svc.shutdown();
+}
+
+#[test]
+fn drop_with_requests_in_flight_joins_cleanly() {
+    // dropping the service (no explicit shutdown) with parked requests
+    // must run the same drain: every outstanding ticket resolves, and
+    // Drop joins every thread — flushers, supervisor, exec workers —
+    // without wedging
+    let svc = FftService::start(
+        Arc::clone(shared_runtime()),
+        ServiceConfig {
+            inline_exec: false,
+            max_wait: Duration::from_secs(3600),
+            ..ServiceConfig::default()
+        },
+    );
+    let n = 1024;
+    let sig = random_signal(n, 17);
+    let tickets: Vec<_> = (0..3).map(|_| svc.submit(fwd_req(n, &sig)).unwrap()).collect();
+    let t0 = Instant::now();
+    drop(svc);
+    assert!(
+        t0.elapsed() < Duration::from_secs(10),
+        "drop must join, not wedge ({:?})",
+        t0.elapsed()
+    );
+    // tickets outlive the service; after Drop each has its reply
+    // already buffered (drained batch) — recv must not block
+    for t in tickets {
+        t.wait_timeout(Duration::from_millis(100))
+            .expect("drained reply must be waiting in the channel after drop");
+    }
+}
+
+#[test]
 fn server_stops_with_an_idle_connection_open() {
     // an idle client used to pin its handler thread in a blocking
     // read forever; with read timeouts the server must join promptly
