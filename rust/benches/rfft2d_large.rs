@@ -1,0 +1,162 @@
+//! Bench: the large-2D `Plan2d` composition (the service's `rfft2d`
+//! route beyond the 256x256 catalog ladder) vs a per-sequence
+//! reference composed from [`tcfft::large::BaselineFourStep`], at the
+//! acceptance shape 2048 x 2048, batch 4.
+//!
+//! The reference is what the large-2D route replaces: per image,
+//! promote each real row to complex and run a ny-point per-sequence
+//! baseline four-step keeping the `ny/2 + 1` packed bins, then gather
+//! each packed bin column and run an nx-point baseline — element-wise
+//! gather/scatter and a twiddle table recomputed every call. The
+//! engine ([`tcfft::large::Plan2d`]) runs the batched row engine once
+//! over all `b * nx` rows and cache-blocked panel column passes.
+//! Medians merge into `BENCH_interp.json` (entry
+//! `rfft2d_tc_nx2048x2048_b4_fwd`, fields: `reference_median_s` =
+//! baseline composition, `engine_median_s` = Plan2d) and
+//! `tcfft bench-validate` checks them in CI.
+//!
+//!     cargo bench --bench rfft2d_large
+//!     TCFFT_BENCH_SMOKE=1 cargo bench --bench rfft2d_large   # CI smoke
+
+use tcfft::bench_harness::{bench, bench_entry, header, smoke, update_bench_json};
+use tcfft::error::relative_rmse;
+use tcfft::hp::complex::widen;
+use tcfft::hp::{C32, C64};
+use tcfft::large::{BaselineFourStep, FourStepConfig, Plan2d};
+use tcfft::runtime::{PlanarBatch, Runtime};
+use tcfft::util::table::Table;
+use tcfft::workload::random_signal;
+
+const NX: usize = 2048;
+const NY: usize = 2048;
+const BATCH: usize = 4;
+/// Headline host-side thread count recorded in BENCH_interp.json
+/// (matches the fig4_1d/fig7_batch/large_fourstep/rfft_2d entries).
+const ENGINE_THREADS: usize = 4;
+
+/// Per-sequence baseline 2D R2C of one real image: ny-point baseline
+/// rows into packed bins, then nx-point baseline bin columns.
+fn baseline_rfft2d(
+    rt: &Runtime,
+    rows: &BaselineFourStep,
+    cols: &BaselineFourStep,
+    img: &[f32],
+) -> Vec<C32> {
+    let bins = NY / 2 + 1;
+    let mut packed = vec![C32::new(0.0, 0.0); NX * bins];
+    let mut row = vec![C32::new(0.0, 0.0); NY];
+    for r in 0..NX {
+        for c in 0..NY {
+            row[c] = C32::new(img[r * NY + c], 0.0);
+        }
+        let spec = rows.execute(rt, &row).unwrap();
+        packed[r * bins..(r + 1) * bins].copy_from_slice(&spec[..bins]);
+    }
+    let mut col = vec![C32::new(0.0, 0.0); NX];
+    for c in 0..bins {
+        for r in 0..NX {
+            col[r] = packed[r * bins + c];
+        }
+        let spec = cols.execute(rt, &col).unwrap();
+        for r in 0..NX {
+            packed[r * bins + c] = spec[r];
+        }
+    }
+    packed
+}
+
+fn main() -> tcfft::error::Result<()> {
+    header("Large-2D rfft2d: Plan2d composition vs per-sequence baseline");
+    // the shape IS the acceptance headline, so smoke mode caps
+    // iterations but never shrinks it; the baseline composition is
+    // ~nx + ny/2 per-sequence calls per image, so it gets fewer iters
+    let iters = if smoke() { 2 } else { 5 };
+    let ref_iters = if smoke() { 1 } else { 3 };
+    let rt = Runtime::load_default()?;
+
+    let base_rows = BaselineFourStep::new(&rt, NY, "tc", false)?;
+    let base_cols = BaselineFourStep::new(&rt, NX, "tc", false)?;
+    let serial = Plan2d::with_config(
+        &rt,
+        NX,
+        NY,
+        false,
+        FourStepConfig { threads: 1, ..FourStepConfig::default() },
+    )?;
+    let parallel = Plan2d::with_config(
+        &rt,
+        NX,
+        NY,
+        false,
+        FourStepConfig { threads: ENGINE_THREADS, ..FourStepConfig::default() },
+    )?;
+    println!("{NX}x{NY}, batch {BATCH}: engine {}", parallel.describe());
+
+    let sig: Vec<f32> = (0..BATCH)
+        .flat_map(|b| random_signal(NX * NY, 0x2D20 + b as u64))
+        .map(|c| c.re)
+        .collect();
+    let input = PlanarBatch::from_real(&sig, vec![BATCH, NX, NY]);
+
+    // correctness gate before timing: engine field 0 vs the f64 oracle
+    let bins = NY / 2 + 1;
+    let out = parallel.execute_batch(&rt, input.clone())?;
+    let q = input.slice_rows(0, 1).quantize_f16();
+    let qc = widen(&q.to_complex());
+    let want_full = tcfft::fft::oracle2d(&qc, NX, NY, false);
+    let want: Vec<C64> = (0..NX)
+        .flat_map(|r| want_full[r * NY..r * NY + bins].to_vec())
+        .collect();
+    let got = widen(&out.to_complex()[..NX * bins]);
+    let err = relative_rmse(&want, &got);
+    tcfft::ensure!(err < 5e-3, "large-2D engine rel-RMSE {err:.3e} over 5e-3");
+    println!("engine vs 2D oracle (field 0, packed bins): rel-RMSE {err:.3e}\n");
+
+    let r_ref = bench(
+        &format!("baseline composed x{BATCH}"),
+        || {
+            for b in 0..BATCH {
+                baseline_rfft2d(&rt, &base_rows, &base_cols, &sig[b * NX * NY..(b + 1) * NX * NY]);
+            }
+        },
+        ref_iters,
+    );
+    let r_ser = bench(
+        "Plan2d batched 1t",
+        || {
+            serial.execute_batch(&rt, input.clone()).unwrap();
+        },
+        iters,
+    );
+    let r_par = bench(
+        &format!("Plan2d batched {ENGINE_THREADS}t"),
+        || {
+            parallel.execute_batch(&rt, input.clone()).unwrap();
+        },
+        iters,
+    );
+    let (m_ref, m_ser, m_par) =
+        (r_ref.summary.median(), r_ser.summary.median(), r_par.summary.median());
+
+    let key = format!("rfft2d_tc_nx{NX}x{NY}_b{BATCH}_fwd");
+    let mut t = Table::new(&["key", "baseline ms", "engine 1t ms", "engine 4t ms", "speedup"]);
+    t.row(vec![
+        key.clone(),
+        format!("{:.1}", m_ref * 1e3),
+        format!("{:.1}", m_ser * 1e3),
+        format!("{:.1}", m_par * 1e3),
+        format!("{:.2}x", m_ref / m_par),
+    ]);
+    let entries = vec![(
+        key,
+        bench_entry("rfft2d_large", ENGINE_THREADS, r_par.summary.len(), m_ref, m_ser, m_par),
+    )];
+    let path = update_bench_json(&entries)?;
+    println!(
+        "Plan2d composition vs per-sequence baseline (recorded in {}):\n{}",
+        path.display(),
+        t.render()
+    );
+    println!("rfft2d_large: OK");
+    Ok(())
+}

@@ -61,7 +61,7 @@ use super::faults::FaultInjector;
 use super::lock::{wait_timeout_recover, LockExt};
 use super::metrics::Metrics;
 use super::quota::QuotaGate;
-use crate::large::{FourStepConfig, FourStepPlan, RealFourStepPlan};
+use crate::large::{FourStepConfig, FourStepPlan, Plan2d, RealFourStepPlan};
 use crate::plan::{Direction, Plan};
 use crate::runtime::{PlanarBatch, Runtime};
 use crate::util::fnv::{fnv1a64, Fnv1a};
@@ -106,9 +106,13 @@ pub enum Op {
     /// Batched real-input 2D transform, row-major `nx` x `ny`: R2C
     /// forward (`[nx, ny]` real fields in, packed `[nx, ny/2 + 1]`
     /// Hermitian spectra out) or C2R inverse (the mirror image, scaled
-    /// by `nx * ny`), selected by [`FftRequest::direction`]. Served by
-    /// the catalog only — sizes without an `rfft2d` artifact fail fast
-    /// (there is no 2D four-step route).
+    /// by `nx * ny`), selected by [`FftRequest::direction`]. Sizes
+    /// with an `rfft2d` artifact route direct; power-of-two sides in
+    /// [`LARGE_2D_MIN_SIDE`]..=[`LARGE_2D_MAX_SIDE`] whose area fits
+    /// `ServiceConfig::max_large_n` route to a cached
+    /// [`Plan2d`](crate::large::Plan2d) four-step composition;
+    /// everything else fails fast with a `no_artifact` error naming
+    /// both sets of limits.
     Rfft2d {
         /// first (strided) axis length
         nx: usize,
@@ -137,7 +141,8 @@ pub struct ServiceConfig {
     /// the shard pools.
     pub inline_exec: bool,
     /// batch capacity of the four-step large-FFT queues (`Op::Fft1d` /
-    /// `Op::Rfft1d` sizes with no direct artifact). Flushed unpadded —
+    /// `Op::Rfft1d` / `Op::Rfft2d` sizes with no direct artifact).
+    /// Flushed unpadded —
     /// the batched engines take any row count, and a padded
     /// 2^20-point slot would burn a whole transform's worth of work on
     /// zeros.
@@ -254,12 +259,14 @@ enum Route {
 }
 
 /// A cached batch-executing four-step engine behind a queue key: the
-/// complex engine or its real-input (R2C/C2R) wrapper. Filter banks
-/// live in their own cache (`Shared::banks`).
+/// complex engine, its real-input (R2C/C2R) wrapper, or the 2D
+/// row/column composition. Filter banks live in their own cache
+/// (`Shared::banks`).
 #[derive(Clone)]
 enum LargePlan {
     Complex(Arc<FourStepPlan>),
     Real(Arc<RealFourStepPlan>),
+    Plan2d(Arc<Plan2d>),
 }
 
 impl LargePlan {
@@ -267,6 +274,7 @@ impl LargePlan {
         match self {
             LargePlan::Complex(p) => p.execute_batch(rt, input),
             LargePlan::Real(p) => p.execute_batch(rt, input),
+            LargePlan::Plan2d(p) => p.execute_batch(rt, input),
         }
     }
 
@@ -274,9 +282,22 @@ impl LargePlan {
         match self {
             LargePlan::Complex(p) => p.memory_bytes(),
             LargePlan::Real(p) => p.memory_bytes(),
+            LargePlan::Plan2d(p) => p.memory_bytes(),
         }
     }
 }
+
+/// Smallest image side the large-2D `rfft2d` route serves: below this
+/// the catalog ladder (squares 8x8..256x256 plus 64x128/128x64) is the
+/// intended path, and the four-step composition's per-plan cost is not
+/// worth caching.
+pub const LARGE_2D_MIN_SIDE: usize = 512;
+
+/// Largest image side the large-2D `rfft2d` route serves (the paper's
+/// top 2D evaluation scale). The area guard
+/// (`ServiceConfig::max_large_n`) additionally bounds `nx * ny`, so
+/// serving 16k x 16k requires raising that knob too.
+pub const LARGE_2D_MAX_SIDE: usize = 16384;
 
 /// A registered filter bank plus the content fingerprint that makes
 /// re-registration idempotent (same name + same content = same bank).
@@ -364,14 +385,24 @@ fn rebuild_large(rt: &Runtime, shared: &Shared, key: &str) -> Result<LargePlan> 
     let desc = key.split('#').next().unwrap_or(key);
     let parts: Vec<&str> = desc.split(':').collect();
     crate::ensure!(parts.len() == 4, "malformed four-step queue key '{key}'");
-    let real = parts[0] == "4stepr";
-    let n: usize = parts[1].parse()?;
     let inverse = parts[3] == "inv";
     let cfg = FourStepConfig { algo: parts[2].to_string(), ..FourStepConfig::default() };
-    let plan = if real {
-        LargePlan::Real(Arc::new(RealFourStepPlan::with_config(rt, n, inverse, cfg)?))
-    } else {
-        LargePlan::Complex(Arc::new(FourStepPlan::with_config(rt, n, inverse, cfg)?))
+    let plan = match parts[0] {
+        "4stepr" => {
+            let n: usize = parts[1].parse()?;
+            LargePlan::Real(Arc::new(RealFourStepPlan::with_config(rt, n, inverse, cfg)?))
+        }
+        "4step2d" => {
+            let (sx, sy) = parts[1].split_once('x').ok_or_else(|| {
+                TcFftError::msg(format!("malformed 2D four-step queue key '{key}'"))
+            })?;
+            let (nx, ny) = (sx.parse::<usize>()?, sy.parse::<usize>()?);
+            LargePlan::Plan2d(Arc::new(Plan2d::with_config(rt, nx, ny, inverse, cfg)?))
+        }
+        _ => {
+            let n: usize = parts[1].parse()?;
+            LargePlan::Complex(Arc::new(FourStepPlan::with_config(rt, n, inverse, cfg)?))
+        }
     };
     shared.metrics.large_rebuilds.fetch_add(1, Ordering::Relaxed);
     let bytes = plan.memory_bytes();
@@ -847,11 +878,15 @@ impl FftService {
     }
 
     /// Resolve a request to its execution route: a direct artifact
-    /// plan, or — for `Op::Fft1d` / `Op::Rfft1d` power-of-two sizes
-    /// with no artifact — a cached four-step large-FFT plan (paper
-    /// Sec 3.1; the real wrapper for `Rfft1d`). `Op::Fft2d` and
-    /// `Op::Rfft2d` have no large route and fail fast beyond the
-    /// catalog.
+    /// plan, or — for power-of-two sizes with no artifact — a cached
+    /// four-step large-FFT plan (paper Sec 3.1): the complex engine
+    /// for `Fft1d`, the real wrapper for `Rfft1d`, and the 2D
+    /// row/column composition ([`Plan2d`](crate::large::Plan2d)) for
+    /// `Rfft2d` images with sides in
+    /// [`LARGE_2D_MIN_SIDE`]..=[`LARGE_2D_MAX_SIDE`]. `Op::Fft2d` has
+    /// no large route and fails fast beyond the catalog; ineligible
+    /// `Rfft2d` sizes fail fast with a message naming both the catalog
+    /// and the large-route bounds.
     fn route_for(&self, req: &FftRequest) -> Result<Route> {
         match self.plan_for(req) {
             Ok(plan) => Ok(Route::Direct {
@@ -870,6 +905,17 @@ impl FftService {
                 {
                     self.large_route_for(n, req)
                 }
+                Op::Rfft2d { nx, ny } if self.large_2d_eligible(nx, ny) => {
+                    self.large_2d_route_for(nx, ny, req)
+                }
+                Op::Rfft2d { nx, ny } => Err(TcFftError::NoArtifact(format!(
+                    "rfft2d {nx}x{ny}: {reason}; the catalog serves squares \
+                     8x8..256x256 plus 64x128/128x64, and the large-2D four-step \
+                     route serves power-of-two sides \
+                     {LARGE_2D_MIN_SIDE}..{LARGE_2D_MAX_SIDE} with area \
+                     nx*ny <= {} (max_large_n)",
+                    self.shared.cfg.max_large_n
+                ))),
                 _ => Err(TcFftError::NoArtifact(reason)),
             },
             Err(e) => Err(e),
@@ -911,6 +957,47 @@ impl FftService {
         } else {
             LargePlan::Complex(Arc::new(FourStepPlan::with_config(&self.rt, n, inverse, cfg)?))
         };
+        let bytes = plan.memory_bytes();
+        let _ = self.shared.large_plans.get_or_insert(&key, plan, bytes);
+        Ok(Route::Large { key, tail })
+    }
+
+    /// Whether an `Op::Rfft2d` image qualifies for the large-2D
+    /// four-step route: power-of-two sides in
+    /// [`LARGE_2D_MIN_SIDE`]..=[`LARGE_2D_MAX_SIDE`] whose area fits
+    /// the `max_large_n` budget (the 2D analogue of the 1D size
+    /// guard, applied to `nx * ny`).
+    fn large_2d_eligible(&self, nx: usize, ny: usize) -> bool {
+        let side_ok =
+            |s: usize| s.is_power_of_two() && (LARGE_2D_MIN_SIDE..=LARGE_2D_MAX_SIDE).contains(&s);
+        side_ok(nx)
+            && side_ok(ny)
+            && nx.checked_mul(ny).is_some_and(|area| area <= self.shared.cfg.max_large_n)
+    }
+
+    /// Find or build the cached 2D four-step composition for
+    /// (nx, ny, algo, dir) — the `Op::Rfft2d` analogue of
+    /// [`large_route_for`](Self::large_route_for), sharing the same
+    /// LRU, fingerprint keys, and build-outside-locks discipline.
+    fn large_2d_route_for(&self, nx: usize, ny: usize, req: &FftRequest) -> Result<Route> {
+        if !matches!(req.algo.as_str(), "tc" | "tc_split" | "r2") {
+            return Err(TcFftError::NoArtifact(format!(
+                "rfft2d {nx}x{ny} algo={} (unknown algo has no four-step route)",
+                req.algo
+            )));
+        }
+        let inverse = req.direction == Direction::Inverse;
+        let dir = if inverse { "inv" } else { "fwd" };
+        let desc = format!("4step2d:{nx}x{ny}:{}:{dir}", req.algo);
+        let key = fingerprint_key(&desc);
+        // C2R consumes packed spectra, R2C full images
+        let tail = if inverse { vec![nx, ny / 2 + 1] } else { vec![nx, ny] };
+        if self.shared.large_plans.get(&key).is_some() {
+            return Ok(Route::Large { key, tail });
+        }
+        let cfg = FourStepConfig { algo: req.algo.clone(), ..FourStepConfig::default() };
+        let built = Plan2d::with_config(&self.rt, nx, ny, inverse, cfg)?;
+        let plan = LargePlan::Plan2d(Arc::new(built));
         let bytes = plan.memory_bytes();
         let _ = self.shared.large_plans.get_or_insert(&key, plan, bytes);
         Ok(Route::Large { key, tail })

@@ -34,13 +34,18 @@
 //! beyond 2^22 decompose multi-level; leaves resolve to the requested
 //! algorithm's artifacts with a `tc` fallback. The coordinator routes
 //! `Op::Fft1d` sizes with no direct artifact to a cached plan from
-//! this module, and `Op::Rfft1d` sizes to a [`RealFourStepPlan`] —
-//! the R2C/C2R wrapper that runs the half-size complex engine inside
-//! the fused half-spectrum pass.
+//! this module, `Op::Rfft1d` sizes to a [`RealFourStepPlan`] — the
+//! R2C/C2R wrapper that runs the half-size complex engine inside the
+//! fused half-spectrum pass — and `Op::Rfft2d` images to a
+//! [`Plan2d`] ([`plan2d`]), which composes a row-wise
+//! `RealFourStepPlan` with a column-wise [`FourStepPlan`] over the
+//! packed Hermitian layout.
 
 pub mod baseline;
+pub mod plan2d;
 
 pub use baseline::BaselineFourStep;
+pub use plan2d::Plan2d;
 
 use std::collections::HashSet;
 use std::sync::{Arc, Mutex, OnceLock};
@@ -241,6 +246,9 @@ impl ExecCtx<'_> {
 /// `dst[r*oc + c] = src[c*or + r]`, times `tw[r*oc + c]` when a
 /// twiddle table is given. `dims = (or, oc)` are the OUTPUT rows/cols;
 /// `dst` starts at output row `rows.0`; `src`/`tw` span the sequence.
+/// Output rows are written compactly (`out_cols` apart); the 2D
+/// composition's panel scatter uses [`transpose_range_strided`] when
+/// they must land `dst_stride` apart instead.
 fn transpose_range(
     src: (&[f32], &[f32]),
     dst: (&mut [f32], &mut [f32]),
@@ -248,17 +256,36 @@ fn transpose_range(
     dims: (usize, usize),
     tw: Option<(&[f32], &[f32])>,
 ) {
+    debug_assert_eq!(dst.0.len(), (rows.1 - rows.0) * dims.1);
+    transpose_range_strided(src, dst, rows, dims, dims.1, tw)
+}
+
+/// [`transpose_range`] with an explicit distance between consecutive
+/// output rows: `dst[(r - rows.0)*dst_stride + c] = src[c*or + r]`.
+/// With `dst_stride > out_cols` the transposed rows scatter into a
+/// wider row-major destination (the packed `[nx, L]` image a column
+/// panel writes back into); `dst` must cover
+/// `(rows.1 - rows.0 - 1) * dst_stride + out_cols` elements.
+fn transpose_range_strided(
+    src: (&[f32], &[f32]),
+    dst: (&mut [f32], &mut [f32]),
+    rows: (usize, usize),
+    dims: (usize, usize),
+    dst_stride: usize,
+    tw: Option<(&[f32], &[f32])>,
+) {
     let (src_re, src_im) = src;
     let (dst_re, dst_im) = dst;
     let (r0, r1) = rows;
     let (out_rows, out_cols) = dims;
-    debug_assert_eq!(dst_re.len(), (r1 - r0) * out_cols);
+    debug_assert!(dst_stride >= out_cols);
+    debug_assert!(r0 == r1 || dst_re.len() >= (r1 - r0 - 1) * dst_stride + out_cols);
     for rb in (r0..r1).step_by(TILE) {
         let row_end = (rb + TILE).min(r1);
         for cb in (0..out_cols).step_by(TILE) {
             let ce = (cb + TILE).min(out_cols);
             for r in rb..row_end {
-                let d = (r - r0) * out_cols;
+                let d = (r - r0) * dst_stride;
                 match tw {
                     None => {
                         for c in cb..ce {

@@ -1,0 +1,377 @@
+//! 2D schedule composition for large real images: the `rfft2d` /
+//! `irfft2d` route beyond the artifact catalog.
+//!
+//! [`Plan2d`] composes the two batched four-step engines of the parent
+//! module into a full 2D real transform over the Hermitian-packed
+//! `[b, nx, ny/2 + 1]` layout — the same packing contract the catalog
+//! artifacts and the interpreter's `run_real_2d` wrapper use, built
+//! from the same pass primitives (the `RealHalfSpectrum` split/merge
+//! kernels via [`RealFourStepPlan`], the tiled transposes of
+//! `large::transpose_range`), so all three 2D paths share one numeric
+//! definition:
+//!
+//! * **row pass** — every image row runs through a ny-point
+//!   [`RealFourStepPlan`]: forward packs `[b*nx, ny]` real rows into
+//!   the half-size complex pipeline and splits (fused into the inner
+//!   engine's skipped read-out transpose) into packed `[b*nx, L]`
+//!   Hermitian rows, `L = ny/2 + 1`; inverse mirrors it (merge, half
+//!   pipeline, unpack), scaled by `ny`;
+//! * **column pass** — each of the `L` packed bin columns runs through
+//!   an nx-point complex [`FourStepPlan`] (inverse scaled by `nx`, so
+//!   the round trip carries the crate-wide unnormalized `nx * ny`).
+//!
+//! The column pass is **cache-blocked**: panels of `w` adjacent bin
+//! columns are gathered with the parent module's tiled transpose into a
+//! `[b*w, nx]` row batch (contiguous rows — exactly what the column
+//! engine batches over), transformed, and scattered back through the
+//! strided transpose variant. The panel width is chosen so the gathered
+//! working set stays inside [`PANEL_BUDGET_ELEMS`], and the panel planes
+//! are retained across calls like every other scratch pair in `large/`,
+//! so steady-state execution allocates only the returned batch.
+//!
+//! Pass boundaries stay explicit (row pass, panel gather, column pass,
+//! panel scatter) rather than fusing into a monolith: the streaming
+//! work in ROADMAP item 4 reuses this composition shape with resident
+//! spectra between the passes. The stage-level view of the same
+//! composition lives in `plan::schedule::rfft2d_schedule`, built from
+//! the shared `rfft2d_row_stages` / `rfft2d_col_stages` helpers this
+//! plan's [`stages`](Plan2d::stages) also reports.
+
+use std::sync::Mutex;
+
+use super::{
+    transpose_range, transpose_range_strided, FourStepConfig, FourStepPlan, RealFourStepPlan,
+    ScratchPair,
+};
+use crate::error::{Result, TcFftError};
+use crate::plan::schedule::{rfft2d_col_stages, rfft2d_row_stages, PlannedStage};
+use crate::runtime::{PlanarBatch, Runtime};
+
+/// Per-panel element budget for the cache-blocked column pass: the
+/// gathered panel holds `b * w * nx` complex elements (two f32 planes,
+/// 8 bytes each), so 2^19 elements caps the panel working set at 4 MiB
+/// — small enough to stay cache-warm next to the column engine's own
+/// transpose scratch, large enough that the per-panel engine dispatch
+/// amortizes.
+const PANEL_BUDGET_ELEMS: usize = 1 << 19;
+
+/// A cached, batched 2D four-step composition for one
+/// (nx, ny, algo, direction): real `[b, nx, ny]` images to packed
+/// `[b, nx, ny/2 + 1]` Hermitian spectra (forward) and back (inverse,
+/// unnormalized — the round trip returns `nx * ny * x`).
+///
+/// Build once (both inner engines precompute their decomposition trees
+/// and twiddle tables here), then call
+/// [`execute_batch`](Self::execute_batch) per request batch. Plans are
+/// `Send + Sync`; the coordinator shares them behind `Arc` in the same
+/// LRU `large_plans` cache as the 1D four-step plans.
+pub struct Plan2d {
+    nx: usize,
+    ny: usize,
+    inverse: bool,
+    /// the ny-point real row engine (same direction)
+    rows: RealFourStepPlan,
+    /// the nx-point complex column engine (same direction)
+    cols: FourStepPlan,
+    /// retained panel planes for the cache-blocked column pass (same
+    /// most-recent-pair policy as the engines' transpose scratch)
+    panel: Mutex<Option<ScratchPair>>,
+}
+
+impl Plan2d {
+    /// Default-config plan (leaf algo `"tc"`).
+    pub fn new(rt: &Runtime, nx: usize, ny: usize, inverse: bool) -> Result<Plan2d> {
+        Self::with_config(rt, nx, ny, inverse, FourStepConfig::default())
+    }
+
+    /// Plan with explicit tuning knobs, shared by both inner engines.
+    /// `nx` must be a power of two >= 4 with a four-step decomposition
+    /// (>= 16 against the synthesized catalog), `ny` a power of two
+    /// >= 8 so the row transform's half size still splits.
+    pub fn with_config(
+        rt: &Runtime,
+        nx: usize,
+        ny: usize,
+        inverse: bool,
+        cfg: FourStepConfig,
+    ) -> Result<Plan2d> {
+        if !nx.is_power_of_two() || nx < 4 {
+            crate::bail!(TcFftError::BadSize(nx));
+        }
+        if !ny.is_power_of_two() || ny < 8 {
+            crate::bail!(TcFftError::BadSize(ny));
+        }
+        let rows = RealFourStepPlan::with_config(rt, ny, inverse, cfg.clone())?;
+        let cols = FourStepPlan::with_config(rt, nx, inverse, cfg)?;
+        Ok(Plan2d { nx, ny, inverse, rows, cols, panel: Mutex::new(None) })
+    }
+
+    /// Image rows (the outer, column-transformed dimension).
+    pub fn nx(&self) -> usize {
+        self.nx
+    }
+
+    /// Image columns (the inner, real-transformed dimension).
+    pub fn ny(&self) -> usize {
+        self.ny
+    }
+
+    /// True for the C2R (inverse) direction.
+    pub fn inverse(&self) -> bool {
+        self.inverse
+    }
+
+    /// The requested leaf algorithm of the inner engines.
+    pub fn algo(&self) -> &str {
+        self.cols.algo()
+    }
+
+    /// Packed Hermitian bins per row, `ny/2 + 1`.
+    pub fn bins(&self) -> usize {
+        self.ny / 2 + 1
+    }
+
+    /// Human-readable composition, e.g.
+    /// `r2c2d(2048x2048: rows r2c(2048 x (32[tc] x 32[tc])), cols (64[tc] x 32[tc]))`.
+    pub fn describe(&self) -> String {
+        format!(
+            "r2c2d({}x{}: rows {}, cols {})",
+            self.nx,
+            self.ny,
+            self.rows.describe(),
+            self.cols.describe()
+        )
+    }
+
+    /// The planner-level stage sequence of this composition — the same
+    /// shared row/column stage helpers the catalog's `rfft2d_schedule`
+    /// composes, in this plan's direction order.
+    pub fn stages(&self) -> Vec<PlannedStage> {
+        let rows = rfft2d_row_stages(self.ny, self.inverse);
+        let cols = rfft2d_col_stages(self.nx, self.ny);
+        if self.inverse {
+            cols.into_iter().chain(rows).collect()
+        } else {
+            rows.into_iter().chain(cols).collect()
+        }
+    }
+
+    /// Estimated resident bytes for cache accounting: both inner
+    /// engines plus the retained panel pair at its nominal single-image
+    /// steady-state size (8 bytes per panel element, capped by the
+    /// panel budget).
+    pub fn memory_bytes(&self) -> usize {
+        let panel = PANEL_BUDGET_ELEMS.min(self.bins() * self.nx);
+        self.rows.memory_bytes() + self.cols.memory_bytes() + 8 * panel
+    }
+
+    /// Transform a whole batch of images in one call: forward
+    /// `[b, nx, ny]` real images -> `[b, nx, ny/2 + 1]` packed spectra;
+    /// inverse the mirror image with the crate-wide unnormalized
+    /// scaling (`nx * ny * x`). Row and column passes run in this
+    /// plan's direction order (forward rows-then-columns, inverse
+    /// columns-then-rows), exactly like the interpreter's catalog path.
+    pub fn execute_batch(&self, rt: &Runtime, x: PlanarBatch) -> Result<PlanarBatch> {
+        let l = self.bins();
+        let want_tail = if self.inverse { [self.nx, l] } else { [self.nx, self.ny] };
+        crate::ensure!(
+            x.shape.len() == 3 && x.shape[1..] == want_tail,
+            "2D four-step input shape {:?} != [b, {}, {}]",
+            x.shape,
+            want_tail[0],
+            want_tail[1]
+        );
+        let b = x.shape[0];
+        if self.inverse {
+            // column pass over the packed bins first, then the C2R rows
+            // (the forward order mirrored). The packed spectrum is
+            // quantized up front so the column engine sees the fp16
+            // values the interpreter path sees; the row engine's merge
+            // pass re-quantizes its own input as always.
+            let mut packed = PlanarBatch { re: x.re, im: x.im, shape: vec![b * self.nx, l] };
+            packed.quantize_f16_mut();
+            self.column_pass(rt, &mut packed, b)?;
+            let out = self.rows.execute_batch(rt, packed)?;
+            Ok(PlanarBatch { re: out.re, im: out.im, shape: vec![b, self.nx, self.ny] })
+        } else {
+            // row pass: [b*nx, ny] real rows -> [b*nx, L] packed rows,
+            // which IS the packed [b, nx, L] image contiguously
+            let rows_in = PlanarBatch { re: x.re, im: x.im, shape: vec![b * self.nx, self.ny] };
+            let mut packed = self.rows.execute_batch(rt, rows_in)?;
+            self.column_pass(rt, &mut packed, b)?;
+            Ok(PlanarBatch { re: packed.re, im: packed.im, shape: vec![b, self.nx, l] })
+        }
+    }
+
+    /// The nx-point complex pass down the packed bin columns of `b`
+    /// images (`packed` holds `b * nx * L` elements): panels of up to
+    /// `pw` adjacent bin columns are gathered per image with the tiled
+    /// transpose into a `[b*w, nx]` row batch, run through the column
+    /// engine, and scattered back through the strided transpose. The
+    /// gather/scatter sweeps are serial (panel order is part of the
+    /// bitwise contract); the column engine parallelizes internally
+    /// with its own serial==parallel guarantee.
+    fn column_pass(&self, rt: &Runtime, packed: &mut PlanarBatch, b: usize) -> Result<()> {
+        let (nx, l) = (self.nx, self.bins());
+        debug_assert_eq!(packed.re.len(), b * nx * l);
+        if b == 0 {
+            return Ok(());
+        }
+        let pw = (PANEL_BUDGET_ELEMS / (b * nx)).clamp(1, l);
+        let (mut p_re, mut p_im) = self.panel.lock().unwrap().take().unwrap_or_default();
+        p_re.resize(b * pw * nx, 0.0);
+        p_im.resize(b * pw * nx, 0.0);
+        let img = nx * l;
+        let mut c0 = 0usize;
+        while c0 < l {
+            let w = pw.min(l - c0);
+            // the width only shrinks (last partial panel), so truncate
+            // keeps the recycled planes exactly [b*w, nx]
+            p_re.truncate(b * w * nx);
+            p_im.truncate(b * w * nx);
+            // gather: panel row i*w + (c - c0) is bin column c of
+            // image i — panel[(c-c0)*nx + x] = img_i[x*L + c]
+            for i in 0..b {
+                let (s, d) = (i * img, i * w * nx);
+                transpose_range(
+                    (&packed.re[s..s + img], &packed.im[s..s + img]),
+                    (&mut p_re[d..d + w * nx], &mut p_im[d..d + w * nx]),
+                    (c0, c0 + w),
+                    (l, nx),
+                    None,
+                );
+            }
+            let out = self
+                .cols
+                .execute_batch(rt, PlanarBatch { re: p_re, im: p_im, shape: vec![b * w, nx] })?;
+            // scatter back with the packed row stride L:
+            // img_i[x*L + c0 + c] = out_i[c*nx + x]
+            for i in 0..b {
+                let s = i * w * nx;
+                let d0 = i * img + c0;
+                let d1 = (i + 1) * img;
+                transpose_range_strided(
+                    (&out.re[s..s + w * nx], &out.im[s..s + w * nx]),
+                    (&mut packed.re[d0..d1], &mut packed.im[d0..d1]),
+                    (0, nx),
+                    (nx, w),
+                    l,
+                    None,
+                );
+            }
+            // recycle the engine-returned planes for the next panel
+            p_re = out.re;
+            p_im = out.im;
+            c0 += w;
+        }
+        *self.panel.lock().unwrap() = Some((p_re, p_im));
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::error::relative_rmse;
+    use crate::fft::oracle2d;
+    use crate::hp::complex::widen;
+    use crate::hp::C64;
+    use crate::workload::random_signal;
+
+    fn rt() -> Runtime {
+        Runtime::load("/definitely/not/a/dir").unwrap()
+    }
+
+    fn real_fields(nx: usize, ny: usize, batch: usize, seed: u64) -> Vec<f32> {
+        (0..batch)
+            .flat_map(|b| random_signal(nx * ny, seed + b as u64))
+            .map(|c| c.re)
+            .collect()
+    }
+
+    /// Forward Plan2d vs the f64 2D oracle on the packed bins, for a
+    /// rectangular shape in both orientations (no baked-in squareness).
+    #[test]
+    fn forward_matches_the_2d_oracle_rectangular() {
+        let rt = rt();
+        for (nx, ny) in [(32usize, 64usize), (64, 32)] {
+            let l = ny / 2 + 1;
+            let p = Plan2d::new(&rt, nx, ny, false).unwrap();
+            assert_eq!((p.nx(), p.ny(), p.bins()), (nx, ny, l));
+            assert!(p.describe().starts_with("r2c2d("), "{}", p.describe());
+            let sig = real_fields(nx, ny, 2, 31);
+            let input = PlanarBatch::from_real(&sig, vec![2, nx, ny]);
+            let out = p.execute_batch(&rt, input.clone()).unwrap();
+            assert_eq!(out.shape, vec![2, nx, l]);
+            let q = input.quantize_f16();
+            for b in 0..2 {
+                let img = widen(&q.to_complex()[b * nx * ny..(b + 1) * nx * ny]);
+                let full = oracle2d(&img, nx, ny, false);
+                let want: Vec<C64> =
+                    (0..nx).flat_map(|r| full[r * ny..r * ny + l].to_vec()).collect();
+                let got = widen(&out.to_complex()[b * nx * l..(b + 1) * nx * l]);
+                let err = relative_rmse(&want, &got);
+                assert!(err < 5e-3, "{nx}x{ny} field {b}: rmse {err:.3e}");
+            }
+        }
+    }
+
+    #[test]
+    fn round_trip_recovers_the_quantized_image() {
+        let rt = rt();
+        let (nx, ny) = (64usize, 32usize);
+        let fwd = Plan2d::new(&rt, nx, ny, false).unwrap();
+        let inv = Plan2d::new(&rt, nx, ny, true).unwrap();
+        assert!(inv.inverse());
+        let sig = real_fields(nx, ny, 1, 7);
+        let input = PlanarBatch::from_real(&sig, vec![1, nx, ny]);
+        let spec = fwd.execute_batch(&rt, input.clone()).unwrap();
+        let back = inv.execute_batch(&rt, spec).unwrap();
+        assert_eq!(back.shape, vec![1, nx, ny]);
+        let q = input.quantize_f16();
+        let scale = (nx * ny) as f32;
+        for i in 0..nx * ny {
+            assert!(
+                (back.re[i] / scale - q.re[i]).abs() < 0.01,
+                "sample {i}: {} vs {}",
+                back.re[i] / scale,
+                q.re[i]
+            );
+            assert_eq!(back.im[i], 0.0, "C2R output must be real");
+        }
+    }
+
+    #[test]
+    fn stages_compose_rows_and_columns_in_direction_order() {
+        let rt = rt();
+        let fwd = Plan2d::new(&rt, 32, 64, false).unwrap();
+        let st = fwd.stages();
+        assert_eq!(st.last().unwrap().lane, 33, "forward ends on the column pass");
+        assert_eq!(st.first().unwrap().lane, 1, "forward starts on the row pass");
+        let inv = Plan2d::new(&rt, 32, 64, true).unwrap();
+        let st = inv.stages();
+        assert_eq!(st.first().unwrap().lane, 33, "inverse starts on the column pass");
+    }
+
+    #[test]
+    fn empty_batch_keeps_the_output_tail() {
+        let rt = rt();
+        let fwd = Plan2d::new(&rt, 32, 64, false).unwrap();
+        let out = fwd.execute_batch(&rt, PlanarBatch::new(vec![0, 32, 64])).unwrap();
+        assert_eq!(out.shape, vec![0, 32, 33]);
+        let inv = Plan2d::new(&rt, 32, 64, true).unwrap();
+        let out = inv.execute_batch(&rt, PlanarBatch::new(vec![0, 32, 33])).unwrap();
+        assert_eq!(out.shape, vec![0, 32, 64]);
+    }
+
+    #[test]
+    fn rejects_bad_shapes_and_sizes() {
+        let rt = rt();
+        assert!(Plan2d::new(&rt, 100, 64, false).is_err()); // nx not pow2
+        assert!(Plan2d::new(&rt, 32, 4, false).is_err()); // ny half too small
+        let p = Plan2d::new(&rt, 32, 64, false).unwrap();
+        // 2D input must be rank 3 with the exact [nx, ny] tail
+        assert!(p.execute_batch(&rt, PlanarBatch::new(vec![32, 64])).is_err());
+        assert!(p.execute_batch(&rt, PlanarBatch::new(vec![1, 64, 32])).is_err());
+    }
+}

@@ -314,12 +314,13 @@ fn bench_cmd(args: &Args) -> Result<()> {
 }
 
 /// CI smoke check: `BENCH_interp.json` (emitted by the fig4_1d,
-/// fig7_batch, large_fourstep, rfft_1d, rfft_2d and e2e_serve
-/// benches) parses, carries the expected schema, and holds the
-/// headline before/after entry, the batch-sweep anchor, the four-step
-/// large-FFT acceptance entry, the 1D and 2D R2C-vs-C2C acceptance
-/// entries, and the 64-client serving entry. The schema and every
-/// entry key are documented in BENCHMARKS.md.
+/// fig7_batch, large_fourstep, rfft_1d, rfft_2d, rfft2d_large and
+/// e2e_serve benches) parses, carries the expected schema, and holds
+/// the headline before/after entry, the batch-sweep anchor, the
+/// four-step large-FFT acceptance entry, the 1D and 2D R2C-vs-C2C
+/// acceptance entries, the large-2D composition entry, and the
+/// 64-client serving entry. The schema and every entry key are
+/// documented in BENCHMARKS.md.
 fn bench_validate_cmd(args: &Args) -> Result<()> {
     use tcfft::bench_harness::BENCH_SCHEMA;
     use tcfft::util::json::Json;
@@ -329,6 +330,7 @@ fn bench_validate_cmd(args: &Args) -> Result<()> {
     const FOURSTEP: &str = "fourstep_tc_n1048576_b8_fwd";
     const RFFT: &str = "rfft1d_tc_n4096_b32_fwd";
     const RFFT2D: &str = "rfft2d_tc_nx256x256_b8_fwd";
+    const RFFT2D_LARGE: &str = "rfft2d_tc_nx2048x2048_b4_fwd";
     const E2E: &str = "e2e_serve_tc_n4096_c64";
 
     // same default resolution as the emitting benches (cwd-independent)
@@ -384,6 +386,12 @@ fn bench_validate_cmd(args: &Args) -> Result<()> {
     let m2_r2c = pos(RFFT2D, "engine_median_s")?;
     pos(RFFT2D, "engine_serial_median_s")?;
     pos(RFFT2D, "speedup")?;
+    // the large-2D acceptance entry: Plan2d composition (the service's
+    // large rfft2d route) vs the per-sequence baseline composition
+    let ml_ref = pos(RFFT2D_LARGE, "reference_median_s")?;
+    let ml_par = pos(RFFT2D_LARGE, "engine_median_s")?;
+    pos(RFFT2D_LARGE, "engine_serial_median_s")?;
+    pos(RFFT2D_LARGE, "speedup")?;
     // the serving acceptance entry: 64 closed-loop clients through the
     // sharded service core vs the raw batch-4 runtime path
     let me_raw = pos(E2E, "reference_median_s")?;
@@ -433,6 +441,12 @@ fn bench_validate_cmd(args: &Args) -> Result<()> {
         m2_c2c * 1e3,
         m2_r2c * 1e3,
         m2_c2c / m2_r2c
+    );
+    println!(
+        "large-2D {RFFT2D_LARGE}: baseline composed {:.1} ms -> Plan2d {:.1} ms ({:.2}x)",
+        ml_ref * 1e3,
+        ml_par * 1e3,
+        ml_ref / ml_par
     );
     println!(
         "serving {E2E}: raw per-seq {:.2} ms -> 64-client per-seq {:.2} ms ({:.2}x)",

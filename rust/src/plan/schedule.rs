@@ -192,22 +192,39 @@ pub fn rfft_schedule(n: usize, lane: usize, inverse: bool) -> Vec<PlannedStage> 
     }
 }
 
-/// The real-input 2D schedule for an `nx` x `ny` transform: the
-/// row-wise real schedule of `ny` (half-size complex stages plus the
-/// half-spectrum pass, as in [`rfft_schedule`]) composed with the
-/// complex column schedule of `nx` striding over the packed
-/// `ny/2 + 1` Hermitian bins (`lane = ny/2 + 1`). Forward runs rows
-/// then columns; the inverse is the exact mirror (columns, then the
-/// `c2r_pre` merge, then the half-size rows). Stage radices multiply
-/// out to `nx * ny` either way, so manifest validation keeps working.
-pub fn rfft2d_schedule(nx: usize, ny: usize, inverse: bool) -> Vec<PlannedStage> {
+/// The row pass of the real-input 2D composition: the `ny`-point real
+/// schedule over contiguous rows (`lane = 1`) — half-size complex
+/// stages plus the half-spectrum pass, exactly [`rfft_schedule`].
+/// Every 2D real path (catalog artifacts, the interpreter's
+/// `run_real_2d`, `large::Plan2d`) reports its row pass through this
+/// one helper, so the composition cannot drift between routes.
+pub fn rfft2d_row_stages(ny: usize, inverse: bool) -> Vec<PlannedStage> {
+    rfft_schedule(ny, 1, inverse)
+}
+
+/// The column pass of the real-input 2D composition: the `nx`-point
+/// complex schedule striding over the packed `ny/2 + 1` Hermitian bins
+/// (`lane = ny/2 + 1`). Direction-independent at the schedule level —
+/// forward and inverse run the same stage shapes, twiddle conjugation
+/// is a kernel-table detail.
+pub fn rfft2d_col_stages(nx: usize, ny: usize) -> Vec<PlannedStage> {
     assert!(
         nx.is_power_of_two() && nx >= 2,
         "real 2D nx={nx} must be a power of two >= 2"
     );
-    let lane = ny / 2 + 1;
-    let rows = rfft_schedule(ny, 1, inverse);
-    let cols = kernel_schedule(nx, lane);
+    kernel_schedule(nx, ny / 2 + 1)
+}
+
+/// The real-input 2D schedule for an `nx` x `ny` transform: the
+/// row-wise real schedule ([`rfft2d_row_stages`]) composed with the
+/// packed-bin column schedule ([`rfft2d_col_stages`]). Forward runs
+/// rows then columns; the inverse is the exact mirror (columns, then
+/// the `c2r_pre` merge, then the half-size rows). Stage radices
+/// multiply out to `nx * ny` either way, so manifest validation keeps
+/// working.
+pub fn rfft2d_schedule(nx: usize, ny: usize, inverse: bool) -> Vec<PlannedStage> {
+    let rows = rfft2d_row_stages(ny, inverse);
+    let cols = rfft2d_col_stages(nx, ny);
     if inverse {
         let mut out = cols;
         out.extend(rows);
@@ -325,6 +342,28 @@ mod tests {
                 let p: usize = sts.iter().map(|s| s.radix).product();
                 assert_eq!(p, nx * ny, "{nx}x{ny}");
             }
+        }
+    }
+
+    #[test]
+    fn rfft2d_schedule_is_exactly_the_shared_pass_helpers() {
+        // the composed schedule must be the row/column helpers glued in
+        // direction order — no private re-derivation anywhere
+        for (nx, ny) in [(64usize, 128usize), (2048, 512)] {
+            let rows_f = rfft2d_row_stages(ny, false);
+            let rows_i = rfft2d_row_stages(ny, true);
+            let cols = rfft2d_col_stages(nx, ny);
+            let mut fwd = rows_f.clone();
+            fwd.extend(cols.clone());
+            assert_eq!(rfft2d_schedule(nx, ny, false), fwd, "{nx}x{ny}");
+            let mut inv = cols.clone();
+            inv.extend(rows_i.clone());
+            assert_eq!(rfft2d_schedule(nx, ny, true), inv, "{nx}x{ny}");
+            // rectangular shapes keep the axes distinct: the column
+            // pass carries nx stages over the ny-derived lane
+            assert_eq!(cols.iter().map(|s| s.radix).product::<usize>(), nx);
+            assert!(cols.iter().all(|s| s.lane == ny / 2 + 1));
+            assert_eq!(rows_f.iter().map(|s| s.radix).product::<usize>(), ny);
         }
     }
 

@@ -2,7 +2,9 @@
 //! oracles, for BOTH engines: the interpreter's `rfft1d`/`rfft2d`
 //! plans (1D: every power-of-two size 2^4..=2^16; 2D: squares
 //! 8x8..256x256 plus rectangles — each at request batches {1, 4, 32})
-//! and the `large::RealFourStepPlan` four-step composition. Checked by
+//! and the `large::RealFourStepPlan` four-step composition, plus the
+//! `large::Plan2d` 2D row/column composition (rectangular large sizes
+//! and its serial==parallel bitwise contract). Checked by
 //! relative RMSE over the Hermitian-packed bins, plus the
 //! packed-layout property tests (Hermitian symmetry, real endpoints,
 //! the 2D conjugate mirror against the C2C `fft2d` spectrum), the
@@ -23,7 +25,7 @@ use std::sync::{Arc, OnceLock};
 use tcfft::error::relative_rmse;
 use tcfft::fft::{radix2, refdft};
 use tcfft::hp::{C32, C64};
-use tcfft::large::{FourStepPlan, RealFourStepPlan};
+use tcfft::large::{FourStepConfig, FourStepPlan, Plan2d, RealFourStepPlan};
 use tcfft::plan::Plan;
 use tcfft::runtime::{PlanarBatch, RealHalfSpectrum, Registry, Runtime};
 use tcfft::workload::random_signal;
@@ -381,6 +383,77 @@ fn large_four_step_real_round_trips() {
     }
     let rmse = (num / den).sqrt();
     assert!(rmse < 2.0 * RMSE_TOL, "four-step real round-trip rmse {rmse:.3e}");
+}
+
+/// Forward `large::Plan2d` composition vs the f64 2D oracle on the
+/// packed bins — the large-route analogue of `check_r2c2d`, sharing
+/// its oracle and packing conventions.
+fn check_plan2d(nx: usize, ny: usize, batch: usize, seed: u64) {
+    let rt = runtime();
+    let plan = Plan2d::new(rt, nx, ny, false).unwrap();
+    let input = PlanarBatch::from_real(&real_rows(nx * ny, batch, seed), vec![batch, nx, ny]);
+    let out = plan.execute_batch(rt, input.clone()).unwrap();
+    let bins = ny / 2 + 1;
+    assert_eq!(out.shape, vec![batch, nx, bins]);
+    let q = widen(&input.quantize_f16().to_complex());
+    let got = widen(&out.to_complex());
+    for b in 0..batch {
+        let want = tcfft::fft::oracle2d(&q[b * nx * ny..(b + 1) * nx * ny], nx, ny, false);
+        let want_packed: Vec<C64> = (0..nx)
+            .flat_map(|r| want[r * ny..r * ny + bins].to_vec())
+            .collect();
+        let rmse = relative_rmse(&want_packed, &got[b * nx * bins..(b + 1) * nx * bins]);
+        assert!(
+            rmse < RMSE_TOL,
+            "Plan2d {nx}x{ny} field={b}: packed rel-RMSE {rmse:.3e} over {RMSE_TOL:.1e}"
+        );
+    }
+}
+
+#[test]
+fn large_2d_composition_matches_the_oracle_at_512x2048() {
+    // rectangular, large-route-sized (beyond the catalog): the 2D
+    // composition must not bake in squareness in either orientation
+    check_plan2d(512, 2048, 1, 0xA210);
+}
+
+#[test]
+fn large_2d_composition_matches_the_oracle_at_2048x512() {
+    check_plan2d(2048, 512, 1, 0xA211);
+}
+
+#[test]
+fn large_2d_serial_and_parallel_are_bitwise_identical() {
+    // the composed path inherits the inner engines' serial==parallel
+    // bitwise contract: the panel gather/scatter sweeps are serial by
+    // construction, and both the row and column engines guarantee
+    // thread-count-independent bits — so the whole composition must too
+    let rt = runtime();
+    let (nx, ny) = (512usize, 512usize);
+    let serial = Plan2d::with_config(
+        rt,
+        nx,
+        ny,
+        false,
+        FourStepConfig { threads: 1, ..FourStepConfig::default() },
+    )
+    .unwrap();
+    let par = Plan2d::with_config(
+        rt,
+        nx,
+        ny,
+        false,
+        FourStepConfig { threads: 4, ..FourStepConfig::default() },
+    )
+    .unwrap();
+    let input = PlanarBatch::from_real(&real_rows(nx * ny, 2, 0xB52D), vec![2, nx, ny]);
+    let a = serial.execute_batch(rt, input.clone()).unwrap();
+    let b = par.execute_batch(rt, input).unwrap();
+    assert_eq!(a.shape, b.shape);
+    for i in 0..a.len() {
+        assert_eq!(a.re[i].to_bits(), b.re[i].to_bits(), "re[{i}]");
+        assert_eq!(a.im[i].to_bits(), b.im[i].to_bits(), "im[{i}]");
+    }
 }
 
 #[test]

@@ -246,6 +246,172 @@ fn eviction_racing_a_queued_batch_rebuilds_at_execution_time() {
     assert_eq!(svc.metrics().snapshot().get("failed").unwrap().as_i64(), Some(0));
 }
 
+/// Round-trip one real image through the service's large-2D route:
+/// forward vs the f64 2D oracle on the packed bins, then the packed
+/// spectrum pre-scaled by 1/(nx*ny) (the unnormalized inverse would
+/// overflow fp16 at these sizes) back through the inverse route.
+fn check_large_rfft2d_round_trip(svc: &FftService, nx: usize, ny: usize, seed: u64) {
+    let bins = ny / 2 + 1;
+    let sig: Vec<f32> = random_signal(nx * ny, seed).iter().map(|c| c.re).collect();
+    let input = PlanarBatch::from_real(&sig, vec![1, nx, ny]);
+    let spec = svc
+        .rfft2d_blocking(input.clone(), "tc", Direction::Forward)
+        .unwrap();
+    assert_eq!(spec.shape, vec![1, nx, bins]);
+
+    let q = widen(&input.quantize_f16().to_complex());
+    let full = tcfft::fft::oracle2d(&q, nx, ny, false);
+    let want: Vec<C64> = (0..nx)
+        .flat_map(|r| full[r * ny..r * ny + bins].to_vec())
+        .collect();
+    let rmse = relative_rmse(&want, &widen(&spec.to_complex()));
+    assert!(rmse < 5e-3, "{nx}x{ny} forward: packed rel-RMSE {rmse:.3e}");
+
+    let mut scaled = spec;
+    let scale = (nx * ny) as f32;
+    for v in scaled.re.iter_mut().chain(scaled.im.iter_mut()) {
+        *v /= scale;
+    }
+    let back = svc
+        .rfft2d_blocking(scaled, "tc", Direction::Inverse)
+        .unwrap();
+    assert_eq!(back.shape, vec![1, nx, ny]);
+    let qin = input.quantize_f16();
+    let mut num = 0.0f64;
+    let mut den = 0.0f64;
+    for i in 0..nx * ny {
+        let d = back.re[i] as f64 - qin.re[i] as f64;
+        num += d * d;
+        den += (qin.re[i] as f64) * (qin.re[i] as f64);
+        assert_eq!(back.im[i], 0.0, "C2R output must be real");
+    }
+    let rt_rmse = (num / den).sqrt();
+    assert!(rt_rmse < 1e-2, "{nx}x{ny} round trip: rmse {rt_rmse:.3e}");
+}
+
+#[test]
+fn large_2d_route_round_trips_at_2048x2048() {
+    // the acceptance workload: beyond the 256x256 catalog ladder, the
+    // service routes rfft2d/irfft2d to the cached Plan2d composition
+    let svc = service_with(ServiceConfig {
+        request_deadline: None, // the 4M-point debug-build run may be slow
+        ..ServiceConfig::default()
+    });
+    check_large_rfft2d_round_trip(&svc, 2048, 2048, 0x2D48);
+    let m = svc.metrics();
+    assert_eq!(m.large_cache.entries(), 2, "forward and inverse Plan2d cached");
+    let snap = svc.metrics().snapshot();
+    assert_eq!(snap.get("rfft2d_requests").unwrap().as_i64(), Some(2));
+    assert_eq!(snap.get("large_requests").unwrap().as_i64(), Some(2));
+    assert_eq!(snap.get("failed").unwrap().as_i64(), Some(0));
+    svc.shutdown();
+}
+
+#[test]
+fn large_2d_route_round_trips_rectangular() {
+    let svc = service_with(ServiceConfig {
+        request_deadline: None,
+        ..ServiceConfig::default()
+    });
+    check_large_rfft2d_round_trip(&svc, 512, 2048, 0x2D49);
+    assert_eq!(
+        svc.metrics().snapshot().get("failed").unwrap().as_i64(),
+        Some(0)
+    );
+    svc.shutdown();
+}
+
+#[test]
+fn eviction_racing_a_queued_2d_batch_rebuilds_at_execution_time() {
+    // the 2D analogue of the 1D race above: a parked rfft2d batch loses
+    // its Plan2d to a competing build and the executor must rebuild it
+    // from the `4step2d:{nx}x{ny}:{algo}:{dir}` queue key
+    let (nx, ny) = (512usize, 512usize);
+    let bins = ny / 2 + 1;
+    let svc = service_with(ServiceConfig {
+        // holds either 512x512 Plan2d (~1.1 MB, panel-dominated) but
+        // not both directions at once
+        large_cache_bytes: 3 << 19,
+        max_wait: Duration::from_secs(3600), // requests park until shutdown
+        inline_exec: false,                  // the submitter must not execute
+        request_deadline: None,
+        ..ServiceConfig::default()
+    });
+    let sig: Vec<f32> = random_signal(nx * ny, 21).iter().map(|c| c.re).collect();
+    let input = PlanarBatch::from_real(&sig, vec![nx, ny]);
+    let t_fwd = svc
+        .submit(FftRequest {
+            op: Op::Rfft2d { nx, ny },
+            algo: "tc".into(),
+            direction: Direction::Forward,
+            input: input.clone(),
+        })
+        .unwrap();
+
+    // competing inverse-plan build evicts the parked forward plan
+    let mut spec = PlanarBatch::new(vec![nx, bins]);
+    for (k, v) in spec.re.iter_mut().enumerate() {
+        *v = ((k * 13 + 5) % 37) as f32 / 37.0 - 0.5;
+    }
+    let t_inv = svc
+        .submit(FftRequest {
+            op: Op::Rfft2d { nx, ny },
+            algo: "tc".into(),
+            direction: Direction::Inverse,
+            input: spec,
+        })
+        .unwrap();
+    assert!(svc.metrics().large_cache.evictions() >= 1);
+
+    // shutdown force-drains both queues through the exec workers
+    svc.shutdown();
+    let out = t_fwd.wait().unwrap();
+    assert_eq!(out.shape, vec![1, nx, bins]);
+    let q = widen(&PlanarBatch { shape: vec![1, nx, ny], ..input }.quantize_f16().to_complex());
+    let full = tcfft::fft::oracle2d(&q, nx, ny, false);
+    let want: Vec<C64> = (0..nx)
+        .flat_map(|r| full[r * ny..r * ny + bins].to_vec())
+        .collect();
+    let rmse = relative_rmse(&want, &widen(&out.to_complex()));
+    assert!(rmse <= 5e-3, "rebuilt-Plan2d rel-RMSE {rmse:.3e}");
+    let out = t_inv.wait().unwrap();
+    assert_eq!(out.shape, vec![1, nx, ny]);
+
+    let m = svc.metrics();
+    assert!(
+        m.large_rebuilds.load(std::sync::atomic::Ordering::Relaxed) >= 1,
+        "at least one 2D batch must have rebuilt its evicted plan at exec time"
+    );
+    assert_eq!(svc.metrics().snapshot().get("failed").unwrap().as_i64(), Some(0));
+}
+
+#[test]
+fn rfft2d_fail_fast_names_catalog_and_large_route_limits() {
+    // sizes neither the catalog nor the large-2D route serves must fail
+    // fast with the stable `no_artifact` code and a message naming BOTH
+    // sets of bounds — and leave every counter untouched
+    let svc = service();
+    for (nx, ny) in [(4096usize, 8usize), (16384, 16384)] {
+        let err = svc
+            .submit(FftRequest {
+                op: Op::Rfft2d { nx, ny },
+                algo: "tc".into(),
+                direction: Direction::Forward,
+                input: PlanarBatch::new(vec![nx.min(64), ny.min(64)]),
+            })
+            .unwrap_err();
+        assert_eq!(err.code(), "no_artifact", "{err}");
+        let msg = err.to_string();
+        assert!(msg.contains("8x8..256x256"), "catalog bounds missing: {msg}");
+        assert!(msg.contains("512..16384"), "large-route bounds missing: {msg}");
+        assert!(msg.contains("max_large_n"), "area guard missing: {msg}");
+    }
+    let snap = svc.metrics().snapshot();
+    assert_eq!(snap.get("requests").unwrap().as_i64(), Some(0));
+    assert_eq!(snap.get("rfft2d_requests").unwrap().as_i64(), Some(0));
+    svc.shutdown();
+}
+
 #[test]
 fn bank_cache_honors_its_byte_budget_under_racing_registrations() {
     let budget = 16 << 10; // a handful of small banks
