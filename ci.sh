@@ -61,6 +61,9 @@ core() {
   echo "== chaos suite (fault injection) =="
   cargo test -q --test chaos_service
 
+  echo "== precision ladder (tc_split >= tc >> tc_ec) =="
+  cargo test -q --test precision_ladder
+
   echo "== poison-safe lock gate (rust/src/coordinator) =="
   lock_gate
 
@@ -81,7 +84,7 @@ core() {
 }
 
 bench_smoke() {
-  echo "== smoke bench: fig4_1d + fig7_batch + large_fourstep + rfft_1d + rfft_2d + rfft2d_large + e2e_serve (TCFFT_BENCH_SMOKE=1) =="
+  echo "== smoke bench: fig4_1d + fig7_batch + large_fourstep + rfft_1d + rfft_2d + rfft2d_large + e2e_serve + table4_precision (TCFFT_BENCH_SMOKE=1) =="
   # start from a clean slate so bench-validate proves the benches
   # emitted fresh entries (update_bench_json merges into existing files)
   rm -f BENCH_interp.json
@@ -92,13 +95,15 @@ bench_smoke() {
   TCFFT_BENCH_SMOKE=1 cargo bench --bench rfft_2d
   TCFFT_BENCH_SMOKE=1 cargo bench --bench rfft2d_large
   TCFFT_BENCH_SMOKE=1 cargo bench --bench e2e_serve
+  TCFFT_BENCH_SMOKE=1 cargo bench --bench table4_precision
 
   echo "== bench-validate BENCH_interp.json =="
   # no --file: benches and validator share the cwd-independent default
   # (<workspace-root>/BENCH_interp.json, from CARGO_MANIFEST_DIR);
   # bench-validate requires the 2D entries rfft2d_tc_nx256x256_b8_fwd
-  # and rfft2d_tc_nx2048x2048_b4_fwd, and the serving entry
-  # e2e_serve_tc_n4096_c64
+  # and rfft2d_tc_nx2048x2048_b4_fwd, the serving entry
+  # e2e_serve_tc_n4096_c64, and the accuracy-gain entry
+  # precision_tc_ec_n4096_b32 (table4_precision)
   cargo run --release -- bench-validate
 }
 

@@ -9,9 +9,20 @@
 //! claim this bench verifies. We print both the paper-style per-bin
 //! metric and the scale-normalized metric.
 //!
+//! On top of the paper table, the `tc_ec` error-corrected tier runs
+//! the same 1D ladder plus the headline n=4096 b=32 case, and the
+//! measured accuracy gain over plain `tc` is recorded as the
+//! `precision_tc_ec_n4096_b32` entry in `BENCH_interp.json` (the
+//! before/after medians reinterpreted as rel-RMSE: reference = tc,
+//! engine = tc_ec, "speedup" = accuracy gain, floor 10x).  Tiers are
+//! each charged for their own marshal: `tc`/`r2` are measured against
+//! the oracle of the fp16-quantized input, `tc_ec` against the raw
+//! input its hi+lo marshal carries.
+//!
 //!     cargo bench --bench table4_precision
 
-use tcfft::bench_harness::header;
+use tcfft::bench_harness::{bench_entry, header, update_bench_json};
+use tcfft::error::relative_rmse;
 use tcfft::fft::radix2;
 use tcfft::hp::C64;
 use tcfft::runtime::{PlanarBatch, Runtime};
@@ -38,7 +49,9 @@ fn run_1d(rt: &Runtime, key: &str) -> tcfft::error::Result<(f64, f64)> {
     let x: Vec<_> = (0..b).flat_map(|i| random_signal(n, 1000 + i as u64)).collect();
     let input = PlanarBatch::from_complex(&x, vec![b, n]);
     let (out, _) = rt.execute(key, input.clone())?;
-    let q = input.quantize_f16();
+    // the ec marshal carries the raw input as hi+lo pairs, so that tier
+    // is measured against the un-quantized oracle
+    let q = if meta.algo == "tc_ec" { input } else { input.quantize_f16() };
     let mut per_bin = 0.0;
     let mut scale_err = 0.0;
     for row in 0..b {
@@ -92,19 +105,24 @@ fn main() -> tcfft::error::Result<()> {
     let mut tc_1d = Vec::new();
     let mut r2_1d = Vec::new();
     for n in [256usize, 1024, 4096, 16384, 65536] {
-        for algo in ["tc", "r2"] {
+        for algo in ["tc", "r2", "tc_ec"] {
             let key = format!("fft1d_{algo}_n{n}_b4_fwd");
             let (pb, se) = run_1d(&rt, &key)?;
-            if algo == "tc" {
-                tc_1d.push(pb);
-            } else {
-                r2_1d.push(pb);
+            match algo {
+                "tc" => tc_1d.push(pb),
+                "r2" => r2_1d.push(pb),
+                _ => {}
             }
             t.row(vec![
                 format!("1D {algo} n={n}"),
                 format!("{:.3}%", pb * 100.0),
                 format!("{se:.2e}"),
-                if algo == "tc" { "1.76%" } else { "1.78%" }.into(),
+                match algo {
+                    "tc" => "1.76%",
+                    "r2" => "1.78%",
+                    _ => "- (ec tier)",
+                }
+                .into(),
             ]);
         }
     }
@@ -132,6 +150,45 @@ fn main() -> tcfft::error::Result<()> {
         (0.3..=1.5).contains(&(tc / r2)),
         "error levels should be comparable (tc may be slightly better)"
     );
+
+    // precision-ladder headline: tc vs tc_ec at n=4096 b=32, both
+    // measured against the f64 oracle of the RAW input so each tier is
+    // charged for its own marshal (calibrated: tc 4.909e-4, tc_ec
+    // 1.770e-7, gain 2774x; acceptance floor 10x)
+    let rmse_raw = |key: &str| -> tcfft::error::Result<f64> {
+        let meta = rt.registry.get(key)?.clone();
+        let (n, b) = (meta.n, meta.batch);
+        let x: Vec<_> = (0..b).flat_map(|i| random_signal(n, 3000 + i as u64)).collect();
+        let input = PlanarBatch::from_complex(&x, vec![b, n]);
+        let (out, _) = rt.execute(key, input)?;
+        let mut want = Vec::with_capacity(b * n);
+        for i in 0..b {
+            let xr: Vec<C64> = x[i * n..(i + 1) * n]
+                .iter()
+                .map(|c| C64::new(c.re as f64, c.im as f64))
+                .collect();
+            want.extend(radix2::fft_vec(&xr, false));
+        }
+        let got: Vec<C64> = out
+            .to_complex()
+            .iter()
+            .map(|c| C64::new(c.re as f64, c.im as f64))
+            .collect();
+        Ok(relative_rmse(&want, &got))
+    };
+    let tc_rmse = rmse_raw("fft1d_tc_n4096_b32_fwd")?;
+    let ec_rmse = rmse_raw("fft1d_tc_ec_n4096_b32_fwd")?;
+    let gain = tc_rmse / ec_rmse;
+    println!(
+        "precision ladder n=4096 b=32: tc {tc_rmse:.3e}  tc_ec {ec_rmse:.3e}  gain {gain:.0}x"
+    );
+    assert!(ec_rmse <= 1e-4, "tc_ec rmse {ec_rmse:.3e} over the 1e-4 hard bound");
+    assert!(gain >= 10.0, "accuracy gain {gain:.1}x below the 10x floor");
+    let path = update_bench_json(&[(
+        "precision_tc_ec_n4096_b32".to_string(),
+        bench_entry("precision_tc_ec_n4096_b32", 1, 1, tc_rmse, ec_rmse, ec_rmse),
+    )])?;
+    println!("accuracy-gain entry recorded in {}", path.display());
     println!("table4_precision: OK");
     Ok(())
 }

@@ -72,7 +72,7 @@ use crate::workload::SpectralConv;
 pub struct FftRequest {
     /// transform kind and size
     pub op: Op,
-    /// algorithm variant (`"tc"` | `"tc_split"` | `"r2"`)
+    /// algorithm variant (`"tc"` | `"tc_split"` | `"tc_ec"` | `"r2"`)
     pub algo: String,
     /// forward or (unnormalized) inverse
     pub direction: Direction,
@@ -928,7 +928,7 @@ impl FftService {
         // loudly, like the direct-artifact path, instead of silently
         // computing with the tc fallback — and an unvalidated string
         // from the TCP surface must not mint cache keys.
-        if !matches!(req.algo.as_str(), "tc" | "tc_split" | "r2") {
+        if !matches!(req.algo.as_str(), "tc" | "tc_split" | "tc_ec" | "r2") {
             return Err(TcFftError::NoArtifact(format!(
                 "n={n} algo={} (unknown algo has no four-step route)",
                 req.algo
@@ -980,7 +980,7 @@ impl FftService {
     /// [`large_route_for`](Self::large_route_for), sharing the same
     /// LRU, fingerprint keys, and build-outside-locks discipline.
     fn large_2d_route_for(&self, nx: usize, ny: usize, req: &FftRequest) -> Result<Route> {
-        if !matches!(req.algo.as_str(), "tc" | "tc_split" | "r2") {
+        if !matches!(req.algo.as_str(), "tc" | "tc_split" | "tc_ec" | "r2") {
             return Err(TcFftError::NoArtifact(format!(
                 "rfft2d {nx}x{ny} algo={} (unknown algo has no four-step route)",
                 req.algo
@@ -1159,7 +1159,7 @@ impl FftService {
     /// signals by [`submit_convolve`](Self::submit_convolve).
     ///
     /// Registration is guarded because it is reachable over TCP: only
-    /// known algos (`tc` | `tc_split` | `r2`), `n` a power of two
+    /// known algos (`tc` | `tc_split` | `tc_ec` | `r2`), `n` a power of two
     /// within `ServiceConfig::max_large_n`, and at most
     /// `ServiceConfig::max_bank_filters` filters per bank (each
     /// registration runs `k` R2C transforms synchronously). Aggregate
@@ -1186,7 +1186,7 @@ impl FftService {
             !name.is_empty() && name.len() <= 64,
             "bank name must be 1..=64 characters"
         );
-        if !matches!(algo, "tc" | "tc_split" | "r2") {
+        if !matches!(algo, "tc" | "tc_split" | "tc_ec" | "r2") {
             return Err(TcFftError::NoArtifact(format!(
                 "filter bank '{name}': unknown algo '{algo}'"
             )));

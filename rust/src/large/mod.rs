@@ -74,8 +74,8 @@ pub const DEFAULT_MAX_LEAF_LOG2: usize = 11;
 /// Tuning knobs for [`FourStepPlan`].
 #[derive(Clone, Debug)]
 pub struct FourStepConfig {
-    /// preferred leaf algorithm (`"tc"` | `"tc_split"` | `"r2"`);
-    /// factors without artifacts for it fall back to `"tc"`
+    /// preferred leaf algorithm (`"tc"` | `"tc_split"` | `"tc_ec"` |
+    /// `"r2"`); factors without artifacts for it fall back to `"tc"`
     pub algo: String,
     /// largest factor solved by a single artifact call (log2); factors
     /// above this recurse through another four-step level
@@ -120,6 +120,7 @@ enum Node {
 fn algo_static(algo: &str) -> &'static str {
     match algo {
         "tc_split" => "tc_split",
+        "tc_ec" => "tc_ec",
         "r2" => "r2",
         _ => "tc",
     }
@@ -754,12 +755,13 @@ impl RealFourStepPlan {
         if !n.is_power_of_two() || n < 8 {
             crate::bail!(TcFftError::BadSize(n));
         }
+        let ec = cfg.algo == "tc_ec";
         let inner = FourStepPlan::with_config(rt, n / 2, inverse, cfg)?;
         Ok(RealFourStepPlan {
             n,
             inverse,
             inner,
-            real: RealHalfSpectrum::new(n),
+            real: RealHalfSpectrum::with_ec(n, ec),
             scratch: Mutex::new(None),
         })
     }
@@ -808,9 +810,14 @@ impl RealFourStepPlan {
         // for real transforms, so even b = 0 must flow through to get
         // the correctly shaped output (every pass below is a no-op)
         // quantize up front: the split/merge pass must see the fp16
-        // values the device sees (leaf artifacts re-round harmlessly)
+        // values the device sees (leaf artifacts re-round harmlessly;
+        // the ec tier re-marshals its carried sums bit-exactly)
         let mut q = x;
-        q.quantize_f16_mut();
+        if self.real.ec() {
+            q.quantize_f16_ec_mut();
+        } else {
+            q.quantize_f16_mut();
+        }
         // staging planes from the retained pair (pack/merge overwrite
         // every element, so resizing is the only initialization needed)
         let (mut z_re, mut z_im) = self.scratch.lock().unwrap().take().unwrap_or_default();

@@ -189,7 +189,11 @@ impl Plan2d {
             // values the interpreter path sees; the row engine's merge
             // pass re-quantizes its own input as always.
             let mut packed = PlanarBatch { re: x.re, im: x.im, shape: vec![b * self.nx, l] };
-            packed.quantize_f16_mut();
+            if self.algo() == "tc_ec" {
+                packed.quantize_f16_ec_mut();
+            } else {
+                packed.quantize_f16_mut();
+            }
             self.column_pass(rt, &mut packed, b)?;
             let out = self.rows.execute_batch(rt, packed)?;
             Ok(PlanarBatch { re: out.re, im: out.im, shape: vec![b, self.nx, self.ny] })

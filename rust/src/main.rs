@@ -67,7 +67,7 @@ USAGE: tcfft <SUBCOMMAND> [OPTIONS]
 
   info                          list loaded artifacts
   plan --n N | --nx X --ny Y    show the merging-kernel schedule
-  run --n N [--batch B] [--algo tc|tc_split|r2] [--real]
+  run --n N [--batch B] [--algo tc|tc_split|tc_ec|r2] [--real]
   run --real --nx X --ny Y [--batch B]
                                 execute on random input, verify vs f64
                                 oracle (--real: R2C half-spectrum path,
@@ -77,8 +77,9 @@ USAGE: tcfft <SUBCOMMAND> [OPTIONS]
   bench-validate [--file BENCH_interp.json]
                                 validate the bench JSON emitted by
                                 fig4_1d/fig7_batch/large_fourstep/
-                                rfft_1d/rfft_2d (run those first; see
-                                BENCHMARKS.md for the schema)
+                                rfft_1d/rfft_2d/table4_precision (run
+                                those first; see BENCHMARKS.md for the
+                                schema)
   precision                     Table 4: relative error vs FFTW-f64 stand-in
   table2                        Table 2: memsim bandwidth vs continuous size
   figures                       Figs 4-7: modelled V100/A100 series
@@ -314,13 +315,14 @@ fn bench_cmd(args: &Args) -> Result<()> {
 }
 
 /// CI smoke check: `BENCH_interp.json` (emitted by the fig4_1d,
-/// fig7_batch, large_fourstep, rfft_1d, rfft_2d, rfft2d_large and
-/// e2e_serve benches) parses, carries the expected schema, and holds
-/// the headline before/after entry, the batch-sweep anchor, the
-/// four-step large-FFT acceptance entry, the 1D and 2D R2C-vs-C2C
-/// acceptance entries, the large-2D composition entry, and the
-/// 64-client serving entry. The schema and every entry key are
-/// documented in BENCHMARKS.md.
+/// fig7_batch, large_fourstep, rfft_1d, rfft_2d, rfft2d_large,
+/// e2e_serve and table4_precision benches) parses, carries the
+/// expected schema, and holds the headline before/after entry, the
+/// batch-sweep anchor, the four-step large-FFT acceptance entry, the
+/// 1D and 2D R2C-vs-C2C acceptance entries, the large-2D composition
+/// entry, the 64-client serving entry, and the tc_ec accuracy-gain
+/// entry (>= 10x). The schema and every entry key are documented in
+/// BENCHMARKS.md.
 fn bench_validate_cmd(args: &Args) -> Result<()> {
     use tcfft::bench_harness::BENCH_SCHEMA;
     use tcfft::util::json::Json;
@@ -332,6 +334,7 @@ fn bench_validate_cmd(args: &Args) -> Result<()> {
     const RFFT2D: &str = "rfft2d_tc_nx256x256_b8_fwd";
     const RFFT2D_LARGE: &str = "rfft2d_tc_nx2048x2048_b4_fwd";
     const E2E: &str = "e2e_serve_tc_n4096_c64";
+    const PRECISION_EC: &str = "precision_tc_ec_n4096_b32";
 
     // same default resolution as the emitting benches (cwd-independent)
     let default_file = tcfft::bench_harness::bench_json_path().display().to_string();
@@ -398,6 +401,16 @@ fn bench_validate_cmd(args: &Args) -> Result<()> {
     let me_c64 = pos(E2E, "engine_median_s")?;
     pos(E2E, "engine_serial_median_s")?;
     pos(E2E, "speedup")?;
+    // the precision-ladder acceptance entry (table4_precision): the
+    // medians are rel-RMSE values (reference = tc, engine = tc_ec), so
+    // "speedup" is the accuracy gain of the error-corrected tier
+    let mp_tc = pos(PRECISION_EC, "reference_median_s")?;
+    let mp_ec = pos(PRECISION_EC, "engine_median_s")?;
+    let mp_gain = pos(PRECISION_EC, "speedup")?;
+    tcfft::ensure!(
+        mp_gain >= 10.0,
+        "{file}: {PRECISION_EC} accuracy gain {mp_gain:.1}x below the 10x floor"
+    );
 
     let mut t = Table::new(&["entry", "bench", "engine median ms", "speedup vs pre-PR"]);
     if let Json::Obj(m) = &entries {
@@ -453,6 +466,9 @@ fn bench_validate_cmd(args: &Args) -> Result<()> {
         me_raw * 1e3,
         me_c64 * 1e3,
         me_raw / me_c64
+    );
+    println!(
+        "precision {PRECISION_EC}: tc rel-RMSE {mp_tc:.3e} -> tc_ec {mp_ec:.3e} ({mp_gain:.0}x more accurate)"
     );
     println!("bench-validate: OK ({file})");
     Ok(())

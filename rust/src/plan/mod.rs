@@ -56,7 +56,7 @@ impl Plan {
     }
 
     /// [`fft1d`](Self::fft1d) with an explicit algorithm
-    /// (`"tc"` | `"tc_split"` | `"r2"`) and direction.
+    /// (`"tc"` | `"tc_split"` | `"tc_ec"` | `"r2"`) and direction.
     pub fn fft1d_algo(
         registry: &Arc<Registry>,
         n: usize,

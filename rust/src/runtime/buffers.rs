@@ -92,6 +92,21 @@ impl PlanarBatch {
         }
     }
 
+    /// Error-corrected marshal for the `tc_ec` tier: each element is
+    /// replaced by the exact f32 sum of its fp16 hi half and the
+    /// fp16-rounded residual `lo = fp16(x - hi)`. The two halves sit
+    /// ~11 bits apart, so the sum fits f32's 24-bit mantissa exactly
+    /// and downstream kernels recover `hi` with one fp16 rounding and
+    /// `lo` by exact subtraction.
+    pub fn quantize_f16_ec_mut(&mut self) {
+        for v in self.re.iter_mut().chain(self.im.iter_mut()) {
+            let h = F16::round_f32(*v);
+            // fp16 overflow saturates to inf; adding the (-inf)
+            // residual would turn it into NaN, so keep the plain store
+            *v = if h.is_finite() { h + F16::round_f32(*v - h) } else { h };
+        }
+    }
+
     /// Slice out batch rows [lo, hi) (first-dim slicing).
     pub fn slice_rows(&self, lo: usize, hi: usize) -> Self {
         let row: usize = self.shape[1..].iter().product();
@@ -188,6 +203,39 @@ mod tests {
             assert_eq!(want.im[i].to_bits(), got.im[i].to_bits(), "im[{i}]");
         }
         assert_eq!(want.shape, got.shape);
+    }
+
+    #[test]
+    fn ec_quantization_carries_the_residual() {
+        let xs: Vec<C32> = (0..256)
+            .map(|i| {
+                let t = i as f32;
+                C32::new((t * 0.917).sin() * 2.0, (t * 0.31).cos() * 0.125)
+            })
+            .collect();
+        let b = PlanarBatch::from_complex(&xs, vec![1, 256]);
+        let mut ec = b.clone();
+        ec.quantize_f16_ec_mut();
+        let q = b.quantize_f16();
+        for i in 0..b.len() {
+            // the hi half is recovered by one fp16 rounding of the sum
+            assert_eq!(F16::round_f32(ec.re[i]).to_bits(), q.re[i].to_bits(), "re[{i}]");
+            // and the carried sum is at least as close to the source
+            assert!(
+                (ec.re[i] - b.re[i]).abs() <= (q.re[i] - b.re[i]).abs(),
+                "re[{i}]: ec {} vs plain {}",
+                ec.re[i],
+                q.re[i]
+            );
+        }
+        // idempotent: re-marshalling an ec sum keeps it bit-exact (the
+        // plan batcher re-rounds split chunks, which must not drift)
+        let mut twice = ec.clone();
+        twice.quantize_f16_ec_mut();
+        for i in 0..b.len() {
+            assert_eq!(twice.re[i].to_bits(), ec.re[i].to_bits(), "re[{i}]");
+            assert_eq!(twice.im[i].to_bits(), ec.im[i].to_bits(), "im[{i}]");
+        }
     }
 
     #[test]

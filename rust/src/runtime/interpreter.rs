@@ -22,6 +22,23 @@
 //! That extra rounding point is part of the observable ablation
 //! contract and is never optimized away.
 //!
+//! The `tc_ec` tier goes the other way (Ootomo & Yokota, "Recovering
+//! single precision accuracy from Tensor Cores"): every fp16 value —
+//! input plane, twiddle table, DFT table, stage store — is carried as
+//! hi + lo fp16 halves whose exact f32 sum is what lives in the
+//! planar buffer (the halves sit ~11 bits apart, so the sum fits
+//! f32's 24-bit mantissa exactly). Each scalar product becomes the
+//! three-term compensated form `hi*hi + hi*lo + lo*hi` accumulated in
+//! f32 (the `lo*lo` term is below the correction's own rounding floor
+//! and is dropped, as in the paper), and every store re-splits the
+//! f32 accumulator into a fresh hi + lo pair. The operand format is
+//! still pure fp16 — the hardware contract is unchanged, each mma
+//! just runs on twice the fragments — but the result recovers most of
+//! the bits fp16 stores throw away: measured rel-RMSE sits near 2e-7
+//! where `tc` sits near 5e-4 (see `tests/precision_ladder.rs`). Like
+//! `tc_split`, `tc_ec` stages are never fused: the hi/lo split points
+//! are part of the tier's observable contract.
+//!
 //! # Execution engine (batch-major, fused, parallel)
 //!
 //! The engine is batch-major: each merge stage is applied to *all*
@@ -124,6 +141,53 @@ fn rnd16_codec(x: f32) -> f32 {
     F16::from_f32(x).to_f32()
 }
 
+// --- tc_ec (error-corrected split-fp16) primitives -------------------
+//
+// A tc_ec value is the exact f32 sum `hi + lo` of two fp16 halves.
+// Recovery is one fp16 rounding (hi) plus one f32 subtract (lo); for a
+// carried sum the residual is itself fp16-representable, so the extra
+// rounding in `ec_split16` is the identity there and only matters when
+// splitting a full-precision f32 intermediate.
+
+/// Split an f32 into its fp16 hi half and fp16-rounded lo residual.
+#[inline]
+fn ec_split16(x: f32) -> (f32, f32) {
+    let h = rnd16(x);
+    (h, rnd16(x - h))
+}
+
+/// Store an f32 accumulator as a carried hi + lo sum. On fp16 overflow
+/// the hi half saturates to inf and the lo residual would be -inf;
+/// `inf + -inf` is NaN, so keep the saturated store instead.
+#[inline]
+fn ec_store(x: f32) -> f32 {
+    let h = rnd16(x);
+    if h.is_finite() { h + rnd16(x - h) } else { h }
+}
+
+/// Compensated product of two hi/lo pairs, f32 left-to-right:
+/// `(ah*bh + ah*bl) + al*bh`. The `al*bl` term is below the
+/// correction's own rounding floor and is dropped (Ootomo & Yokota).
+#[inline]
+fn ec_mul(ah: f32, al: f32, bh: f32, bl: f32) -> f32 {
+    (ah * bh + ah * bl) + al * bh
+}
+
+/// Codec twin of [`ec_split16`] for the reference engine (bit-identical
+/// — `rnd16` and `rnd16_codec` agree on every fp16 value).
+#[inline]
+fn ec_split16_codec(x: f32) -> (f32, f32) {
+    let h = rnd16_codec(x);
+    (h, rnd16_codec(x - h))
+}
+
+/// Codec twin of [`ec_store`] for the reference engine.
+#[inline]
+fn ec_store_codec(x: f32) -> f32 {
+    let h = rnd16_codec(x);
+    if h.is_finite() { h + rnd16_codec(x - h) } else { h }
+}
+
 /// One merge stage with fp16-rounded operand tables.
 struct MergeStage {
     r: usize,
@@ -134,42 +198,67 @@ struct MergeStage {
     /// T[j][k] row-major [j*n2 + k], fp16 values widened to f32
     t_re: Vec<f32>,
     t_im: Vec<f32>,
+    /// fp16 lo residuals of the tables (tc_ec stages only, else empty):
+    /// `lo = fp16(v32 - hi)` against the pre-rounding f32 table value
+    f_re_lo: Vec<f32>,
+    f_im_lo: Vec<f32>,
+    t_re_lo: Vec<f32>,
+    t_im_lo: Vec<f32>,
     /// fused combined operand W = F_r (.) T, k-major [(k*r + m)*r + j];
-    /// empty when the stage runs the two-pass kernel (split stages
-    /// always, huge stages past FUSE_LIMIT)
+    /// empty when the stage runs the two-pass kernel (split and ec
+    /// stages always, huge stages past FUSE_LIMIT)
     w_re: Vec<f32>,
     w_im: Vec<f32>,
     /// de-fused ablation: round the twiddled operand before the matmul
     split: bool,
+    /// error-corrected tier: hi/lo operands, compensated products
+    ec: bool,
 }
 
 impl MergeStage {
-    fn build(r: usize, n2: usize, inverse: bool, split: bool, fuse: bool) -> MergeStage {
+    fn build(r: usize, n2: usize, inverse: bool, split: bool, ec: bool, fuse: bool) -> MergeStage {
         assert!(r >= 2 && r <= MAX_RADIX, "stage radix {r} out of range");
+        assert!(!(split && ec), "split and ec tiers are mutually exclusive");
         let sign = if inverse { 2.0 } else { -2.0 };
         let mut f_re = vec![0f32; r * r];
         let mut f_im = vec![0f32; r * r];
+        let mut f_re_lo = if ec { vec![0f32; r * r] } else { Vec::new() };
+        let mut f_im_lo = if ec { vec![0f32; r * r] } else { Vec::new() };
         for m in 0..r {
             for j in 0..r {
                 let e = ((m * j) % r) as f64;
                 let ang = sign * std::f64::consts::PI * e / r as f64;
-                f_re[m * r + j] = rnd16_codec(ang.cos() as f32);
-                f_im[m * r + j] = rnd16_codec(ang.sin() as f32);
+                let (cr, ci) = (ang.cos() as f32, ang.sin() as f32);
+                let o = m * r + j;
+                f_re[o] = rnd16_codec(cr);
+                f_im[o] = rnd16_codec(ci);
+                if ec {
+                    f_re_lo[o] = rnd16_codec(cr - f_re[o]);
+                    f_im_lo[o] = rnd16_codec(ci - f_im[o]);
+                }
             }
         }
         let block = r * n2;
         let mut t_re = vec![0f32; r * n2];
         let mut t_im = vec![0f32; r * n2];
+        let mut t_re_lo = if ec { vec![0f32; r * n2] } else { Vec::new() };
+        let mut t_im_lo = if ec { vec![0f32; r * n2] } else { Vec::new() };
         for j in 0..r {
             for k in 0..n2 {
                 let e = ((j * k) % block) as f64;
                 let ang = sign * std::f64::consts::PI * e / block as f64;
-                t_re[j * n2 + k] = rnd16_codec(ang.cos() as f32);
-                t_im[j * n2 + k] = rnd16_codec(ang.sin() as f32);
+                let (cr, ci) = (ang.cos() as f32, ang.sin() as f32);
+                let o = j * n2 + k;
+                t_re[o] = rnd16_codec(cr);
+                t_im[o] = rnd16_codec(ci);
+                if ec {
+                    t_re_lo[o] = rnd16_codec(cr - t_re[o]);
+                    t_im_lo[o] = rnd16_codec(ci - t_im[o]);
+                }
             }
         }
         let (mut w_re, mut w_im) = (Vec::new(), Vec::new());
-        if fuse && !split && r * r * n2 <= FUSE_LIMIT {
+        if fuse && !split && !ec && r * r * n2 <= FUSE_LIMIT {
             w_re = vec![0f32; r * r * n2];
             w_im = vec![0f32; r * r * n2];
             for k in 0..n2 {
@@ -184,7 +273,22 @@ impl MergeStage {
                 }
             }
         }
-        MergeStage { r, n2, f_re, f_im, t_re, t_im, w_re, w_im, split }
+        MergeStage {
+            r,
+            n2,
+            f_re,
+            f_im,
+            t_re,
+            t_im,
+            f_re_lo,
+            f_im_lo,
+            t_re_lo,
+            t_im_lo,
+            w_re,
+            w_im,
+            split,
+            ec,
+        }
     }
 
     #[inline]
@@ -209,10 +313,11 @@ impl AxisPipeline {
         };
         let perm = digitrev::digit_reverse_indices(n_axis, &radices);
         let split = algo == "tc_split";
+        let ec = algo == "tc_ec";
         let mut stages = Vec::with_capacity(radices.len());
         let mut n2 = 1usize;
         for &r in &radices {
-            stages.push(MergeStage::build(r, n2, inverse, split, fuse));
+            stages.push(MergeStage::build(r, n2, inverse, split, ec, fuse));
             n2 *= r;
         }
         debug_assert_eq!(n2, n_axis);
@@ -323,6 +428,121 @@ fn stage_unfused<const R: usize, const SPLIT: bool>(
     }
 }
 
+/// Error-corrected two-pass micro-kernel, monomorphized per radix:
+/// recover hi/lo halves of each carried input, form the twiddled
+/// operand from four compensated products, re-split it into fresh
+/// hi/lo halves for the matmul, accumulate compensated F_r products in
+/// f32, and store each accumulator as a new hi + lo pair. Never fused
+/// — the hi/lo split points are part of the tier's contract, like the
+/// `tc_split` rounding point.
+fn stage_unfused_ec<const R: usize>(
+    st: &MergeStage,
+    in_re: &[f32],
+    in_im: &[f32],
+    out_re: &mut [f32],
+    out_im: &mut [f32],
+    lane: usize,
+) {
+    let n2 = st.n2;
+    let block = R * n2;
+    let groups = in_re.len() / (block * lane);
+    for g in 0..groups {
+        let gbase = g * block;
+        for k in 0..n2 {
+            for l in 0..lane {
+                let mut xrh = [0f32; R];
+                let mut xrl = [0f32; R];
+                let mut xih = [0f32; R];
+                let mut xil = [0f32; R];
+                for j in 0..R {
+                    let idx = (gbase + j * n2 + k) * lane + l;
+                    let (arh, arl) = ec_split16(in_re[idx]);
+                    let (aih, ail) = ec_split16(in_im[idx]);
+                    let to = j * n2 + k;
+                    let (trh, trl) = (st.t_re[to], st.t_re_lo[to]);
+                    let (tih, til) = (st.t_im[to], st.t_im_lo[to]);
+                    // y = T (.) a via four compensated real products
+                    let yr = ec_mul(arh, arl, trh, trl) - ec_mul(aih, ail, tih, til);
+                    let yi = ec_mul(arh, arl, tih, til) + ec_mul(aih, ail, trh, trl);
+                    (xrh[j], xrl[j]) = ec_split16(yr);
+                    (xih[j], xil[j]) = ec_split16(yi);
+                }
+                for m in 0..R {
+                    let fo = m * R;
+                    let mut acc_re = 0f32;
+                    let mut acc_im = 0f32;
+                    for j in 0..R {
+                        let (frh, frl) = (st.f_re[fo + j], st.f_re_lo[fo + j]);
+                        let (fih, fil) = (st.f_im[fo + j], st.f_im_lo[fo + j]);
+                        acc_re +=
+                            ec_mul(frh, frl, xrh[j], xrl[j]) - ec_mul(fih, fil, xih[j], xil[j]);
+                        acc_im +=
+                            ec_mul(frh, frl, xih[j], xil[j]) + ec_mul(fih, fil, xrh[j], xrl[j]);
+                    }
+                    let idx = (gbase + m * n2 + k) * lane + l;
+                    out_re[idx] = ec_store(acc_re);
+                    out_im[idx] = ec_store(acc_im);
+                }
+            }
+        }
+    }
+}
+
+/// Generic-radix twin of [`stage_unfused_ec`] (same float-op order)
+/// for radices outside the planner's 2/4/8/16 set.
+fn stage_generic_ec(
+    st: &MergeStage,
+    in_re: &[f32],
+    in_im: &[f32],
+    out_re: &mut [f32],
+    out_im: &mut [f32],
+    lane: usize,
+) {
+    let r = st.r;
+    let n2 = st.n2;
+    let block = r * n2;
+    let groups = in_re.len() / (block * lane);
+    let mut xrh = [0f32; MAX_RADIX];
+    let mut xrl = [0f32; MAX_RADIX];
+    let mut xih = [0f32; MAX_RADIX];
+    let mut xil = [0f32; MAX_RADIX];
+    for g in 0..groups {
+        let gbase = g * block;
+        for k in 0..n2 {
+            for l in 0..lane {
+                for j in 0..r {
+                    let idx = (gbase + j * n2 + k) * lane + l;
+                    let (arh, arl) = ec_split16(in_re[idx]);
+                    let (aih, ail) = ec_split16(in_im[idx]);
+                    let to = j * n2 + k;
+                    let (trh, trl) = (st.t_re[to], st.t_re_lo[to]);
+                    let (tih, til) = (st.t_im[to], st.t_im_lo[to]);
+                    let yr = ec_mul(arh, arl, trh, trl) - ec_mul(aih, ail, tih, til);
+                    let yi = ec_mul(arh, arl, tih, til) + ec_mul(aih, ail, trh, trl);
+                    (xrh[j], xrl[j]) = ec_split16(yr);
+                    (xih[j], xil[j]) = ec_split16(yi);
+                }
+                for m in 0..r {
+                    let fo = m * r;
+                    let mut acc_re = 0f32;
+                    let mut acc_im = 0f32;
+                    for j in 0..r {
+                        let (frh, frl) = (st.f_re[fo + j], st.f_re_lo[fo + j]);
+                        let (fih, fil) = (st.f_im[fo + j], st.f_im_lo[fo + j]);
+                        acc_re +=
+                            ec_mul(frh, frl, xrh[j], xrl[j]) - ec_mul(fih, fil, xih[j], xil[j]);
+                        acc_im +=
+                            ec_mul(frh, frl, xih[j], xil[j]) + ec_mul(fih, fil, xrh[j], xrl[j]);
+                    }
+                    let idx = (gbase + m * n2 + k) * lane + l;
+                    out_re[idx] = ec_store(acc_re);
+                    out_im[idx] = ec_store(acc_im);
+                }
+            }
+        }
+    }
+}
+
 /// Generic fallback for radices outside the planner's 2/4/8/16 set
 /// (none are emitted today; kept so new schedules cannot panic).
 fn stage_generic(
@@ -383,6 +603,15 @@ fn apply_stage_batched(
     out_im: &mut [f32],
     lane: usize,
 ) {
+    if st.ec {
+        return match st.r {
+            2 => stage_unfused_ec::<2>(st, in_re, in_im, out_re, out_im, lane),
+            4 => stage_unfused_ec::<4>(st, in_re, in_im, out_re, out_im, lane),
+            8 => stage_unfused_ec::<8>(st, in_re, in_im, out_re, out_im, lane),
+            16 => stage_unfused_ec::<16>(st, in_re, in_im, out_re, out_im, lane),
+            _ => stage_generic_ec(st, in_re, in_im, out_re, out_im, lane),
+        };
+    }
     match (st.r, st.fused(), st.split) {
         (2, true, _) => stage_fused::<2>(st, in_re, in_im, out_re, out_im, lane),
         (4, true, _) => stage_fused::<4>(st, in_re, in_im, out_re, out_im, lane),
@@ -603,7 +832,7 @@ impl Compiled {
             let m = meta.n / 2;
             return Compiled {
                 axes: vec![AxisPipeline::build(m, &meta.algo, meta.inverse, fuse)],
-                real: Some(RealHalfSpectrum::new(meta.n)),
+                real: Some(RealHalfSpectrum::with_ec(meta.n, meta.algo == "tc_ec")),
             };
         }
         if meta.op == "rfft2d" {
@@ -615,7 +844,7 @@ impl Compiled {
                     AxisPipeline::build(m, &meta.algo, meta.inverse, fuse),
                     AxisPipeline::build(meta.nx, &meta.algo, meta.inverse, fuse),
                 ],
-                real: Some(RealHalfSpectrum::new(meta.ny)),
+                real: Some(RealHalfSpectrum::with_ec(meta.ny, meta.algo == "tc_ec")),
             };
         }
         let axes = if meta.op == "fft1d" {
@@ -752,10 +981,15 @@ impl Backend for CpuInterpreter {
         let (compiled, fresh) = self.compiled(meta);
 
         // marshal: quantize the host f32 input to the fp16 the device
-        // sees — in place, the execute path owns its buffer
+        // sees — in place, the execute path owns its buffer. The ec
+        // tier carries hi + lo fp16 pairs instead of one rounding.
         let tm = Instant::now();
         let mut q = input;
-        q.quantize_f16_mut();
+        if meta.algo == "tc_ec" {
+            q.quantize_f16_ec_mut();
+        } else {
+            q.quantize_f16_mut();
+        }
         let marshal_seconds = tm.elapsed().as_secs_f64();
 
         let te = Instant::now();
@@ -849,6 +1083,63 @@ impl Default for ReferenceInterpreter {
     }
 }
 
+/// Error-corrected stage for the reference engine: the float-op order
+/// of [`stage_generic_ec`] with the full-codec rounders. `rnd16` and
+/// `rnd16_codec` agree on every fp16 value, so the two engines stay
+/// bit-identical on the ec tier (pinned by `tests/engine_equivalence`).
+fn reference_apply_stage_ec(
+    st: &MergeStage,
+    in_re: &[f32],
+    in_im: &[f32],
+    out_re: &mut [f32],
+    out_im: &mut [f32],
+    lane: usize,
+) {
+    let r = st.r;
+    let n2 = st.n2;
+    let block = r * n2;
+    let groups = in_re.len() / (block * lane);
+    let mut xrh = [0f32; MAX_RADIX];
+    let mut xrl = [0f32; MAX_RADIX];
+    let mut xih = [0f32; MAX_RADIX];
+    let mut xil = [0f32; MAX_RADIX];
+    for g in 0..groups {
+        let gbase = g * block;
+        for k in 0..n2 {
+            for l in 0..lane {
+                for j in 0..r {
+                    let idx = (gbase + j * n2 + k) * lane + l;
+                    let (arh, arl) = ec_split16_codec(in_re[idx]);
+                    let (aih, ail) = ec_split16_codec(in_im[idx]);
+                    let to = j * n2 + k;
+                    let (trh, trl) = (st.t_re[to], st.t_re_lo[to]);
+                    let (tih, til) = (st.t_im[to], st.t_im_lo[to]);
+                    let yr = ec_mul(arh, arl, trh, trl) - ec_mul(aih, ail, tih, til);
+                    let yi = ec_mul(arh, arl, tih, til) + ec_mul(aih, ail, trh, trl);
+                    (xrh[j], xrl[j]) = ec_split16_codec(yr);
+                    (xih[j], xil[j]) = ec_split16_codec(yi);
+                }
+                for m in 0..r {
+                    let fo = m * r;
+                    let mut acc_re = 0f32;
+                    let mut acc_im = 0f32;
+                    for j in 0..r {
+                        let (frh, frl) = (st.f_re[fo + j], st.f_re_lo[fo + j]);
+                        let (fih, fil) = (st.f_im[fo + j], st.f_im_lo[fo + j]);
+                        acc_re +=
+                            ec_mul(frh, frl, xrh[j], xrl[j]) - ec_mul(fih, fil, xih[j], xil[j]);
+                        acc_im +=
+                            ec_mul(frh, frl, xih[j], xil[j]) + ec_mul(fih, fil, xrh[j], xrl[j]);
+                    }
+                    let idx = (gbase + m * n2 + k) * lane + l;
+                    out_re[idx] = ec_store_codec(acc_re);
+                    out_im[idx] = ec_store_codec(acc_im);
+                }
+            }
+        }
+    }
+}
+
 /// One merge stage over a single row, pre-PR float-op order and
 /// full-codec rounding.
 fn reference_apply_stage(
@@ -859,6 +1150,9 @@ fn reference_apply_stage(
     out_im: &mut [f32],
     lane: usize,
 ) {
+    if st.ec {
+        return reference_apply_stage_ec(st, in_re, in_im, out_re, out_im, lane);
+    }
     let r = st.r;
     let n2 = st.n2;
     let block = r * n2;
@@ -937,7 +1231,13 @@ impl Backend for ReferenceInterpreter {
     fn execute(&self, meta: &VariantMeta, input: PlanarBatch) -> Result<(PlanarBatch, ExecStats)> {
         let (compiled, fresh) = self.compiled(meta);
         let tm = Instant::now();
-        let mut q = input.quantize_f16();
+        let mut q = if meta.algo == "tc_ec" {
+            let mut q = input;
+            q.quantize_f16_ec_mut();
+            q
+        } else {
+            input.quantize_f16()
+        };
         let marshal_seconds = tm.elapsed().as_secs_f64();
         let te = Instant::now();
         let batch = q.shape[0];
@@ -1277,16 +1577,65 @@ mod tests {
 
     #[test]
     fn fusion_respects_split_and_limit() {
-        // tc stages fuse (small n2), tc_split never fuses
+        // tc stages fuse (small n2), tc_split and tc_ec never fuse
         let tc = AxisPipeline::build(256, "tc", false, true);
         assert!(tc.stages.iter().all(|s| s.fused()));
         let split = AxisPipeline::build(256, "tc_split", false, true);
         assert!(split.stages.iter().all(|s| !s.fused()));
+        let ec = AxisPipeline::build(256, "tc_ec", false, true);
+        assert!(ec.stages.iter().all(|s| !s.fused() && s.ec));
         // a stage past FUSE_LIMIT falls back to the two-pass kernel
-        let big = MergeStage::build(16, FUSE_LIMIT / 16 + 1, false, false, true);
+        let big = MergeStage::build(16, FUSE_LIMIT / 16 + 1, false, false, false, true);
         assert!(!big.fused());
         // fuse=false (reference compile) never builds W
         let unfused = AxisPipeline::build(256, "tc", false, false);
         assert!(unfused.stages.iter().all(|s| !s.fused()));
+    }
+
+    #[test]
+    fn ec_tables_carry_fp16_residuals() {
+        let st = MergeStage::build(16, 4, false, false, true, true);
+        assert_eq!(st.f_re_lo.len(), st.f_re.len());
+        assert_eq!(st.t_re_lo.len(), st.t_re.len());
+        for i in 0..st.f_re.len() {
+            // each lo half is itself an fp16 value well below its hi
+            assert_eq!(rnd16(st.f_re_lo[i]).to_bits(), st.f_re_lo[i].to_bits());
+            assert!(st.f_re_lo[i].abs() <= 5e-4, "lo[{i}] = {}", st.f_re_lo[i]);
+        }
+        // non-ec stages carry no residual tables
+        let plain = MergeStage::build(16, 4, false, false, false, true);
+        assert!(plain.f_re_lo.is_empty() && plain.t_re_lo.is_empty());
+    }
+
+    #[test]
+    fn ec_tier_tracks_the_oracle_tightly() {
+        // measured ladder (tests/precision_ladder.rs): tc sits near
+        // 3e-4 at this size; the compensated tier recovers to ~1e-7
+        let reg = Registry::synthesize();
+        let be = CpuInterpreter::new();
+        let meta = reg.get("fft1d_tc_ec_n64_b4_fwd").unwrap();
+        let sig = random_signal(64, 7);
+        let input = PlanarBatch::from_complex(&sig, vec![1, 64]).pad_batch(4);
+        let (out, _) = be.execute(meta, input.clone()).unwrap();
+        let mut q = input;
+        q.quantize_f16_ec_mut();
+        let want = refdft::dft(&widen(&q.to_complex()[..64]), false);
+        let got = widen(&out.to_complex()[..64]);
+        let err = relative_rmse(&want, &got);
+        assert!(err < 1e-5, "ec rmse {err}");
+    }
+
+    #[test]
+    fn ec_engines_are_bit_identical() {
+        let reg = Registry::synthesize();
+        let meta = reg.get("fft1d_tc_ec_n256_b4_fwd").unwrap();
+        let x: Vec<_> = (0..4).flat_map(|b| random_signal(256, 11 + b as u64)).collect();
+        let input = PlanarBatch::from_complex(&x, vec![4, 256]);
+        let (y_new, _) = CpuInterpreter::new().execute(meta, input.clone()).unwrap();
+        let (y_ref, _) = ReferenceInterpreter::new().execute(meta, input).unwrap();
+        for i in 0..y_new.len() {
+            assert_eq!(y_new.re[i].to_bits(), y_ref.re[i].to_bits(), "re[{i}]");
+            assert_eq!(y_new.im[i].to_bits(), y_ref.im[i].to_bits(), "im[{i}]");
+        }
     }
 }

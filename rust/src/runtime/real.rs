@@ -33,6 +33,14 @@
 //! fp16 on store. Packing/unpacking are pure data movement and round
 //! nothing.
 //!
+//! When built with [`RealHalfSpectrum::with_ec`] for the `tc_ec` tier,
+//! the pass applies the same error-corrected scheme as the merge
+//! stages: the `W` table keeps fp16 lo residuals alongside the hi
+//! halves, every product of carried values is the three-term
+//! compensated form, and stores write fresh hi + lo pairs. The
+//! Hermitian-real endpoint bins still come out with exactly zero
+//! imaginary part (every term of their lo correction is zero).
+//!
 //! Both execution engines — the [`crate::runtime::CpuInterpreter`]
 //! stage pipeline and the [`crate::large::RealFourStepPlan`] four-step
 //! composition — run these exact kernels, so the two R2C paths share
@@ -44,6 +52,28 @@ use crate::hp::F16;
 #[inline]
 fn rnd16(x: f32) -> f32 {
     F16::round_f32(x)
+}
+
+/// `tc_ec` splitter: fp16 hi half plus fp16-rounded lo residual.
+#[inline]
+fn ec_split16(x: f32) -> (f32, f32) {
+    let h = rnd16(x);
+    (h, rnd16(x - h))
+}
+
+/// `tc_ec` store: carried hi + lo sum, saturating on fp16 overflow
+/// (the `inf + -inf` residual would otherwise produce NaN).
+#[inline]
+fn ec_store(x: f32) -> f32 {
+    let h = rnd16(x);
+    if h.is_finite() { h + rnd16(x - h) } else { h }
+}
+
+/// Compensated hi/lo product `(ah*bh + ah*bl) + al*bh`, matching the
+/// interpreter's `ec_mul` term order exactly.
+#[inline]
+fn ec_mul(ah: f32, al: f32, bh: f32, bl: f32) -> f32 {
+    (ah * bh + ah * bl) + al * bh
 }
 
 /// Precomputed half-spectrum split/merge pass for one real size `n`.
@@ -59,23 +89,49 @@ pub struct RealHalfSpectrum {
     w_re: Vec<f32>,
     /// fp16-rounded `sin(-2*pi*k/n)` for `k = 0..=m/2`
     w_im: Vec<f32>,
+    /// fp16 lo residuals of the table (`tc_ec` only, else empty)
+    w_re_lo: Vec<f32>,
+    w_im_lo: Vec<f32>,
+    /// error-corrected tier: compensated products, hi + lo stores
+    ec: bool,
 }
 
 impl RealHalfSpectrum {
     /// Build the pass for an `n`-point real transform (`n` a power of
     /// two, `n >= 4`). The same table serves forward and inverse.
     pub fn new(n: usize) -> RealHalfSpectrum {
+        Self::with_ec(n, false)
+    }
+
+    /// [`new`](Self::new) with the `tc_ec` error-corrected scheme
+    /// switched on: the `W` table carries fp16 lo residuals and the
+    /// split/merge kernels run compensated products with hi + lo
+    /// stores.
+    pub fn with_ec(n: usize, ec: bool) -> RealHalfSpectrum {
         assert!(n.is_power_of_two() && n >= 4, "real FFT size {n} must be a power of two >= 4");
         let m = n / 2;
         let half = m / 2;
         let mut w_re = Vec::with_capacity(half + 1);
         let mut w_im = Vec::with_capacity(half + 1);
+        let mut w_re_lo = Vec::with_capacity(if ec { half + 1 } else { 0 });
+        let mut w_im_lo = Vec::with_capacity(if ec { half + 1 } else { 0 });
         for k in 0..=half {
             let ang = -2.0 * std::f64::consts::PI * k as f64 / n as f64;
-            w_re.push(rnd16(ang.cos() as f32));
-            w_im.push(rnd16(ang.sin() as f32));
+            let (cr, ci) = (ang.cos() as f32, ang.sin() as f32);
+            let (hr, hi) = (rnd16(cr), rnd16(ci));
+            w_re.push(hr);
+            w_im.push(hi);
+            if ec {
+                w_re_lo.push(rnd16(cr - hr));
+                w_im_lo.push(rnd16(ci - hi));
+            }
         }
-        RealHalfSpectrum { m, w_re, w_im }
+        RealHalfSpectrum { m, w_re, w_im, w_re_lo, w_im_lo, ec }
+    }
+
+    /// True when the pass runs the `tc_ec` error-corrected kernels.
+    pub fn ec(&self) -> bool {
+        self.ec
     }
 
     /// The real transform length `n`.
@@ -194,13 +250,32 @@ impl RealHalfSpectrum {
                 let (er, ei) = (0.5 * (ar + br), 0.5 * (ai - bi));
                 let (or_, oi) = (0.5 * (ai + bi), 0.5 * (br - ar));
                 let (wr, wi) = (self.w_re[k], self.w_im[k]);
-                let (tr, ti) = (wr * or_ - wi * oi, wr * oi + wi * or_);
-                g_re[gb + k] = rnd16(er + tr);
-                g_im[gb + k] = rnd16(ei + ti);
-                // k = m/2 writes its own (self-paired) bin twice with
-                // the identical value, so no guard is needed
-                g_re[gb + m - k] = rnd16(er - tr);
-                g_im[gb + m - k] = rnd16(ti - ei);
+                let (tr, ti) = if self.ec {
+                    // compensated W*O against the hi/lo table; O is a
+                    // full f32 combination, so split it fresh
+                    let (wrl, wil) = (self.w_re_lo[k], self.w_im_lo[k]);
+                    let (orh, orl) = ec_split16(or_);
+                    let (oih, oil) = ec_split16(oi);
+                    (
+                        ec_mul(orh, orl, wr, wrl) - ec_mul(oih, oil, wi, wil),
+                        ec_mul(orh, orl, wi, wil) + ec_mul(oih, oil, wr, wrl),
+                    )
+                } else {
+                    (wr * or_ - wi * oi, wr * oi + wi * or_)
+                };
+                if self.ec {
+                    g_re[gb + k] = ec_store(er + tr);
+                    g_im[gb + k] = ec_store(ei + ti);
+                    g_re[gb + m - k] = ec_store(er - tr);
+                    g_im[gb + m - k] = ec_store(ti - ei);
+                } else {
+                    g_re[gb + k] = rnd16(er + tr);
+                    g_im[gb + k] = rnd16(ei + ti);
+                    // k = m/2 writes its own (self-paired) bin twice
+                    // with the identical value, so no guard is needed
+                    g_re[gb + m - k] = rnd16(er - tr);
+                    g_im[gb + m - k] = rnd16(ti - ei);
+                }
             }
         }
     }
@@ -270,13 +345,31 @@ impl RealHalfSpectrum {
                 let (sr, si) = (gr + hr, gi - hi);
                 let (dr, di) = (gr - hr, gi + hi);
                 let (wr, wi) = (self.w_re[k], self.w_im[k]);
-                // Z'[k] = S + i * conj(W^k) * D
-                z_re[zb + k % m] = rnd16(sr - wr * di + wi * dr);
-                z_im[zb + k % m] = rnd16(si + wr * dr + wi * di);
-                if k > 0 && m - k != k {
-                    // Z'[m-k] = conj-symmetric partner through -W^k
-                    z_re[zb + m - k] = rnd16(sr + wr * di - wi * dr);
-                    z_im[zb + m - k] = rnd16(wr * dr + wi * di - si);
+                if self.ec {
+                    // the four compensated products; both bins of the
+                    // pair reuse them with the plain path's term order
+                    let (wrl, wil) = (self.w_re_lo[k], self.w_im_lo[k]);
+                    let (drh, drl) = ec_split16(dr);
+                    let (dih, dil) = ec_split16(di);
+                    let p_wr_di = ec_mul(dih, dil, wr, wrl);
+                    let p_wi_dr = ec_mul(drh, drl, wi, wil);
+                    let p_wr_dr = ec_mul(drh, drl, wr, wrl);
+                    let p_wi_di = ec_mul(dih, dil, wi, wil);
+                    z_re[zb + k % m] = ec_store(sr - p_wr_di + p_wi_dr);
+                    z_im[zb + k % m] = ec_store(si + p_wr_dr + p_wi_di);
+                    if k > 0 && m - k != k {
+                        z_re[zb + m - k] = ec_store(sr + p_wr_di - p_wi_dr);
+                        z_im[zb + m - k] = ec_store(p_wr_dr + p_wi_di - si);
+                    }
+                } else {
+                    // Z'[k] = S + i * conj(W^k) * D
+                    z_re[zb + k % m] = rnd16(sr - wr * di + wi * dr);
+                    z_im[zb + k % m] = rnd16(si + wr * dr + wi * di);
+                    if k > 0 && m - k != k {
+                        // Z'[m-k] = conj-symmetric partner through -W^k
+                        z_re[zb + m - k] = rnd16(sr + wr * di - wi * dr);
+                        z_im[zb + m - k] = rnd16(wr * dr + wi * di - si);
+                    }
                 }
             }
         }
@@ -381,6 +474,41 @@ mod tests {
     #[should_panic(expected = "power of two")]
     fn rejects_tiny_sizes() {
         RealHalfSpectrum::new(2);
+    }
+
+    #[test]
+    fn ec_split_keeps_endpoints_real_and_merge_inverts_tightly() {
+        let n = 32;
+        let m = n / 2;
+        // carried hi + lo inputs, as the ec pipeline produces
+        let ec2 = |x: f32| {
+            let h = fp16v(x as f64);
+            h + fp16v((x - h) as f64)
+        };
+        let z_re: Vec<f32> = (0..m).map(|j| ec2((j as f32 * 0.73).sin())).collect();
+        let z_im: Vec<f32> = (0..m).map(|j| ec2((j as f32 * 1.19).cos())).collect();
+        let rs = RealHalfSpectrum::with_ec(n, true);
+        assert!(rs.ec());
+        let mut g_re = vec![0f32; m + 1];
+        let mut g_im = vec![0f32; m + 1];
+        rs.split_rows(&z_re, &z_im, &mut g_re, &mut g_im, 1);
+        // Hermitian endpoints stay exactly real under compensation
+        assert_eq!(g_im[0], 0.0);
+        assert_eq!(g_im[m], 0.0);
+        let mut back_re = vec![0f32; m];
+        let mut back_im = vec![0f32; m];
+        rs.merge_rows(&g_re, &g_im, &mut back_re, &mut back_im, 1);
+        for j in 0..m {
+            // split-then-merge recovers 2*Z; the ec round trip holds
+            // orders of magnitude tighter than the fp16 one (~1e-2)
+            assert!(
+                (back_re[j] - 2.0 * z_re[j]).abs() < 1e-5,
+                "re[{j}]: {} vs {}",
+                back_re[j],
+                2.0 * z_re[j]
+            );
+            assert!((back_im[j] - 2.0 * z_im[j]).abs() < 1e-5, "im[{j}]");
+        }
     }
 
     /// Write a contiguous length-`m` row into the four-step

@@ -36,7 +36,7 @@ pub struct VariantMeta {
     pub key: String,
     pub file: PathBuf,
     pub op: String,   // "fft1d" | "fft2d"
-    pub algo: String, // "tc" | "tc_split" | "r2"
+    pub algo: String, // "tc" | "tc_split" | "tc_ec" | "r2"
     pub n: usize,
     pub nx: usize,
     pub ny: usize,
@@ -205,6 +205,19 @@ impl Registry {
         for n in [4096usize, 65536] {
             add(synth_fft1d(&dir, "tc_split", n, 4, false));
         }
+        // error-corrected tier (Ootomo & Yokota): full 1D ladder so the
+        // precision suite can sweep every size in both directions
+        for t in 1..=17usize {
+            let n = 1usize << t;
+            add(synth_fft1d(&dir, "tc_ec", n, 4, false));
+            add(synth_fft1d(&dir, "tc_ec", n, 4, true));
+        }
+        // ec four-step leaf + the Table-4 headline batch (the tc twin
+        // exists so the precision bench can quote the accuracy gain)
+        add(synth_fft1d(&dir, "tc_ec", 1024, 32, false));
+        add(synth_fft1d(&dir, "tc_ec", 1024, 32, true));
+        add(synth_fft1d(&dir, "tc_ec", 4096, 32, false));
+        add(synth_fft1d(&dir, "tc", 4096, 32, false));
         // batch sweep at 131072 points (Fig 7a)
         for b in [1usize, 2, 8, 16] {
             add(synth_fft1d(&dir, "tc", 131072, b, false));
@@ -217,6 +230,8 @@ impl Registry {
             let n = 1usize << t;
             add(synth_rfft1d(&dir, "tc", n, 4, false));
             add(synth_rfft1d(&dir, "tc", n, 4, true));
+            add(synth_rfft1d(&dir, "tc_ec", n, 4, false));
+            add(synth_rfft1d(&dir, "tc_ec", n, 4, true));
         }
         // real-input 2D ladder (square 8x8..256x256 plus the
         // rectangular shapes the conformance suite exercises), fwd+inv
@@ -224,10 +239,14 @@ impl Registry {
             let n = 1usize << t;
             add(synth_rfft2d(&dir, "tc", n, n, 4, false));
             add(synth_rfft2d(&dir, "tc", n, n, 4, true));
+            add(synth_rfft2d(&dir, "tc_ec", n, n, 4, false));
+            add(synth_rfft2d(&dir, "tc_ec", n, n, 4, true));
         }
         for (nx, ny) in [(64usize, 128usize), (128, 64)] {
             add(synth_rfft2d(&dir, "tc", nx, ny, 4, false));
             add(synth_rfft2d(&dir, "tc", nx, ny, 4, true));
+            add(synth_rfft2d(&dir, "tc_ec", nx, ny, 4, false));
+            add(synth_rfft2d(&dir, "tc_ec", nx, ny, 4, true));
         }
         // 2D shapes (Fig 5, Table 4)
         for (nx, ny) in [(128usize, 128usize), (256, 256), (256, 512), (512, 256), (512, 512)] {
@@ -237,6 +256,8 @@ impl Registry {
         add(synth_fft2d(&dir, "r2", 256, 256, 2, false));
         add(synth_fft2d(&dir, "r2", 512, 256, 2, false));
         add(synth_fft2d(&dir, "tc_split", 512, 256, 2, false));
+        add(synth_fft2d(&dir, "tc_ec", 256, 256, 2, false));
+        add(synth_fft2d(&dir, "tc_ec", 256, 256, 2, true));
         // batch sweep 2D 512x256 (Fig 7b)
         for b in [1usize, 4, 8] {
             add(synth_fft2d(&dir, "tc", 512, 256, b, false));
@@ -352,8 +373,11 @@ fn stage_meta_from_planned(st: &PlannedStage, n_axis: usize) -> StageMeta {
 }
 
 /// Stage list for one staged axis (mirror of aot.py Variant.stages).
+/// `tc_ec` shares the de-fused split schedule: its stages run the
+/// two-pass kernel shape too (the hi/lo split points forbid fusion),
+/// so the split cost model is the honest one.
 fn synth_axis_stages(algo: &str, n_axis: usize, lane: usize) -> Vec<StageMeta> {
-    let planned = if algo == "tc_split" {
+    let planned = if algo == "tc_split" || algo == "tc_ec" {
         split_schedule(n_axis, lane)
     } else {
         kernel_schedule(n_axis, lane)
@@ -621,6 +645,10 @@ mod tests {
             "fft1d_tc_n4096_b4_inv",
             "fft1d_r2_n4096_b4_fwd",
             "fft1d_tc_split_n4096_b4_fwd",
+            "fft1d_tc_ec_n4096_b4_fwd",
+            "fft1d_tc_ec_n4096_b32_fwd",
+            "fft1d_tc_ec_n1024_b32_fwd",
+            "fft2d_tc_ec_nx256x256_b2_fwd",
             "fft1d_tc_n65536_b4_fwd",
             "fft1d_tc_n131072_b1_fwd",
             "fft1d_tc_n131072_b16_fwd",
@@ -679,6 +707,31 @@ mod tests {
         // complex 2D lookups
         assert!(r.find_rfft2d(512, 512, 1, "tc", false).is_none());
         assert_eq!(r.find_fft2d(128, 128, 1, "tc", false).unwrap().op, "fft2d");
+    }
+
+    #[test]
+    fn synthesized_catalog_has_the_ec_ladder() {
+        let r = Registry::synthesize();
+        for t in 1..=17usize {
+            let n = 1usize << t;
+            assert!(r.find_fft1d(n, 1, "tc_ec", false).is_some(), "no ec fwd n={n}");
+            assert!(r.find_fft1d(n, 1, "tc_ec", true).is_some(), "no ec inv n={n}");
+        }
+        for t in 2..=17usize {
+            let n = 1usize << t;
+            assert!(r.find_rfft1d(n, 1, "tc_ec", false).is_some(), "no ec rfft fwd n={n}");
+            assert!(r.find_rfft1d(n, 1, "tc_ec", true).is_some(), "no ec rfft inv n={n}");
+        }
+        for t in 3..=8usize {
+            let n = 1usize << t;
+            assert!(r.find_rfft2d(n, n, 1, "tc_ec", false).is_some(), "no ec rfft2d {n}x{n}");
+        }
+        // ec stages carry the de-fused (split) schedule shape
+        let v = r.get("fft1d_tc_ec_n4096_b4_fwd").unwrap();
+        let s = r.get("fft1d_tc_split_n4096_b4_fwd").unwrap();
+        let kernels =
+            |m: &VariantMeta| m.stages.iter().map(|st| st.kernel.clone()).collect::<Vec<_>>();
+        assert_eq!(kernels(v), kernels(s));
     }
 
     #[test]

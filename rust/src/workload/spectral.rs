@@ -89,7 +89,7 @@ impl SpectralConv {
     }
 
     /// [`new_bank`](Self::new_bank) with an explicit leaf algorithm
-    /// (`"tc"` | `"tc_split"` | `"r2"`) for both transform plans — the
+    /// (`"tc"` | `"tc_split"` | `"tc_ec"` | `"r2"`) for both transform plans — the
     /// constructor the service's guarded bank registration calls.
     pub fn new_bank_algo<T: AsRef<[f32]>>(
         rt: &Runtime,

@@ -129,6 +129,51 @@ fn r2_leaves_serve_the_four_step() {
 }
 
 #[test]
+fn tc_ec_leaves_serve_the_four_step_and_match_the_direct_path() {
+    // 2^16 = 256 x 256 and the catalog has tc_ec artifacts both for
+    // the direct 65536-point transform and the 256-point leaves, so
+    // the requested tier is honored end to end AND the two routes can
+    // be compared.  The four-step host twiddles are plain f32
+    // (~6e-8), so both paths sit at compensated accuracy and must
+    // agree far below fp16 noise.
+    let rt = runtime();
+    let n = 1 << 16;
+    let plan = FourStepPlan::with_algo(rt, n, "tc_ec", false).unwrap();
+    assert_eq!(plan.algo(), "tc_ec");
+    assert!(plan.describe().contains("[tc_ec]"), "decomposition: {}", plan.describe());
+    let input = batch_input(n, 4, 0xD1);
+    check_rows(&plan, &input, false, "tc_ec n=2^16");
+    let four = plan.execute_batch(rt, input.clone()).unwrap();
+    let (direct, _) = rt.execute(&format!("fft1d_tc_ec_n{n}_b4_fwd"), input).unwrap();
+    let rmse = relative_rmse(&widen(&direct.to_complex()), &widen(&four.to_complex()));
+    assert!(rmse < 1e-5, "four-step vs direct tc_ec rel-RMSE {rmse:.3e}");
+}
+
+#[test]
+fn tc_ec_four_step_hosts_are_bit_identical() {
+    // same chunked-by-rows contract as the tc host path, under the ec
+    // marshal and ec leaf kernels
+    let rt = runtime();
+    let n = 1 << 16;
+    let mk = |threads| {
+        FourStepPlan::with_config(
+            rt,
+            n,
+            false,
+            FourStepConfig { algo: "tc_ec".to_string(), threads, ..FourStepConfig::default() },
+        )
+        .unwrap()
+    };
+    let input = batch_input(n, 3, 0xD7);
+    let a = mk(1).execute_batch(rt, input.clone()).unwrap();
+    let b = mk(3).execute_batch(rt, input).unwrap();
+    for i in 0..a.len() {
+        assert_eq!(a.re[i].to_bits(), b.re[i].to_bits(), "re[{i}]");
+        assert_eq!(a.im[i].to_bits(), b.im[i].to_bits(), "im[{i}]");
+    }
+}
+
+#[test]
 fn unavailable_algo_falls_back_to_tc() {
     // tc_split artifacts exist only at 4096/65536, so a 2^14 plan falls
     // back to tc leaves instead of failing (the PR-2 behavior)

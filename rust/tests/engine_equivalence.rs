@@ -3,13 +3,16 @@
 //! The engine chunks batch rows across the thread pool; rows are
 //! independent, so chunking must never change a single output bit.
 //! This suite drives the full variant space — 1D and 2D, forward and
-//! inverse, `tc`/`tc_split`/`r2`, batches {1, 3, 32} (3 is a
+//! inverse, `tc`/`tc_split`/`tc_ec`/`r2`, batches {1, 3, 32} (3 is a
 //! non-power-of-two batch that forces uneven chunk splits) — and
 //! asserts:
 //!
 //! * parallel engine == serial engine, **bit for bit**;
 //! * `tc_split` == the pre-PR [`ReferenceInterpreter`], bit for bit
-//!   (the de-fused ablation kernels were never re-associated);
+//!   (the de-fused ablation kernels were never re-associated), and
+//!   `tc_ec` == the reference bit for bit (both engines run the same
+//!   compensated kernel, whose float-op order is shared by
+//!   construction);
 //! * `tc`/`r2` track the reference within a tight rel-RMSE bound (the
 //!   fused kernels change only f32-level association — every fp16
 //!   rounding point is identical, so outputs agree far below the fp16
@@ -101,8 +104,9 @@ fn check(meta: &VariantMeta, input: PlanarBatch, threads: usize) {
 
     assert_bit_identical(&y_ser, &y_par, &format!("{} serial vs parallel", meta.key));
 
-    if meta.algo == "tc_split" {
-        // the de-fused ablation kernel keeps the pre-PR float-op order
+    if meta.algo == "tc_split" || meta.algo == "tc_ec" {
+        // the de-fused ablation kernel keeps the pre-PR float-op
+        // order; the ec kernel is shared between engines outright
         assert_bit_identical(&y_ser, &y_ref, &format!("{} engine vs reference", meta.key));
     } else {
         let err = relative_rmse(&widen(&y_ref.to_complex()), &widen(&y_ser.to_complex()));
@@ -112,7 +116,7 @@ fn check(meta: &VariantMeta, input: PlanarBatch, threads: usize) {
 
 #[test]
 fn fft1d_all_algos_dirs_batches() {
-    for algo in ["tc", "tc_split", "r2"] {
+    for algo in ["tc", "tc_split", "tc_ec", "r2"] {
         for inverse in [false, true] {
             for batch in [1usize, 3, 32] {
                 let meta = meta_1d(algo, 1024, batch, inverse);
@@ -128,7 +132,7 @@ fn fft1d_all_algos_dirs_batches() {
 fn fft1d_nonpow2_batch_chunk_edge() {
     // batch 3 at n=4096 crosses the parallel work threshold, so three
     // single-row chunks really run on the pool (threads > rows edge)
-    for algo in ["tc", "tc_split", "r2"] {
+    for algo in ["tc", "tc_split", "tc_ec", "r2"] {
         let meta = meta_1d(algo, 4096, 3, false);
         let input = random_batch(4096, 3, vec![3, 4096], 23);
         check(&meta, input, 4);
@@ -137,7 +141,7 @@ fn fft1d_nonpow2_batch_chunk_edge() {
 
 #[test]
 fn fft2d_all_algos_dirs_batches() {
-    for algo in ["tc", "tc_split", "r2"] {
+    for algo in ["tc", "tc_split", "tc_ec", "r2"] {
         for inverse in [false, true] {
             for batch in [1usize, 3, 32] {
                 let meta = meta_2d(algo, 64, 64, batch, inverse);

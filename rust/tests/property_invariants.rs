@@ -1,14 +1,20 @@
 //! Property-based tests (hand-rolled generators — no proptest offline):
 //! randomized invariants over the planner, digit reversal, host FFTs,
-//! fp16 codec, JSON round trips and the batcher.  Each property runs
-//! over many random cases from a seeded generator, printing the failing
-//! seed on assertion (deterministic replay).
+//! fp16 codec, JSON round trips, the batcher and the `tc_ec`
+//! compensated tier (linearity, round trips, Hermitian symmetry at
+//! error-corrected accuracy).  Each property runs over many random
+//! cases from a seeded generator, printing the failing seed on
+//! assertion (deterministic replay).
 
+use tcfft::error::relative_rmse;
 use tcfft::fft::{digitrev, mixed, radix2, refdft};
-use tcfft::hp::{C64, F16};
+use tcfft::hp::complex::widen;
+use tcfft::hp::{C32, C64, F16};
 use tcfft::plan::schedule::kernel_schedule;
+use tcfft::runtime::{Backend, CpuInterpreter, PlanarBatch, VariantMeta};
 use tcfft::util::json::Json;
 use tcfft::util::rng::SplitMix64;
+use tcfft::workload::random_signal;
 
 const CASES: usize = 200;
 
@@ -263,6 +269,131 @@ fn prop_twiddle_periodicity_and_group_structure() {
     for j in 0..n {
         let neg = full[1][(j + n / 2) % n];
         assert!((full[1][j] + neg).abs() < 1e-12, "half-period negation {j}");
+    }
+}
+
+/// Ad-hoc 1D variant for driving the interpreter without a manifest.
+fn ec_meta(algo: &str, n: usize, batch: usize, inverse: bool) -> VariantMeta {
+    let d = if inverse { "inv" } else { "fwd" };
+    VariantMeta {
+        key: format!("prop_fft1d_{algo}_n{n}_b{batch}_{d}"),
+        file: std::path::PathBuf::new(),
+        op: "fft1d".to_string(),
+        algo: algo.to_string(),
+        n,
+        nx: 0,
+        ny: 0,
+        batch,
+        inverse,
+        input_shape: vec![batch, n],
+        stages: Vec::new(),
+        flops_per_seq: 0.0,
+        hbm_bytes_per_seq: 0.0,
+        radix2_equiv_flops: 0.0,
+    }
+}
+
+fn ec_run(algo: &str, n: usize, inverse: bool, x: &[C32]) -> Vec<C64> {
+    let be = CpuInterpreter::with_threads(1);
+    let meta = ec_meta(algo, n, 1, inverse);
+    let input = PlanarBatch::from_complex(x, vec![1, n]);
+    let (y, _) = be.execute(&meta, input).unwrap();
+    widen(&y.to_complex())
+}
+
+/// fp16-quantize a random signal so linear combinations with
+/// power-of-two scalars stay exactly representable as hi+lo pairs.
+fn fp16_signal(n: usize, seed: u64) -> Vec<C32> {
+    random_signal(n, seed)
+        .iter()
+        .map(|c| C32::new(F16::from_f32(c.re).to_f32(), F16::from_f32(c.im).to_f32()))
+        .collect()
+}
+
+#[test]
+fn prop_tc_ec_is_linear_at_compensated_accuracy() {
+    // With fp16 inputs and power-of-two scalars, a*x + b*y is the sum
+    // of two fp16 values, whose rounding residual is itself
+    // fp16-representable — so the ec marshal carries the combination
+    // exactly and F(a x + b y) == a F(x) + b F(y) up to the tiny
+    // compensated compute error.  The plain tc tier only achieves this
+    // at fp16 noise (~1e-3); tc_ec must hold it near 1e-6.
+    let mut rng = SplitMix64::new(222);
+    for case in 0..6 {
+        let n = 1usize << (8 + rng.below(3)); // 256..1024
+        let x = fp16_signal(n, 0xE0 + case);
+        let y = fp16_signal(n, 0xF0 + case);
+        let (a, b) = (0.5f32, 0.25f32);
+        let z: Vec<C32> = x
+            .iter()
+            .zip(&y)
+            .map(|(u, v)| C32::new(a * u.re + b * v.re, a * u.im + b * v.im))
+            .collect();
+        let fz = ec_run("tc_ec", n, false, &z);
+        let fx = ec_run("tc_ec", n, false, &x);
+        let fy = ec_run("tc_ec", n, false, &y);
+        let combo: Vec<C64> = fx
+            .iter()
+            .zip(&fy)
+            .map(|(u, v)| u.scale(a as f64) + v.scale(b as f64))
+            .collect();
+        let err = relative_rmse(&combo, &fz);
+        assert!(err < 1e-5, "case {case} n={n}: linearity rmse {err:.3e}");
+    }
+}
+
+#[test]
+fn prop_tc_ec_round_trip_recovers_input_at_compensated_accuracy() {
+    // forward then unnormalized inverse scaled by 1/N.  The spectrum
+    // re-enters the engine as carried hi+lo sums, so the ec re-marshal
+    // is near-lossless and the trip error stays ~1e-6 — three orders
+    // below the plain-fp16 round trip.
+    let mut rng = SplitMix64::new(333);
+    for case in 0..6 {
+        let n = 1usize << (8 + rng.below(3));
+        let x = fp16_signal(n, 0x1A0 + case);
+        let be = CpuInterpreter::with_threads(1);
+        let input = PlanarBatch::from_complex(&x, vec![1, n]);
+        let (spec, _) = be.execute(&ec_meta("tc_ec", n, 1, false), input).unwrap();
+        let (mut back, _) = be.execute(&ec_meta("tc_ec", n, 1, true), spec).unwrap();
+        for v in back.re.iter_mut().chain(back.im.iter_mut()) {
+            *v /= n as f32;
+        }
+        let want = widen(&x);
+        let got = widen(&back.to_complex());
+        let err = relative_rmse(&want, &got);
+        assert!(err < 1e-5, "case {case} n={n}: round-trip rmse {err:.3e}");
+    }
+}
+
+#[test]
+fn prop_tc_ec_real_input_spectrum_is_hermitian() {
+    // real input => X[k] == conj(X[n-k]) and the DC/Nyquist bins are
+    // real.  The complex kernel doesn't know the input is real, so the
+    // symmetry holds at compute accuracy, not bitwise — for tc_ec that
+    // is the compensated level, far below fp16 noise.
+    let mut rng = SplitMix64::new(444);
+    for case in 0..6 {
+        let n = 1usize << (8 + rng.below(3));
+        let x: Vec<C32> = fp16_signal(n, 0x2B0 + case)
+            .iter()
+            .map(|c| C32::new(c.re, 0.0))
+            .collect();
+        let spec = ec_run("tc_ec", n, false, &x);
+        let scale = spec.iter().map(|c| c.abs()).fold(1e-30, f64::max);
+        for k in 1..n / 2 {
+            let d = spec[k] - spec[n - k].conj();
+            assert!(
+                d.abs() < 1e-5 * scale,
+                "case {case} n={n} k={k}: asymmetry {:.3e}",
+                d.abs()
+            );
+        }
+        assert!(spec[0].im.abs() < 1e-5 * scale, "case {case}: DC bin not real");
+        assert!(
+            spec[n / 2].im.abs() < 1e-5 * scale,
+            "case {case}: Nyquist bin not real"
+        );
     }
 }
 

@@ -1,9 +1,11 @@
 //! Tests of the sharded, evicting service core: concurrent-client
 //! soak through the shard router, LRU eviction of all three plan
 //! stores, per-client admission quota, bounded metrics reservoirs, the
-//! shutdown-latency fix, counter-after-validation ordering, and the
-//! bounded TCP worker pool with pipelining. All over the interpreter
-//! backend (no artifacts on disk required).
+//! shutdown-latency fix, counter-after-validation ordering, the algo
+//! whitelist (`tc_ec` served on all four routes, unknown algos fail
+//! fast without touching a counter), and the bounded TCP worker pool
+//! with pipelining. All over the interpreter backend (no artifacts on
+//! disk required).
 
 use std::sync::{Arc, OnceLock};
 use std::time::{Duration, Instant};
@@ -409,6 +411,144 @@ fn rfft2d_fail_fast_names_catalog_and_large_route_limits() {
     let snap = svc.metrics().snapshot();
     assert_eq!(snap.get("requests").unwrap().as_i64(), Some(0));
     assert_eq!(snap.get("rfft2d_requests").unwrap().as_i64(), Some(0));
+    svc.shutdown();
+}
+
+#[test]
+fn tc_ec_is_served_on_all_four_routes() {
+    // the error-corrected tier must be admitted everywhere an algo
+    // string is whitelisted: direct catalog artifacts, the large-1D
+    // four-step route, the large-2D Plan2d route, and filter-bank
+    // registration — each reply checked against its oracle
+    let svc = service_with(ServiceConfig {
+        request_deadline: None, // debug-build large runs may be slow
+        ..ServiceConfig::default()
+    });
+
+    // 1. direct catalog route (n=1024 has a tc_ec artifact)
+    let n = 1024;
+    let sig = random_signal(n, 0xEC1);
+    let out = svc
+        .submit(FftRequest {
+            op: Op::Fft1d { n },
+            algo: "tc_ec".into(),
+            direction: Direction::Forward,
+            input: PlanarBatch::from_complex(&sig, vec![n]),
+        })
+        .unwrap()
+        .wait()
+        .unwrap();
+    let q = PlanarBatch::from_complex(&sig, vec![1, n]).quantize_f16();
+    let want = mixed::fft_mixed_batch(&widen(&q.to_complex()), 1, n, false);
+    let rmse = relative_rmse(&want, &widen(&out.to_complex()));
+    assert!(rmse < 5e-3, "direct tc_ec: rmse {rmse:.3e}");
+
+    // 2. large-1D four-step route (2^18 exceeds the catalog)
+    let n = 1 << 18;
+    let sig = random_signal(n, 0xEC2);
+    let out = svc
+        .submit(FftRequest {
+            op: Op::Fft1d { n },
+            algo: "tc_ec".into(),
+            direction: Direction::Forward,
+            input: PlanarBatch::from_complex(&sig, vec![n]),
+        })
+        .unwrap()
+        .wait()
+        .unwrap();
+    let q = PlanarBatch::from_complex(&sig, vec![1, n]).quantize_f16();
+    let want = radix2::fft_vec(&widen(&q.to_complex()), false);
+    let rmse = relative_rmse(&want, &widen(&out.to_complex()));
+    assert!(rmse < 5e-3, "large-1D tc_ec: rmse {rmse:.3e}");
+
+    // 3. large-2D route (512x512 is beyond the 256x256 catalog ladder)
+    let (nx, ny) = (512usize, 512usize);
+    let bins = ny / 2 + 1;
+    let rsig: Vec<f32> = random_signal(nx * ny, 0xEC3).iter().map(|c| c.re).collect();
+    let input = PlanarBatch::from_real(&rsig, vec![1, nx, ny]);
+    let spec = svc
+        .rfft2d_blocking(input.clone(), "tc_ec", Direction::Forward)
+        .unwrap();
+    assert_eq!(spec.shape, vec![1, nx, bins]);
+    let q = widen(&input.quantize_f16().to_complex());
+    let full = tcfft::fft::oracle2d(&q, nx, ny, false);
+    let want: Vec<C64> = (0..nx)
+        .flat_map(|r| full[r * ny..r * ny + bins].to_vec())
+        .collect();
+    let rmse = relative_rmse(&want, &widen(&spec.to_complex()));
+    assert!(rmse < 5e-3, "large-2D tc_ec: rmse {rmse:.3e}");
+
+    // 4. filter-bank registration and convolve
+    let n = 256;
+    svc.register_filter_bank("ec-bank", n, &[vec![1.0f32, 0.5, 0.25]], "tc_ec")
+        .unwrap();
+    let rsig: Vec<f32> = random_signal(n, 0xEC4).iter().map(|c| c.re).collect();
+    let out = svc
+        .submit_convolve("ec-bank", PlanarBatch::from_real(&rsig, vec![n]))
+        .unwrap()
+        .wait()
+        .unwrap();
+    assert_eq!(out.shape, vec![1, 1, n]);
+
+    assert_eq!(svc.metrics().snapshot().get("failed").unwrap().as_i64(), Some(0));
+    svc.shutdown();
+}
+
+#[test]
+fn unknown_algo_fails_fast_with_no_artifact_on_every_route() {
+    // a typo'd algo — e.g. from the TCP surface — must be refused
+    // before any plan cache key is minted and before any counter
+    // moves, with the stable `no_artifact` code on every route
+    let svc = service();
+    let n = 1024;
+    let sig = random_signal(n, 0xBAD);
+    let err = svc
+        .submit(FftRequest {
+            op: Op::Fft1d { n },
+            algo: "tc_magic".into(),
+            direction: Direction::Forward,
+            input: PlanarBatch::from_complex(&sig, vec![n]),
+        })
+        .unwrap_err();
+    assert_eq!(err.code(), "no_artifact", "direct route: {err}");
+
+    let big = 1 << 18;
+    let err = svc
+        .submit(FftRequest {
+            op: Op::Fft1d { n: big },
+            algo: "tc_magic".into(),
+            direction: Direction::Forward,
+            input: PlanarBatch::new(vec![big]),
+        })
+        .unwrap_err();
+    assert_eq!(err.code(), "no_artifact", "large-1D route: {err}");
+
+    let err = svc
+        .submit(FftRequest {
+            op: Op::Rfft2d { nx: 512, ny: 512 },
+            algo: "tc_magic".into(),
+            direction: Direction::Forward,
+            input: PlanarBatch::new(vec![512, 512]),
+        })
+        .unwrap_err();
+    assert_eq!(err.code(), "no_artifact", "large-2D route: {err}");
+
+    let err = svc
+        .register_filter_bank("magic", 256, &[vec![1.0f32, 0.5]], "tc_magic")
+        .unwrap_err();
+    assert_eq!(err.code(), "no_artifact", "filter-bank route: {err}");
+
+    let snap = svc.metrics().snapshot();
+    for k in [
+        "requests",
+        "rfft_requests",
+        "rfft2d_requests",
+        "large_requests",
+        "completed",
+        "failed",
+    ] {
+        assert_eq!(snap.get(k).unwrap().as_i64(), Some(0), "counter '{k}' inflated");
+    }
     svc.shutdown();
 }
 
