@@ -51,12 +51,37 @@ lock_gate() {
   echo "no bare .lock() outside coordinator/lock.rs"
 }
 
+# Static gate: raw CPU intrinsics stay inside runtime/simd.rs. That
+# module owns the `unsafe` vector bodies, the target_feature gates and
+# the runtime dispatch; `std::arch`/`core::arch` anywhere else would
+# bypass the feature-detection contract (and the bitwise-vs-scalar
+# equivalence suite that polices it).
+simd_gate() {
+  local hits
+  hits=$(grep -rnE 'std::arch|core::arch' rust/src/ rust/tests/ rust/benches/ --include='*.rs' \
+    | grep -v 'runtime/simd\.rs' || true)
+  if [ -n "$hits" ]; then
+    echo "raw std::arch/core::arch outside rust/src/runtime/simd.rs — route through runtime::simd:"
+    echo "$hits"
+    return 1
+  fi
+  echo "no raw std::arch/core::arch outside runtime/simd.rs"
+}
+
 core() {
   echo "== cargo build --release =="
   cargo build --release
 
-  echo "== cargo test -q =="
-  cargo test -q
+  # the whole suite runs twice: once with the SIMD stage kernels on the
+  # best path this CPU offers (auto), once pinned to the scalar
+  # fallback. The bitwise contract (tests/simd_equivalence.rs) says
+  # both runs must be indistinguishable — a divergence fails here even
+  # on tests that never heard of SIMD.
+  echo "== cargo test -q (TCFFT_SIMD=auto) =="
+  TCFFT_SIMD=auto cargo test -q
+
+  echo "== cargo test -q (TCFFT_SIMD=scalar) =="
+  TCFFT_SIMD=scalar cargo test -q
 
   echo "== chaos suite (fault injection) =="
   cargo test -q --test chaos_service
@@ -66,6 +91,9 @@ core() {
 
   echo "== poison-safe lock gate (rust/src/coordinator) =="
   lock_gate
+
+  echo "== SIMD intrinsics containment gate (rust/) =="
+  simd_gate
 
   echo "== cargo doc --no-deps (warnings are errors) =="
   RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
@@ -102,8 +130,9 @@ bench_smoke() {
   # (<workspace-root>/BENCH_interp.json, from CARGO_MANIFEST_DIR);
   # bench-validate requires the 2D entries rfft2d_tc_nx256x256_b8_fwd
   # and rfft2d_tc_nx2048x2048_b4_fwd, the serving entry
-  # e2e_serve_tc_n4096_c64, and the accuracy-gain entry
-  # precision_tc_ec_n4096_b32 (table4_precision)
+  # e2e_serve_tc_n4096_c64, the accuracy-gain entry
+  # precision_tc_ec_n4096_b32 (table4_precision), and the tc_ec
+  # time-cost entry fft1d_tc_ec_n4096_b32_fwd (fig4_1d part 4)
   cargo run --release -- bench-validate
 }
 

@@ -10,6 +10,12 @@
 //!  3. ENGINE: the batch-major fused parallel engine vs the pre-PR
 //!     row-major reference interpreter; medians land in
 //!     `BENCH_interp.json` (headline: n=4096 batch=32, 4 threads).
+//!  4. EC COST: the error-corrected `tc_ec` tier at the headline
+//!     shape, referenced against the plain `tc` engine median — the
+//!     time side of the accuracy-vs-speed tradeoff that
+//!     `precision_tc_ec_n4096_b32` records the accuracy side of
+//!     (entry `fft1d_tc_ec_n4096_b32_fwd`; its `speedup` reads as
+//!     tc/tc_ec and is expected **below 1** — a measured cost).
 //!
 //!     cargo bench --bench fig4_1d
 //!     TCFFT_BENCH_SMOKE=1 cargo bench --bench fig4_1d   # CI smoke
@@ -30,17 +36,17 @@ use tcfft::workload::random_signal;
 /// Headline thread count recorded in BENCH_interp.json.
 const ENGINE_THREADS: usize = 4;
 
-/// Bench-local 1D forward-tc descriptor. The synthesized catalog
+/// Bench-local 1D forward descriptor. The synthesized catalog
 /// deliberately has no b=32 tier at n=4096 (adding one would flip
 /// `find_fft1d` from split-over-b4 to pad-to-32 for serving requests
-/// with batch 5..=31), so the engine-vs-reference comparison builds
-/// its variant metadata here instead of polluting the registry.
-fn bench_meta_1d_tc(key: &str, n: usize, batch: usize) -> VariantMeta {
+/// with batch 5..=31), so the engine comparisons build their variant
+/// metadata here instead of polluting the registry.
+fn bench_meta_1d(key: &str, algo: &str, n: usize, batch: usize) -> VariantMeta {
     VariantMeta {
         key: key.to_string(),
         file: std::path::PathBuf::new(),
         op: "fft1d".to_string(),
-        algo: "tc".to_string(),
+        algo: algo.to_string(),
         n,
         nx: 0,
         ny: 0,
@@ -104,9 +110,10 @@ fn main() -> tcfft::error::Result<()> {
         if smoke() { &[(4096, 32)] } else { &[(4096, 32), (1024, 32), (16384, 4)] };
     let mut entries: Vec<(String, Json)> = Vec::new();
     let mut te = Table::new(&["key", "reference ms", "engine 1t ms", "engine 4t ms", "speedup"]);
+    let mut headline_tc_par = None;
     for &(n, b) in shapes {
         let key = format!("fft1d_tc_n{n}_b{b}_fwd");
-        let meta = bench_meta_1d_tc(&key, n, b);
+        let meta = bench_meta_1d(&key, "tc", n, b);
         let x: Vec<_> = (0..b).flat_map(|i| random_signal(n, i as u64)).collect();
         let input = PlanarBatch::from_complex(&x, vec![b, n]);
 
@@ -140,6 +147,9 @@ fn main() -> tcfft::error::Result<()> {
         );
         let (m_ref, m_ser, m_par) =
             (r_ref.summary.median(), r_ser.summary.median(), r_par.summary.median());
+        if (n, b) == (4096, 32) {
+            headline_tc_par = Some(m_par);
+        }
         te.row(vec![
             key.clone(),
             format!("{:.2}", m_ref * 1e3),
@@ -150,6 +160,49 @@ fn main() -> tcfft::error::Result<()> {
         entries.push((
             key,
             bench_entry("fig4_1d", ENGINE_THREADS, r_par.summary.len(), m_ref, m_ser, m_par),
+        ));
+    }
+
+    // ---- part 4: the tc_ec tier's multiply cost at the headline ----
+    // never fused, 3x the stage multiplies: the "reference" series is
+    // the plain tc engine median just measured, so the entry's speedup
+    // reads directly as tc/tc_ec (a cost factor below 1)
+    {
+        let (n, b) = (4096usize, 32usize);
+        let key = format!("fft1d_tc_ec_n{n}_b{b}_fwd");
+        let meta = bench_meta_1d(&key, "tc_ec", n, b);
+        let m_tc = headline_tc_par.expect("headline shape runs in every mode");
+        let x: Vec<_> = (0..b).flat_map(|i| random_signal(n, i as u64)).collect();
+        let input = PlanarBatch::from_complex(&x, vec![b, n]);
+        let serial = CpuInterpreter::with_threads(1);
+        let parallel = CpuInterpreter::with_threads(ENGINE_THREADS);
+        serial.execute(&meta, input.clone())?; // warm both
+        parallel.execute(&meta, input.clone())?;
+        let r_ser = bench(
+            &format!("{key} engine 1t"),
+            || {
+                serial.execute(&meta, input.clone()).unwrap();
+            },
+            iters,
+        );
+        let r_par = bench(
+            &format!("{key} engine {ENGINE_THREADS}t"),
+            || {
+                parallel.execute(&meta, input.clone()).unwrap();
+            },
+            iters,
+        );
+        let (m_ser, m_par) = (r_ser.summary.median(), r_par.summary.median());
+        te.row(vec![
+            key.clone(),
+            format!("{:.2}", m_tc * 1e3),
+            format!("{:.2}", m_ser * 1e3),
+            format!("{:.2}", m_par * 1e3),
+            format!("{:.2}x", m_tc / m_par),
+        ]);
+        entries.push((
+            key,
+            bench_entry("fig4_1d", ENGINE_THREADS, r_par.summary.len(), m_tc, m_ser, m_par),
         ));
     }
     let path = update_bench_json(&entries)?;

@@ -8,7 +8,10 @@
 //! complex engine wrapped in the fused half-spectrum split. Medians
 //! merge into `BENCH_interp.json` (entry `rfft1d_tc_n4096_b32_fwd`,
 //! fields: `reference_median_s` = C2C, `engine_median_s` = R2C) and
-//! `tcfft bench-validate` checks them in CI.
+//! `tcfft bench-validate` checks them in CI. A fourth timed series
+//! runs the same R2C shape on the error-corrected `tc_ec` tier — a
+//! printed cost column only (the JSON-recorded tc_ec entry lives in
+//! fig4_1d as `fft1d_tc_ec_n4096_b32_fwd`).
 //!
 //!     cargo bench --bench rfft_1d
 //!     TCFFT_BENCH_SMOKE=1 cargo bench --bench rfft_1d   # CI smoke
@@ -30,12 +33,12 @@ const ENGINE_THREADS: usize = 4;
 /// Bench-local variant descriptor (the synthesized catalog carries the
 /// b=4 serving tiers; the bench compares engines at the headline batch
 /// without perturbing `find_fft1d`'s tier selection — see fig4_1d).
-fn bench_meta(op: &str, key: &str, n: usize, batch: usize) -> VariantMeta {
+fn bench_meta(op: &str, algo: &str, key: &str, n: usize, batch: usize) -> VariantMeta {
     VariantMeta {
         key: key.to_string(),
         file: std::path::PathBuf::new(),
         op: op.to_string(),
-        algo: "tc".to_string(),
+        algo: algo.to_string(),
         n,
         nx: 0,
         ny: 0,
@@ -53,8 +56,9 @@ fn main() -> tcfft::error::Result<()> {
     header("Real-input R2C vs same-size complex C2C");
     let iters = if smoke() { 3 } else { 12 };
 
-    let c2c_meta = bench_meta("fft1d", "bench_fft1d_tc_n4096_b32_fwd", N, BATCH);
-    let r2c_meta = bench_meta("rfft1d", "bench_rfft1d_tc_n4096_b32_fwd", N, BATCH);
+    let c2c_meta = bench_meta("fft1d", "tc", "bench_fft1d_tc_n4096_b32_fwd", N, BATCH);
+    let r2c_meta = bench_meta("rfft1d", "tc", "bench_rfft1d_tc_n4096_b32_fwd", N, BATCH);
+    let ec_meta = bench_meta("rfft1d", "tc_ec", "bench_rfft1d_tc_ec_n4096_b32_fwd", N, BATCH);
 
     // the same real signal drives both paths: C2C sees it promoted to
     // complex (im = 0), R2C consumes the re plane directly
@@ -67,8 +71,9 @@ fn main() -> tcfft::error::Result<()> {
     let c2c = CpuInterpreter::with_threads(ENGINE_THREADS);
     let r2c_serial = CpuInterpreter::with_threads(1);
     let r2c = CpuInterpreter::with_threads(ENGINE_THREADS);
-    c2c.execute(&c2c_meta, input.clone())?; // warm all three
+    c2c.execute(&c2c_meta, input.clone())?; // warm all four
     r2c_serial.execute(&r2c_meta, input.clone())?;
+    r2c.execute(&ec_meta, input.clone())?;
     let (packed, _) = r2c.execute(&r2c_meta, input.clone())?;
 
     // correctness gate before timing: packed row 0 vs the f64 oracle
@@ -101,17 +106,30 @@ fn main() -> tcfft::error::Result<()> {
         },
         iters,
     );
-    let (m_c2c, m_ser, m_par) =
-        (r_c2c.summary.median(), r_ser.summary.median(), r_par.summary.median());
+    let r_ec = bench(
+        &format!("R2C ec n={N} b={BATCH} {ENGINE_THREADS}t"),
+        || {
+            r2c.execute(&ec_meta, input.clone()).unwrap();
+        },
+        iters,
+    );
+    let (m_c2c, m_ser, m_par, m_ec) = (
+        r_c2c.summary.median(),
+        r_ser.summary.median(),
+        r_par.summary.median(),
+        r_ec.summary.median(),
+    );
 
     let key = format!("rfft1d_tc_n{N}_b{BATCH}_fwd");
-    let mut t = Table::new(&["key", "C2C ms", "R2C 1t ms", "R2C 4t ms", "R2C speedup"]);
+    let mut t =
+        Table::new(&["key", "C2C ms", "R2C 1t ms", "R2C 4t ms", "R2C speedup", "ec 4t ms"]);
     t.row(vec![
         key.clone(),
         format!("{:.2}", m_c2c * 1e3),
         format!("{:.2}", m_ser * 1e3),
         format!("{:.2}", m_par * 1e3),
         format!("{:.2}x", m_c2c / m_par),
+        format!("{:.2}", m_ec * 1e3),
     ]);
     let entries = vec![(
         key,

@@ -77,9 +77,9 @@ USAGE: tcfft <SUBCOMMAND> [OPTIONS]
   bench-validate [--file BENCH_interp.json]
                                 validate the bench JSON emitted by
                                 fig4_1d/fig7_batch/large_fourstep/
-                                rfft_1d/rfft_2d/table4_precision (run
-                                those first; see BENCHMARKS.md for the
-                                schema)
+                                rfft_1d/rfft_2d/rfft2d_large/e2e_serve/
+                                table4_precision (run those first; see
+                                BENCHMARKS.md for the schema)
   precision                     Table 4: relative error vs FFTW-f64 stand-in
   table2                        Table 2: memsim bandwidth vs continuous size
   figures                       Figs 4-7: modelled V100/A100 series
@@ -320,9 +320,10 @@ fn bench_cmd(args: &Args) -> Result<()> {
 /// expected schema, and holds the headline before/after entry, the
 /// batch-sweep anchor, the four-step large-FFT acceptance entry, the
 /// 1D and 2D R2C-vs-C2C acceptance entries, the large-2D composition
-/// entry, the 64-client serving entry, and the tc_ec accuracy-gain
-/// entry (>= 10x). The schema and every entry key are documented in
-/// BENCHMARKS.md.
+/// entry, the 64-client serving entry, the tc_ec accuracy-gain entry
+/// (>= 10x), and the tc_ec time-cost entry (its "speedup" is tc/tc_ec
+/// and is expected below 1). The schema and every entry key are
+/// documented in BENCHMARKS.md.
 fn bench_validate_cmd(args: &Args) -> Result<()> {
     use tcfft::bench_harness::BENCH_SCHEMA;
     use tcfft::util::json::Json;
@@ -335,6 +336,7 @@ fn bench_validate_cmd(args: &Args) -> Result<()> {
     const RFFT2D_LARGE: &str = "rfft2d_tc_nx2048x2048_b4_fwd";
     const E2E: &str = "e2e_serve_tc_n4096_c64";
     const PRECISION_EC: &str = "precision_tc_ec_n4096_b32";
+    const EC_COST: &str = "fft1d_tc_ec_n4096_b32_fwd";
 
     // same default resolution as the emitting benches (cwd-independent)
     let default_file = tcfft::bench_harness::bench_json_path().display().to_string();
@@ -411,6 +413,13 @@ fn bench_validate_cmd(args: &Args) -> Result<()> {
         mp_gain >= 10.0,
         "{file}: {PRECISION_EC} accuracy gain {mp_gain:.1}x below the 10x floor"
     );
+    // the tc_ec time-cost entry (fig4_1d part 4): the "reference" median
+    // is the plain tc engine at the same shape, so speedup = tc/tc_ec —
+    // the multiply overhead the accuracy gain above is paid for with
+    let mc_tc = pos(EC_COST, "reference_median_s")?;
+    let mc_ec = pos(EC_COST, "engine_median_s")?;
+    pos(EC_COST, "engine_serial_median_s")?;
+    pos(EC_COST, "speedup")?;
 
     let mut t = Table::new(&["entry", "bench", "engine median ms", "speedup vs pre-PR"]);
     if let Json::Obj(m) = &entries {
@@ -469,6 +478,12 @@ fn bench_validate_cmd(args: &Args) -> Result<()> {
     );
     println!(
         "precision {PRECISION_EC}: tc rel-RMSE {mp_tc:.3e} -> tc_ec {mp_ec:.3e} ({mp_gain:.0}x more accurate)"
+    );
+    println!(
+        "ec cost {EC_COST}: tc {:.2} ms -> tc_ec {:.2} ms ({:.2}x the tc time)",
+        mc_tc * 1e3,
+        mc_ec * 1e3,
+        mc_ec / mc_tc
     );
     println!("bench-validate: OK ({file})");
     Ok(())

@@ -39,6 +39,13 @@
 //! `tc_split`, `tc_ec` stages are never fused: the hi/lo split points
 //! are part of the tier's observable contract.
 //!
+//! The test-only `f32ref` tier drops the fp16 model entirely: tables
+//! are raw `f64 -> f32` values, inputs are not quantized, and stage
+//! stores keep the full f32 accumulator. It exists as the precision
+//! ladder's top rung (what a plain f32 pipeline would produce — see
+//! `tests/precision_ladder.rs`) and is deliberately complex-only:
+//! the real half-spectrum tables are fp16, so `rfft*` ops reject it.
+//!
 //! # Execution engine (batch-major, fused, parallel)
 //!
 //! The engine is batch-major: each merge stage is applied to *all*
@@ -68,6 +75,15 @@
 //!   transforms don't pay dispatch overhead. Rows are independent, so
 //!   chunking cannot change results: the parallel engine is bit-exact
 //!   with the serial one (enforced by `tests/engine_equivalence.rs`).
+//! * **SIMD panel kernels** — [`super::simd`] re-runs the same stage
+//!   math as explicit vector panels (AVX2/AVX-512/NEON behind runtime
+//!   dispatch and the `TCFFT_SIMD` env knob), bit-for-bit identical to
+//!   the scalar kernels below on every tier: lanes are independent
+//!   output cells, each executing the exact scalar op sequence, so
+//!   vectorization reassociates nothing inside an accumulation chain
+//!   (enforced by `tests/simd_equivalence.rs`). The scalar kernels in
+//!   this file remain the portable fallback and the semantic ground
+//!   truth.
 //!
 //! # Real-input transforms (R2C / C2R)
 //!
@@ -104,6 +120,7 @@ use std::time::Instant;
 use super::buffers::PlanarBatch;
 use super::real::RealHalfSpectrum;
 use super::registry::VariantMeta;
+use super::simd;
 use super::{Backend, ExecStats};
 use crate::error::Result;
 use crate::fft::digitrev;
@@ -115,8 +132,11 @@ use crate::util::threadpool::{default_threads, ScopedJob, ThreadPool};
 const MAX_RADIX: usize = 16;
 
 /// Fuse the twiddle into the matmul operand only while the combined
-/// `r*r*n2` table stays cache-friendly; beyond this the two-pass
-/// kernel re-reads the (r x smaller) `T` table instead.
+/// tables stay cache-friendly; beyond this the two-pass kernel
+/// re-reads the (r x smaller) `T` table instead. Fused stages carry
+/// TWO layouts of the same `r*r*n2` table (k-major for the scalar
+/// kernel's splat walk, m-major for the SIMD kernels' contiguous-in-k
+/// loads), so the pricing charges `2 * r * r * n2` f32 elements.
 const FUSE_LIMIT: usize = 1 << 18;
 
 /// Minimum work (elements x stages) before fanning out to the pool;
@@ -130,7 +150,7 @@ const SCRATCH_ROW_BUDGET: usize = 1 << 19;
 /// fp16 rounding on the hot path (fast in-range path, full codec
 /// fallback — bit-identical to `rnd16_codec`, see `hp::f16` tests).
 #[inline]
-fn rnd16(x: f32) -> f32 {
+pub(crate) fn rnd16(x: f32) -> f32 {
     F16::round_f32(x)
 }
 
@@ -151,7 +171,7 @@ fn rnd16_codec(x: f32) -> f32 {
 
 /// Split an f32 into its fp16 hi half and fp16-rounded lo residual.
 #[inline]
-fn ec_split16(x: f32) -> (f32, f32) {
+pub(crate) fn ec_split16(x: f32) -> (f32, f32) {
     let h = rnd16(x);
     (h, rnd16(x - h))
 }
@@ -160,7 +180,7 @@ fn ec_split16(x: f32) -> (f32, f32) {
 /// the hi half saturates to inf and the lo residual would be -inf;
 /// `inf + -inf` is NaN, so keep the saturated store instead.
 #[inline]
-fn ec_store(x: f32) -> f32 {
+pub(crate) fn ec_store(x: f32) -> f32 {
     let h = rnd16(x);
     if h.is_finite() { h + rnd16(x - h) } else { h }
 }
@@ -169,7 +189,7 @@ fn ec_store(x: f32) -> f32 {
 /// `(ah*bh + ah*bl) + al*bh`. The `al*bl` term is below the
 /// correction's own rounding floor and is dropped (Ootomo & Yokota).
 #[inline]
-fn ec_mul(ah: f32, al: f32, bh: f32, bl: f32) -> f32 {
+pub(crate) fn ec_mul(ah: f32, al: f32, bh: f32, bl: f32) -> f32 {
     (ah * bh + ah * bl) + al * bh
 }
 
@@ -186,6 +206,28 @@ fn ec_split16_codec(x: f32) -> (f32, f32) {
 fn ec_store_codec(x: f32) -> f32 {
     let h = rnd16_codec(x);
     if h.is_finite() { h + rnd16_codec(x - h) } else { h }
+}
+
+/// Which accuracy tier a stage belongs to (mutually exclusive flags;
+/// all false = the plain `tc` tier).
+#[derive(Clone, Copy, Default)]
+struct StageTier {
+    /// `tc_split`: round the twiddled operand before the matmul
+    split: bool,
+    /// `tc_ec`: hi/lo operands, compensated products
+    ec: bool,
+    /// `f32ref`: unrounded tables, no store rounding (test-only)
+    raw: bool,
+}
+
+impl StageTier {
+    fn from_algo(algo: &str) -> StageTier {
+        StageTier {
+            split: algo == "tc_split",
+            ec: algo == "tc_ec",
+            raw: algo == "f32ref",
+        }
+    }
 }
 
 /// One merge stage with fp16-rounded operand tables.
@@ -209,16 +251,26 @@ struct MergeStage {
     /// stages always, huge stages past FUSE_LIMIT)
     w_re: Vec<f32>,
     w_im: Vec<f32>,
+    /// the same fused operand m-major [(m*r + j)*n2 + k] — identical
+    /// bits, contiguous in k for the SIMD kernels' vector loads
+    w_re_mj: Vec<f32>,
+    w_im_mj: Vec<f32>,
     /// de-fused ablation: round the twiddled operand before the matmul
     split: bool,
     /// error-corrected tier: hi/lo operands, compensated products
     ec: bool,
+    /// test-only full-f32 tier: unrounded tables, no store rounding
+    raw: bool,
 }
 
 impl MergeStage {
-    fn build(r: usize, n2: usize, inverse: bool, split: bool, ec: bool, fuse: bool) -> MergeStage {
+    fn build(r: usize, n2: usize, inverse: bool, tier: StageTier, fuse: bool) -> MergeStage {
+        let StageTier { split, ec, raw } = tier;
         assert!(r >= 2 && r <= MAX_RADIX, "stage radix {r} out of range");
         assert!(!(split && ec), "split and ec tiers are mutually exclusive");
+        assert!(!(raw && (split || ec)), "f32ref excludes the fp16 ablation tiers");
+        // f32ref keeps the raw f64->f32 table values (no fp16 rounding)
+        let quant = |v: f32| if raw { v } else { rnd16_codec(v) };
         let sign = if inverse { 2.0 } else { -2.0 };
         let mut f_re = vec![0f32; r * r];
         let mut f_im = vec![0f32; r * r];
@@ -230,8 +282,8 @@ impl MergeStage {
                 let ang = sign * std::f64::consts::PI * e / r as f64;
                 let (cr, ci) = (ang.cos() as f32, ang.sin() as f32);
                 let o = m * r + j;
-                f_re[o] = rnd16_codec(cr);
-                f_im[o] = rnd16_codec(ci);
+                f_re[o] = quant(cr);
+                f_im[o] = quant(ci);
                 if ec {
                     f_re_lo[o] = rnd16_codec(cr - f_re[o]);
                     f_im_lo[o] = rnd16_codec(ci - f_im[o]);
@@ -249,8 +301,8 @@ impl MergeStage {
                 let ang = sign * std::f64::consts::PI * e / block as f64;
                 let (cr, ci) = (ang.cos() as f32, ang.sin() as f32);
                 let o = j * n2 + k;
-                t_re[o] = rnd16_codec(cr);
-                t_im[o] = rnd16_codec(ci);
+                t_re[o] = quant(cr);
+                t_im[o] = quant(ci);
                 if ec {
                     t_re_lo[o] = rnd16_codec(cr - t_re[o]);
                     t_im_lo[o] = rnd16_codec(ci - t_im[o]);
@@ -258,7 +310,8 @@ impl MergeStage {
             }
         }
         let (mut w_re, mut w_im) = (Vec::new(), Vec::new());
-        if fuse && !split && !ec && r * r * n2 <= FUSE_LIMIT {
+        let (mut w_re_mj, mut w_im_mj) = (Vec::new(), Vec::new());
+        if fuse && !split && !ec && !raw && 2 * r * r * n2 <= FUSE_LIMIT {
             w_re = vec![0f32; r * r * n2];
             w_im = vec![0f32; r * r * n2];
             for k in 0..n2 {
@@ -269,6 +322,20 @@ impl MergeStage {
                         let o = (k * r + m) * r + j;
                         w_re[o] = fr * tr - fi * ti;
                         w_im[o] = fr * ti + fi * tr;
+                    }
+                }
+            }
+            // the m-major twin copies the SAME bits, so the SIMD and
+            // scalar kernels read identical operand values
+            w_re_mj = vec![0f32; r * r * n2];
+            w_im_mj = vec![0f32; r * r * n2];
+            for m in 0..r {
+                for j in 0..r {
+                    for k in 0..n2 {
+                        let o_mj = (m * r + j) * n2 + k;
+                        let o_km = (k * r + m) * r + j;
+                        w_re_mj[o_mj] = w_re[o_km];
+                        w_im_mj[o_mj] = w_im[o_km];
                     }
                 }
             }
@@ -286,8 +353,33 @@ impl MergeStage {
             t_im_lo,
             w_re,
             w_im,
+            w_re_mj,
+            w_im_mj,
             split,
             ec,
+            raw,
+        }
+    }
+
+    /// Borrowed view handed to the SIMD kernels in [`super::simd`].
+    fn view(&self) -> simd::StageView<'_> {
+        simd::StageView {
+            r: self.r,
+            n2: self.n2,
+            f_re: &self.f_re,
+            f_im: &self.f_im,
+            t_re: &self.t_re,
+            t_im: &self.t_im,
+            f_re_lo: &self.f_re_lo,
+            f_im_lo: &self.f_im_lo,
+            t_re_lo: &self.t_re_lo,
+            t_im_lo: &self.t_im_lo,
+            w_re: &self.w_re,
+            w_im: &self.w_im,
+            w_re_mj: &self.w_re_mj,
+            w_im_mj: &self.w_im_mj,
+            split: self.split,
+            ec: self.ec,
         }
     }
 
@@ -312,12 +404,11 @@ impl AxisPipeline {
             digitrev::radix_schedule(n_axis)
         };
         let perm = digitrev::digit_reverse_indices(n_axis, &radices);
-        let split = algo == "tc_split";
-        let ec = algo == "tc_ec";
+        let tier = StageTier::from_algo(algo);
         let mut stages = Vec::with_capacity(radices.len());
         let mut n2 = 1usize;
         for &r in &radices {
-            stages.push(MergeStage::build(r, n2, inverse, split, ec, fuse));
+            stages.push(MergeStage::build(r, n2, inverse, tier, fuse));
             n2 *= r;
         }
         debug_assert_eq!(n2, n_axis);
@@ -594,7 +685,59 @@ fn stage_generic(
     }
 }
 
-/// Dispatch one batched stage application to its micro-kernel.
+/// Full-f32 kernel for the test-only `f32ref` tier: the generic
+/// two-pass structure with unrounded tables and no rounding at any
+/// store — the precision ladder's top rung. Shared verbatim by both
+/// engines (there is nothing engine-specific left to round), and
+/// deliberately scalar: `f32ref` is a diagnostic, not a hot path.
+fn stage_generic_raw(
+    st: &MergeStage,
+    in_re: &[f32],
+    in_im: &[f32],
+    out_re: &mut [f32],
+    out_im: &mut [f32],
+    lane: usize,
+) {
+    let r = st.r;
+    let n2 = st.n2;
+    let block = r * n2;
+    let groups = in_re.len() / (block * lane);
+    let mut xr = [0f32; MAX_RADIX];
+    let mut xi = [0f32; MAX_RADIX];
+    for g in 0..groups {
+        let gbase = g * block;
+        for k in 0..n2 {
+            for l in 0..lane {
+                for j in 0..r {
+                    let idx = (gbase + j * n2 + k) * lane + l;
+                    let (ar, ai) = (in_re[idx], in_im[idx]);
+                    let (tr, ti) = (st.t_re[j * n2 + k], st.t_im[j * n2 + k]);
+                    xr[j] = ar * tr - ai * ti;
+                    xi[j] = ar * ti + ai * tr;
+                }
+                for m in 0..r {
+                    let fo = m * r;
+                    let mut acc_re = 0f32;
+                    let mut acc_im = 0f32;
+                    for j in 0..r {
+                        let (fr, fi) = (st.f_re[fo + j], st.f_im[fo + j]);
+                        acc_re += fr * xr[j] - fi * xi[j];
+                        acc_im += fr * xi[j] + fi * xr[j];
+                    }
+                    let idx = (gbase + m * n2 + k) * lane + l;
+                    out_re[idx] = acc_re;
+                    out_im[idx] = acc_im;
+                }
+            }
+        }
+    }
+}
+
+/// Dispatch one batched stage application to its micro-kernel. The
+/// SIMD panel kernels take the stage first when a vector path is
+/// active (env/forced dispatch in [`simd::active`]) and the radix is
+/// one they cover; their output is bit-identical to the scalar
+/// kernels below, so this routing is unobservable in results.
 fn apply_stage_batched(
     st: &MergeStage,
     in_re: &[f32],
@@ -603,6 +746,22 @@ fn apply_stage_batched(
     out_im: &mut [f32],
     lane: usize,
 ) {
+    if st.raw {
+        return stage_generic_raw(st, in_re, in_im, out_re, out_im, lane);
+    }
+    let path = simd::active();
+    if path != simd::SimdPath::Scalar {
+        let mut bufs = simd::StageBufs {
+            in_re,
+            in_im,
+            out_re: &mut *out_re,
+            out_im: &mut *out_im,
+            lane,
+        };
+        if simd::apply_stage(path, &st.view(), &mut bufs) {
+            return;
+        }
+    }
     if st.ec {
         return match st.r {
             2 => stage_unfused_ec::<2>(st, in_re, in_im, out_re, out_im, lane),
@@ -978,16 +1137,22 @@ impl Backend for CpuInterpreter {
     }
 
     fn execute(&self, meta: &VariantMeta, input: PlanarBatch) -> Result<(PlanarBatch, ExecStats)> {
+        crate::ensure!(
+            meta.algo != "f32ref" || !meta.op.starts_with("rfft"),
+            "f32ref is a complex-only diagnostic tier: the {} half-spectrum tables are fp16",
+            meta.op
+        );
         let (compiled, fresh) = self.compiled(meta);
 
         // marshal: quantize the host f32 input to the fp16 the device
         // sees — in place, the execute path owns its buffer. The ec
-        // tier carries hi + lo fp16 pairs instead of one rounding.
+        // tier carries hi + lo fp16 pairs instead of one rounding;
+        // f32ref skips quantization entirely.
         let tm = Instant::now();
         let mut q = input;
         if meta.algo == "tc_ec" {
             q.quantize_f16_ec_mut();
-        } else {
+        } else if meta.algo != "f32ref" {
             q.quantize_f16_mut();
         }
         let marshal_seconds = tm.elapsed().as_secs_f64();
@@ -1150,6 +1315,11 @@ fn reference_apply_stage(
     out_im: &mut [f32],
     lane: usize,
 ) {
+    if st.raw {
+        // f32ref has no rounding points left to differ on, so both
+        // engines share the one raw kernel
+        return stage_generic_raw(st, in_re, in_im, out_re, out_im, lane);
+    }
     if st.ec {
         return reference_apply_stage_ec(st, in_re, in_im, out_re, out_im, lane);
     }
@@ -1229,12 +1399,19 @@ impl Backend for ReferenceInterpreter {
     }
 
     fn execute(&self, meta: &VariantMeta, input: PlanarBatch) -> Result<(PlanarBatch, ExecStats)> {
+        crate::ensure!(
+            meta.algo != "f32ref" || !meta.op.starts_with("rfft"),
+            "f32ref is a complex-only diagnostic tier: the {} half-spectrum tables are fp16",
+            meta.op
+        );
         let (compiled, fresh) = self.compiled(meta);
         let tm = Instant::now();
         let mut q = if meta.algo == "tc_ec" {
             let mut q = input;
             q.quantize_f16_ec_mut();
             q
+        } else if meta.algo == "f32ref" {
+            input
         } else {
             input.quantize_f16()
         };
@@ -1584,8 +1761,14 @@ mod tests {
         assert!(split.stages.iter().all(|s| !s.fused()));
         let ec = AxisPipeline::build(256, "tc_ec", false, true);
         assert!(ec.stages.iter().all(|s| !s.fused() && s.ec));
-        // a stage past FUSE_LIMIT falls back to the two-pass kernel
-        let big = MergeStage::build(16, FUSE_LIMIT / 16 + 1, false, false, false, true);
+        let raw = AxisPipeline::build(256, "f32ref", false, true);
+        assert!(raw.stages.iter().all(|s| !s.fused() && s.raw));
+        // the pricing charges both W layouts (2*r*r*n2): one element
+        // past the boundary falls back to the two-pass kernel
+        let boundary = FUSE_LIMIT / (2 * 16 * 16);
+        let fits = MergeStage::build(16, boundary, false, StageTier::default(), true);
+        assert!(fits.fused());
+        let big = MergeStage::build(16, boundary + 1, false, StageTier::default(), true);
         assert!(!big.fused());
         // fuse=false (reference compile) never builds W
         let unfused = AxisPipeline::build(256, "tc", false, false);
@@ -1593,8 +1776,26 @@ mod tests {
     }
 
     #[test]
+    fn fused_stages_carry_both_w_layouts_with_identical_bits() {
+        let st = MergeStage::build(16, 4, false, StageTier::default(), true);
+        assert!(st.fused());
+        assert_eq!(st.w_re_mj.len(), st.w_re.len());
+        for m in 0..16 {
+            for j in 0..16 {
+                for k in 0..4 {
+                    let o_mj = (m * 16 + j) * 4 + k;
+                    let o_km = (k * 16 + m) * 16 + j;
+                    assert_eq!(st.w_re_mj[o_mj].to_bits(), st.w_re[o_km].to_bits());
+                    assert_eq!(st.w_im_mj[o_mj].to_bits(), st.w_im[o_km].to_bits());
+                }
+            }
+        }
+    }
+
+    #[test]
     fn ec_tables_carry_fp16_residuals() {
-        let st = MergeStage::build(16, 4, false, false, true, true);
+        let ec_tier = StageTier { ec: true, ..StageTier::default() };
+        let st = MergeStage::build(16, 4, false, ec_tier, true);
         assert_eq!(st.f_re_lo.len(), st.f_re.len());
         assert_eq!(st.t_re_lo.len(), st.t_re.len());
         for i in 0..st.f_re.len() {
@@ -1603,8 +1804,57 @@ mod tests {
             assert!(st.f_re_lo[i].abs() <= 5e-4, "lo[{i}] = {}", st.f_re_lo[i]);
         }
         // non-ec stages carry no residual tables
-        let plain = MergeStage::build(16, 4, false, false, false, true);
+        let plain = MergeStage::build(16, 4, false, StageTier::default(), true);
         assert!(plain.f_re_lo.is_empty() && plain.t_re_lo.is_empty());
+    }
+
+    /// A hand-built `f32ref` variant (the synthesized catalog does not
+    /// carry the diagnostic tier; tests construct it directly).
+    fn meta_f32ref(op: &str, n: usize, batch: usize) -> VariantMeta {
+        VariantMeta {
+            key: format!("{op}_f32ref_n{n}_b{batch}_fwd"),
+            file: std::path::PathBuf::new(),
+            op: op.to_string(),
+            algo: "f32ref".to_string(),
+            n,
+            nx: n,
+            ny: n,
+            batch,
+            inverse: false,
+            input_shape: vec![batch, n],
+            stages: Vec::new(),
+            flops_per_seq: 0.0,
+            hbm_bytes_per_seq: 0.0,
+            radix2_equiv_flops: 0.0,
+        }
+    }
+
+    #[test]
+    fn f32ref_tier_runs_unrounded_and_rejects_real_ops() {
+        // the raw tier's tables keep bits fp16 rounding would drop
+        let raw = AxisPipeline::build(64, "f32ref", false, true);
+        assert!(raw
+            .stages
+            .iter()
+            .any(|s| s.f_re.iter().any(|&v| rnd16(v).to_bits() != v.to_bits())));
+        // unquantized input, unrounded stores: far tighter than tc
+        let meta = meta_f32ref("fft1d", 64, 4);
+        let sig = random_signal(64, 7);
+        let input = PlanarBatch::from_complex(&sig, vec![1, 64]).pad_batch(4);
+        let (out, _) = CpuInterpreter::new().execute(&meta, input.clone()).unwrap();
+        let (out_ref, _) = ReferenceInterpreter::new().execute(&meta, input.clone()).unwrap();
+        let want = refdft::dft(&widen(&input.to_complex()[..64]), false);
+        let err = relative_rmse(&want, &widen(&out.to_complex()[..64]));
+        assert!(err < 1e-6, "f32ref rmse {err}");
+        for i in 0..out.len() {
+            assert_eq!(out.re[i].to_bits(), out_ref.re[i].to_bits(), "re[{i}]");
+            assert_eq!(out.im[i].to_bits(), out_ref.im[i].to_bits(), "im[{i}]");
+        }
+        // complex-only: the real path's half-spectrum tables are fp16
+        let rmeta = meta_f32ref("rfft1d", 64, 4);
+        let rin = PlanarBatch::new(vec![4, 64]);
+        assert!(CpuInterpreter::new().execute(&rmeta, rin.clone()).is_err());
+        assert!(ReferenceInterpreter::new().execute(&rmeta, rin).is_err());
     }
 
     #[test]

@@ -19,6 +19,7 @@ pub mod executor;
 pub mod interpreter;
 pub mod real;
 pub mod registry;
+pub mod simd;
 
 pub use buffers::PlanarBatch;
 #[cfg(feature = "pjrt")]
@@ -26,6 +27,7 @@ pub use executor::Executor;
 pub use interpreter::{CpuInterpreter, ReferenceInterpreter};
 pub use real::RealHalfSpectrum;
 pub use registry::{Registry, StageMeta, VariantMeta};
+pub use simd::SimdPath;
 
 use std::path::Path;
 use std::sync::Arc;

@@ -1,0 +1,893 @@
+//! Explicit-SIMD stage kernels behind safe runtime dispatch — the CPU
+//! analog of the paper's Tensor-Core fragment kernels, with a hard
+//! bitwise contract against the scalar micro-kernels.
+//!
+//! # Dispatch
+//!
+//! | path     | ISA gate                              | f32 lanes | availability |
+//! |----------|---------------------------------------|-----------|--------------|
+//! | `scalar` | none — the untouched scalar kernels   | 1         | always |
+//! | `avx2`   | `target_feature(enable = "avx2")`     | 8         | x86_64 with runtime `avx2` |
+//! | `avx512` | `target_feature(enable = "avx512f")`  | 16        | x86_64 with runtime `avx512f`, **and** the off-by-default `avx512` cargo feature (the `_mm512` intrinsics stabilized in Rust 1.89) |
+//! | `neon`   | `target_feature(enable = "neon")`     | 4         | aarch64 with runtime `neon` |
+//!
+//! Selection order: a programmatic [`force`] override (tests/CI), else
+//! the `TCFFT_SIMD` env knob (`auto|avx2|avx512|neon|scalar`, read
+//! once), else [`detect_best`]. Requesting a path the CPU or build
+//! lacks warns on stderr and falls back to `scalar` — it never
+//! silently upgrades, so a forced-`scalar` CI lane really is scalar.
+//! All `std::arch` intrinsics in the crate live in this module (gated
+//! by `ci.sh`'s grep check), and every `unsafe` call is reached only
+//! after the matching runtime CPU detection.
+//!
+//! # The bitwise-equality contract
+//!
+//! Every SIMD path must produce **bit-for-bit** the scalar kernels'
+//! output on all tiers (`tests/simd_equivalence.rs` enforces this per
+//! available path). The kernels get that by construction, not by
+//! tolerance:
+//!
+//! * Vector lanes map to *independent output cells* — batch rows,
+//!   stage groups, twiddle columns `k`, or 2D lanes `l`. Each lane
+//!   executes exactly the scalar per-cell float-op sequence: separate
+//!   IEEE mul/add/sub in scalar order (**no FMA**, which would skip
+//!   an intermediate f32 rounding the scalar kernels perform).
+//! * Vectorization may therefore reassociate *across* cells only —
+//!   never inside a radix-R accumulation chain, whose left-to-right
+//!   `acc += w*x` order (and, on `tc_ec`, the left-to-right
+//!   `hi*hi + hi*lo + lo*hi` compensated-product order) is part of
+//!   each tier's observable numeric contract.
+//! * Every fp16 rounding point (`rnd16` stage stores, the `tc_split`
+//!   operand rounding, the `tc_ec` `ec_split16`/`ec_store` split
+//!   points including the finite-hi overflow guard) runs through the
+//!   *same scalar helpers* on a per-lane staging buffer.
+//!
+//! Remainders that do not fill a vector run through the same generic
+//! panel bodies monomorphized at width 1 (the `V1` scalar "vector"),
+//! so tail cells share the vector code path rather than a hand-copied
+//! scalar one.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+
+use super::interpreter::{ec_mul, ec_split16, ec_store, rnd16};
+use crate::error::Result;
+
+/// Widest supported vector (AVX-512); sizes the per-panel staging
+/// buffers the scalar rounding helpers run over.
+const MAX_W: usize = 16;
+
+/// One selectable kernel path. `Scalar` means "use the untouched
+/// scalar micro-kernels in `interpreter.rs`" — it is the portable
+/// fallback and the reference side of the bitwise contract.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimdPath {
+    /// Portable scalar kernels (byte-for-byte the pre-SIMD code path).
+    Scalar,
+    /// 8-lane f32 on x86_64 (`avx2`).
+    Avx2,
+    /// 16-lane f32 on x86_64 (`avx512f`; needs the `avx512` feature).
+    Avx512,
+    /// 4-lane f32 on aarch64 (`neon`).
+    Neon,
+}
+
+impl SimdPath {
+    /// Parse a concrete path name (`auto` is resolved by the caller).
+    pub fn parse(s: &str) -> Option<SimdPath> {
+        match s {
+            "scalar" => Some(SimdPath::Scalar),
+            "avx2" => Some(SimdPath::Avx2),
+            "avx512" => Some(SimdPath::Avx512),
+            "neon" => Some(SimdPath::Neon),
+            _ => None,
+        }
+    }
+
+    fn code(self) -> u8 {
+        match self {
+            SimdPath::Scalar => 1,
+            SimdPath::Avx2 => 2,
+            SimdPath::Avx512 => 3,
+            SimdPath::Neon => 4,
+        }
+    }
+
+    fn from_code(c: u8) -> SimdPath {
+        match c {
+            2 => SimdPath::Avx2,
+            3 => SimdPath::Avx512,
+            4 => SimdPath::Neon,
+            _ => SimdPath::Scalar,
+        }
+    }
+}
+
+impl std::fmt::Display for SimdPath {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            SimdPath::Scalar => "scalar",
+            SimdPath::Avx2 => "avx2",
+            SimdPath::Avx512 => "avx512",
+            SimdPath::Neon => "neon",
+        })
+    }
+}
+
+/// Whether `path` can actually execute on this CPU and build.
+pub fn available(path: SimdPath) -> bool {
+    match path {
+        SimdPath::Scalar => true,
+        #[cfg(target_arch = "x86_64")]
+        SimdPath::Avx2 => is_x86_feature_detected!("avx2"),
+        #[cfg(all(target_arch = "x86_64", feature = "avx512"))]
+        SimdPath::Avx512 => is_x86_feature_detected!("avx512f"),
+        #[cfg(target_arch = "aarch64")]
+        SimdPath::Neon => std::arch::is_aarch64_feature_detected!("neon"),
+        _ => false,
+    }
+}
+
+/// Every vector (non-scalar) path this CPU/build can execute, widest
+/// first — what `tests/simd_equivalence.rs` iterates.
+pub fn available_vector_paths() -> Vec<SimdPath> {
+    [SimdPath::Avx512, SimdPath::Avx2, SimdPath::Neon]
+        .into_iter()
+        .filter(|&p| available(p))
+        .collect()
+}
+
+/// The widest available path (`Scalar` when no vector ISA is usable).
+pub fn detect_best() -> SimdPath {
+    available_vector_paths().first().copied().unwrap_or(SimdPath::Scalar)
+}
+
+const FORCE_UNSET: u8 = 0;
+static FORCED: AtomicU8 = AtomicU8::new(FORCE_UNSET);
+
+/// Programmatic override of the active path — the in-process twin of
+/// `TCFFT_SIMD`, for tests and CI harnesses that must flip paths
+/// without respawning. `force(None)` restores env/auto selection.
+/// Errors (and changes nothing) when the requested path is not
+/// [`available`], so callers can skip-with-note instead of silently
+/// testing the wrong kernels.
+pub fn force(path: Option<SimdPath>) -> Result<()> {
+    match path {
+        None => {
+            FORCED.store(FORCE_UNSET, Ordering::SeqCst);
+            Ok(())
+        }
+        Some(p) => {
+            crate::ensure!(
+                available(p),
+                "SIMD path {p} is not available on this CPU/build \
+                 (arch {}, avx512 feature {})",
+                std::env::consts::ARCH,
+                cfg!(feature = "avx512")
+            );
+            FORCED.store(p.code(), Ordering::SeqCst);
+            Ok(())
+        }
+    }
+}
+
+/// The path the stage dispatcher uses right now: a [`force`] override
+/// if set, else the cached `TCFFT_SIMD`/auto selection. Always returns
+/// an [`available`] path.
+pub fn active() -> SimdPath {
+    match FORCED.load(Ordering::Relaxed) {
+        FORCE_UNSET => env_selected(),
+        c => SimdPath::from_code(c),
+    }
+}
+
+fn env_selected() -> SimdPath {
+    static CHOICE: OnceLock<SimdPath> = OnceLock::new();
+    *CHOICE.get_or_init(resolve_env)
+}
+
+fn resolve_env() -> SimdPath {
+    let raw = match std::env::var("TCFFT_SIMD") {
+        Err(_) => return detect_best(),
+        Ok(v) => v,
+    };
+    let name = raw.trim().to_ascii_lowercase();
+    if name.is_empty() || name == "auto" {
+        return detect_best();
+    }
+    match SimdPath::parse(&name) {
+        Some(p) if available(p) => p,
+        Some(p) => {
+            eprintln!(
+                "tcfft: TCFFT_SIMD={name} requests {p}, which this CPU/build lacks; \
+                 falling back to scalar kernels"
+            );
+            SimdPath::Scalar
+        }
+        None => {
+            eprintln!(
+                "tcfft: unknown TCFFT_SIMD value {raw:?} \
+                 (want auto|avx2|avx512|neon|scalar); using auto"
+            );
+            detect_best()
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// stage operand view + panel descriptors
+// ---------------------------------------------------------------------
+
+/// Borrowed view of one `MergeStage`'s operand tables — what the panel
+/// kernels read. Built by `interpreter::MergeStage::view`.
+pub(crate) struct StageView<'a> {
+    pub r: usize,
+    pub n2: usize,
+    /// F_r row-major `[m*r + j]`
+    pub f_re: &'a [f32],
+    pub f_im: &'a [f32],
+    /// T row-major `[j*n2 + k]`
+    pub t_re: &'a [f32],
+    pub t_im: &'a [f32],
+    /// fp16 lo residuals (`tc_ec` only, else empty)
+    pub f_re_lo: &'a [f32],
+    pub f_im_lo: &'a [f32],
+    pub t_re_lo: &'a [f32],
+    pub t_im_lo: &'a [f32],
+    /// fused combined operand, k-major `[(k*r + m)*r + j]` (splat loads)
+    pub w_re: &'a [f32],
+    pub w_im: &'a [f32],
+    /// fused combined operand, m-major `[(m*r + j)*n2 + k]` — the same
+    /// bits laid out contiguously in `k` for vector loads
+    pub w_re_mj: &'a [f32],
+    pub w_im_mj: &'a [f32],
+    pub split: bool,
+    pub ec: bool,
+}
+
+/// The planar buffers one stage application reads and writes.
+pub(crate) struct StageBufs<'a> {
+    pub in_re: &'a [f32],
+    pub in_im: &'a [f32],
+    pub out_re: &'a mut [f32],
+    pub out_im: &'a mut [f32],
+    pub lane: usize,
+}
+
+/// One vector-wide panel of output cells. Lane `i` of the vector is
+/// the cell whose input element (for digit `j`) sits at
+/// `(gbase + j*n2 + k)*lane + l0 + i*stride`, at twiddle column
+/// `k + i*k_step` — so lanes run across `k` (`stride == 1`,
+/// `k_step == 1`, 1D), across `l` (`stride == 1`, `k_step == 0`, 2D
+/// lanes), or across groups (`stride == block*lane`, `k_step == 0`).
+#[derive(Clone, Copy)]
+struct Panel {
+    gbase: usize,
+    k: usize,
+    l0: usize,
+    stride: usize,
+    k_step: usize,
+}
+
+// ---------------------------------------------------------------------
+// the vector abstraction
+// ---------------------------------------------------------------------
+
+/// A width-`W` f32 vector whose ops are the per-lane IEEE scalar ops.
+/// All methods are `unsafe` because the intrinsic impls require their
+/// ISA target-feature to be enabled in the calling context.
+trait V32: Copy {
+    const W: usize;
+    /// Load `W` contiguous f32s at `s[i..]`.
+    unsafe fn load(s: &[f32], i: usize) -> Self;
+    /// Store the `W` lanes into the front of a staging buffer.
+    unsafe fn store(self, out: &mut [f32; MAX_W]);
+    /// Broadcast one f32 to every lane.
+    unsafe fn splat(x: f32) -> Self;
+    unsafe fn mul(self, b: Self) -> Self;
+    unsafe fn add(self, b: Self) -> Self;
+    unsafe fn sub(self, b: Self) -> Self;
+}
+
+/// Width-1 "vector": plain scalar f32 ops. Panel tails run the generic
+/// bodies at this width, so remainder cells execute the same code path
+/// (and trivially the same op order) as the full vectors.
+#[derive(Clone, Copy)]
+struct V1(f32);
+
+impl V32 for V1 {
+    const W: usize = 1;
+    #[inline(always)]
+    unsafe fn load(s: &[f32], i: usize) -> Self {
+        V1(s[i])
+    }
+    #[inline(always)]
+    unsafe fn store(self, out: &mut [f32; MAX_W]) {
+        out[0] = self.0;
+    }
+    #[inline(always)]
+    unsafe fn splat(x: f32) -> Self {
+        V1(x)
+    }
+    #[inline(always)]
+    unsafe fn mul(self, b: Self) -> Self {
+        V1(self.0 * b.0)
+    }
+    #[inline(always)]
+    unsafe fn add(self, b: Self) -> Self {
+        V1(self.0 + b.0)
+    }
+    #[inline(always)]
+    unsafe fn sub(self, b: Self) -> Self {
+        V1(self.0 - b.0)
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use super::{V32, MAX_W};
+    use std::arch::x86_64::*;
+
+    /// 8-lane AVX2 vector. Safety: every method requires the `avx`
+    /// target feature (callers are `#[target_feature(enable="avx2")]`).
+    #[derive(Clone, Copy)]
+    pub(super) struct V8(__m256);
+
+    impl V32 for V8 {
+        const W: usize = 8;
+        #[inline(always)]
+        unsafe fn load(s: &[f32], i: usize) -> Self {
+            debug_assert!(i + Self::W <= s.len());
+            V8(_mm256_loadu_ps(s.as_ptr().add(i)))
+        }
+        #[inline(always)]
+        unsafe fn store(self, out: &mut [f32; MAX_W]) {
+            _mm256_storeu_ps(out.as_mut_ptr(), self.0)
+        }
+        #[inline(always)]
+        unsafe fn splat(x: f32) -> Self {
+            V8(_mm256_set1_ps(x))
+        }
+        #[inline(always)]
+        unsafe fn mul(self, b: Self) -> Self {
+            V8(_mm256_mul_ps(self.0, b.0))
+        }
+        #[inline(always)]
+        unsafe fn add(self, b: Self) -> Self {
+            V8(_mm256_add_ps(self.0, b.0))
+        }
+        #[inline(always)]
+        unsafe fn sub(self, b: Self) -> Self {
+            V8(_mm256_sub_ps(self.0, b.0))
+        }
+    }
+
+    /// 16-lane AVX-512 vector, behind the `avx512` cargo feature (the
+    /// `_mm512` intrinsics stabilized in Rust 1.89). Safety: every
+    /// method requires the `avx512f` target feature.
+    #[cfg(feature = "avx512")]
+    #[derive(Clone, Copy)]
+    pub(super) struct V16(__m512);
+
+    #[cfg(feature = "avx512")]
+    impl V32 for V16 {
+        const W: usize = 16;
+        #[inline(always)]
+        unsafe fn load(s: &[f32], i: usize) -> Self {
+            debug_assert!(i + Self::W <= s.len());
+            V16(_mm512_loadu_ps(s.as_ptr().add(i)))
+        }
+        #[inline(always)]
+        unsafe fn store(self, out: &mut [f32; MAX_W]) {
+            _mm512_storeu_ps(out.as_mut_ptr(), self.0)
+        }
+        #[inline(always)]
+        unsafe fn splat(x: f32) -> Self {
+            V16(_mm512_set1_ps(x))
+        }
+        #[inline(always)]
+        unsafe fn mul(self, b: Self) -> Self {
+            V16(_mm512_mul_ps(self.0, b.0))
+        }
+        #[inline(always)]
+        unsafe fn add(self, b: Self) -> Self {
+            V16(_mm512_add_ps(self.0, b.0))
+        }
+        #[inline(always)]
+        unsafe fn sub(self, b: Self) -> Self {
+            V16(_mm512_sub_ps(self.0, b.0))
+        }
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+mod arm {
+    use super::{V32, MAX_W};
+    use std::arch::aarch64::*;
+
+    /// 4-lane NEON vector. Safety: every method requires the `neon`
+    /// target feature (callers are `#[target_feature(enable="neon")]`).
+    #[derive(Clone, Copy)]
+    pub(super) struct V4(float32x4_t);
+
+    impl V32 for V4 {
+        const W: usize = 4;
+        #[inline(always)]
+        unsafe fn load(s: &[f32], i: usize) -> Self {
+            debug_assert!(i + Self::W <= s.len());
+            V4(vld1q_f32(s.as_ptr().add(i)))
+        }
+        #[inline(always)]
+        unsafe fn store(self, out: &mut [f32; MAX_W]) {
+            vst1q_f32(out.as_mut_ptr(), self.0)
+        }
+        #[inline(always)]
+        unsafe fn splat(x: f32) -> Self {
+            V4(vdupq_n_f32(x))
+        }
+        #[inline(always)]
+        unsafe fn mul(self, b: Self) -> Self {
+            V4(vmulq_f32(self.0, b.0))
+        }
+        #[inline(always)]
+        unsafe fn add(self, b: Self) -> Self {
+            V4(vaddq_f32(self.0, b.0))
+        }
+        #[inline(always)]
+        unsafe fn sub(self, b: Self) -> Self {
+            V4(vsubq_f32(self.0, b.0))
+        }
+    }
+}
+
+/// Gather `W` lanes at `s[base + i*stride]` (plain contiguous load
+/// when `stride == 1`).
+#[inline(always)]
+unsafe fn load_lanes<V: V32>(s: &[f32], base: usize, stride: usize) -> V {
+    if stride == 1 {
+        V::load(s, base)
+    } else {
+        let mut t = [0f32; MAX_W];
+        for (i, slot) in t.iter_mut().enumerate().take(V::W) {
+            *slot = s[base + i * stride];
+        }
+        V::load(&t, 0)
+    }
+}
+
+/// Vector twin of the scalar `ec_mul`: the identical left-to-right
+/// `(ah*bh + ah*bl) + al*bh` op sequence, per lane.
+#[inline(always)]
+unsafe fn ec_mul_v<V: V32>(ah: V, al: V, bh: V, bl: V) -> V {
+    ah.mul(bh).add(ah.mul(bl)).add(al.mul(bh))
+}
+
+// ---------------------------------------------------------------------
+// panel kernels (generic bodies, monomorphized per ISA via V32)
+// ---------------------------------------------------------------------
+
+/// Fused-tier panel: the scalar `stage_fused` per-cell sequence across
+/// `V::W` cells. `OPC` selects contiguous m-major `W` loads (lanes run
+/// across `k`) vs per-`(k,m,j)` splats (lanes run across `l`/groups).
+#[inline(always)]
+unsafe fn fused_panel<V: V32, const R: usize, const OPC: bool>(
+    st: &StageView,
+    bufs: &mut StageBufs,
+    c: Panel,
+) {
+    let n2 = st.n2;
+    let lane = bufs.lane;
+    let mut xr = [V::splat(0.0); R];
+    let mut xi = [V::splat(0.0); R];
+    for j in 0..R {
+        let base = (c.gbase + j * n2 + c.k) * lane + c.l0;
+        xr[j] = load_lanes::<V>(bufs.in_re, base, c.stride);
+        xi[j] = load_lanes::<V>(bufs.in_im, base, c.stride);
+    }
+    let mut sr = [0f32; MAX_W];
+    let mut si = [0f32; MAX_W];
+    for m in 0..R {
+        let mut acc_re = V::splat(0.0);
+        let mut acc_im = V::splat(0.0);
+        for j in 0..R {
+            let (wr, wi) = if OPC {
+                let o = (m * R + j) * n2 + c.k;
+                (V::load(st.w_re_mj, o), V::load(st.w_im_mj, o))
+            } else {
+                let o = (c.k * R + m) * R + j;
+                (V::splat(st.w_re[o]), V::splat(st.w_im[o]))
+            };
+            acc_re = acc_re.add(wr.mul(xr[j]).sub(wi.mul(xi[j])));
+            acc_im = acc_im.add(wr.mul(xi[j]).add(wi.mul(xr[j])));
+        }
+        acc_re.store(&mut sr);
+        acc_im.store(&mut si);
+        let base = (c.gbase + m * n2 + c.k) * lane + c.l0;
+        for i in 0..V::W {
+            bufs.out_re[base + i * c.stride] = rnd16(sr[i]);
+            bufs.out_im[base + i * c.stride] = rnd16(si[i]);
+        }
+    }
+}
+
+/// Two-pass panel (`tc` past the fuse limit, and `tc_split` with its
+/// operand rounding when `SPLIT`): the scalar `stage_unfused` per-cell
+/// sequence across `V::W` cells.
+#[inline(always)]
+unsafe fn twopass_panel<V: V32, const R: usize, const SPLIT: bool, const OPC: bool>(
+    st: &StageView,
+    bufs: &mut StageBufs,
+    c: Panel,
+) {
+    let n2 = st.n2;
+    let lane = bufs.lane;
+    let mut xr = [V::splat(0.0); R];
+    let mut xi = [V::splat(0.0); R];
+    let mut sr = [0f32; MAX_W];
+    let mut si = [0f32; MAX_W];
+    for j in 0..R {
+        let base = (c.gbase + j * n2 + c.k) * lane + c.l0;
+        let ar: V = load_lanes(bufs.in_re, base, c.stride);
+        let ai: V = load_lanes(bufs.in_im, base, c.stride);
+        let to = j * n2 + c.k;
+        let (tr, ti) = if OPC {
+            (V::load(st.t_re, to), V::load(st.t_im, to))
+        } else {
+            (V::splat(st.t_re[to]), V::splat(st.t_im[to]))
+        };
+        let mut yr = ar.mul(tr).sub(ai.mul(ti));
+        let mut yi = ar.mul(ti).add(ai.mul(tr));
+        if SPLIT {
+            // the de-fused ablation's extra fp16 store, per lane via
+            // the same scalar rounder
+            yr.store(&mut sr);
+            yi.store(&mut si);
+            for (a, b) in sr.iter_mut().zip(si.iter_mut()).take(V::W) {
+                *a = rnd16(*a);
+                *b = rnd16(*b);
+            }
+            yr = V::load(&sr, 0);
+            yi = V::load(&si, 0);
+        }
+        xr[j] = yr;
+        xi[j] = yi;
+    }
+    for m in 0..R {
+        let fo = m * R;
+        let mut acc_re = V::splat(0.0);
+        let mut acc_im = V::splat(0.0);
+        for j in 0..R {
+            let fr = V::splat(st.f_re[fo + j]);
+            let fi = V::splat(st.f_im[fo + j]);
+            acc_re = acc_re.add(fr.mul(xr[j]).sub(fi.mul(xi[j])));
+            acc_im = acc_im.add(fr.mul(xi[j]).add(fi.mul(xr[j])));
+        }
+        acc_re.store(&mut sr);
+        acc_im.store(&mut si);
+        let base = (c.gbase + m * n2 + c.k) * lane + c.l0;
+        for i in 0..V::W {
+            bufs.out_re[base + i * c.stride] = rnd16(sr[i]);
+            bufs.out_im[base + i * c.stride] = rnd16(si[i]);
+        }
+    }
+}
+
+/// Error-corrected panel: the twiddle/split phase stays scalar per
+/// lane (every `ec_split16` rounding point is scalar by contract); the
+/// O(R^2) compensated matmul accumulates vector-wide with the exact
+/// scalar `ec_mul` op order per lane, and each accumulator lane goes
+/// back through the scalar `ec_store` (finite-hi guard included).
+#[inline(always)]
+unsafe fn ec_panel<V: V32, const R: usize>(st: &StageView, bufs: &mut StageBufs, c: Panel) {
+    let n2 = st.n2;
+    let lane = bufs.lane;
+    let mut xrh = [[0f32; MAX_W]; R];
+    let mut xrl = [[0f32; MAX_W]; R];
+    let mut xih = [[0f32; MAX_W]; R];
+    let mut xil = [[0f32; MAX_W]; R];
+    for j in 0..R {
+        let base = (c.gbase + j * n2 + c.k) * lane + c.l0;
+        for i in 0..V::W {
+            let idx = base + i * c.stride;
+            let to = j * n2 + c.k + i * c.k_step;
+            let (arh, arl) = ec_split16(bufs.in_re[idx]);
+            let (aih, ail) = ec_split16(bufs.in_im[idx]);
+            let (trh, trl) = (st.t_re[to], st.t_re_lo[to]);
+            let (tih, til) = (st.t_im[to], st.t_im_lo[to]);
+            let yr = ec_mul(arh, arl, trh, trl) - ec_mul(aih, ail, tih, til);
+            let yi = ec_mul(arh, arl, tih, til) + ec_mul(aih, ail, trh, trl);
+            (xrh[j][i], xrl[j][i]) = ec_split16(yr);
+            (xih[j][i], xil[j][i]) = ec_split16(yi);
+        }
+    }
+    let mut sr = [0f32; MAX_W];
+    let mut si = [0f32; MAX_W];
+    for m in 0..R {
+        let fo = m * R;
+        let mut acc_re = V::splat(0.0);
+        let mut acc_im = V::splat(0.0);
+        for j in 0..R {
+            let frh = V::splat(st.f_re[fo + j]);
+            let frl = V::splat(st.f_re_lo[fo + j]);
+            let fih = V::splat(st.f_im[fo + j]);
+            let fil = V::splat(st.f_im_lo[fo + j]);
+            let xrhv = V::load(&xrh[j], 0);
+            let xrlv = V::load(&xrl[j], 0);
+            let xihv = V::load(&xih[j], 0);
+            let xilv = V::load(&xil[j], 0);
+            acc_re =
+                acc_re.add(ec_mul_v(frh, frl, xrhv, xrlv).sub(ec_mul_v(fih, fil, xihv, xilv)));
+            acc_im =
+                acc_im.add(ec_mul_v(frh, frl, xihv, xilv).add(ec_mul_v(fih, fil, xrhv, xrlv)));
+        }
+        acc_re.store(&mut sr);
+        acc_im.store(&mut si);
+        let base = (c.gbase + m * n2 + c.k) * lane + c.l0;
+        for i in 0..V::W {
+            bufs.out_re[base + i * c.stride] = ec_store(sr[i]);
+            bufs.out_im[base + i * c.stride] = ec_store(si[i]);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// panel sweep: one scaffold for every kernel family
+// ---------------------------------------------------------------------
+
+/// A kernel family the sweep scaffold can drive: fused, two-pass
+/// (with/without the split rounding), or error-corrected.
+trait Family {
+    /// Run one panel. `OPC` = operand loads are contiguous across `k`
+    /// (lanes run across `k`; only valid when `lane == 1`).
+    unsafe fn panel<V: V32, const R: usize, const OPC: bool>(
+        st: &StageView,
+        bufs: &mut StageBufs,
+        c: Panel,
+    );
+}
+
+struct FusedF;
+impl Family for FusedF {
+    #[inline(always)]
+    unsafe fn panel<V: V32, const R: usize, const OPC: bool>(
+        st: &StageView,
+        bufs: &mut StageBufs,
+        c: Panel,
+    ) {
+        fused_panel::<V, R, OPC>(st, bufs, c)
+    }
+}
+
+struct TwoPassF<const SPLIT: bool>;
+impl<const SPLIT: bool> Family for TwoPassF<SPLIT> {
+    #[inline(always)]
+    unsafe fn panel<V: V32, const R: usize, const OPC: bool>(
+        st: &StageView,
+        bufs: &mut StageBufs,
+        c: Panel,
+    ) {
+        twopass_panel::<V, R, SPLIT, OPC>(st, bufs, c)
+    }
+}
+
+struct EcF;
+impl Family for EcF {
+    #[inline(always)]
+    unsafe fn panel<V: V32, const R: usize, const OPC: bool>(
+        st: &StageView,
+        bufs: &mut StageBufs,
+        c: Panel,
+    ) {
+        // ec operand loads are never vector-contiguous (the twiddle
+        // phase is scalar per lane); `k_step` carries the across-k case
+        ec_panel::<V, R>(st, bufs, c)
+    }
+}
+
+/// Sweep every output cell of one stage application in vector panels.
+/// Cell axes, in preference order:
+/// * `lane == 1`, `n2 >= V::W` — lanes across `k` (contiguous input
+///   *and* operand loads, the 1D hot path);
+/// * `lane >= V::W` — lanes across `l` (contiguous input, splat
+///   operands, the 2D packed-bin path);
+/// * otherwise — lanes across stage groups at fixed `(k, l)` (strided
+///   gathers, splat operands: first stages with `n2 == 1`, tiny lanes).
+///
+/// Tail cells that do not fill a vector run the same panel bodies at
+/// width 1 ([`V1`]).
+#[inline(always)]
+unsafe fn sweep<F: Family, V: V32, const R: usize>(st: &StageView, bufs: &mut StageBufs) {
+    let n2 = st.n2;
+    let lane = bufs.lane;
+    let block = R * n2;
+    let groups = bufs.in_re.len() / (block * lane);
+    if lane == 1 && n2 >= V::W {
+        for g in 0..groups {
+            let gbase = g * block;
+            let mut k = 0;
+            while k + V::W <= n2 {
+                let c = Panel { gbase, k, l0: 0, stride: 1, k_step: 1 };
+                F::panel::<V, R, true>(st, bufs, c);
+                k += V::W;
+            }
+            while k < n2 {
+                let c = Panel { gbase, k, l0: 0, stride: 1, k_step: 1 };
+                F::panel::<V1, R, true>(st, bufs, c);
+                k += 1;
+            }
+        }
+    } else if lane >= V::W {
+        for g in 0..groups {
+            let gbase = g * block;
+            for k in 0..n2 {
+                let mut l = 0;
+                while l + V::W <= lane {
+                    let c = Panel { gbase, k, l0: l, stride: 1, k_step: 0 };
+                    F::panel::<V, R, false>(st, bufs, c);
+                    l += V::W;
+                }
+                while l < lane {
+                    let c = Panel { gbase, k, l0: l, stride: 1, k_step: 0 };
+                    F::panel::<V1, R, false>(st, bufs, c);
+                    l += 1;
+                }
+            }
+        }
+    } else {
+        let gstride = block * lane;
+        let mut g = 0;
+        while g + V::W <= groups {
+            let gbase = g * block;
+            for k in 0..n2 {
+                for l in 0..lane {
+                    let c = Panel { gbase, k, l0: l, stride: gstride, k_step: 0 };
+                    F::panel::<V, R, false>(st, bufs, c);
+                }
+            }
+            g += V::W;
+        }
+        while g < groups {
+            let gbase = g * block;
+            for k in 0..n2 {
+                for l in 0..lane {
+                    let c = Panel { gbase, k, l0: l, stride: 1, k_step: 0 };
+                    F::panel::<V1, R, false>(st, bufs, c);
+                }
+            }
+            g += 1;
+        }
+    }
+}
+
+/// Family + radix dispatch for one vector type.
+#[inline(always)]
+unsafe fn run_stage<V: V32>(st: &StageView, bufs: &mut StageBufs) {
+    if st.ec {
+        match st.r {
+            2 => sweep::<EcF, V, 2>(st, bufs),
+            4 => sweep::<EcF, V, 4>(st, bufs),
+            8 => sweep::<EcF, V, 8>(st, bufs),
+            _ => sweep::<EcF, V, 16>(st, bufs),
+        }
+    } else if !st.w_re.is_empty() {
+        match st.r {
+            2 => sweep::<FusedF, V, 2>(st, bufs),
+            4 => sweep::<FusedF, V, 4>(st, bufs),
+            8 => sweep::<FusedF, V, 8>(st, bufs),
+            _ => sweep::<FusedF, V, 16>(st, bufs),
+        }
+    } else if st.split {
+        match st.r {
+            2 => sweep::<TwoPassF<true>, V, 2>(st, bufs),
+            4 => sweep::<TwoPassF<true>, V, 4>(st, bufs),
+            8 => sweep::<TwoPassF<true>, V, 8>(st, bufs),
+            _ => sweep::<TwoPassF<true>, V, 16>(st, bufs),
+        }
+    } else {
+        match st.r {
+            2 => sweep::<TwoPassF<false>, V, 2>(st, bufs),
+            4 => sweep::<TwoPassF<false>, V, 4>(st, bufs),
+            8 => sweep::<TwoPassF<false>, V, 8>(st, bufs),
+            _ => sweep::<TwoPassF<false>, V, 16>(st, bufs),
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn run_stage_avx2(st: &StageView, bufs: &mut StageBufs) {
+    run_stage::<x86::V8>(st, bufs)
+}
+
+#[cfg(all(target_arch = "x86_64", feature = "avx512"))]
+#[target_feature(enable = "avx512f")]
+unsafe fn run_stage_avx512(st: &StageView, bufs: &mut StageBufs) {
+    run_stage::<x86::V16>(st, bufs)
+}
+
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn run_stage_neon(st: &StageView, bufs: &mut StageBufs) {
+    run_stage::<arm::V4>(st, bufs)
+}
+
+/// Apply one merge stage through the SIMD kernels. Returns `false`
+/// when `path` cannot run here (scalar path, off-arch request, or a
+/// radix outside the planner's 2/4/8/16 set) — the caller then falls
+/// through to the scalar kernels.
+///
+/// The `unsafe` ISA entry points are sound because `path` comes from
+/// [`active`]/[`force`], which only hand out [`available`] paths
+/// (runtime CPU detection); a defensive debug assert re-checks.
+pub(crate) fn apply_stage(path: SimdPath, st: &StageView, bufs: &mut StageBufs) -> bool {
+    if !matches!(st.r, 2 | 4 | 8 | 16) {
+        return false;
+    }
+    debug_assert!(available(path), "dispatched unavailable SIMD path {path}");
+    match path {
+        SimdPath::Scalar => false,
+        #[cfg(target_arch = "x86_64")]
+        SimdPath::Avx2 => {
+            unsafe { run_stage_avx2(st, bufs) };
+            true
+        }
+        #[cfg(all(target_arch = "x86_64", feature = "avx512"))]
+        SimdPath::Avx512 => {
+            unsafe { run_stage_avx512(st, bufs) };
+            true
+        }
+        #[cfg(target_arch = "aarch64")]
+        SimdPath::Neon => {
+            unsafe { run_stage_neon(st, bufs) };
+            true
+        }
+        _ => false,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_and_display_roundtrip() {
+        for p in [SimdPath::Scalar, SimdPath::Avx2, SimdPath::Avx512, SimdPath::Neon] {
+            assert_eq!(SimdPath::parse(&p.to_string()), Some(p));
+        }
+        assert_eq!(SimdPath::parse("auto"), None);
+        assert_eq!(SimdPath::parse("sse9"), None);
+    }
+
+    #[test]
+    fn detect_best_is_available() {
+        assert!(available(detect_best()));
+        assert!(available(SimdPath::Scalar));
+    }
+
+    #[test]
+    fn vector_paths_exclude_scalar_and_are_available() {
+        for p in available_vector_paths() {
+            assert_ne!(p, SimdPath::Scalar);
+            assert!(available(p));
+        }
+    }
+
+    #[test]
+    fn force_overrides_and_restores() {
+        // scalar is always forcible; unavailable paths error and leave
+        // the selection untouched. Restore auto selection on exit so
+        // concurrently running tests keep their configured path (any
+        // interleaving is bitwise-safe — that is the module contract).
+        force(Some(SimdPath::Scalar)).unwrap();
+        assert_eq!(active(), SimdPath::Scalar);
+        let missing = [SimdPath::Avx2, SimdPath::Avx512, SimdPath::Neon]
+            .into_iter()
+            .find(|&p| !available(p));
+        if let Some(p) = missing {
+            assert!(force(Some(p)).is_err());
+            assert_eq!(active(), SimdPath::Scalar, "failed force must not change the path");
+        }
+        force(None).unwrap();
+        assert!(available(active()));
+    }
+}

@@ -1,0 +1,211 @@
+//! The bitwise SIMD-vs-scalar contract of `runtime::simd`.
+//!
+//! Every vector path available on this CPU/build must reproduce the
+//! scalar kernels **bit for bit** on every tier — `tc` fused, `tc`
+//! two-pass past `FUSE_LIMIT`, `tc_split` (operand rounding), `tc_ec`
+//! (compensated products, finite-hi store guard) — across every radix
+//! the planner emits (2/4/8/16), forward and inverse, batches that do
+//! and do not fill a vector, and the strided 2D packed-bin lanes.
+//!
+//! Paths are flipped with `simd::force`, the in-process twin of the
+//! `TCFFT_SIMD` env knob (`ci.sh` additionally runs the whole suite
+//! under `TCFFT_SIMD=scalar`). Forcing is process-global, so every
+//! test that flips paths serializes on one mutex and restores auto
+//! selection before releasing it; the surrounding tests are immune to
+//! the flipping by the module's own contract (any path is bitwise
+//! identical), which is exactly what this suite verifies. Machines
+//! with no vector ISA skip with a note rather than silently passing.
+
+use std::sync::Mutex;
+
+use tcfft::runtime::simd::{self, SimdPath};
+use tcfft::runtime::{Backend, CpuInterpreter, PlanarBatch, VariantMeta};
+use tcfft::workload::random_signal;
+
+/// Serializes `simd::force` across the test binary's worker threads.
+static FORCE_LOCK: Mutex<()> = Mutex::new(());
+
+fn meta(op: &str, algo: &str, n: usize, batch: usize, inverse: bool) -> VariantMeta {
+    let d = if inverse { "inv" } else { "fwd" };
+    let input_shape = match (op, inverse) {
+        ("fft1d", _) => vec![batch, n],
+        ("rfft1d", false) => vec![batch, n],
+        ("rfft1d", true) => vec![batch, n / 2 + 1],
+        ("fft2d", _) => vec![batch, n, n],
+        ("rfft2d", false) => vec![batch, n, n],
+        _ => vec![batch, n, n / 2 + 1],
+    };
+    VariantMeta {
+        key: format!("simd_{op}_{algo}_n{n}_b{batch}_{d}"),
+        file: std::path::PathBuf::new(),
+        op: op.to_string(),
+        algo: algo.to_string(),
+        n,
+        nx: n,
+        ny: n,
+        batch,
+        inverse,
+        input_shape,
+        stages: Vec::new(),
+        flops_per_seq: 0.0,
+        hbm_bytes_per_seq: 0.0,
+        radix2_equiv_flops: 0.0,
+    }
+}
+
+/// A deterministic input for `meta`: complex planes for the complex
+/// ops, a real plane forward / a Hermitian-plausible packed spectrum
+/// inverse for the real ops.
+fn input_for(meta: &VariantMeta, seed: u64) -> PlanarBatch {
+    let total: usize = meta.input_shape.iter().product();
+    let sig = random_signal(total, seed);
+    let mut x = PlanarBatch::new(meta.input_shape.clone());
+    for (i, c) in sig.iter().enumerate() {
+        x.re[i] = c.re;
+        x.im[i] = c.im;
+    }
+    if meta.op.starts_with("rfft") {
+        if meta.inverse {
+            // packed rows must keep the Hermitian-real endpoints real
+            let bins = *meta.input_shape.last().unwrap();
+            let rows = total / bins;
+            for row in 0..rows {
+                x.im[row * bins] = 0.0;
+                x.im[row * bins + bins - 1] = 0.0;
+            }
+        } else {
+            // R2C input is real by contract
+            x.im.iter_mut().for_each(|v| *v = 0.0);
+        }
+    }
+    x
+}
+
+fn assert_bit_identical(a: &PlanarBatch, b: &PlanarBatch, what: &str) {
+    assert_eq!(a.shape, b.shape, "{what}: shape");
+    for i in 0..a.len() {
+        assert_eq!(
+            a.re[i].to_bits(),
+            b.re[i].to_bits(),
+            "{what}: re[{i}] {} vs {}",
+            a.re[i],
+            b.re[i]
+        );
+        assert_eq!(
+            a.im[i].to_bits(),
+            b.im[i].to_bits(),
+            "{what}: im[{i}] {} vs {}",
+            a.im[i],
+            b.im[i]
+        );
+    }
+}
+
+/// True when this machine has no vector path; prints the skip note.
+fn skip_no_vector(test: &str) -> bool {
+    if simd::available_vector_paths().is_empty() {
+        eprintln!(
+            "note: {test} skipped — no SIMD path available on this CPU/build \
+             (arch {}, avx512 feature {})",
+            std::env::consts::ARCH,
+            cfg!(feature = "avx512")
+        );
+        return true;
+    }
+    false
+}
+
+/// Run `metas` under forced scalar, then under every available vector
+/// path, and assert each vector run is bitwise identical to scalar.
+fn assert_paths_bitwise(metas: &[VariantMeta]) {
+    let _g = FORCE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let be = CpuInterpreter::with_threads(1);
+    for m in metas {
+        let input = input_for(m, 0xC0FFEE ^ m.n as u64 ^ (m.batch as u64) << 32);
+        simd::force(Some(SimdPath::Scalar)).unwrap();
+        let (y_scalar, _) = be.execute(m, input.clone()).unwrap();
+        for path in simd::available_vector_paths() {
+            simd::force(Some(path)).unwrap();
+            let (y_vec, _) = be.execute(m, input.clone()).unwrap();
+            assert_bit_identical(&y_vec, &y_scalar, &format!("{} under {path}", m.key));
+        }
+    }
+    simd::force(None).unwrap();
+}
+
+#[test]
+fn all_radices_tiers_dirs_batches_are_bitwise() {
+    if skip_no_vector("all_radices_tiers_dirs_batches_are_bitwise") {
+        return;
+    }
+    // n = 32/64/128/256 end the schedule with radix 2/4/8/16, and every
+    // pipeline opens with a radix-16 n2=1 stage (the cross-group sweep).
+    // Batches 1 and 3 leave width-1 remainder cells on every vector
+    // width (e.g. n=32 has 2 or 6 first-stage groups); batch 32 fills
+    // full panels.
+    let mut metas = Vec::new();
+    for n in [32usize, 64, 128, 256] {
+        for algo in ["tc", "tc_split", "tc_ec"] {
+            for inverse in [false, true] {
+                for batch in [1usize, 3, 32] {
+                    metas.push(meta("fft1d", algo, n, batch, inverse));
+                }
+            }
+        }
+    }
+    assert_paths_bitwise(&metas);
+}
+
+#[test]
+fn tc_two_pass_past_fuse_limit_is_bitwise() {
+    if skip_no_vector("tc_two_pass_past_fuse_limit_is_bitwise") {
+        return;
+    }
+    // n = 131072 schedules [16,16,16,16,2]; the n2=4096 radix-16 stage
+    // and the n2=65536 radix-2 stage price past FUSE_LIMIT, so one
+    // pipeline exercises fused AND two-pass tc kernels back to back.
+    let metas: Vec<_> = [false, true]
+        .into_iter()
+        .map(|inv| meta("fft1d", "tc", 131_072, 1, inv))
+        .collect();
+    assert_paths_bitwise(&metas);
+}
+
+#[test]
+fn packed_lane_and_real_paths_are_bitwise() {
+    if skip_no_vector("packed_lane_and_real_paths_are_bitwise") {
+        return;
+    }
+    // rfft2d's column pass strides over lane = n/2 + 1 = 9 packed bins
+    // (an odd lane count: full panels plus width-1 tails on every
+    // vector width); fft2d's column pass runs lane = 16; rfft1d wraps
+    // the half-size pipeline in the half-spectrum pass.
+    let mut metas = Vec::new();
+    for algo in ["tc", "tc_split", "tc_ec"] {
+        for inverse in [false, true] {
+            metas.push(meta("rfft2d", algo, 16, 3, inverse));
+            metas.push(meta("fft2d", algo, 16, 3, inverse));
+            metas.push(meta("rfft1d", algo, 64, 3, inverse));
+        }
+    }
+    assert_paths_bitwise(&metas);
+}
+
+#[test]
+fn forcing_an_unavailable_path_errors_and_keeps_selection() {
+    let missing: Vec<_> = [SimdPath::Avx2, SimdPath::Avx512, SimdPath::Neon]
+        .into_iter()
+        .filter(|&p| !simd::available(p))
+        .collect();
+    if missing.is_empty() {
+        eprintln!("note: every vector path is available here; nothing to refuse");
+        return;
+    }
+    let _g = FORCE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    simd::force(Some(SimdPath::Scalar)).unwrap();
+    for p in missing {
+        assert!(simd::force(Some(p)).is_err(), "{p} must not be forcible");
+        assert_eq!(simd::active(), SimdPath::Scalar, "failed force changed the path");
+    }
+    simd::force(None).unwrap();
+}
